@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make the build-time `compile` package importable when pytest runs
+# from the repository root (python/ is the package root).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,83 @@
+//! Ablation of the paper's two orthogonal components (DESIGN.md §7):
+//!
+//! 1. **Information ablation** — the solution-guiding layer's I1 / I3 /
+//!    I1+I2+I3 ladder (the three EvoEngineer configurations) at a fixed
+//!    budget, isolating what each information type buys (Table 3's
+//!    point).
+//! 2. **Population ablation** — single-best vs elite vs islands at
+//!    fixed information (via EvoEngineer-Insight, EoH, FunSearch which
+//!    differ chiefly in population management).
+//! 3. **Budget sweep** — 15 / 45 / 90 trials for EvoEngineer-Full.
+//!
+//! Run with:  cargo run --release --example ablation_information
+
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::evals::Evaluator;
+use evoengineer::metrics;
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::Result;
+
+fn summarize(tag: &str, records: &[evoengineer::methods::KernelRunRecord]) {
+    for p in metrics::tradeoff_points(records) {
+        println!(
+            "  {tag:<18} {:<28} median speedup {:>5.2}  functional {:>5.1}%",
+            p.method, p.median_speedup, p.correct_rate
+        );
+    }
+}
+
+fn main() -> Result<()> {
+    let registry = std::sync::Arc::new(TaskRegistry::load("artifacts")?);
+    let evaluator = Evaluator::new(registry, Runtime::new()?);
+    let base = CampaignConfig {
+        models: vec!["claude".into()],
+        max_ops: 30,
+        seeds: vec![0, 1],
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+
+    println!("== 1. information ablation (I1 -> I1+I3 -> I1+I2+I3) ==");
+    let cfg = CampaignConfig {
+        methods: vec![
+            "evoengineer-free".into(),    // I1 only
+            "evoengineer-insight".into(), // I1 + I3
+            "evoengineer-full".into(),    // I1 + I2 + I3
+        ],
+        ..base.clone()
+    };
+    let recs = campaign::run(&cfg, evaluator.clone())?;
+    summarize("info", &recs);
+    println!("  -> expected: validity rises monotonically with information;");
+    println!("     Free trades validity for exploration reach.\n");
+
+    println!("== 2. population ablation (single-best vs elite vs islands) ==");
+    let cfg = CampaignConfig {
+        methods: vec![
+            "evoengineer-insight".into(), // single-best
+            "evoengineer-solution".into(),// elite (EoH)
+            "funsearch".into(),           // islands
+        ],
+        ..base.clone()
+    };
+    let recs = campaign::run(&cfg, evaluator.clone())?;
+    summarize("population", &recs);
+    println!();
+
+    println!("== 3. trial-budget sweep (EvoEngineer-Full) ==");
+    for budget in [15usize, 45, 90] {
+        let cfg = CampaignConfig {
+            methods: vec!["evoengineer-full".into()],
+            budget,
+            ..base.clone()
+        };
+        let recs = campaign::run(&cfg, evaluator.clone())?;
+        let p = &metrics::tradeoff_points(&recs)[0];
+        println!(
+            "  budget {budget:>3}: median speedup {:>5.2}  functional {:>5.1}%",
+            p.median_speedup, p.correct_rate
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! PyTorch-comparison study (paper §5.4, Figure 5 + Table 7): run the
+//! EvoEngineer variants across the whole dataset and benchmark the
+//! final kernels against the modeled eager-PyTorch implementations —
+//! which ops beat the library, by how much, and who wins each op.
+//!
+//! Run with:  cargo run --release --example pytorch_comparison
+
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::costmodel::{price_baseline, price_pytorch};
+use evoengineer::evals::Evaluator;
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::{metrics, report, Result};
+
+fn main() -> Result<()> {
+    let registry = std::sync::Arc::new(TaskRegistry::load("artifacts")?);
+    let evaluator = Evaluator::new(registry.clone(), Runtime::new()?);
+
+    // Where does the modeled PyTorch baseline sit vs the dataset's
+    // initial kernels? (context for the comparison)
+    println!("baseline-vs-PyTorch context (first 8 ops):");
+    for op in registry.ops.iter().take(8) {
+        let base = price_baseline(op, &evaluator.gpu).time;
+        let pt = price_pytorch(op, &evaluator.gpu);
+        println!(
+            "  {:<24} initial kernel {:>9.2} us   eager PyTorch {:>9.2} us",
+            op.name,
+            base * 1e6,
+            pt * 1e6
+        );
+    }
+
+    let cfg = CampaignConfig {
+        methods: vec![
+            "evoengineer-free".into(),
+            "evoengineer-insight".into(),
+            "evoengineer-full".into(),
+        ],
+        seeds: vec![0, 1],
+        ..CampaignConfig::default()
+    };
+    let records = campaign::run(&cfg, evaluator)?;
+
+    println!("\n{}", report::fig5(&records));
+    println!("{}", report::table7(&records));
+    println!("{}", report::fig8(&records));
+
+    // Category view: where do the wins against the library live?
+    let best = metrics::pytorch_best_per_op(&records);
+    let mut by_cat = [0usize; 7];
+    let mut over2_by_cat = [0usize; 7];
+    for b in &best {
+        by_cat[b.category as usize] += 1;
+        if b.speedup > 2.0 {
+            over2_by_cat[b.category as usize] += 1;
+        }
+    }
+    println!("\n>2x-vs-PyTorch ops per category:");
+    for c in 1..=6usize {
+        println!(
+            "  cat {c}: {:>2}/{:<2} ({})",
+            over2_by_cat[c],
+            by_cat[c],
+            evoengineer::tasks::category_name(c as u8)
+        );
+    }
+    Ok(())
+}

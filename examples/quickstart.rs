@@ -1,0 +1,67 @@
+//! Quickstart: optimize one kernel with EvoEngineer-Full and inspect
+//! what the system did — the 60-second tour of the public API.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use evoengineer::evals::Evaluator;
+use evoengineer::llm::profile;
+use evoengineer::methods::{self, Archive, RunCtx};
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::Result;
+
+fn main() -> Result<()> {
+    // 1. Load the 91-op dataset manifest (`make artifacts` builds it).
+    let registry = Arc::new(TaskRegistry::load("artifacts")?);
+    println!("dataset: {} ops across 6 categories", registry.ops.len());
+
+    // 2. Bring up the PJRT runtime (functional ground truth) and the
+    //    evaluation pipeline (compile -> functional -> perf).
+    let evaluator = Evaluator::new(registry.clone(), Runtime::new()?);
+
+    // 3. Pick a task, a method, and a model.
+    let task = registry.get("matmul_128").expect("matmul_128").clone();
+    let method = methods::by_name("evoengineer-full").unwrap();
+    let model = profile::by_name("claude").unwrap();
+
+    // 4. Run one 45-trial optimization campaign on that kernel.
+    let archive = Archive::new();
+    let ctx = RunCtx {
+        evaluator: &evaluator,
+        task: &task,
+        model,
+        seed: 0,
+        archive: &archive,
+        budget: 45,
+    };
+    let record = method.run(&ctx);
+
+    // 5. Inspect the outcome.
+    println!(
+        "\n{} with {} on {}:",
+        record.method, record.model, record.op
+    );
+    println!("  best speedup vs baseline kernel : {:.2}x", record.best_speedup);
+    println!("  best speedup vs PyTorch (model) : {:.2}x", record.best_pytorch_speedup);
+    println!(
+        "  trial validity: {}/{} compiled, {}/{} functionally correct",
+        record.compiled_trials, record.trials, record.correct_trials, record.trials
+    );
+    println!(
+        "  token usage: {} prompt + {} completion",
+        record.prompt_tokens, record.completion_tokens
+    );
+    println!("\nbest kernel found:\n{}", record.best_src.as_deref().unwrap_or("(none)"));
+
+    // 6. Convergence trajectory (best-so-far speedup per trial).
+    print!("trajectory: ");
+    for (i, s) in record.trajectory.iter().enumerate() {
+        if i % 9 == 0 || i + 1 == record.trajectory.len() {
+            print!("[t{i}] {s:.2}  ");
+        }
+    }
+    println!();
+    Ok(())
+}

@@ -1,0 +1,139 @@
+"""AOT pipeline: lower every op variant to HLO **text** + manifest.json.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. Pattern follows
+/opt/xla-example/gen_hlo.py.
+
+Per op we emit four variants (see model.py): ref / opt / bug_scale /
+bug_offset, under artifacts/<op>/<variant>.hlo.txt, plus a
+manifest.json that carries everything the rust side needs: shapes,
+input generators, workload metadata for the cost model, tolerances.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+        (options: --ops substr  --jobs N)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tuple_wrap(fn):
+    # Lower with return_tuple semantics; rust unwraps with to_tuple1().
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return wrapped
+
+
+def _bug_scale(fn):
+    def wrapped(*args):
+        # 25% so the defect clears atol even for small-magnitude outputs
+        # (softmax over 256 lanes ~ 4e-3/element).
+        return fn(*args) * 1.25
+
+    return wrapped
+
+
+def _bug_offset(fn):
+    def wrapped(*args):
+        return fn(*args) + 0.05
+
+    return wrapped
+
+
+def variants_of(op: model.OpSpec):
+    return {
+        "ref": op.build_ref,
+        "opt": op.build_opt,
+        "bug_scale": _bug_scale(op.build_ref),
+        "bug_offset": _bug_offset(op.build_ref),
+    }
+
+
+def lower_op(op: model.OpSpec, out_dir: str) -> dict:
+    """Lower all variants of one op; returns its manifest entry."""
+    op_dir = os.path.join(out_dir, op.name)
+    os.makedirs(op_dir, exist_ok=True)
+    specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in op.args]
+    artifacts = {}
+    for vname, fn in variants_of(op).items():
+        path = os.path.join(op_dir, f"{vname}.hlo.txt")
+        lowered = jax.jit(_tuple_wrap(fn)).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[vname] = os.path.relpath(path, out_dir)
+    return {
+        "name": op.name,
+        "category": op.category,
+        "family": op.family,
+        "args": [{"shape": list(a.shape), "gen": a.gen} for a in op.args],
+        "out_shape": list(op.out_shape),
+        "flops": op.flops,
+        "bytes_moved": op.bytes_moved,
+        "pt_launches": op.pt_launches,
+        "pt_passes": op.pt_passes,
+        "pt_efficiency": op.pt_efficiency,
+        "algo_penalty": op.algo_penalty,
+        "atol": op.atol,
+        "rtol": op.rtol,
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--ops", default="", help="only ops whose name contains this")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    ops = model.build_registry()
+    if args.ops:
+        ops = [o for o in ops if args.ops in o.name]
+    t0 = time.time()
+    entries = []
+    for i, op in enumerate(ops):
+        entries.append(lower_op(op, out_dir))
+        if (i + 1) % 10 == 0 or i + 1 == len(ops):
+            print(f"  [{i + 1}/{len(ops)}] {op.name}  ({time.time() - t0:.1f}s)",
+                  file=sys.stderr)
+
+    manifest = {
+        "version": 1,
+        "dtype": "f32",
+        "categories": model.CATEGORY_NAMES,
+        "ops": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} ops x 4 variants to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

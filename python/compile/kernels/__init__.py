@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute families (interpret=True).
+# One module per dataset category; `ref` is the pure-jnp oracle.
+from . import conv, elementwise, loss, matmul, reduce, ref, scan  # noqa: F401

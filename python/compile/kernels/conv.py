@@ -1,0 +1,163 @@
+"""L1 Pallas kernels — convolution family (category 2).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA direct
+convolutions stage input halos through shared memory per threadblock.
+Here the (small) activations are VMEM-resident and the kernel performs a
+shifted-window accumulation: for each (kh,kw) tap it contracts the
+shifted input patch against the weight slice on the MXU (an einsum over
+channels). For the dataset's shapes a whole image fits in VMEM, so the
+grid tiles only the batch axis; the per-tap loop is unrolled at trace
+time (K is static), mirroring #pragma unroll over the filter window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def conv1d(x, w, *, act=None, bb=1):
+    """x: (B,C,L), w: (O,C,K) -> (B,O,OL). Batch-tiled grid."""
+    B, C, L = x.shape
+    O, _, K = w.shape
+    OL = L - K + 1
+
+    def kernel(x_ref, w_ref, o_ref):
+        xv = x_ref[...]
+        wv = w_ref[...]
+        acc = jnp.zeros(o_ref.shape, dtype=o_ref.dtype)
+        for k in range(K):  # unrolled filter taps
+            acc = acc + jnp.einsum("bcl,oc->bol", xv[:, :, k : k + OL], wv[:, :, k])
+        if act is not None:
+            acc = ref._ACT[act](acc)
+        o_ref[...] = acc
+
+    bb = max(1, min(bb, B))
+    while B % bb != 0:
+        bb -= 1
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, C, L), lambda b: (b, 0, 0)),
+            pl.BlockSpec((O, C, K), lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, O, OL), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, O, OL), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def conv1d_act(x, w, act, **kw):
+    return conv1d(x, w, act=act, **kw)
+
+
+def conv2d(x, w, *, bias=None, act=None, bb=1):
+    """x: (B,C,H,W), w: (O,C,KH,KW) -> (B,O,OH,OW). Batch-tiled grid."""
+    B, C, H, W = x.shape
+    O, _, KH, KW = w.shape
+    OH, OW = H - KH + 1, W - KW + 1
+
+    def kernel(*refs):
+        x_ref, w_ref = refs[0], refs[1]
+        b_ref = refs[2] if bias is not None else None
+        o_ref = refs[-1]
+        xv = x_ref[...]
+        wv = w_ref[...]
+        acc = jnp.zeros(o_ref.shape, dtype=o_ref.dtype)
+        for kh in range(KH):  # unrolled window
+            for kw_ in range(KW):
+                patch = xv[:, :, kh : kh + OH, kw_ : kw_ + OW]
+                acc = acc + jnp.einsum("bchw,oc->bohw", patch, wv[:, :, kh, kw_])
+        if b_ref is not None:
+            acc = acc + b_ref[...][None, :, None, None]
+        if act is not None:
+            acc = ref._ACT[act](acc)
+        o_ref[...] = acc
+
+    bb = max(1, min(bb, B))
+    while B % bb != 0:
+        bb -= 1
+    in_specs = [
+        pl.BlockSpec((bb, C, H, W), lambda b: (b, 0, 0, 0)),
+        pl.BlockSpec((O, C, KH, KW), lambda b: (0, 0, 0, 0)),
+    ]
+    operands = [x, w]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((O,), lambda b: (0,)))
+        operands.append(bias)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, O, OH, OW), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, O, OH, OW), x.dtype),
+        interpret=True,
+    )(*operands)
+
+
+def conv2d_bias(x, w, b, **kw):
+    return conv2d(x, w, bias=b, **kw)
+
+
+def conv2d_act(x, w, act, **kw):
+    return conv2d(x, w, act=act, **kw)
+
+
+def dwconv2d(x, w, *, bb=1):
+    """Depthwise conv2d: x (B,C,H,W), w (C,KH,KW). VPU-bound (no MXU)."""
+    B, C, H, W = x.shape
+    _, KH, KW = w.shape
+    OH, OW = H - KH + 1, W - KW + 1
+
+    def kernel(x_ref, w_ref, o_ref):
+        xv = x_ref[...]
+        wv = w_ref[...]
+        acc = jnp.zeros(o_ref.shape, dtype=o_ref.dtype)
+        for kh in range(KH):
+            for kw_ in range(KW):
+                patch = xv[:, :, kh : kh + OH, kw_ : kw_ + OW]
+                acc = acc + patch * wv[None, :, kh, kw_, None, None]
+        o_ref[...] = acc
+
+    bb = max(1, min(bb, B))
+    while B % bb != 0:
+        bb -= 1
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, C, H, W), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((C, KH, KW), lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, C, OH, OW), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, OH, OW), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def pwconv(x, w, *, bb=1):
+    """Pointwise conv = channel contraction on the MXU."""
+    B, C, H, W = x.shape
+    O, _ = w.shape
+
+    def kernel(x_ref, w_ref, o_ref):
+        o_ref[...] = jnp.einsum("bchw,oc->bohw", x_ref[...], w_ref[...])
+
+    bb = max(1, min(bb, B))
+    while B % bb != 0:
+        bb -= 1
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, C, H, W), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((O, C), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, O, H, W), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, O, H, W), x.dtype),
+        interpret=True,
+    )(x, w)

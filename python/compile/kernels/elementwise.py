@@ -1,0 +1,214 @@
+"""L1 Pallas kernels — activation & pooling family (category 3).
+
+TPU adaptation: the paper's CUDA element-wise kernels are pure
+bandwidth-bound grid-stride loops. On TPU these become VPU kernels with
+row-tiled BlockSpecs: each grid step streams a (br, N) slab HBM→VMEM,
+applies the (possibly fused) element-wise chain, and streams it back.
+Fusion (bias_relu / add_gelu / mul_sigmoid / scale_tanh) is the paper's
+key lever against eager PyTorch's one-launch-per-primitive behaviour.
+
+Pooling uses the stride==kernel reshape trick inside the kernel: the
+window reduction happens entirely in VMEM registers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _row_blocks(M, br):
+    br = max(1, min(br, M))
+    while M % br != 0:
+        br -= 1
+    return br
+
+
+def _unary(fn, x, br=8):
+    """Row-tiled element-wise kernel over a 2-D tensor."""
+    M, N = x.shape
+    br = _row_blocks(M, br)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = fn(x_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // br,),
+        in_specs=[pl.BlockSpec((br, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _binary(fn, x, y, br=8):
+    """Row-tiled fused binary element-wise kernel (same-shape operands)."""
+    M, N = x.shape
+    br = _row_blocks(M, br)
+
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = fn(x_ref[...], y_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // br,),
+        in_specs=[
+            pl.BlockSpec((br, N), lambda i: (i, 0)),
+            pl.BlockSpec((br, N), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def relu(x, **kw):
+    return _unary(ref.relu, x, **kw)
+
+
+def leaky_relu(x, **kw):
+    return _unary(ref.leaky_relu, x, **kw)
+
+
+def gelu(x, **kw):
+    return _unary(ref.gelu, x, **kw)
+
+
+def sigmoid(x, **kw):
+    return _unary(ref.sigmoid, x, **kw)
+
+
+def tanh(x, **kw):
+    return _unary(ref.tanh, x, **kw)
+
+
+def silu(x, **kw):
+    return _unary(ref.silu, x, **kw)
+
+
+def elu(x, **kw):
+    return _unary(ref.elu, x, **kw)
+
+
+def softplus(x, **kw):
+    return _unary(ref.softplus, x, **kw)
+
+
+def hardtanh(x, **kw):
+    return _unary(ref.hardtanh, x, **kw)
+
+
+def mish(x, **kw):
+    return _unary(ref.mish, x, **kw)
+
+
+def bias_relu(x, b, br=8):
+    """x (M,N) + b (1,N) broadcast, then relu — single fused kernel."""
+    M, N = x.shape
+    br = _row_blocks(M, br)
+
+    def kernel(x_ref, b_ref, o_ref):
+        o_ref[...] = ref.relu(x_ref[...] + b_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // br,),
+        in_specs=[
+            pl.BlockSpec((br, N), lambda i: (i, 0)),
+            pl.BlockSpec((1, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=True,
+    )(x, b)
+
+
+def add_gelu(x, y, **kw):
+    return _binary(ref.add_gelu, x, y, **kw)
+
+
+def mul_sigmoid(x, y, **kw):
+    return _binary(ref.mul_sigmoid, x, y, **kw)
+
+
+def scale_tanh(x, s, br=8):
+    """Fused scale (scalar tensor (1,1)) + tanh."""
+    M, N = x.shape
+    br = _row_blocks(M, br)
+
+    def kernel(x_ref, s_ref, o_ref):
+        o_ref[...] = jnp.tanh(x_ref[...] * s_ref[0, 0])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // br,),
+        in_specs=[
+            pl.BlockSpec((br, N), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=True,
+    )(x, s)
+
+
+def maxpool2d(x, k, bb=1):
+    """Window max with stride==k; reduction in-VMEM via reshape."""
+    B, C, H, W = x.shape
+    bb = _row_blocks(B, bb)
+
+    def kernel(x_ref, o_ref):
+        xv = x_ref[...]
+        b, c = xv.shape[0], xv.shape[1]
+        o_ref[...] = xv.reshape(b, c, H // k, k, W // k, k).max(axis=(3, 5))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((bb, C, H, W), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((bb, C, H // k, W // k), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, H // k, W // k), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def avgpool2d(x, k, bb=1):
+    B, C, H, W = x.shape
+    bb = _row_blocks(B, bb)
+
+    def kernel(x_ref, o_ref):
+        xv = x_ref[...]
+        b, c = xv.shape[0], xv.shape[1]
+        o_ref[...] = xv.reshape(b, c, H // k, k, W // k, k).mean(axis=(3, 5))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((bb, C, H, W), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((bb, C, H // k, W // k), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, H // k, W // k), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def avgpool1d(x, k, bb=1):
+    B, C, L = x.shape
+    bb = _row_blocks(B, bb)
+
+    def kernel(x_ref, o_ref):
+        xv = x_ref[...]
+        b, c = xv.shape[0], xv.shape[1]
+        o_ref[...] = xv.reshape(b, c, L // k, k).mean(axis=3)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((bb, C, L), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((bb, C, L // k), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, L // k), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernels — loss family (category 5).
+
+TPU adaptation: CUDA loss kernels are two-stage (per-block partial
+reduction + atomics / second launch). Here the whole operand pair is
+VMEM-resident (dataset shapes are small) and the reduction happens in a
+single kernel instance producing a (1,1) scalar — the analogue of a
+single-block fused reduction, avoiding the multi-launch eager PyTorch
+pattern (pointwise op, then mean, each a separate kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _scalar(fn, *xs):
+    def kernel(*refs):
+        o_ref = refs[-1]
+        o_ref[...] = fn(*[r[...] for r in refs[:-1]])
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), xs[0].dtype),
+        interpret=True,
+    )(*xs)
+
+
+def mse_loss(p, t):
+    return _scalar(ref.mse_loss, p, t)
+
+
+def mae_loss(p, t):
+    return _scalar(ref.mae_loss, p, t)
+
+
+def huber_loss(p, t):
+    return _scalar(ref.huber_loss, p, t)
+
+
+def cross_entropy_soft(logits, labels):
+    return _scalar(ref.cross_entropy_soft, logits, labels)
+
+
+def kl_div_loss(logp, q):
+    return _scalar(ref.kl_div_loss, logp, q)
+
+
+def hinge_loss(p, y):
+    return _scalar(ref.hinge_loss, p, y)

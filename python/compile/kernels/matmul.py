@@ -1,0 +1,169 @@
+"""L1 Pallas kernels — matrix-multiplication family (category 1).
+
+TPU adaptation of the paper's CUDA-threadblock GEMM (DESIGN.md
+§Hardware-Adaptation): the CUDA (blockDim, smem tile) schedule becomes a
+Pallas BlockSpec HBM→VMEM schedule. The grid is (M/bm, N/bn, K/bk); each
+step streams one (bm,bk) x-tile and one (bk,bn) y-tile into VMEM and
+accumulates into the resident (bm,bn) output tile — the K axis is the
+innermost (sequential) grid dimension, so the output block stays hot in
+VMEM across the K loop, exactly like a CUDA smem-accumulator tile.
+
+Epilogues (bias / residual / activation) are fused into the final K step
+— this is the fusion the paper's >10× vs-PyTorch wins come from (one
+kernel instead of a GEMM launch plus N element-wise launches).
+
+All kernels run with interpret=True (CPU-PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same BlockSpecs drive the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM budget bookkeeping (bytes), used by DESIGN.md §9 estimates:
+#   footprint = 4 * (bm*bk + bk*bn + bm*bn) + epilogue operands.
+DEFAULT_BM = 32
+DEFAULT_BN = 32
+DEFAULT_BK = 32
+
+
+def _pick(block, dim):
+    """Largest divisor of `dim` that is <= `block` (keeps specs legal)."""
+    b = min(block, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def tiled_matmul(
+    x,
+    y,
+    *,
+    bias=None,
+    residual=None,
+    act=None,
+    bm=DEFAULT_BM,
+    bn=DEFAULT_BN,
+    bk=DEFAULT_BK,
+):
+    """Tiled GEMM with optionally fused epilogue.
+
+    x: (M,K), y: (K,N), bias: (1,N) or None, residual: (M,N) or None,
+    act: name in ref._ACT or None.
+    """
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (x.shape, y.shape)
+    bm, bn, bk = _pick(bm, M), _pick(bn, N), _pick(bk, K)
+    nk = K // bk
+
+    def kernel(*refs):
+        i = 0
+        x_ref, y_ref = refs[0], refs[1]
+        i = 2
+        b_ref = r_ref = None
+        if bias is not None:
+            b_ref = refs[i]
+            i += 1
+        if residual is not None:
+            r_ref = refs[i]
+            i += 1
+        o_ref = refs[-1]
+
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(x_ref[...], y_ref[...])
+
+        @pl.when(pl.program_id(2) == nk - 1)
+        def _epilogue():
+            acc = o_ref[...]
+            if b_ref is not None:
+                acc = acc + b_ref[...]
+            if r_ref is not None:
+                acc = acc + r_ref[...]
+            if act is not None:
+                acc = ref._ACT[act](acc)
+            o_ref[...] = acc
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, y]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(bias)
+    if residual is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        operands.append(residual)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=True,
+    )(*operands)
+
+
+def matmul(x, y, **blocks):
+    return tiled_matmul(x, y, **blocks)
+
+
+def matmul_bias(x, y, b, **blocks):
+    return tiled_matmul(x, y, bias=b, **blocks)
+
+
+def matmul_act(x, y, act, **blocks):
+    return tiled_matmul(x, y, act=act, **blocks)
+
+
+def matmul_bias_act(x, y, b, act, **blocks):
+    return tiled_matmul(x, y, bias=b, act=act, **blocks)
+
+
+def gemm_add(x, y, c, **blocks):
+    return tiled_matmul(x, y, residual=c, **blocks)
+
+
+def matvec(a, x, **blocks):
+    """(M,K) @ (K,1): GEMM with N=1 (bn clamps to 1)."""
+    return tiled_matmul(a, x, **blocks)
+
+
+def bmm(x, y, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Batched GEMM: grid (B, M/bm, N/bn) with a K-resident kernel.
+
+    The batch axis maps to the outermost grid dimension (the CUDA
+    blockIdx.z analogue); K is kept whole in VMEM because the batched
+    ops in the dataset are small.
+    """
+    B, M, K = x.shape
+    _, _, N = y.shape
+    bm, bn = _pick(bm, M), _pick(bn, N)
+
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = jnp.einsum(
+            "bmk,bkn->bmn", x_ref[...], y_ref[...], preferred_element_type=x_ref.dtype
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((1, bm, K), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, K, bn), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M, N), x.dtype),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernels — cumulative family (category 6).
+
+TPU adaptation: the paper's category-6 kernels (cumsum etc.) are the
+"sequence dependent, hard to parallelize" group. The CUDA approach is a
+Blelloch/Hillis-Steele block scan with inter-block carry propagation;
+on TPU the row fits in VMEM, so each grid step performs the whole-row
+scan on the VPU (log-depth under XLA's scan lowering). The serial
+dependency is what the cost model charges for — matching the paper's
+observation that this category sees the smallest speedups.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _row_blocks(M, br):
+    br = max(1, min(br, M))
+    while M % br != 0:
+        br -= 1
+    return br
+
+
+def _rowscan(fn, x, br=8):
+    M, N = x.shape
+    br = _row_blocks(M, br)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = fn(x_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // br,),
+        in_specs=[pl.BlockSpec((br, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def cumsum_rows(x, br=8):
+    return _rowscan(ref.cumsum_rows, x, br)
+
+
+def cumprod_rows(x, br=8):
+    return _rowscan(ref.cumprod_rows, x, br)
+
+
+def reverse_cumsum_rows(x, br=8):
+    return _rowscan(ref.reverse_cumsum_rows, x, br)
+
+
+def cummax_rows(x, br=8):
+    return _rowscan(ref.cummax_rows, x, br)

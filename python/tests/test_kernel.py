@@ -1,0 +1,90 @@
+"""pytest: every Pallas kernel vs the pure-jnp oracle — the CORE
+correctness signal (paper §4.3 functional testing, build-time half)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+OPS = model.build_registry()
+
+
+def gen_arg(rng, spec: model.ArgSpec):
+    shape, gen = spec.shape, spec.gen
+    if gen == "prob":
+        v = rng.uniform(0.1, 1.0, shape)
+        v = v / v.sum(-1, keepdims=True)
+    elif gen == "logprob":
+        v = rng.uniform(0.1, 1.0, shape)
+        v = np.log(v / v.sum(-1, keepdims=True))
+    elif gen == "sign":
+        v = rng.choice([-1.0, 1.0], shape)
+    elif gen == "near_one":
+        v = rng.uniform(0.8, 1.2, shape)
+    elif gen == "positive":
+        v = rng.uniform(0.1, 1.1, shape)
+    else:
+        v = rng.uniform(-1.0, 1.0, shape)
+    return jnp.asarray(v, jnp.float32)
+
+
+def make_args(op, seed=0):
+    rng = np.random.default_rng(seed)
+    return [gen_arg(rng, a) for a in op.args]
+
+
+@pytest.mark.parametrize("op", OPS, ids=[o.name for o in OPS])
+def test_opt_matches_ref(op):
+    """Pallas kernel output == oracle for every dataset op."""
+    args = make_args(op)
+    r = np.asarray(op.build_ref(*args))
+    o = np.asarray(op.build_opt(*args))
+    assert r.shape == tuple(op.out_shape)
+    np.testing.assert_allclose(o, r, atol=op.atol, rtol=op.rtol)
+
+
+@pytest.mark.parametrize("op", OPS, ids=[o.name for o in OPS])
+def test_bug_variants_differ(op):
+    """The injected-defect variants must actually fail the functional
+    check the rust evaluator applies (otherwise SimLLM semantic defects
+    would be undetectable)."""
+    args = make_args(op, seed=1)
+    r = np.asarray(op.build_ref(*args))
+    for bug in (lambda *a: op.build_ref(*a) * 1.25,
+                lambda *a: op.build_ref(*a) + 0.05):
+        b = np.asarray(bug(*args))
+        assert not np.allclose(b, r, atol=op.atol, rtol=op.rtol), (
+            f"{op.name}: bug variant indistinguishable from ref")
+
+
+@pytest.mark.parametrize("op", OPS, ids=[o.name for o in OPS])
+def test_metadata_sane(op):
+    assert op.flops > 0
+    assert op.bytes_moved > 0
+    assert op.pt_launches >= 1
+    assert op.pt_passes >= 1.0
+    assert 0.0 < op.pt_efficiency <= 1.0
+    assert op.algo_penalty >= 1.0
+    assert 1 <= op.category <= 6
+
+
+def test_registry_shape():
+    """Dataset composition: 91 ops, Table-5 category proportions."""
+    assert len(OPS) == 91
+    counts = {}
+    for o in OPS:
+        counts[o.category] = counts.get(o.category, 0) + 1
+    assert counts == {1: 18, 2: 28, 3: 21, 4: 14, 5: 6, 6: 4}
+
+
+def test_determinism():
+    """Same seed -> identical inputs (the rust evaluator relies on
+    deterministic per-seed input generation for memoized functional
+    verdicts)."""
+    op = OPS[0]
+    a1 = make_args(op, seed=7)
+    a2 = make_args(op, seed=7)
+    for x, y in zip(a1, a2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

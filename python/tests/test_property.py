@@ -1,0 +1,153 @@
+"""Hypothesis property sweeps over the Pallas kernels' shape/block space.
+
+The pytest suite pins the dataset shapes; here hypothesis varies shapes,
+block sizes and dtypes and asserts the kernels still match the oracle —
+the paper's "syntactic validity + functional correctness" constraint
+g(p)=0, checked over the *schedule* dimension the evolution explores.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import elementwise as kelt
+from compile.kernels import matmul as kmm
+from compile.kernels import reduce as kred
+from compile.kernels import ref
+from compile.kernels import scan as kscan
+
+DTYPES = [jnp.float32]
+SET = settings(max_examples=25, deadline=None)
+
+
+def arr(rng, shape, dtype=jnp.float32, lo=-1.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape), dtype)
+
+
+dims = st.sampled_from([4, 8, 16, 24, 32, 48, 64])
+blocks = st.sampled_from([1, 2, 4, 8, 16, 32, 64])
+
+
+@SET
+@given(m=dims, k=dims, n=dims, bm=blocks, bn=blocks, bk=blocks, seed=st.integers(0, 2**16))
+def test_matmul_any_blocks(m, k, n, bm, bn, bk, seed):
+    """tiled_matmul is correct for ANY (bm,bn,bk) — illegal blocks are
+    clamped to divisors, so every schedule the DSL can express is safe."""
+    rng = np.random.default_rng(seed)
+    x, y = arr(rng, (m, k)), arr(rng, (k, n))
+    got = kmm.tiled_matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(x, y)),
+                               atol=1e-3, rtol=1e-3)
+
+
+@SET
+@given(m=dims, k=dims, n=dims, bm=blocks, seed=st.integers(0, 2**16),
+       act=st.sampled_from(["relu", "gelu", "tanh", "silu", "sigmoid"]))
+def test_matmul_epilogue(m, k, n, bm, seed, act):
+    rng = np.random.default_rng(seed)
+    x, y, b = arr(rng, (m, k)), arr(rng, (k, n)), arr(rng, (1, n))
+    got = kmm.matmul_bias_act(x, y, b, act, bm=bm)
+    want = ref.matmul_bias_act(x, y, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+
+@SET
+@given(b=st.integers(1, 4), c=st.integers(1, 8), l=st.integers(8, 48),
+       o=st.integers(1, 8), k=st.sampled_from([1, 3, 5, 7]), seed=st.integers(0, 2**16))
+def test_conv1d_shapes(b, c, l, o, k, seed):
+    if l <= k:
+        return
+    rng = np.random.default_rng(seed)
+    x, w = arr(rng, (b, c, l)), arr(rng, (o, c, k))
+    np.testing.assert_allclose(np.asarray(kconv.conv1d(x, w)),
+                               np.asarray(ref.conv1d(x, w)), atol=1e-4, rtol=1e-3)
+
+
+@SET
+@given(b=st.integers(1, 3), c=st.integers(1, 6), h=st.integers(6, 20),
+       w_=st.integers(6, 20), o=st.integers(1, 6), k=st.sampled_from([1, 3, 5]),
+       bb=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_conv2d_shapes(b, c, h, w_, o, k, bb, seed):
+    if h <= k or w_ <= k:
+        return
+    rng = np.random.default_rng(seed)
+    x, w = arr(rng, (b, c, h, w_)), arr(rng, (o, c, k, k))
+    np.testing.assert_allclose(np.asarray(kconv.conv2d(x, w, bb=bb)),
+                               np.asarray(ref.conv2d(x, w)), atol=1e-4, rtol=1e-3)
+
+
+@SET
+@given(m=dims, n=dims, br=blocks, seed=st.integers(0, 2**16),
+       name=st.sampled_from(["relu", "gelu", "sigmoid", "tanh", "silu", "elu",
+                             "softplus", "hardtanh", "mish", "leaky_relu"]))
+def test_elementwise_any_rows(m, n, br, seed, name):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (m, n), lo=-3, hi=3)
+    got = getattr(kelt, name)(x, br=br)
+    want = getattr(ref, name)(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+@SET
+@given(m=dims, n=dims, br=blocks, seed=st.integers(0, 2**16))
+def test_softmax_rows_sum_to_one(m, n, br, seed):
+    """Property: softmax output rows are probability distributions."""
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (m, n), lo=-5, hi=5)
+    got = np.asarray(kred.softmax(x, br=br))
+    np.testing.assert_allclose(got.sum(-1), np.ones(m), atol=1e-5)
+    assert (got >= 0).all()
+    np.testing.assert_allclose(got, np.asarray(ref.softmax(x)), atol=1e-5, rtol=1e-4)
+
+
+@SET
+@given(m=dims, n=dims, br=blocks, seed=st.integers(0, 2**16))
+def test_layernorm_stats(m, n, br, seed):
+    """Property: layernorm(g=1,b=0) rows have ~zero mean, ~unit var."""
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (m, n), lo=-2, hi=2)
+    g = jnp.ones((1, n), jnp.float32)
+    b = jnp.zeros((1, n), jnp.float32)
+    got = np.asarray(kred.layernorm(x, g, b, br=br))
+    np.testing.assert_allclose(got.mean(-1), np.zeros(m), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(kred.layernorm(x, g, b, br=br)),
+                               np.asarray(ref.layernorm(x, g, b)), atol=1e-4, rtol=1e-3)
+
+
+@SET
+@given(m=dims, n=dims, br=blocks, seed=st.integers(0, 2**16))
+def test_cumsum_last_equals_sum(m, n, br, seed):
+    """Property: last scan element equals the row sum (prefix-sum law)."""
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (m, n))
+    got = np.asarray(kscan.cumsum_rows(x, br=br))
+    np.testing.assert_allclose(got[:, -1], np.asarray(x).sum(-1), atol=1e-4)
+    np.testing.assert_allclose(got, np.asarray(ref.cumsum_rows(x)), atol=1e-4, rtol=1e-3)
+
+
+@SET
+@given(m=dims, n=dims, seed=st.integers(0, 2**16))
+def test_reverse_cumsum_is_flip_of_cumsum(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (m, n))
+    got = np.asarray(kscan.reverse_cumsum_rows(x))
+    want = np.flip(np.cumsum(np.flip(np.asarray(x), -1), -1), -1)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-3)
+
+
+@SET
+@given(b=st.integers(1, 4), c=st.integers(1, 8),
+       hw=st.sampled_from([4, 8, 12, 16]), k=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**16))
+def test_pool_bounds(b, c, hw, k, seed):
+    """Property: maxpool >= avgpool element-wise; both match oracle."""
+    if hw % k != 0:
+        return
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (b, c, hw, hw))
+    mx = np.asarray(kelt.maxpool2d(x, k))
+    av = np.asarray(kelt.avgpool2d(x, k))
+    assert (mx >= av - 1e-6).all()
+    np.testing.assert_allclose(mx, np.asarray(ref.maxpool2d(x, k)), atol=1e-6)
+    np.testing.assert_allclose(av, np.asarray(ref.avgpool2d(x, k)), atol=1e-6)

@@ -1,0 +1,149 @@
+//! Hot-path microbenchmarks (the criterion substitute; see
+//! util::bench). These are the paths executed O(trials x runs) times in
+//! a campaign — the targets of the EXPERIMENTS.md §Perf pass:
+//!
+//!   parse -> validate -> lower    (compile gate, per trial)
+//!   price                         (cost model, per trial)
+//!   render + generate             (prompt + SimLLM, per trial)
+//!   session trial                 (everything, per trial)
+//!   record JSON round-trip        (persistence, per run)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::costmodel::{baseline_schedule, price, Gpu};
+use evoengineer::dsl::{self, KernelSpec};
+use evoengineer::evals::Evaluator;
+use evoengineer::llm::{self, MODELS};
+use evoengineer::methods::{Archive, RunCtx, Session};
+use evoengineer::population::SingleBest;
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::traverse::prompt::render;
+use evoengineer::traverse::{Guidance, GuidanceConfig};
+use evoengineer::util::bench::Bench;
+use evoengineer::util::Rng;
+
+fn main() {
+    let reg = Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    );
+    let evaluator = Evaluator::new(reg.clone(), Runtime::new().unwrap());
+    let task = reg.get("matmul_64").unwrap().clone();
+    let gpu = Gpu::rtx4090();
+
+    let spec = KernelSpec {
+        op: task.name.clone(),
+        semantics: "opt".into(),
+        schedule: baseline_schedule(&task),
+    };
+    let src = dsl::print(&spec);
+
+    let mut b = Bench::new("dsl");
+    b.bench("lex+parse", || dsl::parse(&src).unwrap());
+    b.bench("print", || dsl::print(&spec));
+    b.bench("validate", || dsl::validate(&spec).unwrap());
+    b.bench("compile_front", || dsl::compile_front(&src).unwrap());
+    b.report();
+
+    let mut b = Bench::new("costmodel");
+    b.bench("price", || price(&spec.schedule, &task, &gpu));
+    b.bench("baseline_schedule", || baseline_schedule(&task));
+    b.report();
+
+    // Prompt render + SimLLM generation (information-rich prompt).
+    let parent = {
+        let mut rng = Rng::new(1);
+        let outcome = evaluator.evaluate(&src, &task, &mut rng);
+        match outcome {
+            evoengineer::evals::EvalOutcome::Ok(s) => evoengineer::population::Candidate {
+                src: src.clone(),
+                spec: Some(spec.clone()),
+                compiled: true,
+                correct: true,
+                speedup: s.speedup,
+                pytorch_speedup: s.pytorch_speedup,
+                true_speedup: s.true_speedup,
+                true_pytorch_speedup: s.true_pytorch_speedup,
+                insight: None,
+                trial: 0,
+            },
+            other => panic!("{other:?}"),
+        }
+    };
+    let ins = evoengineer::traverse::InsightRecord {
+        text: "set vector_width to 8 (wider loads)".into(),
+        delta: 0.4,
+    };
+    let guidance = Guidance {
+        task: &task,
+        baseline_us: 10.0,
+        parent: Some(&parent),
+        history: vec![&parent, &parent, &parent],
+        insights: vec![&ins, &ins],
+        profiling: Some("bound: Memory; occupancy: 0.66".into()),
+        instruction: "Improve the current kernel.".into(),
+    };
+    let cfg = GuidanceConfig::full();
+    let prompt = render(&cfg, &guidance);
+    let mut b = Bench::new("llm");
+    b.bench("render_prompt", || render(&cfg, &guidance));
+    let mut i = 0u64;
+    b.bench("generate", || {
+        i += 1;
+        let mut rng = Rng::new(i);
+        llm::generate(&prompt, &MODELS[0], &mut rng)
+    });
+    b.report();
+
+    // Full evaluation of an emitted candidate (memoized functional).
+    let mut b = Bench::new("evals");
+    let mut j = 0u64;
+    b.bench("evaluate_valid", || {
+        j += 1;
+        let mut rng = Rng::new(j);
+        evaluator.evaluate(&src, &task, &mut rng)
+    });
+    let bad = src.replacen(';', " ", 1);
+    b.bench("evaluate_syntax_fail", || {
+        let mut rng = Rng::new(3);
+        evaluator.evaluate(&bad, &task, &mut rng)
+    });
+    b.report();
+
+    // One complete trial through a Session (everything end to end).
+    let archive = Archive::new();
+    let ctx = RunCtx {
+        evaluator: &evaluator,
+        task: &task,
+        model: &MODELS[0],
+        seed: 0,
+        archive: &archive,
+        budget: usize::MAX / 2,
+    };
+    let mut session = Session::new(&ctx, "bench");
+    let mut pop = SingleBest::new();
+    session.bootstrap(&mut pop);
+    let mut b = Bench::new("session");
+    b.bench("trial", || {
+        session
+            .trial(&cfg, &mut pop, "Improve the current kernel.", None, None)
+            .unwrap()
+    });
+    b.report();
+
+    // Record persistence — on a realistic record (45-trial trajectory),
+    // not the mega-session above (whose trajectory is bench-inflated).
+    let mut rec = session.finish("bench");
+    rec.trajectory.truncate(45);
+    let json = rec.to_json().to_string();
+    let mut b = Bench::new("records");
+    b.bench("to_json", || rec.to_json().to_string());
+    b.bench("parse_json", || {
+        evoengineer::methods::KernelRunRecord::from_json(
+            &evoengineer::util::json::parse(&json).unwrap(),
+        )
+        .unwrap()
+    });
+    b.report();
+}

@@ -1,0 +1,151 @@
+//! Table/figure regeneration benches — one end-to-end bench per paper
+//! table and figure (DESIGN.md §6), plus the §7 ablations. Each bench
+//! runs the slice of the campaign that feeds that artifact and renders
+//! it, so `cargo bench --bench tables` both times and *prints* every
+//! reproduced result (the bench output doubles as the reproduction
+//! log captured in bench_output.txt).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::evals::Evaluator;
+use evoengineer::methods::KernelRunRecord;
+use evoengineer::report;
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::util::bench::Bench;
+
+fn evaluator() -> Evaluator {
+    let reg = Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    );
+    Evaluator::new(reg, Runtime::new().unwrap())
+}
+
+fn slice(
+    ev: &Evaluator,
+    methods: &[&str],
+    models: &[&str],
+    max_ops: usize,
+    seeds: u64,
+) -> Vec<KernelRunRecord> {
+    let cfg = CampaignConfig {
+        methods: methods.iter().map(|s| s.to_string()).collect(),
+        models: models.iter().map(|s| s.to_string()).collect(),
+        seeds: (0..seeds).collect(),
+        max_ops,
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+    campaign::run(&cfg, ev.clone()).unwrap()
+}
+
+fn main() {
+    let ev = evaluator();
+    let window = Duration::from_millis(1500);
+
+    // Shared record sets (one campaign slice per paper artifact).
+    println!("# building campaign slices for each table/figure...");
+    let t0 = Instant::now();
+    let recs_small = slice(&ev, &[], &["gpt"], 12, 2); // all methods
+    let recs_evo = slice(
+        &ev,
+        &["evoengineer-free", "evoengineer-insight", "evoengineer-full"],
+        &[],
+        12,
+        2,
+    );
+    let recs_ai = slice(&ev, &["ai cuda"], &["gpt"], 16, 2);
+    println!("# slices built in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    // --- Table 4: per-category speedup + validity -----------------------
+    let mut b = Bench::new("table4").with_window(window);
+    b.bench("campaign_slice+render", || {
+        let recs = slice(&ev, &["evoengineer-full"], &["gpt"], 6, 1);
+        report::table4(&recs)
+    });
+    println!("\n{}", report::table4(&recs_small));
+
+    // --- Table 5: dataset composition -----------------------------------
+    let mut b5 = Bench::new("table5").with_window(window);
+    b5.bench("render", || report::table5(&ev.registry));
+    println!("\n{}", report::table5(&ev.registry));
+
+    // --- Figure 1: trade-off scatter -------------------------------------
+    let mut b1 = Bench::new("fig1").with_window(window);
+    b1.bench("aggregate+render", || report::fig1(&recs_small));
+    println!("\n{}", report::fig1(&recs_small));
+
+    // --- Figure 4 (+6/7): token usage ------------------------------------
+    let mut b4 = Bench::new("fig4").with_window(window);
+    b4.bench("aggregate+render", || report::fig4(&recs_small, "GPT"));
+    println!("\n{}", report::fig4(&recs_small, "GPT"));
+
+    // --- Figure 5: >2x vs PyTorch ----------------------------------------
+    let mut bf5 = Bench::new("fig5").with_window(window);
+    bf5.bench("aggregate+render", || report::fig5(&recs_evo));
+    println!("\n{}", report::fig5(&recs_evo));
+
+    // --- Table 7: speedup-range distribution ------------------------------
+    let mut b7 = Bench::new("table7").with_window(window);
+    b7.bench("aggregate+render", || report::table7(&recs_evo));
+    println!("\n{}", report::table7(&recs_evo));
+
+    // --- Figure 8: distribution summaries ---------------------------------
+    let mut b8 = Bench::new("fig8").with_window(window);
+    b8.bench("aggregate+render", || report::fig8(&recs_evo));
+    println!("\n{}", report::fig8(&recs_evo));
+
+    // --- Table 8 + Figure 9: AI CUDA Engineer replication ------------------
+    let mut b89 = Bench::new("table8_fig9").with_window(window);
+    b89.bench("aggregate+render", || {
+        (report::table8(&recs_ai), report::fig9(&recs_ai))
+    });
+    println!("\n{}", report::table8(&recs_ai));
+    println!("{}", report::fig9(&recs_ai));
+
+    // --- Ablations (DESIGN.md §7) ------------------------------------------
+    println!("\n# ablation: trial budget 15/45/90 (EvoEngineer-Full, GPT-4.1)");
+    let mut ba = Bench::new("ablation_budget").with_window(window);
+    for budget in [15usize, 45, 90] {
+        let cfg = CampaignConfig {
+            methods: vec!["evoengineer-full".into()],
+            models: vec!["gpt".into()],
+            seeds: vec![0],
+            max_ops: 8,
+            budget,
+            quiet: true,
+            ..CampaignConfig::default()
+        };
+        let recs = ba
+            .bench(&format!("budget_{budget}"), || {
+                campaign::run(&cfg, ev.clone()).unwrap()
+            })
+            .iters;
+        let _ = recs;
+        let recs = campaign::run(&cfg, ev.clone()).unwrap();
+        let p = &evoengineer::metrics::tradeoff_points(&recs)[0];
+        println!(
+            "  budget {budget:>3}: median speedup {:.2}, functional {:.1}%",
+            p.median_speedup, p.correct_rate
+        );
+    }
+
+    println!("\n# ablation: population strategy at fixed info (insight/EoH/funsearch)");
+    let recs = slice(
+        &ev,
+        &["evoengineer-insight", "evoengineer-solution", "funsearch"],
+        &["claude"],
+        12,
+        2,
+    );
+    for p in evoengineer::metrics::tradeoff_points(&recs) {
+        println!(
+            "  {:<28} median speedup {:.2}, functional {:.1}%",
+            p.method, p.median_speedup, p.correct_rate
+        );
+    }
+    println!("\n# done — every paper table/figure regenerated above");
+}

@@ -1,0 +1,241 @@
+//! Campaign orchestrator: the worker pool that sweeps the
+//! method × model × op × seed grid (the paper's experimental matrix:
+//! 6 methods × 3 LLMs × 91 ops × 3 independent runs, 45 trials each)
+//! and persists run records.
+//!
+//! Each (method, model, op, seed) run is independent CPU-bound work
+//! (SimLLM sampling + compile pipeline + cost model; the PJRT
+//! functional verdicts are memoized inside the shared [`Evaluator`]).
+//! The environment is offline (no tokio), so the pool is a fixed set of
+//! std::thread workers draining a shared job queue — the runs are
+//! uniform enough that work stealing buys nothing.
+
+pub mod results;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::evals::Evaluator;
+use crate::llm::{profile, ModelProfile};
+use crate::methods::{self, Archive, KernelRunRecord, RunCtx};
+use crate::tasks::OpTask;
+use crate::{eyre, Result};
+
+/// Campaign sweep description.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Method names (see [`methods::all_methods`]); empty = all six.
+    pub methods: Vec<String>,
+    /// Model names; empty = all three.
+    pub models: Vec<String>,
+    /// Independent runs (the paper uses seeds {0,1,2}).
+    pub seeds: Vec<u64>,
+    /// Substring filter on op names; empty = all 91.
+    pub op_filter: String,
+    /// Cap on number of ops after filtering (0 = no cap).
+    pub max_ops: usize,
+    /// Trial budget per run (the paper's 45).
+    pub budget: usize,
+    /// Worker parallelism (0 = number of CPUs).
+    pub concurrency: usize,
+    /// Progress lines to stderr.
+    pub quiet: bool,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        Self {
+            methods: vec![],
+            models: vec![],
+            seeds: vec![0, 1, 2],
+            op_filter: String::new(),
+            max_ops: 0,
+            budget: crate::TRIAL_BUDGET,
+            concurrency: 0,
+            quiet: false,
+        }
+    }
+}
+
+fn resolve_models(names: &[String]) -> Result<Vec<&'static ModelProfile>> {
+    if names.is_empty() {
+        return Ok(profile::MODELS.iter().collect());
+    }
+    names
+        .iter()
+        .map(|n| profile::by_name(n).ok_or_else(|| eyre!("unknown model `{n}`")))
+        .collect()
+}
+
+fn resolve_method_names(names: &[String]) -> Result<Vec<String>> {
+    if names.is_empty() {
+        return Ok(methods::all_methods().iter().map(|m| m.name()).collect());
+    }
+    names
+        .iter()
+        .map(|n| {
+            methods::by_name(n)
+                .map(|m| m.name())
+                .ok_or_else(|| eyre!("unknown method `{n}`"))
+        })
+        .collect()
+}
+
+/// One grid point.
+#[derive(Clone)]
+struct Job {
+    method: String,
+    model: &'static ModelProfile,
+    op: OpTask,
+    seed: u64,
+}
+
+/// Run the sweep; returns records sorted by (method, model, op, seed)
+/// for deterministic output regardless of scheduling.
+pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRecord>> {
+    let models = resolve_models(&cfg.models)?;
+    let method_names = resolve_method_names(&cfg.methods)?;
+    let mut ops: Vec<OpTask> = evaluator
+        .registry
+        .ops
+        .iter()
+        .filter(|o| cfg.op_filter.is_empty() || o.name.contains(&cfg.op_filter))
+        .cloned()
+        .collect();
+    if cfg.max_ops > 0 && ops.len() > cfg.max_ops {
+        // Keep the category mix representative: stable stratified cut.
+        ops = stratified_cut(ops, cfg.max_ops);
+    }
+    anyhow::ensure!(!ops.is_empty(), "no ops match the filter");
+
+    let mut jobs = Vec::new();
+    for method in &method_names {
+        for model in &models {
+            for op in &ops {
+                for &seed in &cfg.seeds {
+                    jobs.push(Job {
+                        method: method.clone(),
+                        model,
+                        op: op.clone(),
+                        seed,
+                    });
+                }
+            }
+        }
+    }
+    let total = jobs.len();
+    let concurrency = if cfg.concurrency == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        cfg.concurrency
+    }
+    .min(total.max(1));
+    if !cfg.quiet {
+        eprintln!(
+            "campaign: {} methods x {} models x {} ops x {} seeds = {} runs ({} workers)",
+            method_names.len(),
+            models.len(),
+            ops.len(),
+            cfg.seeds.len(),
+            total,
+            concurrency
+        );
+    }
+
+    let archive = Archive::new();
+    let budget = cfg.budget;
+    let quiet = cfg.quiet;
+    let jobs = Arc::new(jobs);
+    let next = Arc::new(AtomicUsize::new(0));
+    let done = Arc::new(AtomicUsize::new(0));
+    let out: Arc<Mutex<Vec<Option<KernelRunRecord>>>> =
+        Arc::new(Mutex::new(vec![None; total]));
+
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency {
+            let jobs = jobs.clone();
+            let next = next.clone();
+            let done = done.clone();
+            let out = out.clone();
+            let evaluator = evaluator.clone();
+            let archive = archive.clone();
+            scope.spawn(move || loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= jobs.len() {
+                    break;
+                }
+                let job = &jobs[idx];
+                let method = methods::by_name(&job.method).expect("method resolved above");
+                let ctx = RunCtx {
+                    evaluator: &evaluator,
+                    task: &job.op,
+                    model: job.model,
+                    seed: job.seed,
+                    archive: &archive,
+                    budget,
+                };
+                let rec = method.run(&ctx);
+                out.lock().unwrap()[idx] = Some(rec);
+                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if !quiet && (d % 200 == 0 || d == jobs.len()) {
+                    eprintln!("  {d}/{} runs complete", jobs.len());
+                }
+            });
+        }
+    });
+
+    let mut records: Vec<KernelRunRecord> = Arc::try_unwrap(out)
+        .map_err(|_| eyre!("worker leak"))?
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job produced a record"))
+        .collect();
+    records.sort_by(|a, b| {
+        (&a.method, &a.model, &a.op, a.seed).cmp(&(&b.method, &b.model, &b.op, b.seed))
+    });
+    Ok(records)
+}
+
+/// Stratified cut preserving category proportions (used by quick runs).
+fn stratified_cut(ops: Vec<OpTask>, max: usize) -> Vec<OpTask> {
+    let mut by_cat: Vec<Vec<OpTask>> = vec![Vec::new(); 7];
+    let total = ops.len();
+    for op in ops {
+        by_cat[op.category as usize].push(op);
+    }
+    let mut out = Vec::with_capacity(max);
+    for bucket in by_cat.iter() {
+        if bucket.is_empty() {
+            continue;
+        }
+        let want = ((bucket.len() * max) as f64 / total as f64).round().max(1.0) as usize;
+        out.extend(bucket.iter().take(want).cloned());
+    }
+    out.truncate(max);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_defaults() {
+        assert_eq!(resolve_models(&[]).unwrap().len(), 3);
+        assert_eq!(resolve_method_names(&[]).unwrap().len(), 6);
+        assert!(resolve_models(&["martian".into()]).is_err());
+    }
+
+    #[test]
+    fn stratified_cut_keeps_mix() {
+        let reg = crate::tasks::TaskRegistry::load(
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        let cut = stratified_cut(reg.ops.clone(), 12);
+        assert!(cut.len() <= 12);
+        let cats: std::collections::HashSet<u8> = cut.iter().map(|o| o.category).collect();
+        assert!(cats.len() >= 5, "{cats:?}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Run-record persistence: JSON-lines store under `results/`, so every
+//! table/figure regenerator can work from a saved campaign instead of
+//! re-running it.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::methods::KernelRunRecord;
+use crate::util::json;
+use crate::{eyre, Result, WrapErr as _};
+
+/// Write records as JSONL (one record per line).
+pub fn save(path: impl AsRef<Path>, records: &[KernelRunRecord]) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).context("creating results dir")?;
+        }
+    }
+    let f = std::fs::File::create(&path).context("creating results file")?;
+    let mut w = std::io::BufWriter::new(f);
+    for r in records {
+        w.write_all(r.to_json().to_string().as_bytes())?;
+        w.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Load a JSONL record file.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<KernelRunRecord>> {
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("opening {:?} — run `repro campaign` first", path.as_ref()))?;
+    let r = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(&line).map_err(|e| eyre!("line {}: {e}", i + 1))?;
+        out.push(KernelRunRecord::from_json(&v)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(op: &str, seed: u64) -> KernelRunRecord {
+        KernelRunRecord {
+            method: "EvoEngineer-Free".into(),
+            model: "GPT-4.1".into(),
+            op: op.into(),
+            category: 1,
+            seed,
+            trials: 45,
+            compiled_trials: 40,
+            correct_trials: 30,
+            best_speedup: 2.5,
+            best_pytorch_speedup: 1.2,
+            any_valid: true,
+            prompt_tokens: 1000,
+            completion_tokens: 500,
+            trajectory: vec![1.0, 2.0, 2.5],
+            best_src: Some("kernel x {\n  semantics: opt;\n}".into()),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("evo_results_{}", std::process::id()));
+        let path = dir.join("records.jsonl");
+        let records = vec![rec("matmul_64", 0), rec("relu_64", 1)];
+        save(&path, &records).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].op, "matmul_64");
+        assert_eq!(back[1].seed, 1);
+        assert_eq!(back[0].trajectory, vec![1.0, 2.0, 2.5]);
+        assert_eq!(back[0].best_src, records[0].best_src);
+        assert_eq!(back[0].best_speedup, 2.5);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_missing_is_helpful() {
+        let err = load("/nonexistent/records.jsonl").unwrap_err();
+        assert!(format!("{err:#}").contains("repro campaign"));
+    }
+}

@@ -1,0 +1,61 @@
+//! RTX 4090 (AD102, sm_89) hardware model — the card from the paper's
+//! §A.2 experimental setup.
+
+/// Hardware description used by the pricing model.
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    /// FP32 peak throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// HBM/GDDR bandwidth (B/s).
+    pub mem_bw: f64,
+    /// Streaming multiprocessors.
+    pub sms: u32,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: u32,
+    /// Register file per SM (32-bit registers).
+    pub regs_per_sm: u32,
+    /// Shared memory per SM (bytes).
+    pub smem_per_sm: u64,
+    /// Kernel launch overhead (seconds).
+    pub launch_overhead: f64,
+}
+
+impl Gpu {
+    /// NVIDIA RTX 4090: 16384 cores @ ~2.52 GHz boost → 82.6 TFLOP/s
+    /// FP32; 24 GB GDDR6X @ 1008 GB/s; 128 SMs; ~3 µs launch overhead
+    /// (paper §A.2: "CPU performance directly impacts kernel launch
+    /// overhead").
+    pub fn rtx4090() -> Self {
+        Gpu {
+            peak_flops: 82.6e12,
+            mem_bw: 1008.0e9,
+            sms: 128,
+            max_threads_per_sm: 1536,
+            regs_per_sm: 65536,
+            smem_per_sm: 100 * 1024,
+            launch_overhead: 3.0e-6,
+        }
+    }
+
+    /// Roofline ridge point (FLOP/byte): below this, memory-bound.
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+}
+
+/// Per-measurement lognormal noise sigma (the paper's §A.7
+/// "stochasticity of performance measurement": clocks, cache state,
+/// system load). ~3% single-run spread matches typical 4090 jitter.
+pub const MEASURE_SIGMA: f64 = 0.03;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ridge_point_is_sane() {
+        let g = Gpu::rtx4090();
+        // 4090 ridge ~ 82 FLOP/B
+        assert!((g.ridge() - 82.0).abs() < 5.0, "{}", g.ridge());
+    }
+}

@@ -1,0 +1,453 @@
+//! Candidate pricing: schedule × workload → modeled RTX-4090 time.
+
+use crate::dsl::{Layout, Schedule};
+use crate::tasks::OpTask;
+
+use super::gpu::Gpu;
+use super::work_scale;
+
+/// Which roofline wall the kernel sits against (reported back to the
+/// search as profiling feedback, like the paper's AI-CUDA-Engineer
+/// profiling prompts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundKind {
+    Compute,
+    Memory,
+    Launch,
+}
+
+/// Full pricing breakdown for one candidate on one op.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    /// End-to-end modeled time (seconds), noise-free.
+    pub time: f64,
+    pub t_compute: f64,
+    pub t_mem: f64,
+    pub t_overhead: f64,
+    /// HBM traffic after reuse modeling (bytes).
+    pub traffic: f64,
+    /// Achieved occupancy (0..1].
+    pub occupancy: f64,
+    pub eff_compute: f64,
+    pub eff_bw: f64,
+    pub launches: u32,
+    pub bound: BoundKind,
+}
+
+fn geomean(a: f64, b: f64) -> f64 {
+    (a * b).sqrt()
+}
+
+/// Occupancy: resident blocks limited by threads, shared memory and
+/// register file — the classic CUDA occupancy calculation.
+fn occupancy(s: &Schedule, gpu: &Gpu) -> f64 {
+    let by_threads = gpu.max_threads_per_sm / s.threads_per_block.max(1);
+    let by_regs = gpu.regs_per_sm / (s.regs_per_thread.max(1) * s.threads_per_block.max(1));
+    let by_smem = if s.smem_bytes() > 0 {
+        (gpu.smem_per_sm / s.smem_bytes()) as u32
+    } else {
+        u32::MAX
+    };
+    let blocks = by_threads.min(by_regs).min(by_smem).max(0);
+    if blocks == 0 {
+        return 0.05; // one straggler block via fallback carve-out
+    }
+    ((blocks * s.threads_per_block) as f64 / gpu.max_threads_per_sm as f64).min(1.0)
+}
+
+/// Families whose landscape rewards on-chip data reuse (GEMM-like).
+fn is_reuse_family(task: &OpTask) -> bool {
+    matches!(task.family.as_str(), "matmul" | "conv")
+}
+
+/// Effective memory bandwidth fraction for this schedule.
+fn bw_efficiency(s: &Schedule, task: &OpTask, occ: f64) -> f64 {
+    // Vector packing: float1 load streams hit ~55% of peak; float4/8
+    // saturate the memory pipes.
+    let vw = (s.vector_width as f64).log2(); // 0,1,2,3
+    let mut eff = 0.55 + 0.15 * vw;
+    // Coalescing: row-major traversal matches the last-axis layout of
+    // every dataset op; col-major strides kill coalescing for
+    // element-wise/rowwise ops, GEMM tolerates it via staging.
+    eff *= match (s.layout, is_reuse_family(task)) {
+        (Layout::RowMajor, _) => 1.0,
+        (Layout::Tiled, true) => 1.02,
+        (Layout::Tiled, false) => 0.92,
+        (Layout::ColMajor, true) => 0.85,
+        (Layout::ColMajor, false) => 0.50,
+    };
+    // Latency hiding needs parallelism.
+    eff *= 0.55 + 0.45 * occ;
+    // Register spill writes back through memory.
+    if s.est_registers() > s.regs_per_thread {
+        eff *= 0.75;
+    }
+    // Cumulative ops (paper Table 5: "sequence dependent, hard to
+    // parallelize"): a naive kernel walks the carry chain serially and
+    // crawls; a staged block scan (Blelloch through shared memory)
+    // unlocks reasonable bandwidth but still trails other families.
+    // This is why the paper's category-6 speedups are all-or-nothing.
+    if task.family == "scan" {
+        if s.smem_staging && s.stages >= 2 && s.vector_width >= 4 {
+            // Fully staged, pipelined, vectorized block scan.
+            eff = eff.min(0.60);
+        } else if s.smem_staging {
+            // Staged but the carry chain still stalls the pipeline.
+            eff = eff.min(0.16);
+        } else {
+            eff *= 0.06;
+        }
+    }
+    // Interaction: tiled staging layouts only pay off when operands
+    // are actually staged.
+    if s.layout == Layout::Tiled && !s.smem_staging {
+        eff *= 0.85;
+    }
+    eff.clamp(0.02, 0.97)
+}
+
+/// Effective compute fraction (MXU/FMA pipes) for this schedule.
+fn compute_efficiency(s: &Schedule, task: &OpTask, occ: f64) -> f64 {
+    let mut eff: f64 = 0.45;
+    // Tensor-core-friendly tiles: multiples of 16 map onto MMA shapes.
+    if s.tile_m % 16 == 0 && s.tile_n % 16 == 0 {
+        eff *= 1.25;
+    } else if s.tile_m < 16 || s.tile_n < 16 {
+        eff *= 0.7 + 0.3 * (s.tile_m.min(s.tile_n) as f64 / 16.0);
+    }
+    // Software pipelining hides operand latency once staged.
+    eff *= match s.stages {
+        1 => 0.80,
+        2 => 1.00,
+        3 => 1.03,
+        _ => 0.97,
+    };
+    // Moderate unrolling feeds the pipes; extremes thrash the icache.
+    eff *= match s.unroll {
+        1 => 0.88,
+        2..=4 => 1.0,
+        5..=8 => 0.97,
+        _ => 0.88,
+    };
+    eff *= 0.5 + 0.5 * occ;
+    if s.est_registers() > s.regs_per_thread {
+        eff *= 0.55; // spill
+    }
+    if task.family == "scan" {
+        eff = if s.smem_staging { eff.min(0.25) } else { eff.min(0.04) };
+    }
+    eff.clamp(0.02, 0.92)
+}
+
+/// HBM traffic after data-reuse modeling.
+fn traffic_bytes(s: &Schedule, task: &OpTask, base_bytes: f64) -> f64 {
+    if !is_reuse_family(task) {
+        return base_bytes;
+    }
+    // GEMM-like ops re-read operand panels once per output tile; the
+    // re-read factor shrinks with the staged tile footprint
+    // (the CUDA-smem / TPU-VMEM blocking identity).
+    const REUSE_COEF: f64 = 8.0;
+    let reuse = if s.smem_staging {
+        geomean(s.tile_m as f64, s.tile_n as f64).max(1.0)
+    } else {
+        // Register-only blocking caps out quickly.
+        (s.tile_m.min(s.tile_n) as f64).min(4.0).max(1.0)
+    };
+    base_bytes * (1.0 + REUSE_COEF / reuse)
+}
+
+/// Price a candidate schedule on an op.
+pub fn price(s: &Schedule, task: &OpTask, gpu: &Gpu) -> Timing {
+    let scale = work_scale(task);
+    let flops = task.flops * scale;
+    let base_bytes = task.bytes_moved * scale;
+
+    let occ = occupancy(s, gpu);
+    let eff_bw = bw_efficiency(s, task, occ);
+    let eff_c = compute_efficiency(s, task, occ);
+    let traffic = traffic_bytes(s, task, base_bytes);
+
+    let t_compute = flops / (gpu.peak_flops * eff_c);
+    let t_mem = traffic / (gpu.mem_bw * eff_bw);
+    // Roofline with mild overlap slack.
+    let mut t_kernel = t_compute.max(t_mem) + 0.25 * t_compute.min(t_mem);
+
+    // Unfused composite ops replay the eager multi-pass pattern.
+    let mut launches = 1u32;
+    if !s.fuse_epilogue && task.pt_launches > 1 {
+        let extra_passes = (task.pt_passes - 1.0).max(0.0);
+        t_kernel += extra_passes * base_bytes / (gpu.mem_bw * eff_bw);
+        launches = task.pt_launches;
+    }
+
+    let t_overhead = launches as f64 * gpu.launch_overhead;
+    let time = t_kernel + t_overhead;
+
+    let bound = if t_overhead > t_kernel {
+        BoundKind::Launch
+    } else if t_compute > t_mem {
+        BoundKind::Compute
+    } else {
+        BoundKind::Memory
+    };
+
+    Timing {
+        time,
+        t_compute,
+        t_mem,
+        t_overhead,
+        traffic,
+        occupancy: occ,
+        eff_compute: eff_c,
+        eff_bw,
+        launches,
+        bound,
+    }
+}
+
+/// The initial kernel shipped with each dataset op (paper §5.1: "an
+/// initial C++/CUDA implementation to serve as the starting point").
+///
+/// Real starting kernels vary in quality — some ops ship near-optimal
+/// code (nothing for the search to find, which is why the paper's
+/// per-category Speedup Counts sit below the op counts), some ship
+/// mediocre code, some are naive. The tier is a deterministic function
+/// of the op name, so every method/model/seed faces the same starting
+/// point for the same op, exactly like the fixed dataset in the paper.
+pub fn baseline_schedule(task: &OpTask) -> Schedule {
+    let mut rng = crate::util::Rng::new(0xBA5E_11E5).derive(&task.name);
+    let tier = rng.f64();
+    // Convolutions mostly ship decent initial kernels (the paper's
+    // category-2 medians hover near 1.1x); cumulative ops ship naive
+    // serial scans (the paper's category-6 medians explode to 10-38x
+    // when a method finds the staged scan).
+    let (p_good, p_med) = match task.category {
+        2 => (0.45, 0.40),
+        6 => (0.0, 0.0),
+        _ => (0.25, 0.45),
+    };
+    let gemm_like = matches!(task.family.as_str(), "matmul" | "conv");
+    let mut s = Schedule::default();
+    if tier < p_good {
+        // Near-optimal. Half of these are effectively at the roofline
+        // already (vw 8, big staged tiles) — the search can find
+        // nothing better, which is what keeps the paper's Speedup
+        // Counts below the op counts; the other half leave a small
+        // vectorization gap.
+        let fully_tuned = rng.chance(0.5);
+        s.vector_width = if fully_tuned { 8 } else { 4 };
+        s.fuse_epilogue = true;
+        s.threads_per_block = 256;
+        s.unroll = 2;
+        if gemm_like {
+            s.smem_staging = true;
+            s.stages = 2;
+            let t = if fully_tuned { 64 } else { 32 };
+            s.tile_m = t;
+            s.tile_n = t;
+            s.tile_k = 32.min(t);
+            s.layout = Layout::Tiled;
+        }
+    } else if tier < p_good + p_med {
+        // Mediocre: some vectorization, no staging/fusion.
+        s.vector_width = 2;
+        s.threads_per_block = 256;
+        if gemm_like {
+            s.tile_m = 16;
+            s.tile_n = 16;
+        }
+    }
+    s
+}
+
+/// Baseline timing: the tiered initial kernel priced like any other.
+pub fn price_baseline(task: &OpTask, gpu: &Gpu) -> Timing {
+    price(&baseline_schedule(task), task, gpu)
+}
+
+/// Modeled eager-PyTorch library time (cuBLAS/cuDNN-backed primitives
+/// plus one launch per primitive) — the Figure-5 / Table-7 baseline.
+pub fn price_pytorch(task: &OpTask, gpu: &Gpu) -> f64 {
+    let scale = work_scale(task);
+    let flops = task.flops * scale;
+    let bytes = task.bytes_moved * scale;
+    let eff = task.pt_efficiency.max(0.05);
+    let t_mem = task.pt_passes * bytes / (gpu.mem_bw * eff);
+    let t_compute = flops / (gpu.peak_flops * eff);
+    t_mem.max(t_compute) * task.algo_penalty
+        + task.pt_launches as f64 * gpu.launch_overhead
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::TaskRegistry;
+
+    fn reg() -> TaskRegistry {
+        TaskRegistry::load(
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap()
+    }
+
+    fn tuned_matmul() -> Schedule {
+        Schedule {
+            tile_m: 64,
+            tile_n: 64,
+            tile_k: 32,
+            vector_width: 4,
+            unroll: 2,
+            stages: 2,
+            smem_staging: true,
+            fuse_epilogue: true,
+            layout: Layout::Tiled,
+            threads_per_block: 256,
+            regs_per_thread: 96,
+            ..Schedule::default()
+        }
+    }
+
+    #[test]
+    fn tuned_beats_naive_on_matmul() {
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("matmul_128").unwrap();
+        let naive = price(&Schedule::default(), task, &gpu);
+        let tuned = price(&tuned_matmul(), task, &gpu);
+        assert!(
+            tuned.time < naive.time * 0.7,
+            "tuned {:.3e} vs naive {:.3e}",
+            tuned.time,
+            naive.time
+        );
+    }
+
+    #[test]
+    fn fusion_helps_composite_ops() {
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("linear_silu_64").unwrap(); // 3 eager launches
+        let mut unfused = Schedule::default();
+        unfused.vector_width = 4;
+        let mut fused = unfused.clone();
+        fused.fuse_epilogue = true;
+        assert!(price(&fused, task, &gpu).time < price(&unfused, task, &gpu).time);
+    }
+
+    #[test]
+    fn scan_needs_staged_block_scan() {
+        // Category 6: naive serial scan crawls; the staged (smem)
+        // block scan unlocks a large all-or-nothing speedup — the
+        // paper's category-6 signature.
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("cumsum_rows_64").unwrap();
+        let naive = price_baseline(task, &gpu).time;
+        let mut staged = Schedule::default();
+        staged.smem_staging = true;
+        staged.stages = 2;
+        staged.vector_width = 4;
+        let t_staged = price(&staged, task, &gpu).time;
+        let ratio = naive / t_staged;
+        assert!(ratio > 4.0, "staged scan should unlock a big win, got {ratio}");
+        // Without staging, schedule tweaks barely move the needle.
+        let mut unstaged = Schedule::default();
+        unstaged.vector_width = 8;
+        unstaged.threads_per_block = 256;
+        let r2 = naive / price(&unstaged, task, &gpu).time;
+        assert!(r2 < 2.0, "unstaged scan speedup should stay small, got {r2}");
+    }
+
+    #[test]
+    fn baseline_tiers_are_deterministic_and_varied() {
+        let reg = reg();
+        let mut distinct = std::collections::HashSet::new();
+        for op in &reg.ops {
+            let a = baseline_schedule(op);
+            let b = baseline_schedule(op);
+            assert_eq!(a, b, "{} baseline must be stable", op.name);
+            distinct.insert((a.vector_width, a.smem_staging, a.fuse_epilogue));
+        }
+        assert!(distinct.len() >= 3, "expected multiple baseline tiers");
+        // cumulative ops always ship the naive serial scan
+        for op in reg.by_category(6) {
+            assert!(!baseline_schedule(op).smem_staging, "{}", op.name);
+        }
+    }
+
+    #[test]
+    fn vector_width_monotone_for_elementwise() {
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("relu_big").unwrap();
+        let mut prev = f64::INFINITY;
+        for vw in [1u32, 2, 4, 8] {
+            let mut s = Schedule::default();
+            s.vector_width = vw;
+            let t = price(&s, task, &gpu).time;
+            assert!(t <= prev, "vw={vw} slower");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn col_major_hurts_elementwise() {
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("gelu_big").unwrap();
+        let mut s = Schedule::default();
+        let row = price(&s, task, &gpu).time;
+        s.layout = Layout::ColMajor;
+        assert!(price(&s, task, &gpu).time > row * 1.5);
+    }
+
+    #[test]
+    fn spill_is_penalized() {
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("matmul_128").unwrap();
+        let mut s = tuned_matmul();
+        let good = price(&s, task, &gpu).time;
+        s.regs_per_thread = 16; // force est_registers > budget
+        assert!(price(&s, task, &gpu).time > good);
+    }
+
+    #[test]
+    fn pytorch_hard_to_beat_on_dense_gemm() {
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("matmul_128").unwrap();
+        let pt = price_pytorch(task, &gpu);
+        let best = price(&tuned_matmul(), task, &gpu).time;
+        let ratio = pt / best;
+        assert!(
+            (0.5..2.5).contains(&ratio),
+            "dense GEMM vs cuBLAS should be near parity, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn pytorch_beatable_on_unfused_chains() {
+        let reg = reg();
+        let gpu = Gpu::rtx4090();
+        let task = reg.get("huber_64").unwrap(); // 5 eager launches
+        let pt = price_pytorch(task, &gpu);
+        let mut s = Schedule::default();
+        s.vector_width = 8;
+        s.fuse_epilogue = true;
+        let best = price(&s, task, &gpu).time;
+        assert!(pt / best > 2.0, "got {}", pt / best);
+    }
+
+    #[test]
+    fn occupancy_in_range() {
+        let gpu = Gpu::rtx4090();
+        for tpb in [32u32, 128, 256, 1024] {
+            let mut s = Schedule::default();
+            s.threads_per_block = tpb;
+            let o = occupancy(&s, &gpu);
+            assert!((0.0..=1.0).contains(&o), "{o}");
+        }
+    }
+}

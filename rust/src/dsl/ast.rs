@@ -1,0 +1,152 @@
+//! KernelScript abstract syntax tree.
+
+/// Memory layout of the operand staging (the CUDA coalescing analogue;
+/// on TPU this is the HBM→VMEM tiling order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    RowMajor,
+    ColMajor,
+    Tiled,
+}
+
+impl Layout {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Layout::RowMajor => "row_major",
+            Layout::ColMajor => "col_major",
+            Layout::Tiled => "tiled",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "row_major" => Some(Layout::RowMajor),
+            "col_major" => Some(Layout::ColMajor),
+            "tiled" => Some(Layout::Tiled),
+            _ => None,
+        }
+    }
+}
+
+/// The performance genome: a CUDA-flavoured schedule the cost model
+/// prices. Field vocabulary follows the paper's optimization landscape
+/// (§1: "memory coalescing, thread divergence, occupancy optimization,
+/// and register usage").
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Schedule {
+    pub tile_m: u32,
+    pub tile_n: u32,
+    pub tile_k: u32,
+    /// Per-thread vector load width (1/2/4/8 — float4-style packing).
+    pub vector_width: u32,
+    /// Inner-loop unroll factor.
+    pub unroll: u32,
+    /// Software-pipelining stages (double/triple buffering).
+    pub stages: u32,
+    /// Stage operand tiles through shared memory (VMEM on TPU).
+    pub smem_staging: bool,
+    /// Fuse the op's epilogue (bias/activation/residual) into the kernel.
+    pub fuse_epilogue: bool,
+    pub layout: Layout,
+    pub threads_per_block: u32,
+    pub regs_per_thread: u32,
+}
+
+impl Default for Schedule {
+    /// The naive initial schedule — the paper's "initial C++/CUDA
+    /// implementation serving as the starting point for optimization".
+    fn default() -> Self {
+        Schedule {
+            tile_m: 8,
+            tile_n: 8,
+            tile_k: 8,
+            vector_width: 1,
+            unroll: 1,
+            stages: 1,
+            smem_staging: false,
+            fuse_epilogue: false,
+            layout: Layout::RowMajor,
+            threads_per_block: 128,
+            regs_per_thread: 32,
+        }
+    }
+}
+
+impl Schedule {
+    /// Shared-memory bytes this schedule requests per block (f32).
+    pub fn smem_bytes(&self) -> u64 {
+        if !self.smem_staging {
+            return 0;
+        }
+        let per_stage = (self.tile_m as u64 * self.tile_k as u64)
+            + (self.tile_k as u64 * self.tile_n as u64);
+        per_stage * self.stages as u64 * 4
+    }
+
+    /// Crude per-thread register-pressure estimate: accumulator slice
+    /// of the output tile plus vector/unroll operand registers.
+    pub fn est_registers(&self) -> u32 {
+        let acc = (self.tile_m as u64 * self.tile_n as u64)
+            .div_ceil(self.threads_per_block.max(1) as u64) as u32;
+        acc + 2 * self.vector_width * self.unroll + 8
+    }
+}
+
+/// A complete KernelScript program: one kernel for one dataset op.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct KernelSpec {
+    /// Which dataset operation this kernel implements.
+    pub op: String,
+    /// Which semantic variant it computes (must name an AOT artifact:
+    /// ref / opt / bug_scale / bug_offset — or a hallucination).
+    pub semantics: String,
+    pub schedule: Schedule,
+}
+
+impl KernelSpec {
+    /// The baseline kernel the optimization starts from (paper §5.1:
+    /// "an initial C++/CUDA implementation to serve as the starting
+    /// point"): correct semantics, naive schedule.
+    pub fn baseline(op: &str) -> Self {
+        KernelSpec {
+            op: op.to_string(),
+            semantics: "opt".to_string(),
+            schedule: Schedule::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smem_accounting() {
+        let mut s = Schedule::default();
+        assert_eq!(s.smem_bytes(), 0);
+        s.smem_staging = true;
+        s.tile_m = 32;
+        s.tile_n = 32;
+        s.tile_k = 16;
+        s.stages = 2;
+        // 2 stages * (32*16 + 16*32) * 4B = 8192
+        assert_eq!(s.smem_bytes(), 8192);
+    }
+
+    #[test]
+    fn register_estimate_scales_with_tile() {
+        let mut s = Schedule::default();
+        let r0 = s.est_registers();
+        s.tile_m = 128;
+        s.tile_n = 128;
+        assert!(s.est_registers() > r0);
+    }
+
+    #[test]
+    fn layout_roundtrip() {
+        for l in [Layout::RowMajor, Layout::ColMajor, Layout::Tiled] {
+            assert_eq!(Layout::from_str(l.as_str()), Some(l));
+        }
+        assert_eq!(Layout::from_str("zigzag"), None);
+    }
+}

@@ -1,0 +1,199 @@
+//! KernelScript lexer. Produces positioned tokens; any byte sequence
+//! outside the grammar is a `LexError` — the first of the three real
+//! failure gates (paper §3.1: "Syntactic Validity").
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Int(u64),
+    Bool(bool),
+    Colon,
+    Semi,
+    LBrace,
+    RBrace,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "`{s}`"),
+            Tok::Int(n) => write!(f, "{n}"),
+            Tok::Bool(b) => write!(f, "{b}"),
+            Tok::Colon => write!(f, "`:`"),
+            Tok::Semi => write!(f, "`;`"),
+            Tok::LBrace => write!(f, "`{{`"),
+            Tok::RBrace => write!(f, "`}}`"),
+        }
+    }
+}
+
+/// A token with its source line/column (1-based) for error messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: u32,
+    pub col: u32,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexError {
+    pub msg: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+/// Tokenize a KernelScript source string. `#` starts a line comment.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let mut toks = Vec::new();
+    let mut line = 1u32;
+    let mut col = 1u32;
+    let bytes = src.as_bytes();
+    let mut i = 0usize;
+
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                line += 1;
+                col = 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => {
+                col += 1;
+                i += 1;
+            }
+            '#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            ':' => {
+                toks.push(Spanned { tok: Tok::Colon, line, col });
+                col += 1;
+                i += 1;
+            }
+            ';' => {
+                toks.push(Spanned { tok: Tok::Semi, line, col });
+                col += 1;
+                i += 1;
+            }
+            '{' => {
+                toks.push(Spanned { tok: Tok::LBrace, line, col });
+                col += 1;
+                i += 1;
+            }
+            '}' => {
+                toks.push(Spanned { tok: Tok::RBrace, line, col });
+                col += 1;
+                i += 1;
+            }
+            '0'..='9' => {
+                let start = i;
+                let c0 = col;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                    col += 1;
+                }
+                // digits followed by letters (e.g. `32abc`) are invalid
+                if i < bytes.len() && (bytes[i].is_ascii_alphabetic() || bytes[i] == b'_') {
+                    return Err(LexError {
+                        msg: format!(
+                            "malformed number starting `{}`",
+                            &src[start..(i + 1).min(src.len())]
+                        ),
+                        line,
+                        col: c0,
+                    });
+                }
+                let text = &src[start..i];
+                let n: u64 = text.parse().map_err(|_| LexError {
+                    msg: format!("integer overflow `{text}`"),
+                    line,
+                    col: c0,
+                })?;
+                toks.push(Spanned { tok: Tok::Int(n), line, col: c0 });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                let c0 = col;
+                while i < bytes.len()
+                    && ((bytes[i] as char).is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                    col += 1;
+                }
+                let word = &src[start..i];
+                let tok = match word {
+                    "true" => Tok::Bool(true),
+                    "false" => Tok::Bool(false),
+                    _ => Tok::Ident(word.to_string()),
+                };
+                toks.push(Spanned { tok, line, col: c0 });
+            }
+            other => {
+                return Err(LexError {
+                    msg: format!("unexpected character `{other}`"),
+                    line,
+                    col,
+                });
+            }
+        }
+    }
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_basic_program() {
+        let toks = lex("kernel m { semantics: ref; }").unwrap();
+        assert_eq!(toks[0].tok, Tok::Ident("kernel".into()));
+        assert_eq!(toks[2].tok, Tok::LBrace);
+        assert_eq!(toks.last().unwrap().tok, Tok::RBrace);
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let toks = lex("# a comment\nkernel x {}\n# trailing").unwrap();
+        assert_eq!(toks.len(), 4);
+    }
+
+    #[test]
+    fn rejects_cuda_source() {
+        // Raw CUDA is not KernelScript — `(` is outside the grammar.
+        assert!(lex("__global__ void k(float* x) {}").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_number() {
+        let err = lex("tile_m: 32abc;").unwrap_err();
+        assert!(err.msg.contains("malformed number"), "{err}");
+    }
+
+    #[test]
+    fn positions_tracked() {
+        let toks = lex("a\n  b").unwrap();
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn bools_are_tokens() {
+        let toks = lex("true false truthy").unwrap();
+        assert_eq!(toks[0].tok, Tok::Bool(true));
+        assert_eq!(toks[1].tok, Tok::Bool(false));
+        assert_eq!(toks[2].tok, Tok::Ident("truthy".into()));
+    }
+}

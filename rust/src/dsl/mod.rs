@@ -1,0 +1,67 @@
+//! KernelScript — the raw-text code space `S_text` (paper §3.1).
+//!
+//! The paper evolves CUDA C source strings; our substitution (DESIGN.md
+//! §2) evolves KernelScript programs: a small, fully-parseable kernel
+//! language whose `semantics` block selects which AOT-lowered HLO
+//! artifact the program computes (functional truth, executed on PJRT)
+//! and whose `schedule` block is the CUDA-flavoured performance genome
+//! the cost model prices (tiles, vector width, staging, occupancy
+//! knobs).
+//!
+//! Like the paper's `S_text`, *most strings are invalid*: the lexer and
+//! parser reject malformed text (syntactic validity), the validator
+//! rejects illegal schedules (the "nvcc" resource checks: shared-memory
+//! overflow, bad block sizes, register limits), and unknown semantics
+//! variants fail artifact resolution — the three real failure modes the
+//! SimLLM's defect injection exercises.
+//!
+//! ```text
+//! kernel matmul_64 {
+//!   semantics: opt;
+//!   schedule {
+//!     tile_m: 32; tile_n: 32; tile_k: 16;
+//!     vector_width: 4; unroll: 2; stages: 2;
+//!     smem_staging: true; fuse_epilogue: true;
+//!     layout: row_major;
+//!     threads_per_block: 256; regs_per_thread: 64;
+//!   }
+//! }
+//! ```
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod printer;
+pub mod validate;
+
+pub use ast::{KernelSpec, Layout, Schedule};
+pub use parser::parse;
+pub use printer::print;
+pub use validate::{validate, ValidationError};
+
+/// Parse + validate in one step (the "compile front-end").
+pub fn compile_front(src: &str) -> Result<KernelSpec, String> {
+    let spec = parse(src).map_err(|e| format!("syntax error: {e}"))?;
+    validate(&spec).map_err(|e| format!("validation error: {e}"))?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_example() {
+        let spec = KernelSpec::baseline("matmul_64");
+        let text = print(&spec);
+        let back = parse(&text).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn front_rejects_garbage() {
+        assert!(compile_front("__global__ void k() {}").is_err());
+        assert!(compile_front("").is_err());
+        assert!(compile_front("kernel x { semantics: ref;").is_err());
+    }
+}

@@ -1,0 +1,332 @@
+//! KernelScript recursive-descent parser.
+//!
+//! Grammar:
+//! ```text
+//! program  := "kernel" IDENT "{" field* "}"
+//! field    := "semantics" ":" IDENT ";"
+//!           | "schedule" "{" sched* "}"
+//! sched    := IDENT ":" (INT | BOOL | IDENT) ";"
+//! ```
+//! Unknown schedule *fields* are a parse error (mirrors an undeclared
+//! identifier in CUDA); out-of-range *values* are left to the validator
+//! (mirrors nvcc resource errors).
+
+use std::fmt;
+
+use super::ast::{KernelSpec, Layout, Schedule};
+use super::lexer::{lex, Spanned, Tok};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub msg: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PeekKind {
+    RBrace,
+    Ident,
+    Other,
+    End,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Spanned> {
+        self.toks.get(self.pos)
+    }
+
+    fn peek_word(&self) -> &str {
+        match self.peek().map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => s.as_str(),
+            _ => "",
+        }
+    }
+
+    fn err_here(&self, msg: impl Into<String>) -> ParseError {
+        let (line, col) = self
+            .peek()
+            .map(|t| (t.line, t.col))
+            .or_else(|| self.toks.last().map(|t| (t.line, t.col + 1)))
+            .unwrap_or((1, 1));
+        ParseError { msg: msg.into(), line, col }
+    }
+
+    /// Advance and return a reference to the consumed token (perf: the
+    /// hot compile path must not clone token Strings — see
+    /// EXPERIMENTS.md §Perf).
+    fn next(&mut self) -> Result<&Spanned, ParseError> {
+        match self.toks.get(self.pos) {
+            Some(_) => {
+                self.pos += 1;
+                Ok(&self.toks[self.pos - 1])
+            }
+            None => Err(self.err_here("unexpected end of input")),
+        }
+    }
+
+    fn expect(&mut self, want: &Tok, what: &str) -> Result<(), ParseError> {
+        let t = self.next()?;
+        if &t.tok == want {
+            Ok(())
+        } else {
+            Err(ParseError {
+                msg: format!("expected {what}, found {}", t.tok),
+                line: t.line,
+                col: t.col,
+            })
+        }
+    }
+
+    fn expect_ident(&mut self, what: &str) -> Result<String, ParseError> {
+        let t = self.next()?;
+        match &t.tok {
+            Tok::Ident(s) => Ok(s.clone()),
+            other => Err(ParseError {
+                msg: format!("expected {what}, found {other}"),
+                line: t.line,
+                col: t.col,
+            }),
+        }
+    }
+
+    fn expect_u32(&mut self, field: &str) -> Result<u32, ParseError> {
+        let t = self.next()?;
+        match t.tok {
+            Tok::Int(n) if n <= u32::MAX as u64 => Ok(n as u32),
+            Tok::Int(n) => Err(ParseError {
+                msg: format!("value {n} for `{field}` out of integer range"),
+                line: t.line,
+                col: t.col,
+            }),
+            ref other => Err(ParseError {
+                msg: format!("expected integer for `{field}`, found {other}"),
+                line: t.line,
+                col: t.col,
+            }),
+        }
+    }
+
+    fn expect_bool(&mut self, field: &str) -> Result<bool, ParseError> {
+        let t = self.next()?;
+        match &t.tok {
+            Tok::Bool(b) => Ok(*b),
+            other => Err(ParseError {
+                msg: format!("expected true/false for `{field}`, found {other}"),
+                line: t.line,
+                col: t.col,
+            }),
+        }
+    }
+
+    /// Clone-free peek classification (hot path).
+    fn peek_kind(&self) -> PeekKind {
+        match self.peek().map(|t| &t.tok) {
+            Some(Tok::RBrace) => PeekKind::RBrace,
+            Some(Tok::Ident(_)) => PeekKind::Ident,
+            Some(_) => PeekKind::Other,
+            None => PeekKind::End,
+        }
+    }
+
+    fn parse_schedule(&mut self) -> Result<Schedule, ParseError> {
+        self.expect(&Tok::LBrace, "`{` after `schedule`")?;
+        let mut sched = Schedule::default();
+        loop {
+            match self.peek_kind() {
+                PeekKind::RBrace => {
+                    self.pos += 1;
+                    return Ok(sched);
+                }
+                PeekKind::Ident => {
+                    let name = self.expect_ident("schedule field")?;
+                    self.expect(&Tok::Colon, "`:`")?;
+                    match name.as_str() {
+                        "tile_m" => sched.tile_m = self.expect_u32(&name)?,
+                        "tile_n" => sched.tile_n = self.expect_u32(&name)?,
+                        "tile_k" => sched.tile_k = self.expect_u32(&name)?,
+                        "vector_width" => sched.vector_width = self.expect_u32(&name)?,
+                        "unroll" => sched.unroll = self.expect_u32(&name)?,
+                        "stages" => sched.stages = self.expect_u32(&name)?,
+                        "threads_per_block" => {
+                            sched.threads_per_block = self.expect_u32(&name)?
+                        }
+                        "regs_per_thread" => sched.regs_per_thread = self.expect_u32(&name)?,
+                        "smem_staging" => sched.smem_staging = self.expect_bool(&name)?,
+                        "fuse_epilogue" => sched.fuse_epilogue = self.expect_bool(&name)?,
+                        "layout" => {
+                            let t = self.next()?;
+                            let (line, col) = (t.line, t.col);
+                            match &t.tok {
+                                Tok::Ident(s) => {
+                                    sched.layout =
+                                        Layout::from_str(s).ok_or_else(|| ParseError {
+                                            msg: format!("unknown layout `{s}`"),
+                                            line,
+                                            col,
+                                        })?
+                                }
+                                other => {
+                                    return Err(ParseError {
+                                        msg: format!("expected layout name, found {other}"),
+                                        line,
+                                        col,
+                                    })
+                                }
+                            }
+                        }
+                        unknown => {
+                            return Err(self.err_here(format!(
+                                "unknown schedule field `{unknown}`"
+                            )))
+                        }
+                    }
+                    self.expect(&Tok::Semi, "`;`")?;
+                }
+                _ => return Err(self.err_here("expected schedule field or `}`")),
+            }
+        }
+    }
+
+    fn parse_program(&mut self) -> Result<KernelSpec, ParseError> {
+        let kw = self.expect_ident("`kernel`")?;
+        if kw != "kernel" {
+            return Err(self.err_here(format!("expected `kernel`, found `{kw}`")));
+        }
+        let op = self.expect_ident("kernel name")?;
+        self.expect(&Tok::LBrace, "`{`")?;
+
+        let mut semantics: Option<String> = None;
+        let mut schedule: Option<Schedule> = None;
+        loop {
+            match self.peek_kind() {
+                PeekKind::RBrace => {
+                    self.pos += 1;
+                    break;
+                }
+                PeekKind::Ident => match self.peek_word() {
+                    "semantics" => {
+                        self.pos += 1;
+                        self.expect(&Tok::Colon, "`:`")?;
+                        let v = self.expect_ident("semantics variant")?;
+                        if semantics.replace(v).is_some() {
+                            return Err(self.err_here("duplicate `semantics`"));
+                        }
+                        self.expect(&Tok::Semi, "`;`")?;
+                    }
+                    "schedule" => {
+                        self.pos += 1;
+                        if schedule.replace(self.parse_schedule()?).is_some() {
+                            return Err(self.err_here("duplicate `schedule`"));
+                        }
+                    }
+                    other => {
+                        let msg = format!("unknown section `{other}`");
+                        return Err(self.err_here(msg));
+                    }
+                },
+                _ => return Err(self.err_here("expected `semantics`, `schedule`, or `}`")),
+            }
+        }
+        if self.pos != self.toks.len() {
+            return Err(self.err_here("trailing tokens after program"));
+        }
+        let semantics =
+            semantics.ok_or_else(|| self.err_here("missing `semantics` declaration"))?;
+        Ok(KernelSpec {
+            op,
+            semantics,
+            schedule: schedule.unwrap_or_default(),
+        })
+    }
+}
+
+/// Parse a KernelScript program.
+pub fn parse(src: &str) -> Result<KernelSpec, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError { msg: e.msg, line: e.line, col: e.col })?;
+    Parser { toks, pos: 0 }.parse_program()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+kernel matmul_64 {
+  semantics: opt;
+  schedule {
+    tile_m: 32; tile_n: 32; tile_k: 16;
+    vector_width: 4; unroll: 2; stages: 2;
+    smem_staging: true; fuse_epilogue: true;
+    layout: tiled;
+    threads_per_block: 256; regs_per_thread: 64;
+  }
+}
+"#;
+
+    #[test]
+    fn parses_full_program() {
+        let spec = parse(GOOD).unwrap();
+        assert_eq!(spec.op, "matmul_64");
+        assert_eq!(spec.semantics, "opt");
+        assert_eq!(spec.schedule.tile_m, 32);
+        assert_eq!(spec.schedule.layout, Layout::Tiled);
+        assert!(spec.schedule.smem_staging);
+    }
+
+    #[test]
+    fn defaults_fill_missing_schedule() {
+        let spec = parse("kernel x { semantics: ref; }").unwrap();
+        assert_eq!(spec.schedule, Schedule::default());
+    }
+
+    #[test]
+    fn missing_semantics_is_error() {
+        let err = parse("kernel x { }").unwrap_err();
+        assert!(err.msg.contains("semantics"), "{err}");
+    }
+
+    #[test]
+    fn unknown_field_is_error() {
+        let err = parse("kernel x { semantics: ref; schedule { warp_size: 32; } }")
+            .unwrap_err();
+        assert!(err.msg.contains("warp_size"), "{err}");
+    }
+
+    #[test]
+    fn unbalanced_brace_is_error() {
+        assert!(parse("kernel x { semantics: ref;").is_err());
+    }
+
+    #[test]
+    fn duplicate_sections_rejected() {
+        assert!(parse("kernel x { semantics: a; semantics: b; }").is_err());
+        assert!(parse("kernel x { semantics: a; schedule {} schedule {} }").is_err());
+    }
+
+    #[test]
+    fn missing_semicolon_is_error() {
+        let err =
+            parse("kernel x { semantics: ref; schedule { tile_m: 8 tile_n: 8; } }").unwrap_err();
+        assert!(err.msg.contains("expected `;`"), "{err}");
+    }
+
+    #[test]
+    fn error_positions_point_at_problem() {
+        let err = parse("kernel x {\n  semantics: ref;\n  bogus: 1;\n}").unwrap_err();
+        assert_eq!(err.line, 3);
+    }
+}

@@ -1,0 +1,68 @@
+//! Canonical KernelScript printer. `parse(print(spec)) == spec` is the
+//! round-trip invariant (proptest-checked in rust/tests/proptests.rs);
+//! the SimLLM emits candidate programs through this printer before
+//! (possibly) corrupting them with syntax defects.
+
+use super::ast::KernelSpec;
+
+/// Render a spec as canonical KernelScript text.
+pub fn print(spec: &KernelSpec) -> String {
+    let s = &spec.schedule;
+    format!(
+        "kernel {op} {{\n  semantics: {sem};\n  schedule {{\n    tile_m: {tm}; tile_n: {tn}; tile_k: {tk};\n    vector_width: {vw}; unroll: {un}; stages: {st};\n    smem_staging: {sm}; fuse_epilogue: {fe};\n    layout: {lay};\n    threads_per_block: {tpb}; regs_per_thread: {rpt};\n  }}\n}}\n",
+        op = spec.op,
+        sem = spec.semantics,
+        tm = s.tile_m,
+        tn = s.tile_n,
+        tk = s.tile_k,
+        vw = s.vector_width,
+        un = s.unroll,
+        st = s.stages,
+        sm = s.smem_staging,
+        fe = s.fuse_epilogue,
+        lay = s.layout.as_str(),
+        tpb = s.threads_per_block,
+        rpt = s.regs_per_thread,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ast::{Layout, Schedule};
+    use super::super::parser::parse;
+    use super::*;
+
+    #[test]
+    fn roundtrip_default() {
+        let spec = KernelSpec::baseline("softmax_64");
+        assert_eq!(parse(&print(&spec)).unwrap(), spec);
+    }
+
+    #[test]
+    fn roundtrip_nontrivial() {
+        let spec = KernelSpec {
+            op: "conv2d_k3_c8".into(),
+            semantics: "bug_scale".into(),
+            schedule: Schedule {
+                tile_m: 64,
+                tile_n: 128,
+                tile_k: 32,
+                vector_width: 8,
+                unroll: 4,
+                stages: 3,
+                smem_staging: true,
+                fuse_epilogue: true,
+                layout: Layout::ColMajor,
+                threads_per_block: 512,
+                regs_per_thread: 96,
+            },
+        };
+        assert_eq!(parse(&print(&spec)).unwrap(), spec);
+    }
+
+    #[test]
+    fn printed_text_is_stable() {
+        let spec = KernelSpec::baseline("matmul_64");
+        assert_eq!(print(&spec), print(&parse(&print(&spec)).unwrap()));
+    }
+}

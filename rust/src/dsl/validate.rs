@@ -1,0 +1,170 @@
+//! Schedule validation — the "nvcc resource check" half of the compile
+//! gate (paper §4.3 "Compilation Check"). RTX-4090 (sm_89) limits:
+//!
+//! * threads/block: 32..=1024, multiple of 32 (warp granularity)
+//! * registers/thread: 16..=255 (hardware encodable range)
+//! * shared memory/block: <= 99 KiB (sm_89 opt-in maximum)
+//! * vector width in {1,2,4,8} (float/float2/float4/double4 packing)
+//! * stages 1..=4, unroll 1..=16, tile dims 1..=256
+//! * estimated register pressure must fit regs_per_thread (spill ->
+//!   hard error above the 255 ceiling, soft perf penalty otherwise —
+//!   the cost model prices the soft case)
+
+use std::fmt;
+
+use super::ast::{KernelSpec, Schedule};
+
+/// sm_89 per-block shared-memory ceiling (bytes).
+pub const MAX_SMEM_BYTES: u64 = 99 * 1024;
+pub const MAX_THREADS: u32 = 1024;
+pub const MAX_REGS: u32 = 255;
+pub const MAX_TILE: u32 = 256;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidationError(pub String);
+
+impl fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+fn err(msg: impl Into<String>) -> Result<(), ValidationError> {
+    Err(ValidationError(msg.into()))
+}
+
+/// Validate one schedule against the hardware model.
+pub fn validate_schedule(s: &Schedule) -> Result<(), ValidationError> {
+    for (name, v) in [("tile_m", s.tile_m), ("tile_n", s.tile_n), ("tile_k", s.tile_k)] {
+        if v == 0 || v > MAX_TILE {
+            return err(format!("{name}={v} outside 1..={MAX_TILE}"));
+        }
+    }
+    if !matches!(s.vector_width, 1 | 2 | 4 | 8) {
+        return err(format!(
+            "vector_width={} not a supported packing (1/2/4/8)",
+            s.vector_width
+        ));
+    }
+    if s.unroll == 0 || s.unroll > 16 {
+        return err(format!("unroll={} outside 1..=16", s.unroll));
+    }
+    if s.stages == 0 || s.stages > 4 {
+        return err(format!("stages={} outside 1..=4", s.stages));
+    }
+    if s.stages > 1 && !s.smem_staging {
+        return err("multi-stage pipelining requires smem_staging");
+    }
+    if s.threads_per_block < 32
+        || s.threads_per_block > MAX_THREADS
+        || s.threads_per_block % 32 != 0
+    {
+        return err(format!(
+            "threads_per_block={} must be a multiple of 32 in 32..={MAX_THREADS}",
+            s.threads_per_block
+        ));
+    }
+    if s.regs_per_thread < 16 || s.regs_per_thread > MAX_REGS {
+        return err(format!(
+            "regs_per_thread={} outside 16..={MAX_REGS}",
+            s.regs_per_thread
+        ));
+    }
+    let smem = s.smem_bytes();
+    if smem > MAX_SMEM_BYTES {
+        return err(format!(
+            "shared memory {smem}B exceeds the {MAX_SMEM_BYTES}B/block limit (sm_89)"
+        ));
+    }
+    if s.est_registers() > MAX_REGS {
+        return err(format!(
+            "estimated register pressure {} exceeds the {MAX_REGS}-register ceiling \
+             (output tile too large for the block)",
+            s.est_registers()
+        ));
+    }
+    Ok(())
+}
+
+/// Validate a whole program (schedule checks; op/semantics existence is
+/// checked at lowering time against the artifact manifest).
+pub fn validate(spec: &KernelSpec) -> Result<(), ValidationError> {
+    if spec.op.is_empty() {
+        return err("empty kernel name");
+    }
+    if spec.semantics.is_empty() {
+        return err("empty semantics variant");
+    }
+    validate_schedule(&spec.schedule)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ast::KernelSpec;
+    use super::*;
+
+    #[test]
+    fn baseline_is_valid() {
+        validate(&KernelSpec::baseline("matmul_64")).unwrap();
+    }
+
+    #[test]
+    fn smem_overflow_rejected() {
+        let mut spec = KernelSpec::baseline("matmul_64");
+        spec.schedule.smem_staging = true;
+        spec.schedule.tile_m = 256;
+        spec.schedule.tile_n = 256;
+        spec.schedule.tile_k = 64;
+        spec.schedule.stages = 4;
+        spec.schedule.threads_per_block = 1024;
+        let e = validate(&spec).unwrap_err();
+        assert!(e.0.contains("shared memory"), "{e}");
+    }
+
+    #[test]
+    fn bad_vector_width_rejected() {
+        let mut spec = KernelSpec::baseline("x");
+        spec.schedule.vector_width = 3;
+        assert!(validate(&spec).is_err());
+    }
+
+    #[test]
+    fn warp_granularity_enforced() {
+        let mut spec = KernelSpec::baseline("x");
+        spec.schedule.threads_per_block = 100;
+        assert!(validate(&spec).is_err());
+        spec.schedule.threads_per_block = 0;
+        assert!(validate(&spec).is_err());
+        spec.schedule.threads_per_block = 2048;
+        assert!(validate(&spec).is_err());
+    }
+
+    #[test]
+    fn staging_requires_smem() {
+        let mut spec = KernelSpec::baseline("x");
+        spec.schedule.stages = 2;
+        spec.schedule.smem_staging = false;
+        let e = validate(&spec).unwrap_err();
+        assert!(e.0.contains("smem_staging"), "{e}");
+    }
+
+    #[test]
+    fn register_ceiling_enforced() {
+        let mut spec = KernelSpec::baseline("x");
+        // 256x256 output tile over 32 threads -> 2048 acc registers
+        spec.schedule.tile_m = 256;
+        spec.schedule.tile_n = 256;
+        spec.schedule.threads_per_block = 32;
+        let e = validate(&spec).unwrap_err();
+        assert!(e.0.contains("register"), "{e}");
+    }
+
+    #[test]
+    fn zero_tile_rejected() {
+        let mut spec = KernelSpec::baseline("x");
+        spec.schedule.tile_k = 0;
+        assert!(validate(&spec).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Lowering: KernelScript AST → ExecutionPlan (the back half of the
+//! compile gate). Resolves the program against the artifact manifest —
+//! a hallucinated semantics variant fails here with an
+//! "undefined symbol"-style error, exactly like CUDA link failures the
+//! paper's Compilation Check catches.
+
+use crate::dsl::{self, KernelSpec};
+use crate::tasks::{OpTask, TaskRegistry};
+
+/// A fully-resolved, legal candidate: everything the evaluator needs.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub spec: KernelSpec,
+    /// Artifact path (relative to the registry root) for the variant.
+    pub artifact: String,
+    /// Derived resource facts (recorded for profiling feedback).
+    pub smem_bytes: u64,
+    pub est_registers: u32,
+}
+
+/// Why a candidate failed to compile (stage 1 of the paper's two-stage
+/// evaluation). The distinction matters for metrics: all of these count
+/// against Compilation Success Pass@1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompileError {
+    /// Lexer/parser rejection.
+    Syntax(String),
+    /// Schedule legality rejection (resource limits).
+    Validation(String),
+    /// Program names an op that is not the task under optimization.
+    WrongOp { expected: String, found: String },
+    /// Semantics variant has no artifact (LLM hallucination).
+    UnknownVariant(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Syntax(m) => write!(f, "syntax error: {m}"),
+            CompileError::Validation(m) => write!(f, "validation error: {m}"),
+            CompileError::WrongOp { expected, found } => {
+                write!(f, "kernel implements `{found}` but task is `{expected}`")
+            }
+            CompileError::UnknownVariant(v) => {
+                write!(f, "undefined semantics variant `{v}` (no such artifact)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Full compile: text → parse → validate → resolve. This is the
+/// real-program-analysis path every SimLLM emission goes through.
+pub fn compile(
+    src: &str,
+    task: &OpTask,
+    registry: &TaskRegistry,
+) -> Result<ExecutionPlan, CompileError> {
+    let spec = dsl::parse(src).map_err(|e| CompileError::Syntax(e.to_string()))?;
+    lower(spec, task, registry)
+}
+
+/// Lower an already-parsed spec (used by tests and by the baseline
+/// bootstrap which constructs ASTs directly).
+pub fn lower(
+    spec: KernelSpec,
+    task: &OpTask,
+    registry: &TaskRegistry,
+) -> Result<ExecutionPlan, CompileError> {
+    dsl::validate(&spec).map_err(|e| CompileError::Validation(e.to_string()))?;
+    if spec.op != task.name {
+        return Err(CompileError::WrongOp {
+            expected: task.name.clone(),
+            found: spec.op.clone(),
+        });
+    }
+    let artifact = task
+        .artifacts
+        .get(&spec.semantics)
+        .cloned()
+        .ok_or_else(|| CompileError::UnknownVariant(spec.semantics.clone()))?;
+    let _ = registry; // resolution uses the task's own manifest entry
+    let smem_bytes = spec.schedule.smem_bytes();
+    let est_registers = spec.schedule.est_registers();
+    Ok(ExecutionPlan { spec, artifact, smem_bytes, est_registers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::printer::print;
+
+    fn fixture() -> (TaskRegistry, OpTask) {
+        let reg = TaskRegistry::load(
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        let op = reg.get("matmul_64").unwrap().clone();
+        (reg, op)
+    }
+
+    #[test]
+    fn compiles_baseline() {
+        let (reg, op) = fixture();
+        let src = print(&KernelSpec::baseline("matmul_64"));
+        let plan = compile(&src, &op, &reg).unwrap();
+        assert!(plan.artifact.contains("opt"));
+    }
+
+    #[test]
+    fn hallucinated_variant_fails() {
+        let (reg, op) = fixture();
+        let mut spec = KernelSpec::baseline("matmul_64");
+        spec.semantics = "turbo_v2".into();
+        let err = lower(spec, &op, &reg).unwrap_err();
+        assert!(matches!(err, CompileError::UnknownVariant(_)), "{err}");
+    }
+
+    #[test]
+    fn wrong_op_fails() {
+        let (reg, op) = fixture();
+        let spec = KernelSpec::baseline("softmax_64");
+        let err = lower(spec, &op, &reg).unwrap_err();
+        assert!(matches!(err, CompileError::WrongOp { .. }), "{err}");
+    }
+
+    #[test]
+    fn syntax_error_reported() {
+        let (reg, op) = fixture();
+        let err = compile("kernel matmul_64 { semantics ref; }", &op, &reg).unwrap_err();
+        assert!(matches!(err, CompileError::Syntax(_)), "{err}");
+    }
+}

@@ -1,0 +1,48 @@
+//! # EvoEngineer — LLM-based CUDA kernel code evolution (reproduction)
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *"EvoEngineer:
+//! Mastering Automated CUDA Kernel Code Evolution with Large Language
+//! Models"* (Guo et al., 2025). See DESIGN.md for the system inventory
+//! and the substitution table (the paper's RTX-4090/CUDA/LLM-API stack
+//! is replaced by a KernelScript DSL + analytical GPU cost model +
+//! SimLLM generator, with *functional truth* coming from AOT-lowered
+//! JAX/Pallas HLO artifacts executed live on PJRT CPU).
+//!
+//! ## Layer map
+//! * [`dsl`] / [`ir`] — the code space `S_text`: KernelScript parsing,
+//!   printing, validation and lowering (the "nvcc" substrate).
+//! * [`tasks`] — the 91-operation dataset + artifact manifest.
+//! * [`runtime`] — PJRT executor for the AOT HLO artifacts.
+//! * [`evals`] — the paper's two-stage evaluation pipeline.
+//! * [`costmodel`] — RTX-4090 analytical timing of candidate schedules.
+//! * [`llm`] — SimLLM: prompt-conditioned stochastic code generator.
+//! * [`traverse`] — the two-layer traverse technique (solution-guiding
+//!   layer + prompt-engineering layer, paper §4.1.1).
+//! * [`population`] — population management strategies (paper §4.1.2).
+//! * [`methods`] — EvoEngineer-{Free,Insight,Full}, EoH, FunSearch,
+//!   AI CUDA Engineer (paper §4.2, Appendix A.8).
+//! * [`campaign`] — tokio orchestrator over method × model × op × seed.
+//! * [`metrics`] / [`report`] — every table & figure of the paper.
+
+pub mod campaign;
+pub mod costmodel;
+pub mod dsl;
+pub mod evals;
+pub mod ir;
+pub mod llm;
+pub mod metrics;
+pub mod methods;
+pub mod population;
+pub mod report;
+pub mod runtime;
+pub mod tasks;
+pub mod traverse;
+pub mod util;
+
+pub use anyhow::{anyhow as eyre, Context as WrapErr, Result};
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// The paper's per-kernel optimization budget (trials).
+pub const TRIAL_BUDGET: usize = 45;

@@ -1,0 +1,401 @@
+//! Schedule move operators, insight application, consistency repair,
+//! and defect injection — the SimLLM's "hands".
+//!
+//! Every move returns a human-readable action string in the canonical
+//! insight grammar (`set <field> to <value> (<why>)` / `enabled <field>
+//! (<why>)` / `disabled <field>`), which is exactly what
+//! [`apply_insight`] can parse back — closing the I3 loop: insights
+//! recorded from one trial really steer later trials.
+
+use crate::dsl::{Layout, Schedule};
+use crate::util::Rng;
+
+const TILE_CHOICES: [u32; 6] = [8, 16, 32, 64, 128, 256];
+const VW_CHOICES: [u32; 4] = [1, 2, 4, 8];
+const UNROLL_CHOICES: [u32; 5] = [1, 2, 4, 8, 16];
+const TPB_CHOICES: [u32; 6] = [32, 64, 128, 256, 512, 1024];
+const REG_CHOICES: [u32; 6] = [32, 64, 96, 128, 168, 255];
+
+const FIELDS: [&str; 10] = [
+    "tile_m",
+    "tile_n",
+    "tile_k",
+    "vector_width",
+    "unroll",
+    "stages",
+    "smem_staging",
+    "fuse_epilogue",
+    "layout",
+    "threads_per_block",
+];
+
+fn set_field(s: &mut Schedule, field: &str, value: &str) -> bool {
+    let as_u32 = || value.parse::<u32>().ok();
+    match field {
+        "tile_m" => as_u32().map(|v| s.tile_m = v).is_some(),
+        "tile_n" => as_u32().map(|v| s.tile_n = v).is_some(),
+        "tile_k" => as_u32().map(|v| s.tile_k = v).is_some(),
+        "vector_width" => as_u32().map(|v| s.vector_width = v).is_some(),
+        "unroll" => as_u32().map(|v| s.unroll = v).is_some(),
+        "stages" => as_u32().map(|v| s.stages = v).is_some(),
+        "threads_per_block" => as_u32().map(|v| s.threads_per_block = v).is_some(),
+        "regs_per_thread" => as_u32().map(|v| s.regs_per_thread = v).is_some(),
+        "smem_staging" => {
+            s.smem_staging = value == "true";
+            true
+        }
+        "fuse_epilogue" => {
+            s.fuse_epilogue = value == "true";
+            true
+        }
+        "layout" => Layout::from_str(value).map(|l| s.layout = l).is_some(),
+        _ => false,
+    }
+}
+
+/// Apply an insight action string; returns the note if it applied.
+///
+/// Grammar accepted: `set <field> to <value> ...`, `enabled <field> ...`,
+/// `disabled <field> ...`, `adopted <field>=<value> ...`.
+pub fn apply_insight(s: &mut Schedule, action: &str) -> Option<String> {
+    let words: Vec<&str> = action.split_whitespace().collect();
+    match words.as_slice() {
+        ["set", field, "to", value, ..] => {
+            let value = value.trim_end_matches([',', ';', '.']);
+            set_field(s, field, value).then(|| format!("set {field} to {value} (followed insight)"))
+        }
+        ["enabled", field, ..] => {
+            set_field(s, field, "true").then(|| format!("enabled {field} (followed insight)"))
+        }
+        ["disabled", field, ..] => {
+            set_field(s, field, "false").then(|| format!("disabled {field} (followed insight)"))
+        }
+        ["adopted", assign, ..] => {
+            let (field, value) = assign.split_once('=')?;
+            set_field(s, field, value).then(|| format!("adopted {field}={value} (followed insight)"))
+        }
+        _ => None,
+    }
+}
+
+/// Copy one random schedule field from a donor (I2 crossover).
+pub fn copy_random_field(s: &mut Schedule, donor: &Schedule, rng: &mut Rng) -> String {
+    let field = *rng.pick(&FIELDS);
+    let value = match field {
+        "tile_m" => donor.tile_m.to_string(),
+        "tile_n" => donor.tile_n.to_string(),
+        "tile_k" => donor.tile_k.to_string(),
+        "vector_width" => donor.vector_width.to_string(),
+        "unroll" => donor.unroll.to_string(),
+        "stages" => donor.stages.to_string(),
+        "smem_staging" => donor.smem_staging.to_string(),
+        "fuse_epilogue" => donor.fuse_epilogue.to_string(),
+        "layout" => donor.layout.as_str().to_string(),
+        _ => donor.threads_per_block.to_string(),
+    };
+    set_field(s, field, &value);
+    format!("adopted {field}={value} (from a historical solution)")
+}
+
+/// A domain-informed improvement move — what distinguishes a skilled
+/// model from random search. Targets the real levers of the cost model
+/// without consulting it (these are textbook CUDA heuristics).
+pub fn directed_move(s: &mut Schedule, category: u8, rng: &mut Rng) -> String {
+    // Priority repair/improvement list, category-aware.
+    let gemm_like = matches!(category, 1 | 2);
+    if category == 6 && !s.smem_staging && rng.chance(0.12) {
+        // Textbook CUDA: cumulative ops need a staged block scan.
+        s.smem_staging = true;
+        s.stages = 2;
+        return "enabled smem_staging (staged Blelloch block scan)".into();
+    }
+    if !s.fuse_epilogue && rng.chance(0.6) {
+        s.fuse_epilogue = true;
+        return "enabled fuse_epilogue (eliminate extra passes and launches)".into();
+    }
+    if gemm_like && !s.smem_staging && rng.chance(0.7) {
+        s.smem_staging = true;
+        s.stages = 2;
+        return "enabled smem_staging (stage operand tiles for reuse)".into();
+    }
+    if s.vector_width < 8 && rng.chance(0.5) {
+        let v = s.vector_width * 2;
+        s.vector_width = v;
+        return format!("set vector_width to {v} (wider vectorized loads)");
+    }
+    if gemm_like && s.smem_staging && (s.tile_m < 32 || s.tile_n < 32) && rng.chance(0.6) {
+        s.tile_m = (s.tile_m * 2).min(64);
+        s.tile_n = (s.tile_n * 2).min(64);
+        return format!(
+            "set tile_m to {} (grow the staged tile footprint)",
+            s.tile_m
+        );
+    }
+    if gemm_like && s.layout != Layout::Tiled && rng.chance(0.4) {
+        s.layout = Layout::Tiled;
+        return "set layout to tiled (tile-contiguous operand staging)".into();
+    }
+    if !gemm_like && s.layout == Layout::ColMajor {
+        s.layout = Layout::RowMajor;
+        return "set layout to row_major (coalesced last-axis access)".into();
+    }
+    if s.est_registers() > s.regs_per_thread {
+        let r = REG_CHOICES
+            .iter()
+            .copied()
+            .find(|r| *r >= s.est_registers().min(255))
+            .unwrap_or(255);
+        s.regs_per_thread = r;
+        return format!("set regs_per_thread to {r} (avoid register spill)");
+    }
+    if s.threads_per_block != 256 && rng.chance(0.4) {
+        s.threads_per_block = 256;
+        return "set threads_per_block to 256 (balanced occupancy)".into();
+    }
+    if s.unroll < 2 {
+        s.unroll = 2;
+        return "set unroll to 2 (feed the pipelines)".into();
+    }
+    if s.smem_staging && s.stages == 1 {
+        s.stages = 2;
+        return "set stages to 2 (double buffering)".into();
+    }
+    // Nothing obviously broken: local tile tweak.
+    random_move(s, true, rng)
+}
+
+/// A random neighbourhood move (temperature-driven exploration).
+/// `param_only` restricts to numeric tweaks (EoH's M2 operator).
+pub fn random_move(s: &mut Schedule, param_only: bool, rng: &mut Rng) -> String {
+    let n_fields = if param_only { 7 } else { 10 };
+    match rng.below(n_fields) {
+        0 => {
+            s.tile_m = *rng.pick(&TILE_CHOICES);
+            format!("set tile_m to {} (tile sweep)", s.tile_m)
+        }
+        1 => {
+            s.tile_n = *rng.pick(&TILE_CHOICES);
+            format!("set tile_n to {} (tile sweep)", s.tile_n)
+        }
+        2 => {
+            s.tile_k = *rng.pick(&TILE_CHOICES);
+            format!("set tile_k to {} (tile sweep)", s.tile_k)
+        }
+        3 => {
+            s.vector_width = *rng.pick(&VW_CHOICES);
+            format!("set vector_width to {} (load width sweep)", s.vector_width)
+        }
+        4 => {
+            s.unroll = *rng.pick(&UNROLL_CHOICES);
+            format!("set unroll to {} (unroll sweep)", s.unroll)
+        }
+        5 => {
+            s.threads_per_block = *rng.pick(&TPB_CHOICES);
+            format!(
+                "set threads_per_block to {} (block size sweep)",
+                s.threads_per_block
+            )
+        }
+        6 => {
+            s.regs_per_thread = *rng.pick(&REG_CHOICES);
+            format!("set regs_per_thread to {} (register budget)", s.regs_per_thread)
+        }
+        7 => {
+            s.stages = 1 + rng.below(4) as u32;
+            format!("set stages to {} (pipelining depth)", s.stages)
+        }
+        8 => {
+            s.smem_staging = !s.smem_staging;
+            if s.smem_staging {
+                "enabled smem_staging (try operand staging)".into()
+            } else {
+                "disabled smem_staging".into()
+            }
+        }
+        _ => {
+            let flip = !s.fuse_epilogue;
+            s.fuse_epilogue = flip;
+            if flip {
+                "enabled fuse_epilogue (fuse the epilogue)".into()
+            } else {
+                "disabled fuse_epilogue".into()
+            }
+        }
+    }
+}
+
+/// Repair obviously-inconsistent combinations the way a competent
+/// programmer silently would (stages without staging, spilled budget).
+pub fn make_consistent(s: &mut Schedule) {
+    if s.stages > 1 && !s.smem_staging {
+        s.smem_staging = true;
+    }
+    if s.est_registers() > 255 {
+        // Shrink the per-thread output slice by raising the block size.
+        s.threads_per_block = 1024.min(((s.threads_per_block * 2) / 32) * 32).max(32);
+        if s.est_registers() > 255 {
+            s.tile_m = s.tile_m.min(64);
+            s.tile_n = s.tile_n.min(64);
+        }
+        // Still over (wide vectors x deep unroll): back off the
+        // operand registers the way a compiler pragma would.
+        while s.est_registers() > 255 && s.unroll > 1 {
+            s.unroll /= 2;
+        }
+        while s.est_registers() > 255 && s.vector_width > 1 {
+            s.vector_width /= 2;
+        }
+        while s.est_registers() > 255 && s.tile_m.min(s.tile_n) > 1 {
+            s.tile_m = (s.tile_m / 2).max(1);
+            s.tile_n = (s.tile_n / 2).max(1);
+        }
+    }
+    // Respect the smem ceiling by shrinking tile_k first (cheapest).
+    while s.smem_bytes() > crate::dsl::validate::MAX_SMEM_BYTES && s.tile_k > 1 {
+        s.tile_k /= 2;
+    }
+    while s.smem_bytes() > crate::dsl::validate::MAX_SMEM_BYTES && s.stages > 1 {
+        s.stages -= 1;
+    }
+}
+
+/// Inject an illegal-schedule defect (stage-1 validation failure).
+pub fn inject_legality_defect(s: &mut Schedule, rng: &mut Rng) -> String {
+    match rng.below(4) {
+        0 => {
+            s.threads_per_block = 96 + rng.below(7) as u32; // not mult of 32
+            "tuned threads_per_block oddly".into()
+        }
+        1 => {
+            s.vector_width = 3 + 2 * rng.below(2) as u32; // 3 or 5
+            "used an unsupported vector packing".into()
+        }
+        2 => {
+            s.smem_staging = true;
+            s.stages = 4;
+            s.tile_m = 256;
+            s.tile_n = 256;
+            s.tile_k = 64;
+            "requested an oversized staged tile".into()
+        }
+        _ => {
+            s.regs_per_thread = 300 + rng.below(100) as u32;
+            "requested too many registers".into()
+        }
+    }
+}
+
+/// Corrupt emitted text (syntax defect): drop a semicolon, misspell a
+/// keyword, or truncate the closing brace — all realistic LLM slips.
+pub fn corrupt_text(text: &str, rng: &mut Rng) -> String {
+    match rng.below(4) {
+        0 => text.replacen(';', " ", 1),
+        1 => text.replacen("schedule", "schedul", 1),
+        2 => {
+            let mut t = text.trim_end().to_string();
+            t.pop(); // drop final `}`
+            t
+        }
+        _ => text.replacen(':', "=", 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{parse, print, validate, KernelSpec};
+
+    #[test]
+    fn insight_roundtrip_set() {
+        let mut s = Schedule::default();
+        let note = apply_insight(&mut s, "set vector_width to 8 (wider loads)").unwrap();
+        assert_eq!(s.vector_width, 8);
+        assert!(note.contains("vector_width"));
+    }
+
+    #[test]
+    fn insight_roundtrip_enable_disable() {
+        let mut s = Schedule::default();
+        apply_insight(&mut s, "enabled fuse_epilogue (single pass)").unwrap();
+        assert!(s.fuse_epilogue);
+        apply_insight(&mut s, "disabled fuse_epilogue").unwrap();
+        assert!(!s.fuse_epilogue);
+    }
+
+    #[test]
+    fn insight_roundtrip_adopted() {
+        let mut s = Schedule::default();
+        apply_insight(&mut s, "adopted tile_k=64 (from a historical solution)").unwrap();
+        assert_eq!(s.tile_k, 64);
+    }
+
+    #[test]
+    fn every_emitted_note_is_reapplicable() {
+        // The closing of the I3 loop: whatever nota the move operators
+        // emit, apply_insight must understand (when it names a field).
+        let mut rng = Rng::new(11);
+        for i in 0..200 {
+            let mut s = Schedule::default();
+            let mut r = rng.derive(&format!("m{i}"));
+            let note = if i % 2 == 0 {
+                directed_move(&mut s, 1 + (i % 6) as u8, &mut r)
+            } else {
+                random_move(&mut s, false, &mut r)
+            };
+            let mut s2 = Schedule::default();
+            if note.starts_with("set ") || note.starts_with("enabled ")
+                || note.starts_with("disabled ") || note.starts_with("adopted ")
+            {
+                assert!(
+                    apply_insight(&mut s2, &note).is_some(),
+                    "unparseable note: {note}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn make_consistent_produces_valid_schedules() {
+        let mut rng = Rng::new(7);
+        for i in 0..500 {
+            let mut s = Schedule::default();
+            let mut r = rng.derive(&format!("c{i}"));
+            for _ in 0..6 {
+                random_move(&mut s, false, &mut r);
+            }
+            make_consistent(&mut s);
+            let spec = KernelSpec { op: "x".into(), semantics: "opt".into(), schedule: s };
+            validate(&spec).unwrap_or_else(|e| panic!("iteration {i}: {e}\n{spec:?}"));
+        }
+    }
+
+    #[test]
+    fn corruption_breaks_parsing() {
+        let text = print(&KernelSpec::baseline("matmul_64"));
+        let mut rng = Rng::new(3);
+        let mut broke = 0;
+        for i in 0..40 {
+            let mut r = rng.derive(&format!("x{i}"));
+            if parse(&corrupt_text(&text, &mut r)).is_err() {
+                broke += 1;
+            }
+        }
+        assert!(broke >= 35, "only {broke}/40 corruptions broke the parse");
+    }
+
+    #[test]
+    fn legality_defects_fail_validation() {
+        let mut rng = Rng::new(4);
+        let mut failed = 0;
+        for i in 0..40 {
+            let mut s = Schedule::default();
+            let mut r = rng.derive(&format!("d{i}"));
+            inject_legality_defect(&mut s, &mut r);
+            let spec = KernelSpec { op: "x".into(), semantics: "opt".into(), schedule: s };
+            if validate(&spec).is_err() {
+                failed += 1;
+            }
+        }
+        assert!(failed >= 38, "only {failed}/40 defects failed validation");
+    }
+}

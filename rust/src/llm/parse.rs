@@ -1,0 +1,205 @@
+//! Prompt parsing — the SimLLM's "reading comprehension". Only what is
+//! actually present in the rendered prompt text becomes available to
+//! the generator (see module docs in llm/mod.rs for the honesty
+//! contract).
+
+use crate::dsl::{self, KernelSpec};
+
+/// One insight line recovered from the `## INSIGHTS` section.
+#[derive(Debug, Clone)]
+pub struct ParsedInsight {
+    /// The action text, e.g. `set vector_width to 8 (wider loads)`.
+    pub action: String,
+    /// The recorded effect, e.g. +0.40 (from `[+0.40x]`).
+    pub delta: f64,
+}
+
+/// Everything the generator recovered from the prompt. Historical
+/// kernel blocks are kept as raw slices and parsed lazily (perf:
+/// crossover touches at most one donor per trial — EXPERIMENTS.md
+/// §Perf).
+#[derive(Debug, Clone, Default)]
+pub struct PromptCtx<'a> {
+    pub op: String,
+    pub category: u8,
+    /// Long boilerplate detected (verbose prompt style).
+    pub verbose: bool,
+    pub parent: Option<KernelSpec>,
+    /// Raw KernelScript blocks from the `## HISTORY` section.
+    pub history: Vec<&'a str>,
+    pub insights: Vec<ParsedInsight>,
+    pub instruction: String,
+}
+
+impl<'a> PromptCtx<'a> {
+    pub fn instruction_has_any(&self, keys: &[&str]) -> bool {
+        let low = self.instruction.to_ascii_lowercase();
+        keys.iter().any(|k| low.contains(k))
+    }
+
+    /// Parse one historical block on demand.
+    pub fn parse_history(&self, idx: usize) -> Option<KernelSpec> {
+        self.history.get(idx).and_then(|b| dsl::parse(b).ok())
+    }
+}
+
+/// Extract the raw text range of every KernelScript block in a chunk
+/// (a block runs from a line starting `kernel ` to the first column-0
+/// `}` line). No parsing happens here.
+fn extract_kernel_blocks(chunk: &str) -> Vec<&str> {
+    let mut blocks = Vec::new();
+    let bytes = chunk.as_bytes();
+    let mut pos = 0usize;
+    let mut start: Option<usize> = None;
+    for line in chunk.split_inclusive('\n') {
+        let line_start = pos;
+        pos += line.len();
+        let trimmed = line.trim_end_matches(['\n', '\r']);
+        if start.is_none() && trimmed.trim_start().starts_with("kernel ") {
+            start = Some(line_start);
+        } else if let Some(s) = start {
+            if trimmed == "}" {
+                blocks.push(&chunk[s..pos.min(bytes.len())]);
+                start = None;
+            }
+        }
+    }
+    blocks
+}
+
+/// Parse the full prompt into a [`PromptCtx`].
+pub fn parse_prompt(prompt: &str) -> PromptCtx<'_> {
+    let mut ctx = PromptCtx {
+        category: 3,
+        ..Default::default()
+    };
+    ctx.verbose = prompt.contains("elite GPU performance engineer");
+
+    // Split into `## `-headed sections. Perf (EXPERIMENTS.md §Perf):
+    // sections are byte-range slices of the prompt, not rebuilt
+    // Strings — this runs once per trial on prompts up to several KB.
+    let mut sections: Vec<(&str, &str)> = Vec::new();
+    {
+        let mut header: Option<&str> = None;
+        let mut body_start = 0usize;
+        let mut pos = 0usize;
+        for line in prompt.split_inclusive('\n') {
+            let line_start = pos;
+            pos += line.len();
+            let trimmed = line.trim_end_matches(['\n', '\r']);
+            if let Some(h) = trimmed.strip_prefix("## ") {
+                if let Some(prev) = header.take() {
+                    sections.push((prev, &prompt[body_start..line_start]));
+                }
+                header = Some(h.trim());
+                body_start = pos;
+            }
+        }
+        if let Some(prev) = header.take() {
+            sections.push((prev, &prompt[body_start..]));
+        }
+    }
+
+    for (header, body) in &sections {
+        match *header {
+            "TASK" => {
+                for line in body.lines() {
+                    if let Some(v) = line.strip_prefix("op: ") {
+                        ctx.op = v.trim().to_string();
+                    } else if let Some(v) = line.strip_prefix("category: ") {
+                        let digits: String =
+                            v.chars().take_while(|c| c.is_ascii_digit()).collect();
+                        ctx.category = digits.parse().unwrap_or(3);
+                    }
+                }
+            }
+            "CURRENT KERNEL" => {
+                ctx.parent = extract_kernel_blocks(body)
+                    .first()
+                    .and_then(|b| dsl::parse(b).ok());
+            }
+            "HISTORY" => {
+                ctx.history = extract_kernel_blocks(body);
+            }
+            "INSIGHTS" => {
+                for line in body.lines() {
+                    let Some(rest) = line.strip_prefix("- ") else { continue };
+                    // `action [±D.DDx]`
+                    let (action, delta) = match rest.rfind('[') {
+                        Some(i) => {
+                            let tail = rest[i + 1..].trim_end_matches([']', 'x', ' ']);
+                            (rest[..i].trim().to_string(), tail.parse().unwrap_or(0.0))
+                        }
+                        None => (rest.trim().to_string(), 0.0),
+                    };
+                    ctx.insights.push(ParsedInsight { action, delta });
+                }
+            }
+            "INSTRUCTION" => {
+                ctx.instruction = body.trim().to_string();
+            }
+            _ => {}
+        }
+    }
+    if ctx.op.is_empty() {
+        ctx.op = "unknown_op".to_string();
+    }
+    ctx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::print;
+
+    #[test]
+    fn parses_task_and_instruction() {
+        let p = "## TASK\nop: gelu_64\ncategory: 3 (Activation & Pooling)\n\n\
+                 ## INSTRUCTION\nImprove the kernel.\n";
+        let ctx = parse_prompt(p);
+        assert_eq!(ctx.op, "gelu_64");
+        assert_eq!(ctx.category, 3);
+        assert_eq!(ctx.instruction, "Improve the kernel.");
+        assert!(!ctx.verbose);
+    }
+
+    #[test]
+    fn recovers_parent_and_history_kernels() {
+        let k1 = print(&KernelSpec::baseline("matmul_64"));
+        let mut spec2 = KernelSpec::baseline("matmul_64");
+        spec2.schedule.tile_m = 64;
+        let k2 = print(&spec2);
+        let p = format!(
+            "## TASK\nop: matmul_64\ncategory: 1 (M)\n\n## CURRENT KERNEL\nspeedup: 1.2\n{k1}\n\
+             ## HISTORY\n### solution 1 (speedup 2.0)\n{k2}### solution 2 (speedup 1.5)\n{k1}\n\
+             ## INSTRUCTION\nGo.\n"
+        );
+        let ctx = parse_prompt(&p);
+        assert!(ctx.parent.is_some());
+        assert_eq!(ctx.history.len(), 2);
+        assert_eq!(ctx.parse_history(0).unwrap().schedule.tile_m, 64);
+        assert!(ctx.parse_history(1).is_some());
+        assert!(ctx.parse_history(2).is_none());
+    }
+
+    #[test]
+    fn parses_insight_deltas() {
+        let p = "## TASK\nop: x\ncategory: 1 (M)\n\n## INSIGHTS\n\
+                 - set vector_width to 8 (wider loads) [+0.40x]\n\
+                 - enabled smem_staging (reuse) [-0.10x]\n\n## INSTRUCTION\nGo.\n";
+        let ctx = parse_prompt(p);
+        assert_eq!(ctx.insights.len(), 2);
+        assert!((ctx.insights[0].delta - 0.40).abs() < 1e-9);
+        assert!((ctx.insights[1].delta + 0.10).abs() < 1e-9);
+        assert!(ctx.insights[0].action.starts_with("set vector_width"));
+    }
+
+    #[test]
+    fn missing_sections_are_empty() {
+        let ctx = parse_prompt("## TASK\nop: y\ncategory: 6 (C)\n");
+        assert!(ctx.parent.is_none());
+        assert!(ctx.history.is_empty());
+        assert!(ctx.insights.is_empty());
+        assert_eq!(ctx.category, 6);
+    }
+}

@@ -1,0 +1,289 @@
+//! `repro` — the EvoEngineer reproduction CLI (L3 leader entrypoint).
+//!
+//! ```text
+//! repro smoke                          # PJRT + artifact sanity check
+//! repro optimize matmul_64 --method evoengineer-full --model claude
+//! repro campaign --seeds 3 --out results/records.jsonl
+//! repro report table4 --records results/records.jsonl
+//! ```
+//!
+//! (Arg parsing is hand-rolled: the build environment is offline and
+//! clap is not in the pre-seeded crate cache.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use evoengineer::campaign::{results, CampaignConfig};
+use evoengineer::evals::Evaluator;
+use evoengineer::llm::profile;
+use evoengineer::methods::{self, Archive, RunCtx};
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::{eyre, report, Result};
+
+const USAGE: &str = "\
+repro — EvoEngineer reproduction (rust+JAX+Pallas)
+
+USAGE:
+  repro [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  smoke                      load artifacts and execute on PJRT (sanity)
+  optimize <op>              one optimization run, verbose
+      --method NAME          (default evoengineer-full)
+      --model NAME           (default gpt)
+      --seed N               (default 0)
+      --budget N             (default 45)
+  campaign                   run the method x model x op x seed sweep
+      --methods A,B          (default: all six)
+      --models A,B           (default: all three)
+      --seeds N              independent runs, seeds 0..N (default 3)
+      --ops SUBSTR           op-name filter
+      --max-ops N            stratified cap on ops (default 0 = all 91)
+      --budget N             trials per run (default 45)
+      --concurrency N        workers (default: CPUs)
+      --out PATH             (default results/records.jsonl)
+  report <which>             regenerate a table/figure from records
+      which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|methods|all
+      --records PATH         (default results/records.jsonl)
+      --model NAME           model filter for fig4 (fig6/7 = other models)
+";
+
+/// Tiny flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| eyre!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| eyre!("bad numeric value for --{key}: {v}")),
+        }
+    }
+}
+
+fn split_csv(s: &str) -> Vec<String> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(String::from).collect()
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv)?;
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let cmd = args
+        .positional
+        .first()
+        .ok_or_else(|| eyre!("missing command\n{USAGE}"))?
+        .as_str();
+
+    match cmd {
+        "smoke" => smoke(&artifacts),
+        "optimize" => {
+            let op = args
+                .positional
+                .get(1)
+                .ok_or_else(|| eyre!("optimize needs an op name"))?;
+            optimize(
+                &artifacts,
+                op,
+                &args.get("method", "evoengineer-full"),
+                &args.get("model", "gpt"),
+                args.get_num("seed", 0u64)?,
+                args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
+            )
+        }
+        "campaign" => {
+            let cfg = CampaignConfig {
+                methods: split_csv(&args.get("methods", "")),
+                models: split_csv(&args.get("models", "")),
+                seeds: (0..args.get_num("seeds", 3u64)?).collect(),
+                op_filter: args.get("ops", ""),
+                max_ops: args.get_num("max-ops", 0usize)?,
+                budget: args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
+                concurrency: args.get_num("concurrency", 0usize)?,
+                quiet: false,
+            };
+            campaign(&artifacts, cfg, &PathBuf::from(args.get("out", "results/records.jsonl")))
+        }
+        "report" => {
+            let which = args
+                .positional
+                .get(1)
+                .ok_or_else(|| eyre!("report needs a table/figure name"))?;
+            run_report(
+                &artifacts,
+                which,
+                &PathBuf::from(args.get("records", "results/records.jsonl")),
+                &args.get("model", ""),
+            )
+        }
+        other => Err(eyre!("unknown command `{other}`\n{USAGE}")),
+    }
+}
+
+fn make_evaluator(artifacts: &PathBuf) -> Result<Evaluator> {
+    let registry = std::sync::Arc::new(TaskRegistry::load(artifacts)?);
+    let runtime = Runtime::new()?;
+    Ok(Evaluator::new(registry, runtime))
+}
+
+fn smoke(artifacts: &PathBuf) -> Result<()> {
+    let evaluator = make_evaluator(artifacts)?;
+    let reg = &evaluator.registry;
+    println!("manifest: {} ops", reg.ops.len());
+    let task = reg.get("matmul_64").expect("matmul_64 in dataset");
+    for variant in ["ref", "opt", "bug_scale"] {
+        let v = evaluator.functional(task, variant)?;
+        println!(
+            "matmul_64/{variant}: functional pass={} max_abs_diff={:.3e}",
+            v.pass, v.max_abs_diff
+        );
+    }
+    let stats = evaluator.runtime_stats()?;
+    println!(
+        "runtime: {} executions, {} compiles, {} cache hits",
+        stats.executions, stats.compiles, stats.cache_hits
+    );
+    println!("smoke OK");
+    Ok(())
+}
+
+fn optimize(
+    artifacts: &PathBuf,
+    op: &str,
+    method: &str,
+    model: &str,
+    seed: u64,
+    budget: usize,
+) -> Result<()> {
+    let evaluator = make_evaluator(artifacts)?;
+    let task = evaluator
+        .registry
+        .get(op)
+        .ok_or_else(|| eyre!("unknown op `{op}`"))?
+        .clone();
+    let method = methods::by_name(method).ok_or_else(|| eyre!("unknown method `{method}`"))?;
+    let model = profile::by_name(model).ok_or_else(|| eyre!("unknown model `{model}`"))?;
+    let archive = Archive::new();
+    let ctx = RunCtx {
+        evaluator: &evaluator,
+        task: &task,
+        model,
+        seed,
+        archive: &archive,
+        budget,
+    };
+    let rec = method.run(&ctx);
+    println!(
+        "{} / {} on {} (seed {seed}): best speedup {:.2}x vs baseline, {:.2}x vs PyTorch",
+        rec.method, rec.model, rec.op, rec.best_speedup, rec.best_pytorch_speedup
+    );
+    println!(
+        "trials: {} (compiled {:.0}%, correct {:.0}%), tokens: {} prompt + {} completion",
+        rec.trials,
+        100.0 * rec.compiled_trials as f64 / rec.trials.max(1) as f64,
+        100.0 * rec.correct_trials as f64 / rec.trials.max(1) as f64,
+        rec.prompt_tokens,
+        rec.completion_tokens
+    );
+    print!("trajectory:");
+    for (i, s) in rec.trajectory.iter().enumerate() {
+        if i % 5 == 0 {
+            print!(" [{i}]{s:.2}");
+        }
+    }
+    println!();
+    if let Some(src) = rec.best_src {
+        println!("\nbest kernel:\n{src}");
+    }
+    Ok(())
+}
+
+fn campaign(artifacts: &PathBuf, cfg: CampaignConfig, out: &PathBuf) -> Result<()> {
+    let evaluator = make_evaluator(artifacts)?;
+    let records = evoengineer::campaign::run(&cfg, evaluator)?;
+    results::save(out, &records)?;
+    println!("saved {} records to {}", records.len(), out.display());
+    println!("\n{}", report::table4(&records));
+    Ok(())
+}
+
+fn run_report(artifacts: &PathBuf, which: &str, records_path: &PathBuf, model: &str) -> Result<()> {
+    let text = match which {
+        "table5" => {
+            let reg = TaskRegistry::load(artifacts)?;
+            report::table5(&reg)
+        }
+        "methods" => report::methods_table(),
+        _ => {
+            let records = results::load(records_path)?;
+            match which {
+                "table4" => report::table4(&records),
+                "table7" => report::table7(&records),
+                "table8" => report::table8(&records),
+                "fig1" => report::fig1(&records),
+                "fig4" => report::fig4(&records, model),
+                "fig5" => report::fig5(&records),
+                "fig8" => report::fig8(&records),
+                "fig9" => report::fig9(&records),
+                "convergence" => report::convergence(&records),
+                "all" => {
+                    let reg = TaskRegistry::load(artifacts)?;
+                    [
+                        report::table5(&reg),
+                        report::methods_table(),
+                        report::table4(&records),
+                        report::fig1(&records),
+                        report::fig4(&records, model),
+                        report::fig5(&records),
+                        report::table7(&records),
+                        report::fig8(&records),
+                        report::table8(&records),
+                        report::fig9(&records),
+                    ]
+                    .join("\n\n")
+                }
+                other => return Err(eyre!("unknown report `{other}`")),
+            }
+        }
+    };
+    println!("{text}");
+    Ok(())
+}

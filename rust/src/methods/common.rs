@@ -1,0 +1,421 @@
+//! Shared per-run machinery: the trial executor every method drives.
+//!
+//! One `Session` = one (method, model, op, seed) optimization run with
+//! the paper's 45-trial budget. `Session::trial` performs the full
+//! closed loop: guidance assembly → prompt render → SimLLM call →
+//! two-stage evaluation → population update → insight recording →
+//! token accounting.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::costmodel::price;
+use crate::dsl;
+use crate::evals::{EvalOutcome, Evaluator};
+use crate::llm::{self, ModelProfile};
+use crate::population::{Candidate, Population};
+use crate::tasks::OpTask;
+use crate::traverse::prompt::{profiling_line, render};
+use crate::traverse::{Guidance, GuidanceConfig, InsightRecord};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Cross-op archive of best kernels (the AI CUDA Engineer Compose
+/// stage's RAG source; paper §A.8: "select top 5 kernels from other
+/// kernels in the dataset").
+#[derive(Debug, Clone, Default)]
+pub struct Archive {
+    inner: Arc<RwLock<HashMap<String, ArchiveEntry>>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchiveEntry {
+    pub op: String,
+    pub family: String,
+    pub src: String,
+    pub speedup: f64,
+}
+
+impl Archive {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, entry: ArchiveEntry) {
+        let mut g = self.inner.write().unwrap();
+        let slot = g.entry(entry.op.clone()).or_insert_with(|| entry.clone());
+        if entry.speedup > slot.speedup {
+            *slot = entry;
+        }
+    }
+
+    /// Top-k entries for other ops, same family first (the embedding
+    /// search stand-in: family identity is our similarity metric).
+    pub fn similar(&self, op: &str, family: &str, k: usize) -> Vec<ArchiveEntry> {
+        let g = self.inner.read().unwrap();
+        let mut entries: Vec<&ArchiveEntry> = g.values().filter(|e| e.op != op).collect();
+        entries.sort_by(|a, b| {
+            let fa = (a.family == family) as u8;
+            let fb = (b.family == family) as u8;
+            fb.cmp(&fa)
+                .then(b.speedup.partial_cmp(&a.speedup).unwrap())
+        });
+        entries.into_iter().take(k).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Inputs shared by every method run.
+pub struct RunCtx<'a> {
+    pub evaluator: &'a Evaluator,
+    pub task: &'a OpTask,
+    pub model: &'a ModelProfile,
+    pub seed: u64,
+    pub archive: &'a Archive,
+    /// Trial budget (the paper's 45).
+    pub budget: usize,
+}
+
+/// Final record of one (method, model, op, seed) run — the unit the
+/// metrics layer aggregates into every table and figure.
+#[derive(Debug, Clone)]
+pub struct KernelRunRecord {
+    pub method: String,
+    pub model: String,
+    pub op: String,
+    pub category: u8,
+    pub seed: u64,
+    pub trials: usize,
+    pub compiled_trials: usize,
+    pub correct_trials: usize,
+    /// Best valid speedup vs baseline; 1.0 when no valid improvement
+    /// was found (the paper's failure convention, §5.1).
+    pub best_speedup: f64,
+    /// Best valid speedup vs the modeled PyTorch kernel (0.0 if none
+    /// valid).
+    pub best_pytorch_speedup: f64,
+    pub any_valid: bool,
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+    /// Best-so-far speedup after each trial (convergence curves).
+    pub trajectory: Vec<f64>,
+    pub best_src: Option<String>,
+}
+
+impl KernelRunRecord {
+    pub fn total_tokens(&self) -> u64 {
+        self.prompt_tokens + self.completion_tokens
+    }
+
+    /// JSON serialization (offline environment: no serde; see
+    /// util::json).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("op", Json::Str(self.op.clone())),
+            ("category", Json::Num(self.category as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("trials", Json::Num(self.trials as f64)),
+            ("compiled_trials", Json::Num(self.compiled_trials as f64)),
+            ("correct_trials", Json::Num(self.correct_trials as f64)),
+            ("best_speedup", Json::Num(self.best_speedup)),
+            ("best_pytorch_speedup", Json::Num(self.best_pytorch_speedup)),
+            ("any_valid", Json::Bool(self.any_valid)),
+            ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+            ("completion_tokens", Json::Num(self.completion_tokens as f64)),
+            (
+                "trajectory",
+                Json::Arr(self.trajectory.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "best_src",
+                self.best_src
+                    .as_ref()
+                    .map(|s| Json::Str(s.clone()))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let s = |k: &str| -> crate::Result<String> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(String::from)
+                .ok_or_else(|| crate::eyre!("record missing `{k}`"))
+        };
+        let n = |k: &str| -> crate::Result<f64> {
+            v.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| crate::eyre!("record missing `{k}`"))
+        };
+        Ok(KernelRunRecord {
+            method: s("method")?,
+            model: s("model")?,
+            op: s("op")?,
+            category: n("category")? as u8,
+            seed: n("seed")? as u64,
+            trials: n("trials")? as usize,
+            compiled_trials: n("compiled_trials")? as usize,
+            correct_trials: n("correct_trials")? as usize,
+            best_speedup: n("best_speedup")?,
+            best_pytorch_speedup: n("best_pytorch_speedup")?,
+            any_valid: v.get("any_valid").and_then(|x| x.as_bool()).unwrap_or(false),
+            prompt_tokens: n("prompt_tokens")? as u64,
+            completion_tokens: n("completion_tokens")? as u64,
+            trajectory: v
+                .get("trajectory")
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default(),
+            best_src: v.get("best_src").and_then(|x| x.as_str()).map(String::from),
+        })
+    }
+}
+
+/// One live optimization session.
+pub struct Session<'a> {
+    pub ctx: &'a RunCtx<'a>,
+    rng: Rng,
+    pub insights: Vec<InsightRecord>,
+    prompt_tokens: u64,
+    completion_tokens: u64,
+    trials_done: usize,
+    compiled: usize,
+    correct: usize,
+    best: Option<Candidate>,
+    best_pt: f64,
+    trajectory: Vec<f64>,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(ctx: &'a RunCtx<'a>, method_name: &str) -> Self {
+        let rng = Rng::new(ctx.seed).derive(&format!(
+            "{method_name}/{}/{}/{}",
+            ctx.model.name, ctx.task.name, ctx.seed
+        ));
+        Session {
+            ctx,
+            rng,
+            insights: Vec::new(),
+            prompt_tokens: 0,
+            completion_tokens: 0,
+            trials_done: 0,
+            compiled: 0,
+            correct: 0,
+            best: None,
+            best_pt: 0.0,
+            trajectory: Vec::new(),
+        }
+    }
+
+    pub fn budget_left(&self) -> usize {
+        self.ctx.budget.saturating_sub(self.trials_done)
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Evaluate the op's given starting kernel (the dataset's "initial
+    /// C++/CUDA implementation" — quality-tiered per op, see
+    /// costmodel::baseline_schedule) and seed the population with it.
+    /// Does not consume budget: the paper provides this kernel.
+    pub fn bootstrap(&mut self, pop: &mut dyn Population) {
+        let spec = dsl::KernelSpec {
+            op: self.ctx.task.name.clone(),
+            semantics: "opt".into(),
+            schedule: crate::costmodel::baseline_schedule(self.ctx.task),
+        };
+        let src = dsl::print(&spec);
+        let mut rng = self.rng.derive("bootstrap");
+        let outcome = self.ctx.evaluator.evaluate(&src, self.ctx.task, &mut rng);
+        let cand = self.candidate_from(src, outcome, 0, None);
+        pop.insert(cand);
+    }
+
+    fn candidate_from(
+        &mut self,
+        src: String,
+        outcome: EvalOutcome,
+        trial: usize,
+        insight: Option<String>,
+    ) -> Candidate {
+        let spec = dsl::parse(&src).ok();
+        let (speedup, pt, true_speedup, true_pt) = match &outcome {
+            EvalOutcome::Ok(s) => {
+                (s.speedup, s.pytorch_speedup, s.true_speedup, s.true_pytorch_speedup)
+            }
+            _ => (1.0, 0.0, 1.0, 0.0),
+        };
+        Candidate {
+            src,
+            spec,
+            compiled: outcome.compiled(),
+            correct: outcome.correct(),
+            speedup,
+            pytorch_speedup: pt,
+            true_speedup,
+            true_pytorch_speedup: true_pt,
+            insight,
+            trial,
+        }
+    }
+
+    /// Top insights by recorded benefit (for the I3 prompt section).
+    fn top_insights(&self, k: usize) -> Vec<&InsightRecord> {
+        let mut v: Vec<&InsightRecord> = self.insights.iter().collect();
+        v.sort_by(|a, b| b.delta.partial_cmp(&a.delta).unwrap());
+        v.truncate(k);
+        v
+    }
+
+    /// Run one full trial. Returns `None` when the budget is spent.
+    ///
+    /// `parent_override` pins the prompt's CURRENT KERNEL (EoH's M1/M2
+    /// operate on an explicit parent); `history_override` substitutes
+    /// the I2 section (the Compose stage's RAG kernels).
+    pub fn trial(
+        &mut self,
+        cfg: &GuidanceConfig,
+        pop: &mut dyn Population,
+        instruction: &str,
+        parent_override: Option<Candidate>,
+        history_override: Option<Vec<Candidate>>,
+    ) -> Option<Candidate> {
+        if self.budget_left() == 0 {
+            return None;
+        }
+        let trial_idx = self.trials_done;
+        let mut trial_rng = self.rng.derive(&format!("trial/{trial_idx}"));
+
+        // --- solution guiding layer: assemble the information --------
+        let parent = parent_override.or_else(|| pop.parent(&mut trial_rng));
+        let history: Vec<Candidate> = match history_override {
+            Some(h) => h,
+            None => pop.history(cfg.n_history),
+        };
+        let insights = self.top_insights(cfg.n_insights);
+        let profiling = if cfg.profiling {
+            parent.as_ref().and_then(|p| {
+                p.spec.as_ref().map(|spec| {
+                    let t = price(&spec.schedule, self.ctx.task, &self.ctx.evaluator.gpu);
+                    profiling_line(&t)
+                })
+            })
+        } else {
+            None
+        };
+        let baseline_us = self.ctx.evaluator.baseline_time(self.ctx.task) * 1e6;
+        let guidance = Guidance {
+            task: self.ctx.task,
+            baseline_us,
+            parent: parent.as_ref(),
+            history: history.iter().collect(),
+            insights,
+            profiling,
+            instruction: instruction.to_string(),
+        };
+
+        // --- prompt engineering layer + LLM call ----------------------
+        let prompt = render(cfg, &guidance);
+        let mut llm_rng = self.rng.derive(&format!("llm/{trial_idx}"));
+        let resp = llm::generate(&prompt, self.ctx.model, &mut llm_rng);
+        self.prompt_tokens += resp.prompt_tokens;
+        self.completion_tokens += resp.completion_tokens;
+
+        // --- two-stage evaluation --------------------------------------
+        let mut eval_rng = self.rng.derive(&format!("eval/{trial_idx}"));
+        let outcome = self.ctx.evaluator.evaluate(&resp.text, self.ctx.task, &mut eval_rng);
+        self.trials_done += 1;
+        if outcome.compiled() {
+            self.compiled += 1;
+        }
+        if outcome.correct() {
+            self.correct += 1;
+        }
+
+        let cand =
+            self.candidate_from(resp.text, outcome, trial_idx, Some(resp.insight.clone()));
+
+        // --- insight recording (solution-insight pair with observed
+        // delta — what EvoEngineer "explicitly leverages", Table 2) ----
+        let delta = if cand.valid() {
+            let parent_speed = parent.as_ref().filter(|p| p.valid()).map(|p| p.speedup);
+            match parent_speed {
+                Some(ps) => cand.speedup - ps,
+                None => cand.speedup - 1.0,
+            }
+        } else {
+            -0.30 // invalid outcome: the idea is recorded as harmful
+        };
+        self.insights.push(InsightRecord { text: resp.insight, delta });
+        // Bounded store: keep the 64 most useful insights (perf: the
+        // per-trial top-k selection sorts this vec — see EXPERIMENTS.md
+        // §Perf — and long sessions must not grow it unboundedly).
+        if self.insights.len() > 128 {
+            self.insights
+                .sort_by(|a, b| b.delta.partial_cmp(&a.delta).unwrap());
+            self.insights.truncate(64);
+        }
+
+        // --- bookkeeping -------------------------------------------------
+        // Selection is by *measured* speedup (the paper's noisy
+        // selection); the final record cites the chosen kernel's
+        // noise-free numbers (the paper's final re-timing).
+        if cand.valid()
+            && self
+                .best
+                .as_ref()
+                .map(|b| cand.speedup > b.speedup)
+                .unwrap_or(true)
+        {
+            self.best = Some(cand.clone());
+        }
+        if cand.valid() {
+            self.best_pt = self.best_pt.max(cand.true_pytorch_speedup);
+        }
+        self.trajectory
+            .push(self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0));
+
+        pop.insert(cand.clone());
+        Some(cand)
+    }
+
+    /// Close the session: publish to the archive, emit the record.
+    pub fn finish(self, method_name: &str) -> KernelRunRecord {
+        if let Some(best) = &self.best {
+            self.ctx.archive.record(ArchiveEntry {
+                op: self.ctx.task.name.clone(),
+                family: self.ctx.task.family.clone(),
+                src: best.src.clone(),
+                speedup: best.true_speedup,
+            });
+        }
+        KernelRunRecord {
+            method: method_name.to_string(),
+            model: self.ctx.model.name.to_string(),
+            op: self.ctx.task.name.clone(),
+            category: self.ctx.task.category,
+            seed: self.ctx.seed,
+            trials: self.trials_done,
+            compiled_trials: self.compiled,
+            correct_trials: self.correct,
+            best_speedup: self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0),
+            best_pytorch_speedup: self.best_pt,
+            any_valid: self.best.is_some(),
+            prompt_tokens: self.prompt_tokens,
+            completion_tokens: self.completion_tokens,
+            trajectory: self.trajectory,
+            best_src: self.best.map(|b| b.src),
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! EvoEngineer-Solution (EoH) — Evolution of Heuristics (Liu et al.,
+//! 2024) as configured in the paper's §A.4: population 4, 5
+//! initialization trials, then 10 generations in which the E1, E2, M1,
+//! M2 operators each produce one offspring, after which the top 4
+//! survive (elite truncation). EoH generates solution-insight pairs but
+//! does **not** feed insights back (Table 2: I3 marked "generate but
+//! don't leverage") — so `n_insights` is 0 here.
+
+use crate::population::{Elite, Population};
+use crate::traverse::GuidanceConfig;
+
+use super::common::{KernelRunRecord, RunCtx, Session};
+use super::Method;
+
+pub struct Eoh;
+
+impl Eoh {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Eoh
+    }
+}
+
+/// The four EoH operators, as prompt directives. E1/E2 are
+/// exploration operators over multiple parents; M1/M2 mutate the
+/// current elite.
+const E1: &str = "Design a new kernel from scratch for this operation. You may draw \
+inspiration from the historical solutions, but produce a structurally different schedule.";
+const E2: &str = "Combine the historical solutions: crossover their schedule decisions into \
+a single kernel that inherits the best choices of each.";
+const M1: &str = "Mutate the current kernel: change part of its schedule to explore a \
+neighbouring design.";
+const M2: &str = "Tune the numeric parameters of the current kernel only (tile sizes, \
+unroll factor, block size, register budget); keep its structure fixed.";
+
+impl Method for Eoh {
+    fn name(&self) -> String {
+        "EvoEngineer-Solution (EoH)".into()
+    }
+
+    fn run(&self, ctx: &RunCtx) -> KernelRunRecord {
+        let name = self.name();
+        let cfg = GuidanceConfig::eoh();
+        let mut session = Session::new(ctx, &name);
+        let mut pop = Elite::new(4);
+        session.bootstrap(&mut pop);
+
+        // Initialization: 5 trials (§A.4).
+        for _ in 0..5 {
+            if session.trial(&cfg, &mut pop, E1, None, None).is_none() {
+                return session.finish(&name);
+            }
+        }
+
+        // 10 generations × (E1, E2, M1, M2).
+        'gens: for _gen in 0..10 {
+            for op in [E1, E2, M1, M2] {
+                // M1/M2 act on the current best explicitly.
+                let parent = if std::ptr::eq(op, M1) || std::ptr::eq(op, M2) {
+                    pop.best()
+                } else {
+                    None
+                };
+                if session.trial(&cfg, &mut pop, op, parent, None).is_none() {
+                    break 'gens;
+                }
+            }
+        }
+        session.finish(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evals::Evaluator;
+    use crate::llm::MODELS;
+    use crate::methods::common::Archive;
+    use crate::runtime::Runtime;
+    use crate::tasks::TaskRegistry;
+    use std::sync::Arc;
+
+    #[test]
+    fn eoh_uses_45_trials() {
+        let reg = Arc::new(
+            TaskRegistry::load(
+                std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            )
+            .unwrap(),
+        );
+        let evaluator = Evaluator::new(reg, Runtime::new().unwrap());
+        let task = evaluator.registry.get("gelu_64").unwrap().clone();
+        let archive = Archive::new();
+        let ctx = RunCtx {
+            evaluator: &evaluator,
+            task: &task,
+            model: &MODELS[1],
+            seed: 2,
+            archive: &archive,
+            budget: 45,
+        };
+        let rec = Eoh::new().run(&ctx);
+        assert_eq!(rec.trials, 45); // 5 + 10*4
+        assert!(rec.best_speedup >= 1.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! The three EvoEngineer configurations (paper §4.2, Table 3):
+//!
+//! | Variant  | I1 | I2 | I3 | Population   |
+//! |----------|----|----|----|--------------|
+//! | Free     | ✓  | ✗  | ✗  | single best  |
+//! | Insight  | ✓  | ✗  | ✓  | single best  |
+//! | Full     | ✓  | ✓  | ✓  | elite (4)    |
+//!
+//! Free and Insight run a flat 45-trial improvement loop; Full uses
+//! EoH-style generational structure (5 init + 10 generations × 4
+//! offspring, §A.4).
+
+use crate::population::{Elite, SingleBest};
+use crate::traverse::GuidanceConfig;
+
+use super::common::{KernelRunRecord, RunCtx, Session};
+use super::Method;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvoVariant {
+    Free,
+    Insight,
+    Full,
+}
+
+pub struct EvoEngineer {
+    pub variant: EvoVariant,
+}
+
+impl EvoEngineer {
+    pub fn new(variant: EvoVariant) -> Self {
+        Self { variant }
+    }
+
+    fn config(&self) -> GuidanceConfig {
+        match self.variant {
+            EvoVariant::Free => GuidanceConfig::free(),
+            EvoVariant::Insight => GuidanceConfig::insight(),
+            EvoVariant::Full => GuidanceConfig::full(),
+        }
+    }
+}
+
+const IMPROVE: &str = "Improve the current kernel: propose a modified schedule that reduces \
+execution time while preserving exact output semantics.";
+const INIT: &str = "Design a new kernel from scratch for this operation, optimized for the \
+target device.";
+
+impl Method for EvoEngineer {
+    fn name(&self) -> String {
+        match self.variant {
+            EvoVariant::Free => "EvoEngineer-Free".into(),
+            EvoVariant::Insight => "EvoEngineer-Insight".into(),
+            EvoVariant::Full => "EvoEngineer-Full".into(),
+        }
+    }
+
+    fn run(&self, ctx: &RunCtx) -> KernelRunRecord {
+        let name = self.name();
+        let cfg = self.config();
+        let mut session = Session::new(ctx, &name);
+
+        match self.variant {
+            EvoVariant::Free | EvoVariant::Insight => {
+                let mut pop = SingleBest::new();
+                session.bootstrap(&mut pop);
+                while session
+                    .trial(&cfg, &mut pop, IMPROVE, None, None)
+                    .is_some()
+                {}
+            }
+            EvoVariant::Full => {
+                let mut pop = Elite::new(4);
+                session.bootstrap(&mut pop);
+                // Initialization: 5 from-scratch proposals (§A.4).
+                for _ in 0..5 {
+                    if session.trial(&cfg, &mut pop, INIT, None, None).is_none() {
+                        break;
+                    }
+                }
+                // 10 generations × 4 offspring = 40 trials.
+                'gens: for _gen in 0..10 {
+                    for _off in 0..4 {
+                        if session.trial(&cfg, &mut pop, IMPROVE, None, None).is_none() {
+                            break 'gens;
+                        }
+                    }
+                }
+            }
+        }
+        session.finish(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evals::Evaluator;
+    use crate::llm::MODELS;
+    use crate::methods::common::Archive;
+    use crate::runtime::Runtime;
+    use crate::tasks::TaskRegistry;
+    use std::sync::Arc;
+
+    fn eval() -> Evaluator {
+        let reg = Arc::new(
+            TaskRegistry::load(
+                std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            )
+            .unwrap(),
+        );
+        Evaluator::new(reg, Runtime::new().unwrap())
+    }
+
+    #[test]
+    fn free_consumes_exactly_the_budget() {
+        let evaluator = eval();
+        let task = evaluator.registry.get("relu_64").unwrap().clone();
+        let archive = Archive::new();
+        let ctx = RunCtx {
+            evaluator: &evaluator,
+            task: &task,
+            model: &MODELS[0],
+            seed: 1,
+            archive: &archive,
+            budget: 45,
+        };
+        let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx);
+        assert_eq!(rec.trials, 45);
+        assert_eq!(rec.trajectory.len(), 45);
+        assert!(rec.best_speedup >= 1.0);
+        assert!(rec.compiled_trials <= rec.trials);
+        assert!(rec.correct_trials <= rec.compiled_trials);
+        assert!(rec.prompt_tokens > 0 && rec.completion_tokens > 0);
+    }
+
+    #[test]
+    fn runs_are_seed_deterministic() {
+        let evaluator = eval();
+        let task = evaluator.registry.get("softmax_64").unwrap().clone();
+        let archive = Archive::new();
+        let run = |seed| {
+            let ctx = RunCtx {
+                evaluator: &evaluator,
+                task: &task,
+                model: &MODELS[2],
+                seed,
+                archive: &archive,
+                budget: 20,
+            };
+            EvoEngineer::new(EvoVariant::Full).run(&ctx)
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.trajectory, b.trajectory);
+        assert_eq!(a.prompt_tokens, b.prompt_tokens);
+        // different seed should (almost surely) differ somewhere
+        assert!(
+            a.trajectory != c.trajectory || a.prompt_tokens != c.prompt_tokens,
+            "seeds produced identical runs"
+        );
+    }
+
+    #[test]
+    fn insight_uses_more_prompt_tokens_than_free() {
+        let evaluator = eval();
+        let task = evaluator.registry.get("matmul_64").unwrap().clone();
+        let archive = Archive::new();
+        let mk = |variant| {
+            let ctx = RunCtx {
+                evaluator: &evaluator,
+                task: &task,
+                model: &MODELS[0],
+                seed: 3,
+                archive: &archive,
+                budget: 30,
+            };
+            EvoEngineer::new(variant).run(&ctx)
+        };
+        let free = mk(EvoVariant::Free);
+        let full = mk(EvoVariant::Full);
+        assert!(
+            full.prompt_tokens > free.prompt_tokens,
+            "full={} free={}",
+            full.prompt_tokens,
+            free.prompt_tokens
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! FunSearch (Romera-Paredes et al., 2024) as configured in §A.4:
+//! 5 islands, sampling until the 45-trial budget is exhausted. The
+//! prompt contains only the task context and two historical solutions
+//! from the current island (Table 2: minimal information usage) — the
+//! "best-shot" prompting style of the original system, which is also
+//! the core technique behind AlphaEvolve.
+
+use crate::population::Islands;
+use crate::traverse::GuidanceConfig;
+
+use super::common::{KernelRunRecord, RunCtx, Session};
+use super::Method;
+
+pub struct FunSearch;
+
+impl FunSearch {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        FunSearch
+    }
+}
+
+const IMPROVE: &str = "Here are prior kernel versions ordered by quality. Write an improved \
+next version of the kernel.";
+
+impl Method for FunSearch {
+    fn name(&self) -> String {
+        "FunSearch".into()
+    }
+
+    fn run(&self, ctx: &RunCtx) -> KernelRunRecord {
+        let name = self.name();
+        let cfg = GuidanceConfig::funsearch();
+        let mut session = Session::new(ctx, &name);
+        let mut pop = Islands::funsearch();
+        session.bootstrap(&mut pop);
+        while session.trial(&cfg, &mut pop, IMPROVE, None, None).is_some() {}
+        session.finish(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evals::Evaluator;
+    use crate::llm::MODELS;
+    use crate::methods::common::Archive;
+    use crate::runtime::Runtime;
+    use crate::tasks::TaskRegistry;
+    use std::sync::Arc;
+
+    #[test]
+    fn funsearch_runs_budget() {
+        let reg = Arc::new(
+            TaskRegistry::load(
+                std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            )
+            .unwrap(),
+        );
+        let evaluator = Evaluator::new(reg, Runtime::new().unwrap());
+        let task = evaluator.registry.get("cumsum_rows_64").unwrap().clone();
+        let archive = Archive::new();
+        let ctx = RunCtx {
+            evaluator: &evaluator,
+            task: &task,
+            model: &MODELS[0],
+            seed: 5,
+            archive: &archive,
+            budget: 45,
+        };
+        let rec = FunSearch::new().run(&ctx);
+        assert_eq!(rec.trials, 45);
+        assert!(rec.best_speedup >= 1.0);
+    }
+}

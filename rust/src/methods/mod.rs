@@ -1,0 +1,66 @@
+//! The six optimization methods of the paper's evaluation (§5.1):
+//! EvoEngineer-{Free,Insight,Full}, EvoEngineer-Solution (EoH),
+//! FunSearch, and the AI CUDA Engineer replication (§A.8). Each is a
+//! configuration of the same orthogonal components — traverse technique
+//! (guidance + prompt) and population management — which is exactly the
+//! paper's framework claim.
+
+pub mod aicuda;
+pub mod common;
+pub mod eoh;
+pub mod evoengineer;
+pub mod funsearch;
+
+pub use aicuda::AiCudaEngineer;
+pub use common::{Archive, ArchiveEntry, KernelRunRecord, RunCtx, Session};
+pub use eoh::Eoh;
+pub use evoengineer::{EvoEngineer, EvoVariant};
+pub use funsearch::FunSearch;
+
+/// A kernel-optimization method: consumes a 45-trial budget on one op
+/// and reports the run record.
+pub trait Method: Send + Sync {
+    fn name(&self) -> String;
+    fn run(&self, ctx: &RunCtx) -> KernelRunRecord;
+}
+
+/// All six methods in the paper's presentation order.
+pub fn all_methods() -> Vec<Box<dyn Method>> {
+    vec![
+        Box::new(AiCudaEngineer::new()),
+        Box::new(FunSearch::new()),
+        Box::new(Eoh::new()),
+        Box::new(EvoEngineer::new(EvoVariant::Free)),
+        Box::new(EvoEngineer::new(EvoVariant::Insight)),
+        Box::new(EvoEngineer::new(EvoVariant::Full)),
+    ]
+}
+
+/// Look a method up by (case-insensitive) name fragment.
+pub fn by_name(name: &str) -> Option<Box<dyn Method>> {
+    let needle = name.to_ascii_lowercase().replace(['-', '_'], "");
+    all_methods()
+        .into_iter()
+        .find(|m| m.name().to_ascii_lowercase().replace(['-', '_'], "").contains(&needle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_methods() {
+        let names: Vec<String> = all_methods().iter().map(|m| m.name()).collect();
+        assert_eq!(names.len(), 6);
+        assert!(names.contains(&"EvoEngineer-Free".to_string()));
+        assert!(names.contains(&"EvoEngineer-Solution (EoH)".to_string()));
+        assert!(names.contains(&"AI CUDA Engineer".to_string()));
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("funsearch").is_some());
+        assert!(by_name("evoengineer-full").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,378 @@
+//! Metric aggregation: turns raw [`KernelRunRecord`]s into the numbers
+//! every table/figure of the paper reports (§5.1 Evaluation Metric):
+//!
+//! * **Speedup Count** — per category, the number of kernels whose best
+//!   speedup exceeds 1×, averaged over the independent runs.
+//! * **Median Speedup Rate** — per category, the median across kernels
+//!   of the seed-averaged best speedup, failures counted as 1.0.
+//! * **Compilation Success / Functional Correctness (Pass@1)** — the
+//!   proportion of *trials* that compile / pass functional testing.
+//! * PyTorch-relative speedups for Figure 5 / Table 7 / Figure 8.
+
+use std::collections::BTreeMap;
+
+use crate::methods::KernelRunRecord;
+use crate::util::{mean, median};
+
+/// Aggregated cell of Table 4 (one method × model × category).
+#[derive(Debug, Clone, Default)]
+pub struct Table4Cell {
+    pub speedup_count: f64,
+    pub median_speedup: f64,
+    pub compile_rate: f64,
+    pub correct_rate: f64,
+    pub n_ops: usize,
+}
+
+/// (method, model) group key, ordered for stable output.
+pub type GroupKey = (String, String);
+
+/// Group records by (method, model).
+pub fn group(records: &[KernelRunRecord]) -> BTreeMap<GroupKey, Vec<&KernelRunRecord>> {
+    let mut map: BTreeMap<GroupKey, Vec<&KernelRunRecord>> = BTreeMap::new();
+    for r in records {
+        map.entry((r.method.clone(), r.model.clone())).or_default().push(r);
+    }
+    map
+}
+
+/// Per-op seed-averaged best speedup (the paper averages the speedup
+/// over the three runs before taking the median).
+fn per_op_speedups(records: &[&KernelRunRecord]) -> BTreeMap<String, f64> {
+    let mut per_op: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for r in records {
+        per_op.entry(r.op.clone()).or_default().push(r.best_speedup);
+    }
+    per_op.into_iter().map(|(op, v)| (op, mean(&v))).collect()
+}
+
+/// Compute one Table-4 cell from a record subset (already filtered to
+/// one method × model × category, all seeds).
+pub fn table4_cell(records: &[&KernelRunRecord]) -> Table4Cell {
+    if records.is_empty() {
+        return Table4Cell::default();
+    }
+    // Speedup count: per seed, count ops beating 1x; then average.
+    let mut per_seed: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut seeds: Vec<u64> = records.iter().map(|r| r.seed).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    for s in &seeds {
+        per_seed.insert(*s, 0);
+    }
+    for r in records {
+        if r.best_speedup > 1.0 + 1e-9 && r.any_valid {
+            *per_seed.get_mut(&r.seed).unwrap() += 1;
+        }
+    }
+    let speedup_count = mean(&per_seed.values().map(|&c| c as f64).collect::<Vec<_>>());
+
+    let speedups: Vec<f64> = per_op_speedups(records).into_values().collect();
+    let median_speedup = median(&speedups);
+
+    let trials: usize = records.iter().map(|r| r.trials).sum();
+    let compiled: usize = records.iter().map(|r| r.compiled_trials).sum();
+    let correct: usize = records.iter().map(|r| r.correct_trials).sum();
+    Table4Cell {
+        speedup_count,
+        median_speedup,
+        compile_rate: 100.0 * compiled as f64 / trials.max(1) as f64,
+        correct_rate: 100.0 * correct as f64 / trials.max(1) as f64,
+        n_ops: speedups.len(),
+    }
+}
+
+/// Full Table 4: (method, model) -> [cell per category 1..=6, overall].
+pub fn table4(records: &[KernelRunRecord]) -> BTreeMap<GroupKey, Vec<Table4Cell>> {
+    let mut out = BTreeMap::new();
+    for (key, recs) in group(records) {
+        let mut cells = Vec::with_capacity(7);
+        for cat in 1..=6u8 {
+            let subset: Vec<&KernelRunRecord> =
+                recs.iter().copied().filter(|r| r.category == cat).collect();
+            cells.push(table4_cell(&subset));
+        }
+        cells.push(table4_cell(&recs)); // overall
+        out.insert(key, cells);
+    }
+    out
+}
+
+/// Figure-1 point: overall median speedup vs functional-correctness
+/// rate for one (method, model).
+#[derive(Debug, Clone)]
+pub struct TradeoffPoint {
+    pub method: String,
+    pub model: String,
+    pub median_speedup: f64,
+    pub correct_rate: f64,
+    pub total_tokens: u64,
+}
+
+pub fn tradeoff_points(records: &[KernelRunRecord]) -> Vec<TradeoffPoint> {
+    group(records)
+        .into_iter()
+        .map(|((method, model), recs)| {
+            let cell = table4_cell(&recs);
+            let tokens: u64 = recs.iter().map(|r| r.total_tokens()).sum();
+            TradeoffPoint {
+                method,
+                model,
+                median_speedup: cell.median_speedup,
+                correct_rate: cell.correct_rate,
+                total_tokens: tokens,
+            }
+        })
+        .collect()
+}
+
+/// Per-op best PyTorch-relative speedup across methods/models/seeds,
+/// with the winning (method, model) — Figure 5's data.
+#[derive(Debug, Clone)]
+pub struct PytorchBest {
+    pub op: String,
+    pub category: u8,
+    pub speedup: f64,
+    pub method: String,
+    pub model: String,
+}
+
+pub fn pytorch_best_per_op(records: &[KernelRunRecord]) -> Vec<PytorchBest> {
+    let mut best: BTreeMap<String, PytorchBest> = BTreeMap::new();
+    for r in records {
+        if !r.any_valid {
+            continue;
+        }
+        let entry = best.entry(r.op.clone()).or_insert_with(|| PytorchBest {
+            op: r.op.clone(),
+            category: r.category,
+            speedup: f64::MIN,
+            method: String::new(),
+            model: String::new(),
+        });
+        if r.best_pytorch_speedup > entry.speedup {
+            entry.speedup = r.best_pytorch_speedup;
+            entry.method = r.method.clone();
+            entry.model = r.model.clone();
+        }
+    }
+    let mut v: Vec<PytorchBest> = best.into_values().collect();
+    v.sort_by(|a, b| b.speedup.partial_cmp(&a.speedup).unwrap());
+    v
+}
+
+/// Table-7 buckets: <1, 1–2, 2–5, 5–10, >10 (vs PyTorch), per
+/// (method, model), using the max over seeds per op.
+pub fn speedup_range_distribution(
+    records: &[KernelRunRecord],
+) -> BTreeMap<GroupKey, [usize; 5]> {
+    let mut out = BTreeMap::new();
+    for (key, recs) in group(records) {
+        let mut per_op: BTreeMap<String, f64> = BTreeMap::new();
+        for r in &recs {
+            let v = if r.any_valid { r.best_pytorch_speedup } else { 0.0 };
+            let e = per_op.entry(r.op.clone()).or_insert(0.0);
+            *e = e.max(v);
+        }
+        let mut buckets = [0usize; 5];
+        for (_, s) in per_op {
+            let idx = if s < 1.0 {
+                0
+            } else if s < 2.0 {
+                1
+            } else if s < 5.0 {
+                2
+            } else if s < 10.0 {
+                3
+            } else {
+                4
+            };
+            buckets[idx] += 1;
+        }
+        out.insert(key, buckets);
+    }
+    out
+}
+
+/// Five-number summary of the per-op max PyTorch speedups for one
+/// method (Figure 8's violin stand-in).
+#[derive(Debug, Clone)]
+pub struct DistSummary {
+    pub method: String,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+pub fn method_distributions(records: &[KernelRunRecord]) -> Vec<DistSummary> {
+    let mut by_method: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    for r in records {
+        let v = if r.any_valid { r.best_pytorch_speedup } else { 0.0 };
+        let e = by_method
+            .entry(r.method.clone())
+            .or_default()
+            .entry(r.op.clone())
+            .or_insert(0.0);
+        *e = e.max(v);
+    }
+    by_method
+        .into_iter()
+        .map(|(method, per_op)| {
+            let xs: Vec<f64> = per_op.into_values().collect();
+            DistSummary {
+                method,
+                min: crate::util::percentile(&xs, 0.0),
+                p25: crate::util::percentile(&xs, 25.0),
+                median: crate::util::percentile(&xs, 50.0),
+                p75: crate::util::percentile(&xs, 75.0),
+                max: crate::util::percentile(&xs, 100.0),
+                n: xs.len(),
+            }
+        })
+        .collect()
+}
+
+/// Table-8 style summary for one method's records (the AI CUDA
+/// Engineer replication numbers).
+#[derive(Debug, Clone)]
+pub struct ReplicationSummary {
+    pub median_speedup_all: f64,
+    pub median_speedup_success: f64,
+    pub successful_tasks: usize,
+    pub n_ops: usize,
+}
+
+pub fn replication_summary(records: &[KernelRunRecord], method: &str) -> ReplicationSummary {
+    let recs: Vec<&KernelRunRecord> =
+        records.iter().filter(|r| r.method == method).collect();
+    let mut per_op: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for r in &recs {
+        per_op
+            .entry(r.op.clone())
+            .or_default()
+            .push(if r.any_valid { r.best_pytorch_speedup } else { 0.5 });
+    }
+    let per_op_avg: Vec<f64> = per_op.values().map(|v| mean(v)).collect();
+    let successes: Vec<f64> = per_op_avg.iter().copied().filter(|&s| s > 1.0).collect();
+    ReplicationSummary {
+        median_speedup_all: median(&per_op_avg),
+        median_speedup_success: median(&successes),
+        successful_tasks: successes.len(),
+        n_ops: per_op_avg.len(),
+    }
+}
+
+/// Figure-9 data: paired per-op speedups from two disjoint seed sets of
+/// the same method (our replication-vs-archive correlation proxy; see
+/// EXPERIMENTS.md).
+pub fn replication_pairs(
+    records: &[KernelRunRecord],
+    method: &str,
+    seed_a: u64,
+    seed_b: u64,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut a: BTreeMap<String, f64> = BTreeMap::new();
+    let mut b: BTreeMap<String, f64> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.method == method) {
+        let v = r.best_speedup;
+        if r.seed == seed_a {
+            a.insert(r.op.clone(), v);
+        } else if r.seed == seed_b {
+            b.insert(r.op.clone(), v);
+        }
+    }
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (op, va) in &a {
+        if let Some(vb) = b.get(op) {
+            xs.push(va.ln());
+            ys.push(vb.ln());
+        }
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(method: &str, op: &str, cat: u8, seed: u64, speed: f64, valid: bool) -> KernelRunRecord {
+        KernelRunRecord {
+            method: method.into(),
+            model: "GPT-4.1".into(),
+            op: op.into(),
+            category: cat,
+            seed,
+            trials: 45,
+            compiled_trials: 36,
+            correct_trials: 27,
+            best_speedup: speed,
+            best_pytorch_speedup: if valid { speed * 0.8 } else { 0.0 },
+            any_valid: valid,
+            prompt_tokens: 100,
+            completion_tokens: 50,
+            trajectory: vec![],
+            best_src: None,
+        }
+    }
+
+    #[test]
+    fn cell_rates_and_counts() {
+        let records = vec![
+            rec("M", "a", 1, 0, 2.0, true),
+            rec("M", "a", 1, 1, 3.0, true),
+            rec("M", "b", 1, 0, 1.0, false),
+            rec("M", "b", 1, 1, 1.5, true),
+        ];
+        let refs: Vec<&KernelRunRecord> = records.iter().collect();
+        let cell = table4_cell(&refs);
+        // seed 0: 1 op >1x; seed 1: 2 ops -> 1.5 average
+        assert!((cell.speedup_count - 1.5).abs() < 1e-9);
+        // per-op means: a = 2.5, b = 1.25 -> median 1.875
+        assert!((cell.median_speedup - 1.875).abs() < 1e-9);
+        assert!((cell.compile_rate - 80.0).abs() < 1e-9);
+        assert!((cell.correct_rate - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table7_buckets() {
+        let records = vec![
+            rec("M", "a", 1, 0, 1.0, false), // invalid -> <1 bucket
+            rec("M", "b", 1, 0, 1.5, true),  // pt 1.2 -> 1-2
+            rec("M", "c", 1, 0, 4.0, true),  // pt 3.2 -> 2-5
+            rec("M", "d", 1, 0, 15.0, true), // pt 12 -> >10
+        ];
+        let d = speedup_range_distribution(&records);
+        let buckets = d.get(&("M".into(), "GPT-4.1".into())).unwrap();
+        assert_eq!(*buckets, [1, 1, 1, 0, 1]);
+    }
+
+    #[test]
+    fn pytorch_best_tracks_winner() {
+        let mut r1 = rec("M1", "a", 1, 0, 2.0, true);
+        r1.best_pytorch_speedup = 3.0;
+        let mut r2 = rec("M2", "a", 1, 0, 2.0, true);
+        r2.best_pytorch_speedup = 5.0;
+        let best = pytorch_best_per_op(&[r1, r2]);
+        assert_eq!(best.len(), 1);
+        assert_eq!(best[0].method, "M2");
+        assert_eq!(best[0].speedup, 5.0);
+    }
+
+    #[test]
+    fn replication_pairs_align_ops() {
+        let records = vec![
+            rec("M", "a", 1, 0, 2.0, true),
+            rec("M", "a", 1, 1, 2.2, true),
+            rec("M", "b", 1, 0, 1.5, true),
+            // op b missing for seed 1 -> excluded
+        ];
+        let (xs, ys) = replication_pairs(&records, "M", 0, 1);
+        assert_eq!(xs.len(), 1);
+        assert!((xs[0] - 2.0f64.ln()).abs() < 1e-12);
+        assert!((ys[0] - 2.2f64.ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! Elite-preservation strategy: the top-k valid candidates survive
+//! across generations (EvoEngineer-Full and EoH in Table 3: "elite
+//! preservation strategy"). Parents are sampled from the elites with
+//! rank weighting, which is how EoH's population of 4 behaves.
+
+use super::{Candidate, Population};
+use crate::util::Rng;
+
+#[derive(Debug)]
+pub struct Elite {
+    capacity: usize,
+    elites: Vec<Candidate>, // sorted best-first
+    last: Option<Candidate>,
+}
+
+impl Elite {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { capacity, elites: Vec::new(), last: None }
+    }
+
+    pub fn elites(&self) -> &[Candidate] {
+        &self.elites
+    }
+}
+
+impl Population for Elite {
+    fn insert(&mut self, cand: Candidate) {
+        if cand.valid() {
+            // Deduplicate by source text: re-discovering the same
+            // program must not crowd out diversity.
+            if !self.elites.iter().any(|e| e.src == cand.src) {
+                self.elites.push(cand.clone());
+                self.elites
+                    .sort_by(|a, b| b.fitness().partial_cmp(&a.fitness()).unwrap());
+                self.elites.truncate(self.capacity);
+            }
+        }
+        self.last = Some(cand);
+    }
+
+    fn parent(&mut self, rng: &mut Rng) -> Option<Candidate> {
+        if self.elites.is_empty() {
+            return self.last.clone();
+        }
+        // Rank-weighted pick: rank r gets weight (n - r).
+        let n = self.elites.len();
+        let total: usize = (1..=n).sum();
+        let mut ticket = rng.below(total);
+        for (r, e) in self.elites.iter().enumerate() {
+            let w = n - r;
+            if ticket < w {
+                return Some(e.clone());
+            }
+            ticket -= w;
+        }
+        self.elites.first().cloned()
+    }
+
+    fn history(&self, k: usize) -> Vec<Candidate> {
+        self.elites.iter().take(k).cloned().collect()
+    }
+
+    fn best(&self) -> Option<Candidate> {
+        self.elites.first().cloned()
+    }
+
+    fn name(&self) -> &'static str {
+        "elite"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_candidate;
+    use super::*;
+
+    #[test]
+    fn truncates_to_capacity_best_first() {
+        let mut p = Elite::new(3);
+        for (i, s) in [1.0, 5.0, 2.0, 4.0, 3.0].iter().enumerate() {
+            let mut c = test_candidate(*s, true, i);
+            c.src = format!("src {i}");
+            p.insert(c);
+        }
+        let h: Vec<f64> = p.history(10).iter().map(|c| c.speedup).collect();
+        assert_eq!(h, vec![5.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn duplicates_not_inserted() {
+        let mut p = Elite::new(4);
+        let c = test_candidate(2.0, true, 0);
+        p.insert(c.clone());
+        p.insert(c);
+        assert_eq!(p.elites().len(), 1);
+    }
+
+    #[test]
+    fn parent_prefers_high_rank() {
+        let mut p = Elite::new(4);
+        for (i, s) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            let mut c = test_candidate(*s, true, i);
+            c.src = format!("src {i}");
+            p.insert(c);
+        }
+        let mut rng = Rng::new(9);
+        let mut hits_best = 0;
+        for _ in 0..1000 {
+            if p.parent(&mut rng).unwrap().speedup == 4.0 {
+                hits_best += 1;
+            }
+        }
+        // weight 4/10 = 0.4 expected
+        assert!((300..500).contains(&hits_best), "{hits_best}");
+    }
+
+    #[test]
+    fn invalid_only_population_offers_last() {
+        let mut p = Elite::new(2);
+        let mut rng = Rng::new(3);
+        p.insert(test_candidate(9.0, false, 7));
+        assert!(p.best().is_none());
+        assert_eq!(p.parent(&mut rng).unwrap().trial, 7);
+    }
+}

@@ -1,0 +1,155 @@
+//! Island (diversity-maintenance) strategy: FunSearch's population
+//! model (paper §A.4: "for FunSearch, we set the number of islands to
+//! 5"). Each island is a small independent elite pool; sampling
+//! round-robins across islands, and periodically the worst island is
+//! reset and reseeded from the best island's champion — FunSearch's
+//! island-reset mechanism.
+
+use super::elite::Elite;
+use super::{Candidate, Population};
+use crate::util::Rng;
+
+#[derive(Debug)]
+pub struct Islands {
+    islands: Vec<Elite>,
+    /// Which island receives the next insert / supplies the next parent.
+    cursor: usize,
+    inserts: usize,
+    reset_every: usize,
+    /// Most recent insert (fallback parent while islands are empty).
+    last: Option<Candidate>,
+}
+
+impl Islands {
+    pub fn new(n_islands: usize, per_island: usize, reset_every: usize) -> Self {
+        assert!(n_islands > 0);
+        Self {
+            islands: (0..n_islands).map(|_| Elite::new(per_island)).collect(),
+            cursor: 0,
+            inserts: 0,
+            reset_every: reset_every.max(1),
+            last: None,
+        }
+    }
+
+    /// FunSearch defaults from the paper's parameter setting.
+    pub fn funsearch() -> Self {
+        Self::new(5, 2, 15)
+    }
+
+    pub fn n_islands(&self) -> usize {
+        self.islands.len()
+    }
+
+    fn island_best_fitness(&self, i: usize) -> f64 {
+        self.islands[i].best().map(|c| c.fitness()).unwrap_or(0.0)
+    }
+
+    fn reset_worst(&mut self) {
+        let (mut worst, mut best) = (0usize, 0usize);
+        for i in 0..self.islands.len() {
+            if self.island_best_fitness(i) < self.island_best_fitness(worst) {
+                worst = i;
+            }
+            if self.island_best_fitness(i) > self.island_best_fitness(best) {
+                best = i;
+            }
+        }
+        if worst == best {
+            return;
+        }
+        let seed = self.islands[best].best();
+        let cap = self.islands[worst].elites().len().max(2);
+        self.islands[worst] = Elite::new(cap);
+        if let Some(champ) = seed {
+            self.islands[worst].insert(champ);
+        }
+    }
+}
+
+impl Population for Islands {
+    fn insert(&mut self, cand: Candidate) {
+        self.last = Some(cand.clone());
+        self.islands[self.cursor].insert(cand);
+        self.inserts += 1;
+        if self.inserts % self.reset_every == 0 {
+            self.reset_worst();
+        }
+    }
+
+    fn parent(&mut self, rng: &mut Rng) -> Option<Candidate> {
+        // Advance to the next island (round-robin sampling). Islands
+        // that have not received programs yet fall back to the global
+        // champion (FunSearch seeds empty islands from the best).
+        self.cursor = (self.cursor + 1) % self.islands.len();
+        self.islands[self.cursor]
+            .parent(rng)
+            .or_else(|| self.best())
+            .or_else(|| self.last.clone())
+    }
+
+    fn history(&self, k: usize) -> Vec<Candidate> {
+        // FunSearch prompts draw from the *current* island only.
+        self.islands[self.cursor].history(k)
+    }
+
+    fn best(&self) -> Option<Candidate> {
+        self.islands
+            .iter()
+            .filter_map(|i| i.best())
+            .max_by(|a, b| a.fitness().partial_cmp(&b.fitness()).unwrap())
+    }
+
+    fn name(&self) -> &'static str {
+        "islands"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_candidate;
+    use super::*;
+
+    #[test]
+    fn best_spans_islands() {
+        let mut p = Islands::new(3, 2, 100);
+        let mut rng = Rng::new(1);
+        for i in 0..6 {
+            let mut c = test_candidate(i as f64 + 1.0, true, i);
+            c.src = format!("src {i}");
+            let _ = p.parent(&mut rng); // rotate cursor like the real loop
+            p.insert(c);
+        }
+        assert_eq!(p.best().unwrap().speedup, 6.0);
+    }
+
+    #[test]
+    fn reset_reseeds_worst_island() {
+        let mut p = Islands::new(2, 2, 4);
+        let mut rng = Rng::new(2);
+        // island rotation: insert strong candidates into one island,
+        // weak into the other.
+        for i in 0..4 {
+            let _ = p.parent(&mut rng);
+            let speed = if p.cursor == 0 { 10.0 } else { 1.0 };
+            let mut c = test_candidate(speed, true, i);
+            c.src = format!("src {i} {speed}");
+            p.insert(c);
+        }
+        // after reset_every inserts, the weak island contains the champion
+        let champs: Vec<f64> = p
+            .islands
+            .iter()
+            .filter_map(|i| i.best().map(|c| c.speedup))
+            .collect();
+        assert!(champs.contains(&10.0));
+        assert_eq!(champs.len(), 2);
+        assert!(champs.iter().all(|&s| s == 10.0), "{champs:?}");
+    }
+
+    #[test]
+    fn funsearch_shape() {
+        let p = Islands::funsearch();
+        assert_eq!(p.n_islands(), 5);
+    }
+}

@@ -1,0 +1,98 @@
+//! Population management (paper §4.1.2): how candidate solutions are
+//! maintained, selected and evolved across generations. The paper's
+//! three strategy classes are implemented behind one trait:
+//!
+//! * [`SingleBest`] — keep only the current best solution
+//!   (EvoEngineer-Free / -Insight).
+//! * [`Elite`] — keep a small set of high performers
+//!   (EvoEngineer-Full, EoH).
+//! * [`Islands`] — diversity maintenance via independent sub-populations
+//!   with periodic resets (FunSearch).
+
+pub mod elite;
+pub mod islands;
+pub mod single;
+
+pub use elite::Elite;
+pub use islands::Islands;
+pub use single::SingleBest;
+
+use crate::dsl::KernelSpec;
+use crate::util::Rng;
+
+/// One evaluated candidate program.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Raw emitted text (the point in `S_text`).
+    pub src: String,
+    /// Parsed spec, if it compiled.
+    pub spec: Option<KernelSpec>,
+    pub compiled: bool,
+    pub correct: bool,
+    /// *Measured* speedup vs the op baseline (1.0 when invalid — the
+    /// paper's failure convention). Selection operates on this noisy
+    /// value, reproducing the paper's §A.7 mis-selection risk.
+    pub speedup: f64,
+    /// Measured speedup vs the modeled PyTorch implementation (0.0
+    /// when invalid).
+    pub pytorch_speedup: f64,
+    /// Noise-free speedup vs baseline (final-report value).
+    pub true_speedup: f64,
+    /// Noise-free speedup vs PyTorch (final-report value).
+    pub true_pytorch_speedup: f64,
+    /// The optimization insight the LLM attached (I3 raw material).
+    pub insight: Option<String>,
+    /// Trial index within the 45-trial budget.
+    pub trial: usize,
+}
+
+impl Candidate {
+    /// Valid = compiled + functionally correct (constraint g(p)=0).
+    pub fn valid(&self) -> bool {
+        self.compiled && self.correct
+    }
+
+    /// Fitness used for selection: speedup if valid, else 0.
+    pub fn fitness(&self) -> f64 {
+        if self.valid() {
+            self.speedup
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Population management strategy interface.
+pub trait Population: Send {
+    /// Record an evaluated candidate.
+    fn insert(&mut self, cand: Candidate);
+
+    /// Pick the candidate the next prompt should improve upon.
+    fn parent(&mut self, rng: &mut Rng) -> Option<Candidate>;
+
+    /// Up to `k` historical high-quality solutions for the prompt's
+    /// I2 section (best first).
+    fn history(&self, k: usize) -> Vec<Candidate>;
+
+    /// Best valid candidate found so far.
+    fn best(&self) -> Option<Candidate>;
+
+    /// Strategy label (for reports).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) fn test_candidate(speedup: f64, valid: bool, trial: usize) -> Candidate {
+    Candidate {
+        src: format!("kernel x {{ semantics: opt; }} # {trial}"),
+        spec: Some(KernelSpec::baseline("x")),
+        compiled: valid,
+        correct: valid,
+        speedup,
+        pytorch_speedup: speedup * 0.5,
+        true_speedup: speedup,
+        true_pytorch_speedup: speedup * 0.5,
+        insight: Some(format!("insight {trial}")),
+        trial,
+    }
+}

@@ -1,0 +1,95 @@
+//! Single-solution strategy: only the current best valid candidate is
+//! retained (EvoEngineer-Free / -Insight in Table 3: "best solution
+//! maintaining"). If nothing valid exists yet, the most recent
+//! candidate is offered as the parent so the search can repair it.
+
+use super::{Candidate, Population};
+use crate::util::Rng;
+
+#[derive(Debug, Default)]
+pub struct SingleBest {
+    best: Option<Candidate>,
+    last: Option<Candidate>,
+}
+
+impl SingleBest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Population for SingleBest {
+    fn insert(&mut self, cand: Candidate) {
+        if cand.valid()
+            && self
+                .best
+                .as_ref()
+                .map(|b| cand.fitness() > b.fitness())
+                .unwrap_or(true)
+        {
+            self.best = Some(cand.clone());
+        }
+        self.last = Some(cand);
+    }
+
+    fn parent(&mut self, _rng: &mut Rng) -> Option<Candidate> {
+        self.best.clone().or_else(|| self.last.clone())
+    }
+
+    fn history(&self, k: usize) -> Vec<Candidate> {
+        if k == 0 {
+            return vec![];
+        }
+        self.best.iter().cloned().collect()
+    }
+
+    fn best(&self) -> Option<Candidate> {
+        self.best.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "single-best"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_candidate;
+    use super::*;
+
+    #[test]
+    fn keeps_only_best_valid() {
+        let mut p = SingleBest::new();
+        let mut rng = Rng::new(1);
+        p.insert(test_candidate(1.5, true, 0));
+        p.insert(test_candidate(3.0, true, 1));
+        p.insert(test_candidate(2.0, true, 2));
+        assert_eq!(p.best().unwrap().speedup, 3.0);
+        assert_eq!(p.parent(&mut rng).unwrap().speedup, 3.0);
+        assert_eq!(p.history(5).len(), 1);
+    }
+
+    #[test]
+    fn invalid_never_becomes_best() {
+        let mut p = SingleBest::new();
+        p.insert(test_candidate(10.0, false, 0));
+        assert!(p.best().is_none());
+    }
+
+    #[test]
+    fn falls_back_to_last_when_nothing_valid() {
+        let mut p = SingleBest::new();
+        let mut rng = Rng::new(1);
+        p.insert(test_candidate(10.0, false, 0));
+        let parent = p.parent(&mut rng).unwrap();
+        assert_eq!(parent.trial, 0);
+    }
+
+    #[test]
+    fn empty_population_has_no_parent() {
+        let mut p = SingleBest::new();
+        let mut rng = Rng::new(1);
+        assert!(p.parent(&mut rng).is_none());
+        assert!(p.history(3).is_empty());
+    }
+}

@@ -1,0 +1,450 @@
+//! Report generators: one function per table/figure of the paper
+//! (DESIGN.md §6 experiment index). Each renders an ASCII view of the
+//! same rows/series the paper prints, from saved campaign records.
+
+use std::fmt::Write as _;
+
+use crate::methods::KernelRunRecord;
+use crate::metrics;
+use crate::tasks::{category_name, TaskRegistry};
+use crate::util::pearson;
+
+fn hr(width: usize) -> String {
+    "-".repeat(width)
+}
+
+/// Table 4 — overall results: speedup count, median speedup rate,
+/// compilation success and functional correctness per category.
+pub fn table4(records: &[KernelRunRecord]) -> String {
+    let data = metrics::table4(records);
+    let mut out = String::new();
+    writeln!(out, "TABLE 4 — Overall results (per category 1..6 + overall)").unwrap();
+    let mut current_model = String::new();
+    // group rows by model (the paper's block structure)
+    let mut keys: Vec<&metrics::GroupKey> = data.keys().collect();
+    keys.sort_by(|a, b| (&a.1, &a.0).cmp(&(&b.1, &b.0)));
+    for section in ["Speedup Count", "Median Speedup Rate", "Compile %", "Functional %"] {
+        writeln!(out, "\n== {section} ==").unwrap();
+        writeln!(
+            out,
+            "{:<14} {:<28} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>8}",
+            "Model", "Method", "1", "2", "3", "4", "5", "6", "Overall"
+        )
+        .unwrap();
+        writeln!(out, "{}", hr(102)).unwrap();
+        current_model.clear();
+        for key in &keys {
+            let cells = &data[*key];
+            let (method, model) = (&key.0, &key.1);
+            if *model != current_model {
+                current_model = model.clone();
+            }
+            let field = |c: &metrics::Table4Cell| -> f64 {
+                match section {
+                    "Speedup Count" => c.speedup_count,
+                    "Median Speedup Rate" => c.median_speedup,
+                    "Compile %" => c.compile_rate,
+                    _ => c.correct_rate,
+                }
+            };
+            write!(out, "{:<14} {:<28}", model, method).unwrap();
+            for c in cells.iter() {
+                write!(out, " {:>7.2}", field(c)).unwrap();
+            }
+            writeln!(out).unwrap();
+        }
+    }
+    out
+}
+
+/// Table 5 — dataset composition.
+pub fn table5(registry: &TaskRegistry) -> String {
+    let mut out = String::new();
+    writeln!(out, "TABLE 5 — Kernel classification by computational complexity").unwrap();
+    writeln!(out, "{:<30} {:>6} {:>8}", "Category", "Count", "Percent").unwrap();
+    writeln!(out, "{}", hr(48)).unwrap();
+    let total = registry.ops.len();
+    for (cat, count) in registry.category_counts() {
+        writeln!(
+            out,
+            "{:<30} {:>6} {:>7.1}%",
+            category_name(cat),
+            count,
+            100.0 * count as f64 / total as f64
+        )
+        .unwrap();
+    }
+    writeln!(out, "{:<30} {:>6} {:>7.1}%", "Total", total, 100.0).unwrap();
+    out
+}
+
+/// Figure 1 — speedup vs functional-correctness trade-off scatter.
+pub fn fig1(records: &[KernelRunRecord]) -> String {
+    let mut pts = metrics::tradeoff_points(records);
+    pts.sort_by(|a, b| {
+        b.median_speedup
+            .partial_cmp(&a.median_speedup)
+            .unwrap()
+            .then(a.method.cmp(&b.method))
+    });
+    let mut out = String::new();
+    writeln!(out, "FIGURE 1 — Speedup / correctness trade-off (one point per method x model)")
+        .unwrap();
+    writeln!(
+        out,
+        "{:<28} {:<14} {:>14} {:>12}",
+        "Method", "Model", "MedianSpeedup", "Functional%"
+    )
+    .unwrap();
+    writeln!(out, "{}", hr(72)).unwrap();
+    for p in &pts {
+        writeln!(
+            out,
+            "{:<28} {:<14} {:>14.2} {:>12.1}",
+            p.method, p.model, p.median_speedup, p.correct_rate
+        )
+        .unwrap();
+    }
+    // Pareto front (dominance illustration, as the figure shows).
+    writeln!(out, "\nPareto-dominant points (no other point better on both axes):").unwrap();
+    for p in &pts {
+        let dominated = pts.iter().any(|q| {
+            (q.median_speedup > p.median_speedup && q.correct_rate >= p.correct_rate)
+                || (q.median_speedup >= p.median_speedup && q.correct_rate > p.correct_rate)
+        });
+        if !dominated {
+            writeln!(out, "  * {} / {}", p.method, p.model).unwrap();
+        }
+    }
+    out
+}
+
+/// Figure 4 (and 6, 7 via model filter) — token usage vs speedup and
+/// validity.
+pub fn fig4(records: &[KernelRunRecord], model_filter: &str) -> String {
+    let filtered: Vec<KernelRunRecord> = records
+        .iter()
+        .filter(|r| model_filter.is_empty() || r.model.to_ascii_lowercase()
+            .starts_with(&model_filter.to_ascii_lowercase()))
+        .cloned()
+        .collect();
+    let pts = metrics::tradeoff_points(&filtered);
+    let runs_per_group = |method: &str, model: &str| {
+        filtered
+            .iter()
+            .filter(|r| r.method == *method && r.model == *model)
+            .count()
+            .max(1) as u64
+    };
+    let mut out = String::new();
+    writeln!(
+        out,
+        "FIGURE 4 — Token usage vs performance/validity{}",
+        if model_filter.is_empty() { String::new() } else { format!(" ({model_filter})") }
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<28} {:<14} {:>14} {:>14} {:>12}",
+        "Method", "Model", "MTok/kernel", "MedianSpeedup", "Functional%"
+    )
+    .unwrap();
+    writeln!(out, "{}", hr(88)).unwrap();
+    let mut pts = pts;
+    pts.sort_by(|a, b| a.total_tokens.cmp(&b.total_tokens));
+    for p in pts {
+        let per_kernel =
+            p.total_tokens as f64 / runs_per_group(&p.method, &p.model) as f64 / 1.0e6;
+        writeln!(
+            out,
+            "{:<28} {:<14} {:>14.4} {:>14.2} {:>12.1}",
+            p.method, p.model, per_kernel, p.median_speedup, p.correct_rate
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Figure 5 — operations with >2x speedup over PyTorch; max speedup and
+/// winning method per op.
+pub fn fig5(records: &[KernelRunRecord]) -> String {
+    let best = metrics::pytorch_best_per_op(records);
+    let over2: Vec<&metrics::PytorchBest> =
+        best.iter().filter(|b| b.speedup > 2.0).collect();
+    let evo_wins = over2
+        .iter()
+        .filter(|b| b.method.starts_with("EvoEngineer"))
+        .count();
+    let mut out = String::new();
+    writeln!(out, "FIGURE 5 — Ops with >2x speedup vs PyTorch (max across methods & models)")
+        .unwrap();
+    writeln!(out, "{:<24} {:>4} {:>9}  {:<28} {:<14}", "Op", "Cat", "Speedup", "Method", "Model")
+        .unwrap();
+    writeln!(out, "{}", hr(84)).unwrap();
+    for b in &over2 {
+        writeln!(
+            out,
+            "{:<24} {:>4} {:>8.2}x  {:<28} {:<14}",
+            b.op, b.category, b.speedup, b.method, b.model
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "\n{} ops >2x; EvoEngineer variants win {} ({:.1}%)",
+        over2.len(),
+        evo_wins,
+        100.0 * evo_wins as f64 / over2.len().max(1) as f64
+    )
+    .unwrap();
+    if let Some(best_all) = best.first() {
+        writeln!(
+            out,
+            "max speedup over PyTorch: {:.2}x ({} via {})",
+            best_all.speedup, best_all.op, best_all.method
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Table 7 — distribution of speedup ranges vs PyTorch.
+pub fn table7(records: &[KernelRunRecord]) -> String {
+    let data = metrics::speedup_range_distribution(records);
+    let mut out = String::new();
+    writeln!(out, "TABLE 7 — Distribution of PyTorch-relative speedup ranges").unwrap();
+    writeln!(
+        out,
+        "{:<14} {:<28} {:>6} {:>8} {:>8} {:>9} {:>6}",
+        "Model", "Method", "<1.0", "1.0~2.0", "2.0~5.0", "5.0~10.0", ">10.0"
+    )
+    .unwrap();
+    writeln!(out, "{}", hr(84)).unwrap();
+    let mut keys: Vec<&metrics::GroupKey> = data.keys().collect();
+    keys.sort_by(|a, b| (&a.1, &a.0).cmp(&(&b.1, &b.0)));
+    for key in keys {
+        let b = &data[key];
+        writeln!(
+            out,
+            "{:<14} {:<28} {:>6} {:>8} {:>8} {:>9} {:>6}",
+            key.1, key.0, b[0], b[1], b[2], b[3], b[4]
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Figure 8 — speedup distribution five-number summaries per method.
+pub fn fig8(records: &[KernelRunRecord]) -> String {
+    let dists = metrics::method_distributions(records);
+    let mut out = String::new();
+    writeln!(out, "FIGURE 8 — PyTorch-relative speedup distributions per method").unwrap();
+    writeln!(
+        out,
+        "{:<28} {:>7} {:>7} {:>7} {:>7} {:>8} {:>5}",
+        "Method", "min", "p25", "median", "p75", "max", "n"
+    )
+    .unwrap();
+    writeln!(out, "{}", hr(75)).unwrap();
+    for d in dists {
+        writeln!(
+            out,
+            "{:<28} {:>7.2} {:>7.2} {:>7.2} {:>7.2} {:>8.2} {:>5}",
+            d.method, d.min, d.p25, d.median, d.p75, d.max, d.n
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Table 8 — AI CUDA Engineer replication summary.
+pub fn table8(records: &[KernelRunRecord]) -> String {
+    let s = metrics::replication_summary(records, "AI CUDA Engineer");
+    let mut out = String::new();
+    writeln!(out, "TABLE 8 — AI CUDA Engineer replication (ours)").unwrap();
+    writeln!(out, "{}", hr(48)).unwrap();
+    writeln!(out, "{:<34} {:>8.2}", "Median speedup (all)", s.median_speedup_all).unwrap();
+    writeln!(out, "{:<34} {:>8.2}", "Median speedup (success)", s.median_speedup_success)
+        .unwrap();
+    writeln!(
+        out,
+        "{:<34} {:>5}/{:<3}",
+        "Successful tasks (>1x)", s.successful_tasks, s.n_ops
+    )
+    .unwrap();
+    out
+}
+
+/// Figure 9 — correlation between two independent replication runs.
+pub fn fig9(records: &[KernelRunRecord]) -> String {
+    let (xs, ys) = metrics::replication_pairs(records, "AI CUDA Engineer", 0, 1);
+    let r = pearson(&xs, &ys);
+    let mut out = String::new();
+    writeln!(out, "FIGURE 9 — Replication correlation (AI CUDA Engineer)").unwrap();
+    writeln!(
+        out,
+        "paired ops: {}  |  Pearson r (log speedups, seed 0 vs seed 1): {:.3}",
+        xs.len(),
+        r
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "(paper: r = 0.9 between their implementation and Sakana's released archive;\n\
+         here the two axes are two independent replication runs — see EXPERIMENTS.md)"
+    )
+    .unwrap();
+    out
+}
+
+/// Convergence view (framework analysis): mean best-so-far speedup per
+/// trial, per method — how fast each traverse/population configuration
+/// climbs within the 45-trial budget.
+pub fn convergence(records: &[KernelRunRecord]) -> String {
+    use std::collections::BTreeMap;
+    let mut by_method: BTreeMap<&str, (Vec<f64>, Vec<usize>)> = BTreeMap::new();
+    let mut max_len = 0usize;
+    for r in records {
+        let (sums, counts) = by_method.entry(r.method.as_str()).or_default();
+        max_len = max_len.max(r.trajectory.len());
+        if sums.len() < r.trajectory.len() {
+            sums.resize(r.trajectory.len(), 0.0);
+            counts.resize(r.trajectory.len(), 0);
+        }
+        for (i, s) in r.trajectory.iter().enumerate() {
+            sums[i] += s;
+            counts[i] += 1;
+        }
+    }
+    let checkpoints: Vec<usize> = [0usize, 4, 9, 14, 19, 29, 44]
+        .into_iter()
+        .filter(|&i| i < max_len.max(1))
+        .collect();
+    let mut out = String::new();
+    writeln!(out, "CONVERGENCE — mean best-so-far speedup after trial t").unwrap();
+    write!(out, "{:<28}", "Method").unwrap();
+    for c in &checkpoints {
+        write!(out, " {:>8}", format!("t={}", c + 1)).unwrap();
+    }
+    writeln!(out).unwrap();
+    writeln!(out, "{}", hr(28 + 9 * checkpoints.len())).unwrap();
+    for (method, (sums, counts)) in &by_method {
+        write!(out, "{method:<28}").unwrap();
+        for &c in &checkpoints {
+            if c < sums.len() && counts[c] > 0 {
+                write!(out, " {:>8.2}", sums[c] / counts[c] as f64).unwrap();
+            } else {
+                write!(out, " {:>8}", "-").unwrap();
+            }
+        }
+        writeln!(out).unwrap();
+    }
+    out
+}
+
+/// Tables 1–3 — qualitative method/configuration matrix, encoded from
+/// the method definitions.
+pub fn methods_table() -> String {
+    let mut out = String::new();
+    writeln!(out, "TABLE 2/3 — Framework analysis of methods (I1 task context, I2 history,").unwrap();
+    writeln!(out, "I3 insights, I4 open-world; population strategy)").unwrap();
+    writeln!(
+        out,
+        "{:<28} {:>3} {:>3} {:>3} {:>3}  {:<12} {:<10}",
+        "Method", "I1", "I2", "I3", "I4", "Population", "Prompt"
+    )
+    .unwrap();
+    writeln!(out, "{}", hr(72)).unwrap();
+    let rows = [
+        ("AI CUDA Engineer", "Y", "Y(5)", "gen*", "inter-op", "elite(5)", "verbose"),
+        ("FunSearch", "Y", "Y(2)", "-", "-", "islands(5)", "minimal"),
+        ("EvoEngineer-Solution (EoH)", "Y", "Y(3)", "gen*", "-", "elite(4)", "structured"),
+        ("EvoEngineer-Free", "Y", "-", "-", "-", "single-best", "minimal"),
+        ("EvoEngineer-Insight", "Y", "-", "Y(4)", "-", "single-best", "structured"),
+        ("EvoEngineer-Full", "Y", "Y(3)", "Y(4)", "-", "elite(4)", "structured"),
+    ];
+    for (m, i1, i2, i3, i4, pop, style) in rows {
+        writeln!(
+            out,
+            "{:<28} {:>3} {:>4} {:>4} {:>8}  {:<12} {:<10}",
+            m, i1, i2, i3, i4, pop, style
+        )
+        .unwrap();
+    }
+    writeln!(out, "* insights generated with each solution but not fed back (Table 2 note)")
+        .unwrap();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn records() -> Vec<KernelRunRecord> {
+        let mut v = Vec::new();
+        for (m, speed, pt) in [
+            ("EvoEngineer-Free", 2.5, 3.0),
+            ("AI CUDA Engineer", 1.3, 0.8),
+        ] {
+            for seed in 0..2 {
+                v.push(KernelRunRecord {
+                    method: m.into(),
+                    model: "GPT-4.1".into(),
+                    op: "matmul_64".into(),
+                    category: 1,
+                    seed,
+                    trials: 45,
+                    compiled_trials: 36,
+                    correct_trials: 27,
+                    best_speedup: speed,
+                    best_pytorch_speedup: pt,
+                    any_valid: true,
+                    prompt_tokens: 1000,
+                    completion_tokens: 400,
+                    trajectory: vec![],
+                    best_src: None,
+                });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn reports_render() {
+        let recs = records();
+        for text in [
+            table4(&recs),
+            fig1(&recs),
+            fig4(&recs, ""),
+            fig5(&recs),
+            table7(&recs),
+            fig8(&recs),
+            table8(&recs),
+            fig9(&recs),
+            methods_table(),
+        ] {
+            assert!(!text.is_empty());
+        }
+        assert!(fig5(&recs).contains("matmul_64"));
+        assert!(table7(&recs).contains("AI CUDA Engineer"));
+    }
+
+    #[test]
+    fn fig9_reports_correlation() {
+        let text = fig9(&records());
+        assert!(text.contains("Pearson"));
+    }
+
+    #[test]
+    fn convergence_averages_trajectories() {
+        let mut recs = records();
+        for r in &mut recs {
+            r.trajectory = vec![1.0, 1.5, 2.0, 2.0, 2.5];
+        }
+        let text = convergence(&recs);
+        assert!(text.contains("t=1"));
+        assert!(text.contains("t=5"));
+        assert!(text.contains("2.50"));
+        assert!(text.contains("EvoEngineer-Free"));
+    }
+}

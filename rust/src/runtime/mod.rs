@@ -1,0 +1,166 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client (`xla` crate 0.1.6 — pattern from
+//! /opt/xla-example/load_hlo).
+//!
+//! The xla wrapper types hold raw C pointers and are `!Send`, so the
+//! client + compiled-executable cache live on one dedicated owner
+//! thread; callers talk to it over an mpsc channel. `Runtime` itself is
+//! cheap to clone and `Send + Sync`, which is what the tokio campaign
+//! orchestrator needs. Executables are compiled once per artifact path
+//! and cached for the lifetime of the runtime (the paper compiles each
+//! candidate once and times it many times).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::{eyre, Result};
+
+/// A concrete tensor value crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorValue {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorValue {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+}
+
+enum Req {
+    Execute {
+        path: PathBuf,
+        inputs: Vec<TensorValue>,
+        resp: mpsc::SyncSender<Result<Vec<f32>, String>>,
+    },
+    Stats {
+        resp: mpsc::SyncSender<RuntimeStats>,
+    },
+}
+
+/// Counters exposed for the perf pass and EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub cache_hits: u64,
+}
+
+/// Handle to the PJRT owner thread. Clone freely.
+#[derive(Clone)]
+pub struct Runtime {
+    tx: Arc<Mutex<mpsc::Sender<Req>>>,
+}
+
+impl Runtime {
+    /// Spawn the owner thread with a fresh CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(), String>>(1);
+        std::thread::Builder::new()
+            .name("pjrt-owner".into())
+            .spawn(move || owner_thread(rx, ready_tx))
+            .map_err(|e| eyre!("spawning pjrt owner: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|e| eyre!("pjrt owner died during init: {e}"))?
+            .map_err(|e| eyre!("PjRtClient::cpu failed: {e}"))?;
+        Ok(Self { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    /// Execute the artifact at `path` with the given inputs; returns the
+    /// flattened f32 output (artifacts are lowered as 1-tuples).
+    pub fn execute(&self, path: PathBuf, inputs: Vec<TensorValue>) -> Result<Vec<f32>> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        {
+            let tx = self.tx.lock().expect("runtime sender poisoned");
+            tx.send(Req::Execute { path, inputs, resp: resp_tx })
+                .map_err(|_| eyre!("pjrt owner thread is gone"))?;
+        }
+        resp_rx
+            .recv()
+            .map_err(|_| eyre!("pjrt owner dropped the response"))?
+            .map_err(|e| eyre!("pjrt execution failed: {e}"))
+    }
+
+    /// Snapshot execution counters.
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        {
+            let tx = self.tx.lock().expect("runtime sender poisoned");
+            tx.send(Req::Stats { resp: resp_tx })
+                .map_err(|_| eyre!("pjrt owner thread is gone"))?;
+        }
+        resp_rx.recv().map_err(|_| eyre!("pjrt owner dropped the response"))
+    }
+}
+
+fn owner_thread(rx: mpsc::Receiver<Req>, ready: mpsc::SyncSender<Result<(), String>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut cache: HashMap<PathBuf, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut stats = RuntimeStats::default();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Stats { resp } => {
+                let _ = resp.send(stats.clone());
+            }
+            Req::Execute { path, inputs, resp } => {
+                let result = run_one(&client, &mut cache, &mut stats, &path, &inputs);
+                stats.executions += 1;
+                let _ = resp.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    stats: &mut RuntimeStats,
+    path: &PathBuf,
+    inputs: &[TensorValue],
+) -> Result<Vec<f32>, String> {
+    if !cache.contains_key(path) {
+        let proto =
+            xla::HloModuleProto::from_text_file(path).map_err(|e| format!("load {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| format!("compile {path:?}: {e}"))?;
+        cache.insert(path.clone(), exe);
+        stats.compiles += 1;
+    } else {
+        stats.cache_hits += 1;
+    }
+    let exe = cache.get(path).expect("just inserted");
+
+    let mut literals = Vec::with_capacity(inputs.len());
+    for t in inputs {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| format!("reshape {:?}: {e}", t.shape))?;
+        literals.push(lit);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| format!("execute: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| format!("to_literal: {e}"))?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = lit.to_tuple1().map_err(|e| format!("to_tuple1: {e}"))?;
+    out.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))
+}

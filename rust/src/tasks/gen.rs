@@ -1,0 +1,120 @@
+//! Deterministic test-input generation (the paper's "five random test
+//! cases", §4.3). Generator kinds mirror python/compile/model.py's
+//! ArgSpec.gen; each (op, test-case index) pair gets its own derived
+//! RNG stream so functional verdicts are reproducible and memoizable.
+
+use crate::tasks::{ArgSpec, OpTask};
+use crate::util::Rng;
+
+/// Number of functional test cases per candidate (paper §4.3).
+pub const NUM_TEST_CASES: usize = 5;
+
+/// Generate one input tensor for `spec` from `rng`.
+pub fn gen_arg(rng: &mut Rng, spec: &ArgSpec) -> Vec<f32> {
+    let n = spec.numel();
+    match spec.gen.as_str() {
+        "positive" => (0..n).map(|_| rng.f32_range(0.1, 1.1)).collect(),
+        "sign" => (0..n)
+            .map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 })
+            .collect(),
+        "near_one" => (0..n).map(|_| rng.f32_range(0.8, 1.2)).collect(),
+        "prob" => {
+            let mut v: Vec<f32> = (0..n).map(|_| rng.f32_range(0.1, 1.0)).collect();
+            normalize_rows(&mut v, last_dim(spec));
+            v
+        }
+        "logprob" => {
+            let mut v: Vec<f32> = (0..n).map(|_| rng.f32_range(0.1, 1.0)).collect();
+            normalize_rows(&mut v, last_dim(spec));
+            v.iter_mut().for_each(|x| *x = x.ln());
+            v
+        }
+        // default: uniform in [-1, 1)
+        _ => (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+    }
+}
+
+fn last_dim(spec: &ArgSpec) -> usize {
+    *spec.shape.last().unwrap_or(&1)
+}
+
+fn normalize_rows(v: &mut [f32], cols: usize) {
+    if cols == 0 {
+        return;
+    }
+    for row in v.chunks_mut(cols) {
+        let s: f32 = row.iter().sum();
+        if s > 0.0 {
+            row.iter_mut().for_each(|x| *x /= s);
+        }
+    }
+}
+
+/// All inputs for one functional test case of `op`.
+///
+/// The stream label makes the case reproducible from (op name, case
+/// index) alone, independent of call order.
+pub fn gen_case(op: &OpTask, case: usize) -> Vec<Vec<f32>> {
+    let base = Rng::new(0xE70E_61EE).derive(&format!("inputs/{}/{case}", op.name));
+    op.args
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let mut r = base.derive(&format!("arg{i}"));
+            gen_arg(&mut r, a)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], gen: &str) -> ArgSpec {
+        ArgSpec { shape: shape.to_vec(), gen: gen.to_string() }
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(1);
+        let v = gen_arg(&mut r, &spec(&[32, 32], "uniform"));
+        assert_eq!(v.len(), 1024);
+        assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn prob_rows_sum_to_one() {
+        let mut r = Rng::new(2);
+        let v = gen_arg(&mut r, &spec(&[8, 16], "prob"));
+        for row in v.chunks(16) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "{s}");
+            assert!(row.iter().all(|x| *x > 0.0));
+        }
+    }
+
+    #[test]
+    fn logprob_is_log_of_prob() {
+        let mut r = Rng::new(3);
+        let v = gen_arg(&mut r, &spec(&[4, 8], "logprob"));
+        for row in v.chunks(8) {
+            let s: f32 = row.iter().map(|x| x.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-4, "{s}");
+        }
+    }
+
+    #[test]
+    fn sign_is_pm_one() {
+        let mut r = Rng::new(4);
+        let v = gen_arg(&mut r, &spec(&[100], "sign"));
+        assert!(v.iter().all(|x| *x == 1.0 || *x == -1.0));
+        assert!(v.iter().any(|x| *x == 1.0) && v.iter().any(|x| *x == -1.0));
+    }
+
+    #[test]
+    fn near_one_bounds() {
+        let mut r = Rng::new(5);
+        let v = gen_arg(&mut r, &spec(&[64], "near_one"));
+        assert!(v.iter().all(|x| (0.8..1.2).contains(x)));
+    }
+}

@@ -1,0 +1,241 @@
+//! The 91-operation dataset (paper §5.1, Table 5): manifest loading,
+//! category metadata, and deterministic input generation.
+//!
+//! The manifest is produced by `python -m compile.aot` (L2). It carries
+//! the op inventory, per-variant HLO artifact paths, input shapes with
+//! generator kinds, and the workload metadata the cost model prices.
+
+pub mod gen;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+use crate::{eyre, Result, WrapErr as Context};
+
+/// One kernel input: static shape + generator kind (mirrors ArgSpec).
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub gen: String,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One dataset operation (a row of the paper's 91-kernel dataset).
+#[derive(Debug, Clone)]
+pub struct OpTask {
+    pub name: String,
+    pub category: u8,
+    pub family: String,
+    pub args: Vec<ArgSpec>,
+    pub out_shape: Vec<usize>,
+    pub flops: f64,
+    pub bytes_moved: f64,
+    pub pt_launches: u32,
+    pub pt_passes: f64,
+    pub pt_efficiency: f64,
+    pub algo_penalty: f64,
+    pub atol: f64,
+    pub rtol: f64,
+    /// variant name -> HLO text path relative to the artifact dir
+    pub artifacts: HashMap<String, String>,
+}
+
+impl OpTask {
+    pub fn out_numel(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+
+    /// All semantic variants available for this op (sorted for
+    /// determinism: bug_*, opt, ref).
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Human label for Table-5-style output.
+    pub fn category_name(&self) -> &'static str {
+        category_name(self.category)
+    }
+}
+
+pub fn category_name(cat: u8) -> &'static str {
+    match cat {
+        1 => "Matrix Multiplication",
+        2 => "Convolution",
+        3 => "Activation & Pooling",
+        4 => "Normalization & Reduction",
+        5 => "Loss Functions",
+        6 => "Cumulative Operations",
+        _ => "Unknown",
+    }
+}
+
+fn need<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).ok_or_else(|| eyre!("manifest: missing key `{key}`"))
+}
+
+fn parse_op(v: &Json) -> Result<OpTask> {
+    let args = need(v, "args")?
+        .as_arr()
+        .ok_or_else(|| eyre!("args not an array"))?
+        .iter()
+        .map(|a| -> Result<ArgSpec> {
+            Ok(ArgSpec {
+                shape: need(a, "shape")?
+                    .as_arr()
+                    .ok_or_else(|| eyre!("shape not an array"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                gen: need(a, "gen")?.as_str().unwrap_or("uniform").to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let artifacts = match need(v, "artifacts")? {
+        Json::Obj(m) => m
+            .iter()
+            .map(|(k, p)| (k.clone(), p.as_str().unwrap_or_default().to_string()))
+            .collect(),
+        _ => return Err(eyre!("artifacts not an object")),
+    };
+    Ok(OpTask {
+        name: need(v, "name")?.as_str().unwrap_or_default().to_string(),
+        category: need(v, "category")?.as_u64().unwrap_or(0) as u8,
+        family: need(v, "family")?.as_str().unwrap_or_default().to_string(),
+        args,
+        out_shape: need(v, "out_shape")?
+            .as_arr()
+            .ok_or_else(|| eyre!("out_shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect(),
+        flops: need(v, "flops")?.as_f64().unwrap_or(0.0),
+        bytes_moved: need(v, "bytes_moved")?.as_f64().unwrap_or(0.0),
+        pt_launches: need(v, "pt_launches")?.as_u64().unwrap_or(1) as u32,
+        pt_passes: need(v, "pt_passes")?.as_f64().unwrap_or(1.0),
+        pt_efficiency: need(v, "pt_efficiency")?.as_f64().unwrap_or(0.8),
+        algo_penalty: need(v, "algo_penalty")?.as_f64().unwrap_or(1.0),
+        atol: need(v, "atol")?.as_f64().unwrap_or(5e-4),
+        rtol: need(v, "rtol")?.as_f64().unwrap_or(1e-3),
+        artifacts,
+    })
+}
+
+/// The loaded dataset: ops in manifest order plus name index.
+#[derive(Debug, Clone)]
+pub struct TaskRegistry {
+    pub root: PathBuf,
+    pub ops: Vec<OpTask>,
+    index: HashMap<String, usize>,
+}
+
+impl TaskRegistry {
+    /// Load `<dir>/manifest.json` produced by `make artifacts`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let data = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = json::parse(&data).map_err(|e| eyre!("parsing manifest: {e}"))?;
+        let version = need(&doc, "version")?.as_u64().unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let ops = need(&doc, "ops")?
+            .as_arr()
+            .ok_or_else(|| eyre!("ops not an array"))?
+            .iter()
+            .map(parse_op)
+            .collect::<Result<Vec<_>>>()?;
+        let index = ops
+            .iter()
+            .enumerate()
+            .map(|(i, o)| (o.name.clone(), i))
+            .collect();
+        Ok(Self { root, ops, index })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&OpTask> {
+        self.index.get(name).map(|&i| &self.ops[i])
+    }
+
+    pub fn by_category(&self, cat: u8) -> Vec<&OpTask> {
+        self.ops.iter().filter(|o| o.category == cat).collect()
+    }
+
+    /// Absolute path of an op's variant artifact.
+    pub fn artifact_path(&self, op: &OpTask, variant: &str) -> Option<PathBuf> {
+        op.artifacts.get(variant).map(|rel| self.root.join(rel))
+    }
+
+    /// Category -> count, for the Table-5 report.
+    pub fn category_counts(&self) -> Vec<(u8, usize)> {
+        let mut counts = [0usize; 7];
+        for op in &self.ops {
+            counts[op.category as usize] += 1;
+        }
+        (1..=6).map(|c| (c as u8, counts[c])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_manifest() {
+        let reg = TaskRegistry::load(artifacts_dir()).unwrap();
+        assert_eq!(reg.ops.len(), 91);
+        assert_eq!(
+            reg.category_counts(),
+            vec![(1, 18), (2, 28), (3, 21), (4, 14), (5, 6), (6, 4)]
+        );
+    }
+
+    #[test]
+    fn op_lookup_and_variants() {
+        let reg = TaskRegistry::load(artifacts_dir()).unwrap();
+        let op = reg.get("matmul_64").expect("matmul_64");
+        assert_eq!(op.category, 1);
+        assert_eq!(op.out_shape, vec![64, 64]);
+        let vs = op.variants();
+        for needed in ["ref", "opt", "bug_scale", "bug_offset"] {
+            assert!(vs.contains(&needed), "{needed} missing: {vs:?}");
+        }
+        let p = reg.artifact_path(op, "ref").unwrap();
+        assert!(p.exists(), "{p:?}");
+        assert_eq!(op.args.len(), 2);
+        assert_eq!(op.args[0].shape, vec![64, 64]);
+    }
+
+    #[test]
+    fn metadata_sane() {
+        let reg = TaskRegistry::load(artifacts_dir()).unwrap();
+        for op in &reg.ops {
+            assert!(op.flops > 0.0, "{}", op.name);
+            assert!(op.bytes_moved > 0.0, "{}", op.name);
+            assert!(op.pt_launches >= 1, "{}", op.name);
+            assert!((0.0..=1.0).contains(&op.pt_efficiency), "{}", op.name);
+            assert!(op.algo_penalty >= 1.0, "{}", op.name);
+            assert!(!op.args.is_empty(), "{}", op.name);
+            assert!(op.atol > 0.0 && op.rtol > 0.0, "{}", op.name);
+        }
+    }
+
+    #[test]
+    fn by_category_filters() {
+        let reg = TaskRegistry::load(artifacts_dir()).unwrap();
+        let losses = reg.by_category(5);
+        assert_eq!(losses.len(), 6);
+        assert!(losses.iter().all(|o| o.family == "loss"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Traverse techniques — the paper's two-layer design (§4.1.1).
+//!
+//! * **Solution guiding layer** ([`GuidanceConfig`], [`Guidance`]):
+//!   *what* closed-world information enters the prompt — I1 task
+//!   context, I2 historical high-quality solutions, I3 optimization
+//!   insights (plus the AI-CUDA-Engineer-style profiling extra).
+//! * **Prompt engineering layer** ([`prompt`]): *how* that strategy is
+//!   communicated — section structure, verbosity, formatting.
+//!
+//! The separation is enforced by the types: methods choose a
+//! `GuidanceConfig` (strategy); only `prompt::render` decides the text.
+
+pub mod prompt;
+
+use crate::population::Candidate;
+use crate::tasks::OpTask;
+
+/// Prompt-engineering-layer style knob. `Verbose` reproduces the
+//  AI-CUDA-Engineer behaviour the paper criticizes: heavyweight prompts
+/// whose token cost is not repaid by speedup (Figure 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptStyle {
+    /// Terse section headers, no prose (EvoEngineer-Free).
+    Minimal,
+    /// Structured sections with brief guidance (EvoEngineer-Insight/Full).
+    Structured,
+    /// Long boilerplate, ensemble directives, embedded documentation
+    /// (AI CUDA Engineer replication).
+    Verbose,
+}
+
+/// Solution-guiding-layer configuration: which information types are
+/// used (paper Table 3 — the EvoEngineer configuration matrix).
+#[derive(Debug, Clone, Copy)]
+pub struct GuidanceConfig {
+    /// I2: number of historical solutions to include (0 = unused).
+    pub n_history: usize,
+    /// I3: number of optimization insights to include (0 = unused).
+    pub n_insights: usize,
+    /// Include profiling feedback (AI CUDA Engineer extra).
+    pub profiling: bool,
+    /// Prompt engineering layer selection.
+    pub style: PromptStyle,
+}
+
+impl GuidanceConfig {
+    /// EvoEngineer-Free: task context only (Table 3 row 1).
+    pub fn free() -> Self {
+        Self { n_history: 0, n_insights: 0, profiling: false, style: PromptStyle::Minimal }
+    }
+
+    /// EvoEngineer-Insight: task context + insights (Table 3 row 2).
+    pub fn insight() -> Self {
+        Self { n_history: 0, n_insights: 4, profiling: false, style: PromptStyle::Structured }
+    }
+
+    /// EvoEngineer-Full: history + insights (Table 3 row 4).
+    pub fn full() -> Self {
+        Self { n_history: 3, n_insights: 4, profiling: false, style: PromptStyle::Structured }
+    }
+
+    /// EoH: 2-3 historical solutions, insight pairs generated but not
+    /// explicitly leveraged (Table 2).
+    pub fn eoh() -> Self {
+        Self { n_history: 3, n_insights: 0, profiling: false, style: PromptStyle::Structured }
+    }
+
+    /// FunSearch: minimal — two historical solutions, nothing else.
+    pub fn funsearch() -> Self {
+        Self { n_history: 2, n_insights: 0, profiling: false, style: PromptStyle::Minimal }
+    }
+
+    /// AI CUDA Engineer optimize stage: >5 solutions, profiling,
+    /// verbose ensemble prompting (Table 2 + §A.8).
+    pub fn aicuda() -> Self {
+        Self { n_history: 5, n_insights: 0, profiling: true, style: PromptStyle::Verbose }
+    }
+}
+
+/// One insight with its observed effect (the method records the
+/// speedup delta when the insight's candidate was evaluated — this is
+/// what "explicitly leveraging" insights means for EvoEngineer, vs
+/// EoH/AI-CUDA-E which generate but ignore them, Table 2 footnote).
+#[derive(Debug, Clone)]
+pub struct InsightRecord {
+    pub text: String,
+    pub delta: f64,
+}
+
+/// Everything the solution guiding layer assembled for one trial.
+#[derive(Debug, Clone)]
+pub struct Guidance<'a> {
+    pub task: &'a OpTask,
+    /// Baseline kernel time in microseconds (task context detail).
+    pub baseline_us: f64,
+    /// The solution to improve upon (absent for from-scratch trials).
+    pub parent: Option<&'a Candidate>,
+    /// I2: historical high-quality solutions, best first.
+    pub history: Vec<&'a Candidate>,
+    /// I3: optimization insights, most useful first.
+    pub insights: Vec<&'a InsightRecord>,
+    /// Profiling feedback line for the parent (if enabled & available).
+    pub profiling: Option<String>,
+    /// Operator-specific directive (EoH E1/E2/M1/M2, stage names...).
+    pub instruction: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_match_table3() {
+        let free = GuidanceConfig::free();
+        assert_eq!((free.n_history, free.n_insights), (0, 0));
+        let insight = GuidanceConfig::insight();
+        assert_eq!(insight.n_history, 0);
+        assert!(insight.n_insights > 0);
+        let full = GuidanceConfig::full();
+        assert!(full.n_history > 0 && full.n_insights > 0);
+        let ai = GuidanceConfig::aicuda();
+        assert!(ai.n_history >= 5 && ai.profiling);
+        assert_eq!(ai.style, PromptStyle::Verbose);
+    }
+}

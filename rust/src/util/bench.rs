@@ -1,0 +1,148 @@
+//! Minimal benchmarking harness (criterion is not available offline).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```ignore
+//! let mut b = Bench::new("dsl");
+//! b.bench("parse", || dsl::parse(SRC).unwrap());
+//! b.report();
+//! ```
+//! Methodology: warmup, then adaptive batching until the measurement
+//! window is filled; reports median / p10 / p90 of per-iteration times
+//! across batches, criterion-style.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub group: String,
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    fn fmt_dur(d: Duration) -> String {
+        let ns = d.as_nanos() as f64;
+        if ns < 1_000.0 {
+            format!("{ns:.1} ns")
+        } else if ns < 1_000_000.0 {
+            format!("{:.2} us", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    window: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            warmup: Duration::from_millis(150),
+            window: Duration::from_millis(600),
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the measurement window (long end-to-end benches).
+    pub fn with_window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Benchmark `f`, consuming its output via `black_box`.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + batch sizing.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters as f64;
+        let batch = ((0.01 / per_iter).ceil() as u64).clamp(1, 1 << 20);
+
+        // Measurement: batches until the window closes.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.window || samples.len() < 10 {
+            let b0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(b0.elapsed().as_secs_f64() / batch as f64);
+            iters += batch;
+            if samples.len() >= 5000 {
+                break;
+            }
+        }
+        let result = BenchResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            median: Duration::from_secs_f64(percentile(&samples, 50.0)),
+            p10: Duration::from_secs_f64(percentile(&samples, 10.0)),
+            p90: Duration::from_secs_f64(percentile(&samples, 90.0)),
+            iters,
+        };
+        println!(
+            "{:<40} median {:>12}   [{} .. {}]   ({} iters)",
+            format!("{}/{}", self.group, name),
+            BenchResult::fmt_dur(result.median),
+            BenchResult::fmt_dur(result.p10),
+            BenchResult::fmt_dur(result.p90),
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a compact summary (already printed per-bench; this adds a
+    /// trailer useful for `tee`d logs).
+    pub fn report(&self) {
+        println!(
+            "# group `{}`: {} benchmarks",
+            self.group,
+            self.results.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").with_window(Duration::from_millis(30));
+        let r = b.bench("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7));
+        assert!(r.median.as_nanos() < 1_000_000);
+        assert!(r.iters > 0);
+        b.report();
+    }
+
+    #[test]
+    fn ordering_sane() {
+        let mut b = Bench::new("test").with_window(Duration::from_millis(30));
+        let fast = b.bench("fast", || black_box(1u64) + 1).median;
+        let slow = b
+            .bench("slow", || {
+                (0..black_box(5000u64)).fold(0u64, |a, x| a.wrapping_add(x.wrapping_mul(x) ^ a))
+            })
+            .median;
+        assert!(slow > fast);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic RNG and statistics.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{mean, median, pearson, percentile};

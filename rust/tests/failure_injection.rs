@@ -1,0 +1,194 @@
+//! Failure-injection tests: every error path a long campaign can hit
+//! must degrade gracefully (error values, never panics, owner threads
+//! survive) — the robustness half of the evaluation pipeline.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::evals::{EvalOutcome, Evaluator};
+use evoengineer::methods::{Archive, ArchiveEntry};
+use evoengineer::runtime::{Runtime, TensorValue};
+use evoengineer::tasks::{ArgSpec, OpTask, TaskRegistry};
+use evoengineer::util::Rng;
+
+fn registry() -> TaskRegistry {
+    TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap()
+}
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("evo_fail_{}_{}", std::process::id(), rand_tag()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn rand_tag() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .subsec_nanos() as u64
+}
+
+#[test]
+fn corrupted_hlo_artifact_is_an_error() {
+    let rt = Runtime::new().unwrap();
+    let dir = tmpdir();
+    let bad = dir.join("bad.hlo.txt");
+    std::fs::write(&bad, "HloModule utter_garbage {{{{").unwrap();
+    let err = rt.execute(bad, vec![]);
+    assert!(err.is_err(), "garbage HLO must fail to compile");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn truncated_hlo_artifact_is_an_error_and_runtime_survives() {
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    // Truncate a real artifact halfway.
+    let task = reg.get("relu_64").unwrap();
+    let good_path = reg.artifact_path(task, "ref").unwrap();
+    let text = std::fs::read_to_string(&good_path).unwrap();
+    let dir = tmpdir();
+    let bad = dir.join("truncated.hlo.txt");
+    std::fs::write(&bad, &text[..text.len() / 2]).unwrap();
+    assert!(rt.execute(bad, vec![]).is_err());
+
+    // Owner thread must still serve good requests afterwards.
+    let inputs = vec![TensorValue::new(vec![64, 64], vec![0.5; 64 * 64])];
+    let out = rt.execute(good_path, inputs).unwrap();
+    assert_eq!(out.len(), 64 * 64);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn wrong_input_arity_is_an_error() {
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    let task = reg.get("matmul_32").unwrap();
+    // matmul takes two inputs; give one.
+    let res = rt.execute(
+        reg.artifact_path(task, "ref").unwrap(),
+        vec![TensorValue::new(vec![32, 32], vec![1.0; 1024])],
+    );
+    assert!(res.is_err());
+}
+
+#[test]
+fn evaluator_reports_runtime_fail_for_missing_artifact() {
+    // An op whose manifest points at a nonexistent artifact file: the
+    // evaluator must return RuntimeFail, not panic, and the campaign
+    // convention treats it as a functional failure.
+    let reg = registry();
+    let mut task: OpTask = reg.get("relu_64").unwrap().clone();
+    task.artifacts
+        .insert("opt".into(), "does/not/exist.hlo.txt".into());
+    let ev = Evaluator::new(Arc::new(reg), Runtime::new().unwrap());
+    let src = "kernel relu_64 { semantics: opt; }";
+    let mut rng = Rng::new(0);
+    match ev.evaluate(src, &task, &mut rng) {
+        EvalOutcome::RuntimeFail { error } => assert!(error.contains("exist")),
+        other => panic!("expected RuntimeFail, got {other:?}"),
+    }
+}
+
+#[test]
+fn evaluator_memoizes_functional_verdicts() {
+    let reg = Arc::new(registry());
+    let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap());
+    let task = reg.get("sigmoid_64").unwrap().clone();
+    ev.functional(&task, "opt").unwrap();
+    let after_first = ev.runtime_stats().unwrap().executions;
+    assert!(after_first > 0);
+    // Second verdict for the same (op, variant): no new executions.
+    ev.functional(&task, "opt").unwrap();
+    assert_eq!(ev.runtime_stats().unwrap().executions, after_first);
+    // Different variant: new executions happen.
+    ev.functional(&task, "bug_scale").unwrap();
+    assert!(ev.runtime_stats().unwrap().executions > after_first);
+}
+
+#[test]
+fn baseline_time_is_memoized_and_positive() {
+    let reg = Arc::new(registry());
+    let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap());
+    for op in reg.ops.iter().take(12) {
+        let t1 = ev.baseline_time(op);
+        let t2 = ev.baseline_time(op);
+        assert!(t1 > 0.0, "{}", op.name);
+        assert_eq!(t1, t2, "{}", op.name);
+    }
+}
+
+#[test]
+fn archive_prefers_same_family_then_speedup() {
+    let archive = Archive::new();
+    for (op, family, speedup) in [
+        ("a", "matmul", 5.0),
+        ("b", "conv", 9.0),
+        ("c", "matmul", 2.0),
+        ("d", "loss", 7.0),
+    ] {
+        archive.record(ArchiveEntry {
+            op: op.into(),
+            family: family.into(),
+            src: format!("kernel {op} {{ semantics: opt; }}"),
+            speedup,
+        });
+    }
+    let similar = archive.similar("zzz", "matmul", 3);
+    assert_eq!(similar.len(), 3);
+    // Same-family entries first, best speedup first within family.
+    assert_eq!(similar[0].op, "a");
+    assert_eq!(similar[1].op, "c");
+    assert_eq!(similar[2].op, "b"); // best of the rest
+    // Self is excluded.
+    assert!(archive.similar("a", "matmul", 5).iter().all(|e| e.op != "a"));
+    // Re-recording with lower speedup does not overwrite.
+    archive.record(ArchiveEntry {
+        op: "a".into(),
+        family: "matmul".into(),
+        src: "worse".into(),
+        speedup: 1.0,
+    });
+    assert_eq!(archive.similar("zzz", "matmul", 1)[0].speedup, 5.0);
+}
+
+#[test]
+fn tensor_inputs_with_nan_still_produce_output() {
+    // The evaluator never feeds NaNs, but the runtime must not wedge
+    // if a future workload does.
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    let task = reg.get("relu_64").unwrap();
+    let mut data = vec![0.25f32; 64 * 64];
+    data[0] = f32::NAN;
+    let out = rt
+        .execute(
+            reg.artifact_path(task, "ref").unwrap(),
+            vec![TensorValue::new(vec![64, 64], data)],
+        )
+        .unwrap();
+    assert!(out[0].is_nan());
+    assert!(out[1..].iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn zero_budget_run_is_well_formed() {
+    let reg = Arc::new(registry());
+    let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap());
+    let task = reg.get("matmul_32").unwrap().clone();
+    let archive = Archive::new();
+    let ctx = evoengineer::methods::RunCtx {
+        evaluator: &ev,
+        task: &task,
+        model: &evoengineer::llm::MODELS[0],
+        seed: 0,
+        archive: &archive,
+        budget: 0,
+    };
+    for method in evoengineer::methods::all_methods() {
+        let rec = method.run(&ctx);
+        assert_eq!(rec.trials, 0, "{}", method.name());
+        assert_eq!(rec.best_speedup, 1.0);
+        assert!(!rec.any_valid);
+    }
+}

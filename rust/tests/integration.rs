@@ -1,0 +1,255 @@
+//! Integration tests across modules: the full evaluation pipeline on
+//! real artifacts, method runs, campaign slices, metrics and reports —
+//! the cross-module counterpart of the per-module unit tests.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::campaign::{self, results, CampaignConfig};
+use evoengineer::costmodel::baseline_schedule;
+use evoengineer::dsl::{self, KernelSpec};
+use evoengineer::evals::{EvalOutcome, Evaluator};
+use evoengineer::llm::{self, MODELS};
+use evoengineer::methods::{self, Archive, RunCtx};
+use evoengineer::metrics;
+use evoengineer::report;
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::traverse::prompt::render;
+use evoengineer::traverse::{Guidance, GuidanceConfig};
+use evoengineer::util::Rng;
+
+fn evaluator() -> Evaluator {
+    let reg = Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    );
+    Evaluator::new(reg, Runtime::new().unwrap())
+}
+
+#[test]
+fn evaluation_pipeline_end_to_end() {
+    let ev = evaluator();
+    let task = ev.registry.get("softmax_64").unwrap().clone();
+    let mut rng = Rng::new(1);
+
+    // Correct kernel: passes both gates, gets perf numbers.
+    let spec = KernelSpec {
+        op: task.name.clone(),
+        semantics: "opt".into(),
+        schedule: baseline_schedule(&task),
+    };
+    match ev.evaluate(&dsl::print(&spec), &task, &mut rng) {
+        EvalOutcome::Ok(s) => {
+            assert!(s.time > 0.0);
+            assert!(s.true_speedup > 0.5);
+        }
+        other => panic!("expected Ok, got {other:?}"),
+    }
+
+    // Semantic bug: compiles, fails functional testing on live PJRT.
+    let mut bug = spec.clone();
+    bug.semantics = "bug_offset".into();
+    match ev.evaluate(&dsl::print(&bug), &task, &mut rng) {
+        EvalOutcome::FunctionalFail { max_abs_diff } => assert!(max_abs_diff > 1e-3),
+        other => panic!("expected FunctionalFail, got {other:?}"),
+    }
+
+    // Hallucinated variant: rejected at lowering.
+    let mut hall = spec.clone();
+    hall.semantics = "turbo_v9".into();
+    assert!(matches!(
+        ev.evaluate(&dsl::print(&hall), &task, &mut rng),
+        EvalOutcome::CompileFail { .. }
+    ));
+
+    // Syntax garbage: rejected by the front-end.
+    assert!(matches!(
+        ev.evaluate("__global__ void k() {}", &task, &mut rng),
+        EvalOutcome::CompileFail { .. }
+    ));
+}
+
+#[test]
+fn functional_verdicts_hold_for_all_categories() {
+    // One op per category: the opt (Pallas) artifact must match ref,
+    // both bug artifacts must be caught — live PJRT numerics.
+    let ev = evaluator();
+    for op_name in [
+        "matmul_32",
+        "conv1d_k3_c8",
+        "relu_64",
+        "softmax_64",
+        "mse_64",
+        "cumsum_rows_64",
+    ] {
+        let task = ev.registry.get(op_name).unwrap().clone();
+        assert!(ev.functional(&task, "opt").unwrap().pass, "{op_name}/opt");
+        assert!(!ev.functional(&task, "bug_scale").unwrap().pass, "{op_name}/bug_scale");
+        assert!(!ev.functional(&task, "bug_offset").unwrap().pass, "{op_name}/bug_offset");
+    }
+}
+
+#[test]
+fn prompt_to_llm_loop_respects_information() {
+    // Render a real prompt for a real task, feed it to the SimLLM, and
+    // check the emitted program targets the right op.
+    let ev = evaluator();
+    let task = ev.registry.get("gelu_big").unwrap().clone();
+    let g = Guidance {
+        task: &task,
+        baseline_us: ev.baseline_time(&task) * 1e6,
+        parent: None,
+        history: vec![],
+        insights: vec![],
+        profiling: None,
+        instruction: "Design a new kernel from scratch.".into(),
+    };
+    let prompt = render(&GuidanceConfig::free(), &g);
+    let mut ok = 0;
+    for seed in 0..30 {
+        let mut rng = Rng::new(seed);
+        let resp = llm::generate(&prompt, &MODELS[2], &mut rng);
+        if let Ok(spec) = dsl::parse(&resp.text) {
+            assert_eq!(spec.op, "gelu_big");
+            ok += 1;
+        }
+    }
+    assert!(ok >= 20, "{ok}/30 parsed");
+}
+
+#[test]
+fn all_methods_run_on_all_categories() {
+    let ev = evaluator();
+    let archive = Archive::new();
+    for method in methods::all_methods() {
+        for op_name in ["matmul_32", "cumsum_rows_64"] {
+            let task = ev.registry.get(op_name).unwrap().clone();
+            let ctx = RunCtx {
+                evaluator: &ev,
+                task: &task,
+                model: &MODELS[0],
+                seed: 11,
+                archive: &archive,
+                budget: 12,
+            };
+            let rec = method.run(&ctx);
+            assert!(rec.trials <= 12, "{}", method.name());
+            assert!(rec.best_speedup >= 1.0);
+            assert_eq!(rec.op, op_name);
+        }
+    }
+    // Every method published its best kernels to the shared archive.
+    assert!(archive.len() >= 1);
+}
+
+#[test]
+fn campaign_slice_is_deterministic_and_reportable() {
+    let cfg = CampaignConfig {
+        methods: vec!["evoengineer-free".into(), "funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0, 1],
+        max_ops: 6,
+        budget: 10,
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+    let a = campaign::run(&cfg, evaluator()).unwrap();
+    let b = campaign::run(&cfg, evaluator()).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.op, y.op);
+        assert_eq!(x.best_speedup, y.best_speedup, "{} {}", x.op, x.method);
+        assert_eq!(x.prompt_tokens, y.prompt_tokens);
+    }
+
+    // Records survive a JSONL round-trip and feed every report.
+    let dir = std::env::temp_dir().join(format!("evo_it_{}", std::process::id()));
+    let path = dir.join("r.jsonl");
+    results::save(&path, &a).unwrap();
+    let back = results::load(&path).unwrap();
+    assert_eq!(back.len(), a.len());
+    for text in [
+        report::table4(&back),
+        report::fig1(&back),
+        report::fig4(&back, ""),
+        report::fig5(&back),
+        report::table7(&back),
+        report::fig8(&back),
+    ] {
+        assert!(!text.is_empty());
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn validity_ordering_matches_the_paper() {
+    // The paper's core claim at the trial level: Full > Insight > Free
+    // on functional-correctness Pass@1 (Table 4's Validity block).
+    let cfg = CampaignConfig {
+        methods: vec![
+            "evoengineer-free".into(),
+            "evoengineer-insight".into(),
+            "evoengineer-full".into(),
+        ],
+        models: vec!["gpt".into()],
+        seeds: vec![0, 1],
+        max_ops: 16,
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+    let records = campaign::run(&cfg, evaluator()).unwrap();
+    let rate = |m: &str| {
+        let recs: Vec<&methods::KernelRunRecord> =
+            records.iter().filter(|r| r.method.contains(m)).collect();
+        let trials: usize = recs.iter().map(|r| r.trials).sum();
+        let correct: usize = recs.iter().map(|r| r.correct_trials).sum();
+        correct as f64 / trials as f64
+    };
+    let (free, insight, full) = (rate("Free"), rate("Insight"), rate("Full"));
+    assert!(full > insight, "full={full:.3} insight={insight:.3}");
+    assert!(insight > free, "insight={insight:.3} free={free:.3}");
+}
+
+#[test]
+fn token_ordering_matches_figure4() {
+    let ev = evaluator();
+    let archive = Archive::new();
+    let task = ev.registry.get("matmul_64").unwrap().clone();
+    let tokens = |name: &str| {
+        let ctx = RunCtx {
+            evaluator: &ev,
+            task: &task,
+            model: &MODELS[0],
+            seed: 0,
+            archive: &archive,
+            budget: 30,
+        };
+        let rec = methods::by_name(name).unwrap().run(&ctx);
+        rec.total_tokens()
+    };
+    let free = tokens("evoengineer-free");
+    let full = tokens("evoengineer-full");
+    let aicuda = tokens("ai cuda");
+    assert!(free < full, "free={free} full={full}");
+    assert!(full < aicuda, "full={full} aicuda={aicuda}");
+}
+
+#[test]
+fn metrics_pipeline_from_real_records() {
+    let cfg = CampaignConfig {
+        methods: vec!["ai cuda".into()],
+        models: vec!["deepseek".into()],
+        seeds: vec![0, 1],
+        max_ops: 8,
+        budget: 15,
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+    let records = campaign::run(&cfg, evaluator()).unwrap();
+    let summary = metrics::replication_summary(&records, "AI CUDA Engineer");
+    assert_eq!(summary.n_ops, 8);
+    assert!(summary.median_speedup_all.is_finite());
+    let (xs, ys) = metrics::replication_pairs(&records, "AI CUDA Engineer", 0, 1);
+    assert_eq!(xs.len(), 8);
+    assert_eq!(ys.len(), 8);
+}

@@ -1,0 +1,225 @@
+//! Property-based tests on coordinator invariants (routing of
+//! candidates through the compile gates, population state, DSL
+//! round-trips). The environment is offline (no proptest crate), so
+//! this is a seeded random-input harness over the same invariants —
+//! hundreds of random cases per property, with the failing seed printed
+//! for reproduction.
+
+use evoengineer::dsl::{self, KernelSpec, Layout, Schedule};
+use evoengineer::population::{Candidate, Elite, Islands, Population, SingleBest};
+use evoengineer::util::json;
+use evoengineer::util::Rng;
+
+const CASES: u64 = 500;
+
+fn arbitrary_schedule(rng: &mut Rng) -> Schedule {
+    Schedule {
+        tile_m: *rng.pick(&[1, 4, 8, 16, 32, 64, 128, 256]),
+        tile_n: *rng.pick(&[1, 4, 8, 16, 32, 64, 128, 256]),
+        tile_k: *rng.pick(&[1, 4, 8, 16, 32, 64, 128, 256]),
+        vector_width: *rng.pick(&[1, 2, 4, 8]),
+        unroll: *rng.pick(&[1, 2, 4, 8, 16]),
+        stages: 1 + rng.below(4) as u32,
+        smem_staging: rng.chance(0.5),
+        fuse_epilogue: rng.chance(0.5),
+        layout: *rng.pick(&[Layout::RowMajor, Layout::ColMajor, Layout::Tiled]),
+        threads_per_block: 32 * (1 + rng.below(32) as u32),
+        regs_per_thread: 16 + rng.below(240) as u32,
+    }
+}
+
+fn arbitrary_spec(rng: &mut Rng) -> KernelSpec {
+    let ops = ["matmul_64", "softmax_64", "x", "op_1", "a_very_long_kernel_name_0123"];
+    let sems = ["opt", "ref", "bug_scale", "bug_offset", "weird_variant"];
+    KernelSpec {
+        op: rng.pick(&ops).to_string(),
+        semantics: rng.pick(&sems).to_string(),
+        schedule: arbitrary_schedule(rng),
+    }
+}
+
+/// print ∘ parse = id over the whole AST space.
+#[test]
+fn prop_dsl_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let spec = arbitrary_spec(&mut rng);
+        let text = dsl::print(&spec);
+        let back = dsl::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(spec, back, "seed {seed}");
+        // And printing is a fixpoint.
+        assert_eq!(text, dsl::print(&back), "seed {seed}");
+    }
+}
+
+/// The parser never panics and never accepts unbalanced braces, for
+/// arbitrary mutations of valid programs.
+#[test]
+fn prop_parser_total_on_corruptions() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let spec = arbitrary_spec(&mut rng);
+        let mut text = dsl::print(&spec);
+        // Random byte-level corruption.
+        for _ in 0..1 + rng.below(4) {
+            if text.is_empty() {
+                break;
+            }
+            let i = rng.below(text.len());
+            if text.is_char_boundary(i) {
+                let c = *rng.pick(&[b'{', b'}', b';', b':', b'q', b'7', b' ']) as char;
+                text.insert(i, c);
+            }
+        }
+        // Must not panic; outcome (Ok or Err) is free.
+        let _ = dsl::parse(&text);
+    }
+}
+
+/// Validation is decidable and consistent: validate(spec) agrees with
+/// validate(parse(print(spec))).
+#[test]
+fn prop_validate_stable_under_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let spec = arbitrary_spec(&mut rng);
+        let direct = dsl::validate(&spec).is_ok();
+        let round = dsl::parse(&dsl::print(&spec)).map(|s| dsl::validate(&s).is_ok());
+        assert_eq!(Ok(direct), round, "seed {seed}");
+    }
+}
+
+fn arbitrary_candidate(rng: &mut Rng, trial: usize) -> Candidate {
+    let valid = rng.chance(0.6);
+    let speedup = if valid { 0.5 + 3.0 * rng.f64() } else { 1.0 };
+    Candidate {
+        src: format!("kernel k{} {{ semantics: opt; }}", rng.below(100_000)),
+        spec: None,
+        compiled: valid || rng.chance(0.5),
+        correct: valid,
+        speedup,
+        pytorch_speedup: speedup * 0.7,
+        true_speedup: speedup,
+        true_pytorch_speedup: speedup * 0.7,
+        insight: None,
+        trial,
+    }
+}
+
+/// Population invariants, for every strategy:
+/// * `best()` is valid and has the max fitness ever inserted (among
+///   valid candidates, when deduplication permits);
+/// * `history()` is sorted best-first and contains only valid items;
+/// * `parent()` never panics, returns something once nonempty.
+#[test]
+fn prop_population_invariants() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(3000 + seed);
+        let pops: Vec<Box<dyn Population>> = vec![
+            Box::new(SingleBest::new()),
+            Box::new(Elite::new(1 + rng.below(5))),
+            Box::new(Islands::new(1 + rng.below(4), 1 + rng.below(3), 1 + rng.below(20))),
+        ];
+        for mut pop in pops {
+            let mut max_valid_fitness: f64 = 0.0;
+            for t in 0..40 {
+                // Interleave selection like the real loop (islands
+                // advance their cursor in parent()).
+                let _ = pop.parent(&mut rng);
+                let c = arbitrary_candidate(&mut rng, t);
+                if c.valid() {
+                    max_valid_fitness = max_valid_fitness.max(c.fitness());
+                }
+                pop.insert(c);
+
+                if let Some(best) = pop.best() {
+                    assert!(best.valid(), "{} seed {seed}", pop.name());
+                    assert!(
+                        best.fitness() <= max_valid_fitness + 1e-12,
+                        "{} seed {seed}",
+                        pop.name()
+                    );
+                }
+                let hist = pop.history(4);
+                for w in hist.windows(2) {
+                    assert!(
+                        w[0].fitness() >= w[1].fitness(),
+                        "{} history not sorted, seed {seed}",
+                        pop.name()
+                    );
+                }
+                for h in &hist {
+                    assert!(h.valid(), "{} history has invalid, seed {seed}", pop.name());
+                }
+                assert!(pop.parent(&mut rng).is_some(), "{} seed {seed}", pop.name());
+            }
+            // SingleBest/Elite: best is the global max over valid.
+            if pop.name() != "islands" {
+                if max_valid_fitness > 0.0 {
+                    let b = pop.best().expect("valid inserted but no best");
+                    assert!((b.fitness() - max_valid_fitness).abs() < 1e-12);
+                }
+            }
+        }
+    }
+}
+
+/// JSON writer/parser round-trip over arbitrary structured values.
+#[test]
+fn prop_json_roundtrip() {
+    fn arbitrary_json(rng: &mut Rng, depth: usize) -> json::Json {
+        use json::Json;
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => {
+                // Round-trippable numbers (f64-exact).
+                Json::Num((rng.next_u64() % 1_000_000) as f64 - 500_000.0)
+            }
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| *rng.pick(&['a', 'Z', '"', '\\', '\n', '\t', '✓', ' ', '0']))
+                    .collect();
+                Json::Str(s)
+            }
+            4 => {
+                let n = rng.below(4);
+                Json::Arr((0..n).map(|_| arbitrary_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(4);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), arbitrary_json(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let v = arbitrary_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
+
+/// Schedule resource accounting is monotone: growing a tile never
+/// shrinks the shared-memory footprint or the register estimate.
+#[test]
+fn prop_resource_monotonicity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let mut s = arbitrary_schedule(&mut rng);
+        s.smem_staging = true;
+        let smem0 = s.smem_bytes();
+        let regs0 = s.est_registers();
+        let mut bigger = s.clone();
+        bigger.tile_m = (s.tile_m * 2).min(256);
+        bigger.tile_n = (s.tile_n * 2).min(256);
+        assert!(bigger.smem_bytes() >= smem0, "seed {seed}");
+        assert!(bigger.est_registers() >= regs0, "seed {seed}");
+    }
+}

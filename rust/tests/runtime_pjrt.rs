@@ -1,0 +1,180 @@
+//! PJRT runtime tests: load the AOT HLO-text artifacts and execute them
+//! with concrete inputs — the rust mirror of python/tests/test_aot.py.
+//! These are the tests that prove the L2→L3 AOT bridge (jax lowering →
+//! HLO text → xla crate → PJRT CPU) carries real numerics.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::runtime::{Runtime, TensorValue};
+use evoengineer::tasks::gen::gen_case;
+use evoengineer::tasks::TaskRegistry;
+
+fn registry() -> TaskRegistry {
+    TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap()
+}
+
+fn inputs_for(reg: &TaskRegistry, op: &str, case: usize) -> Vec<TensorValue> {
+    let task = reg.get(op).unwrap();
+    gen_case(task, case)
+        .into_iter()
+        .zip(&task.args)
+        .map(|(data, spec)| TensorValue::new(spec.shape.clone(), data))
+        .collect()
+}
+
+#[test]
+fn executes_matmul_with_known_numerics() {
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    let task = reg.get("matmul_32").unwrap();
+    // Identity x random == random.
+    let n = 32;
+    let mut eye = vec![0.0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let x: Vec<f32> = (0..n * n).map(|i| (i % 17) as f32 * 0.25 - 2.0).collect();
+    let out = rt
+        .execute(
+            reg.artifact_path(task, "ref").unwrap(),
+            vec![
+                TensorValue::new(vec![n, n], eye),
+                TensorValue::new(vec![n, n], x.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), n * n);
+    for (a, b) in out.iter().zip(&x) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn opt_matches_ref_live_for_sampled_ops() {
+    // The rust-side half of the kernel-vs-oracle check: execute both
+    // artifacts on PJRT and compare, one op per category.
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    for op_name in [
+        "matmul_rect_64x32x128",
+        "conv2d_k3_c8",
+        "silu_big",
+        "layernorm_64",
+        "kl_div_64",
+        "cumprod_rows_64",
+    ] {
+        let task = reg.get(op_name).unwrap();
+        for case in 0..2 {
+            let inputs = inputs_for(&reg, op_name, case);
+            let want = rt
+                .execute(reg.artifact_path(task, "ref").unwrap(), inputs.clone())
+                .unwrap();
+            let got = rt
+                .execute(reg.artifact_path(task, "opt").unwrap(), inputs)
+                .unwrap();
+            assert_eq!(want.len(), got.len(), "{op_name}");
+            for (w, g) in want.iter().zip(&got) {
+                assert!(
+                    (w - g).abs() as f64 <= task.atol + task.rtol * w.abs() as f64,
+                    "{op_name} case {case}: {w} vs {g}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bug_artifacts_differ_live() {
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    let task = reg.get("softmax_256").unwrap();
+    let inputs = inputs_for(&reg, "softmax_256", 0);
+    let want = rt
+        .execute(reg.artifact_path(task, "ref").unwrap(), inputs.clone())
+        .unwrap();
+    for bug in ["bug_scale", "bug_offset"] {
+        let got = rt
+            .execute(reg.artifact_path(task, bug).unwrap(), inputs.clone())
+            .unwrap();
+        let max_diff = want
+            .iter()
+            .zip(&got)
+            .map(|(w, g)| (w - g).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            (max_diff as f64) > task.atol,
+            "{bug} indistinguishable (max diff {max_diff})"
+        );
+    }
+}
+
+#[test]
+fn output_shapes_match_manifest() {
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    // Mixed-rank sample: 2D, 3D, 4D outputs and scalar-ish (1,1).
+    for op_name in ["bmm_4x64", "avgpool1d_k2", "instancenorm_8", "hinge_64", "maxpool2d_k4"] {
+        let task = reg.get(op_name).unwrap();
+        let inputs = inputs_for(&reg, op_name, 3);
+        let out = rt
+            .execute(reg.artifact_path(task, "ref").unwrap(), inputs)
+            .unwrap();
+        assert_eq!(out.len(), task.out_numel(), "{op_name}");
+        assert!(out.iter().all(|x| x.is_finite()), "{op_name} non-finite output");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let reg = registry();
+    let rt = Runtime::new().unwrap();
+    let task = reg.get("relu_64").unwrap();
+    let path = reg.artifact_path(task, "ref").unwrap();
+    for case in 0..4 {
+        let inputs = inputs_for(&reg, "relu_64", case);
+        rt.execute(path.clone(), inputs).unwrap();
+    }
+    let stats = rt.stats().unwrap();
+    assert_eq!(stats.compiles, 1, "{stats:?}");
+    assert_eq!(stats.executions, 4, "{stats:?}");
+    assert_eq!(stats.cache_hits, 3, "{stats:?}");
+}
+
+#[test]
+fn runtime_is_shareable_across_threads() {
+    let reg = Arc::new(registry());
+    let rt = Runtime::new().unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let reg = reg.clone();
+        let rt = rt.clone();
+        handles.push(std::thread::spawn(move || {
+            let task = reg.get("tanh_64").unwrap();
+            let inputs = gen_case(task, t)
+                .into_iter()
+                .zip(&task.args)
+                .map(|(data, spec)| TensorValue::new(spec.shape.clone(), data))
+                .collect();
+            let out = rt
+                .execute(reg.artifact_path(task, "opt").unwrap(), inputs)
+                .unwrap();
+            assert_eq!(out.len(), task.out_numel());
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn missing_artifact_is_an_error_not_a_panic() {
+    let rt = Runtime::new().unwrap();
+    let err = rt.execute(PathBuf::from("/nonexistent/x.hlo.txt"), vec![]);
+    assert!(err.is_err());
+    // The owner thread must survive the failure.
+    let reg = registry();
+    let task = reg.get("relu_64").unwrap();
+    let inputs = inputs_for(&reg, "relu_64", 0);
+    rt.execute(reg.artifact_path(task, "ref").unwrap(), inputs).unwrap();
+}
