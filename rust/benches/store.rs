@@ -1,0 +1,79 @@
+//! Evaluation-cache benchmarks (DESIGN.md §8): the warm-cache hit path
+//! vs a cold pipeline evaluation, plus the keying overhead itself.
+//!
+//! The acceptance target for the persistent store is a ≥10× win for a
+//! warm hit over a cold evaluation. "Cold" here means the in-process
+//! memos are dropped before every iteration, so each cold evaluation
+//! pays the real pipeline: compile front-end, artifact resolution,
+//! five PJRT functional cases, and cost-model pricing. "Warm" drops
+//! the same memos but serves the verdict from the persistent store —
+//! the replay that a resumed or deduplicated campaign runs instead of
+//! the pipeline.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::costmodel::baseline_schedule;
+use evoengineer::dsl::{self, KernelSpec};
+use evoengineer::evals::Evaluator;
+use evoengineer::runtime::Runtime;
+use evoengineer::store::{key_for_source, EvalStore};
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::util::bench::Bench;
+use evoengineer::util::Rng;
+
+fn main() {
+    let reg = Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    );
+    let task = reg.get("matmul_64").unwrap().clone();
+    let src = dsl::print(&KernelSpec {
+        op: task.name.clone(),
+        semantics: "opt".into(),
+        schedule: baseline_schedule(&task),
+    });
+
+    let cache = std::env::temp_dir().join(format!("evo_bench_cache_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&cache).ok();
+
+    let cold_ev = Evaluator::new(reg.clone(), Runtime::new().unwrap());
+    let warm_ev = Evaluator::new(reg.clone(), Runtime::new().unwrap())
+        .with_store(EvalStore::open(&cache).unwrap());
+    {
+        // Populate the store with the candidate (one real evaluation).
+        let mut rng = Rng::new(0);
+        warm_ev.evaluate(&src, &task, &mut rng);
+        assert_eq!(warm_ev.store().unwrap().len(), 1);
+    }
+
+    let mut b = Bench::new("store");
+    b.bench("key_for_source", || key_for_source(&task.name, &src).unwrap());
+
+    let mut i = 0u64;
+    let cold = b
+        .bench("evaluate_cold", || {
+            i += 1;
+            cold_ev.clear_memos();
+            let mut rng = Rng::new(i);
+            cold_ev.evaluate(&src, &task, &mut rng)
+        })
+        .median;
+
+    let mut j = 0u64;
+    let warm = b
+        .bench("evaluate_warm_hit", || {
+            j += 1;
+            warm_ev.clear_memos();
+            let mut rng = Rng::new(j);
+            warm_ev.evaluate(&src, &task, &mut rng)
+        })
+        .median;
+    b.report();
+
+    let speedup = cold.as_secs_f64() / warm.as_secs_f64().max(1e-12);
+    println!(
+        "\nwarm-cache hit is {speedup:.1}x faster than cold evaluation (target >= 10x): {}",
+        if speedup >= 10.0 { "PASS" } else { "FAIL" }
+    );
+    std::fs::remove_file(&cache).ok();
+}

@@ -9,15 +9,32 @@
 //! The environment is offline (no tokio), so the pool is a fixed set of
 //! std::thread workers draining a shared job queue — the runs are
 //! uniform enough that work stealing buys nothing.
+//!
+//! Long sweeps survive interruption (DESIGN.md §8): with a
+//! [`CampaignConfig::checkpoint`] journal, every completed cell is
+//! appended as it finishes, and [`CampaignConfig::resume`] skips
+//! journaled cells on restart (cells journaled under a different
+//! trial budget are re-run, not merged). For methods whose cells are
+//! pure functions of (method, model, op, seed) — every RNG stream is
+//! derived from that key, and persistent-cache replay is bit-identical
+//! to cold evaluation — a resumed campaign produces byte-identical
+//! records and reports to an uninterrupted one; that is all methods
+//! except the AI CUDA Engineer, whose Compose stage reads the shared
+//! cross-op [`Archive`] and therefore depends on cell *completion
+//! order* in any run, resumed or not. On resume the archive is
+//! re-seeded from the journaled cells' best kernels so it sees what an
+//! uninterrupted run would have published by that point.
 
 pub mod results;
 
+use std::collections::HashSet;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::evals::Evaluator;
 use crate::llm::{profile, ModelProfile};
-use crate::methods::{self, Archive, KernelRunRecord, RunCtx};
+use crate::methods::{self, Archive, ArchiveEntry, KernelRunRecord, RunCtx};
 use crate::tasks::OpTask;
 use crate::{eyre, Result};
 
@@ -40,6 +57,16 @@ pub struct CampaignConfig {
     pub concurrency: usize,
     /// Progress lines to stderr.
     pub quiet: bool,
+    /// Checkpoint journal: completed cells are appended here as they
+    /// finish (None = no checkpointing).
+    pub checkpoint: Option<PathBuf>,
+    /// Skip cells already present in the checkpoint journal and merge
+    /// their records into the result.
+    pub resume: bool,
+    /// Stop claiming new jobs after this many completions in this
+    /// process (0 = run to completion). Test hook that simulates a
+    /// mid-sweep kill at a cell boundary; not exposed on the CLI.
+    pub stop_after: usize,
 }
 
 impl Default for CampaignConfig {
@@ -53,6 +80,9 @@ impl Default for CampaignConfig {
             budget: crate::TRIAL_BUDGET,
             concurrency: 0,
             quiet: false,
+            checkpoint: None,
+            resume: false,
+            stop_after: 0,
         }
     }
 }
@@ -90,8 +120,19 @@ struct Job {
     seed: u64,
 }
 
+/// A record's grid-cell identity (checkpoint key).
+fn cell_of(r: &KernelRunRecord) -> (String, String, String, u64) {
+    (r.method.clone(), r.model.clone(), r.op.clone(), r.seed)
+}
+
 /// Run the sweep; returns records sorted by (method, model, op, seed)
 /// for deterministic output regardless of scheduling.
+///
+/// With `cfg.checkpoint` set, completed cells are journaled as they
+/// finish; with `cfg.resume`, journaled cells inside the requested
+/// grid are skipped and their saved records merged into the result
+/// (journaled cells *outside* the grid are ignored, so a narrower
+/// re-run still reports exactly the requested sweep).
 pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRecord>> {
     let models = resolve_models(&cfg.models)?;
     let method_names = resolve_method_names(&cfg.methods)?;
@@ -123,6 +164,73 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             }
         }
     }
+    let grid_total = jobs.len();
+
+    // Resume: pull previously-completed cells out of the job list.
+    let archive = Archive::new();
+    let mut prior: Vec<KernelRunRecord> = Vec::new();
+    if cfg.resume {
+        let path = cfg
+            .checkpoint
+            .as_ref()
+            .ok_or_else(|| eyre!("--resume requires a checkpoint journal"))?;
+        let grid: HashSet<(String, String, String, u64)> = jobs
+            .iter()
+            .map(|j| (j.method.clone(), j.model.name.to_string(), j.op.name.clone(), j.seed))
+            .collect();
+        let loaded = results::load_lenient(path)?;
+        let mut budget_mismatch = 0usize;
+        prior = loaded
+            .into_iter()
+            .filter(|r| grid.contains(&cell_of(r)))
+            .filter(|r| {
+                // A cell journaled under a different --budget is a
+                // different experiment: re-run it rather than silently
+                // mixing budgets in one report.
+                if r.budget == cfg.budget {
+                    true
+                } else {
+                    budget_mismatch += 1;
+                    false
+                }
+            })
+            .collect();
+        if budget_mismatch > 0 && !cfg.quiet {
+            eprintln!(
+                "campaign: re-running {budget_mismatch} checkpointed cells journaled \
+                 under a different trial budget (want {})",
+                cfg.budget
+            );
+        }
+        // A journal may hold duplicates of a cell (e.g. two resumed
+        // legs racing); records are deterministic per cell, keep one.
+        let mut seen = HashSet::new();
+        prior.retain(|r| seen.insert(cell_of(r)));
+        jobs.retain(|j| {
+            !seen.contains(&(
+                j.method.clone(),
+                j.model.name.to_string(),
+                j.op.name.clone(),
+                j.seed,
+            ))
+        });
+        // Re-publish prior cells' best kernels so archive-reading
+        // methods (the AI CUDA Engineer's Compose RAG) see what an
+        // uninterrupted run would have published by this point.
+        for r in &prior {
+            if let (true, Some(src)) = (r.any_valid, &r.best_src) {
+                if let Some(task) = evaluator.registry.get(&r.op) {
+                    archive.record(ArchiveEntry {
+                        op: r.op.clone(),
+                        family: task.family.clone(),
+                        src: src.clone(),
+                        speedup: r.best_speedup,
+                    });
+                }
+            }
+        }
+    }
+
     let total = jobs.len();
     let concurrency = if cfg.concurrency == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -132,19 +240,31 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     .min(total.max(1));
     if !cfg.quiet {
         eprintln!(
-            "campaign: {} methods x {} models x {} ops x {} seeds = {} runs ({} workers)",
+            "campaign: {} methods x {} models x {} ops x {} seeds = {} runs ({} workers{})",
             method_names.len(),
             models.len(),
             ops.len(),
             cfg.seeds.len(),
-            total,
-            concurrency
+            grid_total,
+            concurrency,
+            if prior.is_empty() {
+                String::new()
+            } else {
+                format!(", {} resumed from checkpoint", prior.len())
+            }
         );
     }
 
-    let archive = Archive::new();
+    // Resumed legs append to the journal; a fresh campaign starts it
+    // over (stale cells from an older sweep must not accumulate).
+    let appender: Option<Mutex<results::Appender>> = match &cfg.checkpoint {
+        Some(path) if cfg.resume => Some(Mutex::new(results::Appender::open(path)?)),
+        Some(path) => Some(Mutex::new(results::Appender::create(path)?)),
+        None => None,
+    };
     let budget = cfg.budget;
     let quiet = cfg.quiet;
+    let stop_after = cfg.stop_after;
     let jobs = Arc::new(jobs);
     let next = Arc::new(AtomicUsize::new(0));
     let done = Arc::new(AtomicUsize::new(0));
@@ -159,7 +279,11 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             let out = out.clone();
             let evaluator = evaluator.clone();
             let archive = archive.clone();
+            let appender = &appender;
             scope.spawn(move || loop {
+                if stop_after > 0 && done.load(Ordering::Relaxed) >= stop_after {
+                    break; // simulated kill: stop claiming work
+                }
                 let idx = next.fetch_add(1, Ordering::Relaxed);
                 if idx >= jobs.len() {
                     break;
@@ -175,6 +299,11 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
                     budget,
                 };
                 let rec = method.run(&ctx);
+                if let Some(appender) = appender {
+                    if let Err(e) = appender.lock().unwrap().append(&rec) {
+                        eprintln!("warning: checkpoint append failed: {e:#}");
+                    }
+                }
                 out.lock().unwrap()[idx] = Some(rec);
                 let d = done.fetch_add(1, Ordering::Relaxed) + 1;
                 if !quiet && (d % 200 == 0 || d == jobs.len()) {
@@ -184,13 +313,25 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         }
     });
 
-    let mut records: Vec<KernelRunRecord> = Arc::try_unwrap(out)
+    // Persist this process's cache hit/miss counters for `cache stats`.
+    if let Some(store) = evaluator.store() {
+        if let Err(e) = store.flush_session_stats() {
+            eprintln!("warning: eval-cache stats flush failed: {e:#}");
+        }
+    }
+
+    let completed: Vec<KernelRunRecord> = Arc::try_unwrap(out)
         .map_err(|_| eyre!("worker leak"))?
         .into_inner()
         .unwrap()
         .into_iter()
-        .map(|r| r.expect("every job produced a record"))
+        .flatten()
         .collect();
+    if cfg.stop_after == 0 && completed.len() != total {
+        return Err(eyre!("worker pool lost records: {}/{total}", completed.len()));
+    }
+    let mut records = prior;
+    records.extend(completed);
     records.sort_by(|a, b| {
         (&a.method, &a.model, &a.op, a.seed).cmp(&(&b.method, &b.model, &b.op, b.seed))
     });

@@ -1,6 +1,10 @@
 //! Run-record persistence: JSON-lines store under `results/`, so every
 //! table/figure regenerator can work from a saved campaign instead of
-//! re-running it.
+//! re-running it. The same line format backs the campaign checkpoint
+//! journal (DESIGN.md §8): each record carries its own
+//! (method, model, op, seed) cell key, so a checkpoint is just a
+//! records file written incrementally via [`Appender`] and read back
+//! kill-tolerantly via [`load_lenient`].
 
 use std::io::{BufRead, Write};
 use std::path::Path;
@@ -42,6 +46,96 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<KernelRunRecord>> {
     Ok(out)
 }
 
+/// Load a records/checkpoint file that may end in a torn line (the
+/// process was killed mid-append). A missing file is an empty journal;
+/// a corrupt *final* line is skipped with a warning; corruption
+/// anywhere else is real damage and stays an error.
+pub fn load_lenient(path: impl AsRef<Path>) -> Result<Vec<KernelRunRecord>> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let f = std::fs::File::open(path).context("opening records")?;
+    let lines: Vec<String> = std::io::BufReader::new(f)
+        .lines()
+        .collect::<std::io::Result<_>>()?;
+    let last_nonempty = lines.iter().rposition(|l| !l.trim().is_empty());
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = json::parse(line)
+            .map_err(|e| eyre!("line {}: {e}", i + 1))
+            .and_then(|v| KernelRunRecord::from_json(&v));
+        match parsed {
+            Ok(rec) => out.push(rec),
+            Err(e) if Some(i) == last_nonempty => {
+                eprintln!(
+                    "warning: {}: dropping torn final line {} ({e:#})",
+                    path.display(),
+                    i + 1
+                );
+            }
+            Err(e) => return Err(e).with_context(|| format!("{}: line {}", path.display(), i + 1)),
+        }
+    }
+    Ok(out)
+}
+
+/// Incremental record writer: one flushed JSONL line per record, so a
+/// killed campaign loses at most the line being written.
+pub struct Appender {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl Appender {
+    /// Open `path` for appending, creating parent dirs as needed. A
+    /// torn final line (killed mid-append) is truncated first, so the
+    /// next record cannot concatenate onto partial bytes.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).context("creating checkpoint dir")?;
+            }
+        }
+        let torn = crate::util::truncate_torn_tail(path.as_ref())
+            .context("repairing checkpoint tail")?;
+        if torn > 0 {
+            eprintln!(
+                "warning: {}: truncated {torn} bytes of torn final line",
+                path.as_ref().display()
+            );
+        }
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .context("opening checkpoint for append")?;
+        Ok(Self { w: std::io::BufWriter::new(f) })
+    }
+
+    /// Start a fresh journal at `path`, discarding any previous
+    /// contents (a new, non-resumed campaign must not inherit cells
+    /// from an older sweep).
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).context("creating checkpoint dir")?;
+            }
+        }
+        let f = std::fs::File::create(&path).context("creating checkpoint")?;
+        Ok(Self { w: std::io::BufWriter::new(f) })
+    }
+
+    pub fn append(&mut self, rec: &KernelRunRecord) -> Result<()> {
+        self.w.write_all(rec.to_json().to_string().as_bytes())?;
+        self.w.write_all(b"\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -54,6 +148,7 @@ mod tests {
             category: 1,
             seed,
             trials: 45,
+            budget: 45,
             compiled_trials: 40,
             correct_trials: 30,
             best_speedup: 2.5,
@@ -86,5 +181,70 @@ mod tests {
     fn load_missing_is_helpful() {
         let err = load("/nonexistent/records.jsonl").unwrap_err();
         assert!(format!("{err:#}").contains("repro campaign"));
+    }
+
+    #[test]
+    fn appender_matches_save_and_lenient_load_drops_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("evo_ckpt_{}", std::process::id()));
+        let saved = dir.join("saved.jsonl");
+        let appended = dir.join("appended.jsonl");
+        let records = vec![rec("matmul_64", 0), rec("relu_64", 1)];
+        save(&saved, &records).unwrap();
+        {
+            let mut a = Appender::open(&appended).unwrap();
+            for r in &records {
+                a.append(r).unwrap();
+            }
+        }
+        assert_eq!(
+            std::fs::read(&saved).unwrap(),
+            std::fs::read(&appended).unwrap(),
+            "incremental and batch writers must produce identical bytes"
+        );
+
+        // Torn final line: lenient load drops it, strict load errors.
+        {
+            use std::io::Write as _;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&appended).unwrap();
+            write!(f, "{{\"method\":\"EvoEng").unwrap();
+        }
+        assert!(load(&appended).is_err());
+        let back = load_lenient(&appended).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].op, "relu_64");
+
+        // Re-opening for append repairs the tail first: the next
+        // record lands on its own line, strict load works again, and
+        // no merged-garbage interior line is left behind.
+        {
+            let mut a = Appender::open(&appended).unwrap();
+            a.append(&rec("softmax_64", 2)).unwrap();
+        }
+        let back = load(&appended).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[2].op, "softmax_64");
+
+        // Appender::create starts the journal over.
+        {
+            let mut a = Appender::create(&appended).unwrap();
+            a.append(&rec("matmul_64", 9)).unwrap();
+        }
+        let back = load(&appended).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].seed, 9);
+
+        // Missing file is an empty journal.
+        assert!(load_lenient(dir.join("nope.jsonl")).unwrap().is_empty());
+
+        // Interior corruption is real damage, not leniently skipped.
+        let broken = dir.join("broken.jsonl");
+        std::fs::write(&broken, "garbage\n").unwrap();
+        {
+            let mut a = Appender::open(&broken).unwrap();
+            a.append(&rec("matmul_64", 0)).unwrap();
+        }
+        assert!(load_lenient(&broken).is_err());
+        std::fs::remove_dir_all(dir).ok();
     }
 }

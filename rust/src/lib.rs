@@ -21,7 +21,9 @@
 //! * [`population`] — population management strategies (paper §4.1.2).
 //! * [`methods`] — EvoEngineer-{Free,Insight,Full}, EoH, FunSearch,
 //!   AI CUDA Engineer (paper §4.2, Appendix A.8).
-//! * [`campaign`] — tokio orchestrator over method × model × op × seed.
+//! * [`campaign`] — std::thread worker pool over method × model × op ×
+//!   seed, with checkpoint/resume journaling (DESIGN.md §8).
+//! * [`store`] — persistent content-addressed evaluation cache.
 //! * [`metrics`] / [`report`] — every table & figure of the paper.
 
 pub mod campaign;
@@ -35,6 +37,7 @@ pub mod methods;
 pub mod population;
 pub mod report;
 pub mod runtime;
+pub mod store;
 pub mod tasks;
 pub mod traverse;
 pub mod util;

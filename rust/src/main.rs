@@ -4,7 +4,9 @@
 //! repro smoke                          # PJRT + artifact sanity check
 //! repro optimize matmul_64 --method evoengineer-full --model claude
 //! repro campaign --seeds 3 --out results/records.jsonl
+//! repro campaign --resume              # continue an interrupted sweep
 //! repro report table4 --records results/records.jsonl
+//! repro cache stats                    # persistent eval-cache health
 //! ```
 //!
 //! (Arg parsing is hand-rolled: the build environment is offline and
@@ -18,6 +20,7 @@ use evoengineer::evals::Evaluator;
 use evoengineer::llm::profile;
 use evoengineer::methods::{self, Archive, RunCtx};
 use evoengineer::runtime::Runtime;
+use evoengineer::store::EvalStore;
 use evoengineer::tasks::TaskRegistry;
 use evoengineer::{eyre, report, Result};
 
@@ -34,6 +37,7 @@ COMMANDS:
       --model NAME           (default gpt)
       --seed N               (default 0)
       --budget N             (default 45)
+      --cache PATH           persistent eval cache (default off)
   campaign                   run the method x model x op x seed sweep
       --methods A,B          (default: all six)
       --models A,B           (default: all three)
@@ -43,13 +47,25 @@ COMMANDS:
       --budget N             trials per run (default 45)
       --concurrency N        workers (default: CPUs)
       --out PATH             (default results/records.jsonl)
+      --checkpoint PATH      cell journal (default <out>.checkpoint.jsonl)
+      --resume               skip cells already in the checkpoint
+      --quiet                suppress progress lines
+      --cache PATH|off       persistent eval cache
+                             (default <artifacts>/eval_cache.jsonl)
   report <which>             regenerate a table/figure from records
       which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|methods|all
-      --records PATH         (default results/records.jsonl)
+      --records PATH         (default results/records.jsonl; a partial
+                             checkpoint journal also works)
       --model NAME           model filter for fig4 (fig6/7 = other models)
+  cache <stats|gc>           inspect / compact the persistent eval cache
+      --cache PATH           (default <artifacts>/eval_cache.jsonl)
 ";
 
-/// Tiny flag parser: positional args + `--key value` pairs.
+/// Flags that take no value (presence = true).
+const BOOL_FLAGS: &[&str] = &["resume", "quiet"];
+
+/// Tiny flag parser: positional args + `--key value` pairs, plus the
+/// bare boolean flags in [`BOOL_FLAGS`].
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
@@ -63,6 +79,11 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                    continue;
+                }
                 let val = argv
                     .get(i + 1)
                     .ok_or_else(|| eyre!("flag --{key} needs a value"))?;
@@ -74,6 +95,10 @@ impl Args {
             }
         }
         Ok(Self { positional, flags })
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
     }
 
     fn get(&self, key: &str, default: &str) -> String {
@@ -120,6 +145,12 @@ fn run() -> Result<()> {
                 .positional
                 .get(1)
                 .ok_or_else(|| eyre!("optimize needs an op name"))?;
+            // Cache is opt-in for single runs (default off keeps a
+            // one-shot `optimize` free of filesystem side effects).
+            let cache = match args.get("cache", "off").as_str() {
+                "off" | "" => None,
+                p => Some(PathBuf::from(p)),
+            };
             optimize(
                 &artifacts,
                 op,
@@ -127,9 +158,15 @@ fn run() -> Result<()> {
                 &args.get("model", "gpt"),
                 args.get_num("seed", 0u64)?,
                 args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
+                cache.as_deref(),
             )
         }
         "campaign" => {
+            let out = PathBuf::from(args.get("out", "results/records.jsonl"));
+            let checkpoint = PathBuf::from(args.get(
+                "checkpoint",
+                &format!("{}.checkpoint.jsonl", out.display()),
+            ));
             let cfg = CampaignConfig {
                 methods: split_csv(&args.get("methods", "")),
                 models: split_csv(&args.get("models", "")),
@@ -138,9 +175,40 @@ fn run() -> Result<()> {
                 max_ops: args.get_num("max-ops", 0usize)?,
                 budget: args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
                 concurrency: args.get_num("concurrency", 0usize)?,
-                quiet: false,
+                quiet: args.has("quiet"),
+                checkpoint: Some(checkpoint),
+                resume: args.has("resume"),
+                stop_after: 0,
             };
-            campaign(&artifacts, cfg, &PathBuf::from(args.get("out", "results/records.jsonl")))
+            let cache = cache_path(&args.get("cache", ""), &artifacts);
+            campaign(&artifacts, cfg, cache.as_deref(), &out)
+        }
+        "cache" => {
+            let action = args
+                .positional
+                .get(1)
+                .ok_or_else(|| eyre!("cache needs an action: stats|gc"))?;
+            let path = cache_path(&args.get("cache", ""), &artifacts)
+                .ok_or_else(|| eyre!("--cache off makes no sense here"))?;
+            match action.as_str() {
+                "stats" => {
+                    let stats = EvalStore::stats(&path)?;
+                    print!("{}", evoengineer::store::stats_report(&path, &stats));
+                    Ok(())
+                }
+                "gc" => {
+                    let (before, after) = EvalStore::gc(&path)?;
+                    println!(
+                        "compacted {}: {} -> {} bytes ({} reclaimed)",
+                        path.display(),
+                        before,
+                        after,
+                        before.saturating_sub(after)
+                    );
+                    Ok(())
+                }
+                other => Err(eyre!("unknown cache action `{other}` (stats|gc)")),
+            }
         }
         "report" => {
             let which = args
@@ -158,14 +226,28 @@ fn run() -> Result<()> {
     }
 }
 
-fn make_evaluator(artifacts: &PathBuf) -> Result<Evaluator> {
+/// Resolve a `--cache` value: "" = default under the artifacts dir,
+/// "off" = disabled, anything else = explicit path.
+fn cache_path(flag: &str, artifacts: &std::path::Path) -> Option<PathBuf> {
+    match flag {
+        "off" => None,
+        "" => Some(artifacts.join("eval_cache.jsonl")),
+        p => Some(PathBuf::from(p)),
+    }
+}
+
+fn make_evaluator(artifacts: &PathBuf, cache: Option<&std::path::Path>) -> Result<Evaluator> {
     let registry = std::sync::Arc::new(TaskRegistry::load(artifacts)?);
     let runtime = Runtime::new()?;
-    Ok(Evaluator::new(registry, runtime))
+    let mut evaluator = Evaluator::new(registry, runtime);
+    if let Some(path) = cache {
+        evaluator = evaluator.with_store(EvalStore::open(path)?);
+    }
+    Ok(evaluator)
 }
 
 fn smoke(artifacts: &PathBuf) -> Result<()> {
-    let evaluator = make_evaluator(artifacts)?;
+    let evaluator = make_evaluator(artifacts, None)?;
     let reg = &evaluator.registry;
     println!("manifest: {} ops", reg.ops.len());
     let task = reg.get("matmul_64").expect("matmul_64 in dataset");
@@ -192,8 +274,9 @@ fn optimize(
     model: &str,
     seed: u64,
     budget: usize,
+    cache: Option<&std::path::Path>,
 ) -> Result<()> {
-    let evaluator = make_evaluator(artifacts)?;
+    let evaluator = make_evaluator(artifacts, cache)?;
     let task = evaluator
         .registry
         .get(op)
@@ -233,14 +316,39 @@ fn optimize(
     if let Some(src) = rec.best_src {
         println!("\nbest kernel:\n{src}");
     }
+    if let Some(store) = evaluator.store() {
+        store.flush_session_stats()?;
+        println!(
+            "\neval cache: {} hits, {} misses ({} entries in {})",
+            store.hits(),
+            store.misses(),
+            store.len(),
+            store.path().display()
+        );
+    }
     Ok(())
 }
 
-fn campaign(artifacts: &PathBuf, cfg: CampaignConfig, out: &PathBuf) -> Result<()> {
-    let evaluator = make_evaluator(artifacts)?;
+fn campaign(
+    artifacts: &PathBuf,
+    cfg: CampaignConfig,
+    cache: Option<&std::path::Path>,
+    out: &PathBuf,
+) -> Result<()> {
+    let evaluator = make_evaluator(artifacts, cache)?;
+    let store = evaluator.store().cloned();
     let records = evoengineer::campaign::run(&cfg, evaluator)?;
     results::save(out, &records)?;
     println!("saved {} records to {}", records.len(), out.display());
+    if let Some(store) = store {
+        println!(
+            "eval cache: {} hits, {} misses this run ({} entries in {})",
+            store.hits(),
+            store.misses(),
+            store.len(),
+            store.path().display()
+        );
+    }
     println!("\n{}", report::table4(&records));
     Ok(())
 }
@@ -253,7 +361,15 @@ fn run_report(artifacts: &PathBuf, which: &str, records_path: &PathBuf, model: &
         }
         "methods" => report::methods_table(),
         _ => {
-            let records = results::load(records_path)?;
+            // Lenient load: a mid-campaign checkpoint journal (possibly
+            // with a torn final line) renders just as well as a
+            // completed records file.
+            if !records_path.exists() {
+                return Err(eyre!(
+                    "opening {records_path:?} — run `repro campaign` first"
+                ));
+            }
+            let records = results::load_lenient(records_path)?;
             match which {
                 "table4" => report::table4(&records),
                 "table7" => report::table7(&records),

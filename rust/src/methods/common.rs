@@ -93,6 +93,10 @@ pub struct KernelRunRecord {
     pub category: u8,
     pub seed: u64,
     pub trials: usize,
+    /// Trial budget the run was configured with. `trials <= budget`
+    /// (methods may stop early); recorded so a resumed campaign can
+    /// tell a journaled cell was produced under the same `--budget`.
+    pub budget: usize,
     pub compiled_trials: usize,
     pub correct_trials: usize,
     /// Best valid speedup vs baseline; 1.0 when no valid improvement
@@ -124,6 +128,7 @@ impl KernelRunRecord {
             ("category", Json::Num(self.category as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("trials", Json::Num(self.trials as f64)),
+            ("budget", Json::Num(self.budget as f64)),
             ("compiled_trials", Json::Num(self.compiled_trials as f64)),
             ("correct_trials", Json::Num(self.correct_trials as f64)),
             ("best_speedup", Json::Num(self.best_speedup)),
@@ -164,6 +169,12 @@ impl KernelRunRecord {
             category: n("category")? as u8,
             seed: n("seed")? as u64,
             trials: n("trials")? as usize,
+            // Absent in pre-checkpoint record files: assume the run
+            // consumed its whole budget.
+            budget: v
+                .get("budget")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(n("trials")? as usize),
             compiled_trials: n("compiled_trials")? as usize,
             correct_trials: n("correct_trials")? as usize,
             best_speedup: n("best_speedup")?,
@@ -237,7 +248,8 @@ impl<'a> Session<'a> {
         };
         let src = dsl::print(&spec);
         let mut rng = self.rng.derive("bootstrap");
-        let outcome = self.ctx.evaluator.evaluate(&src, self.ctx.task, &mut rng);
+        let outcome =
+            self.ctx.evaluator.evaluate_keyed(&src, self.ctx.task, self.ctx.model.name, &mut rng);
         let cand = self.candidate_from(src, outcome, 0, None);
         pop.insert(cand);
     }
@@ -332,9 +344,14 @@ impl<'a> Session<'a> {
         self.prompt_tokens += resp.prompt_tokens;
         self.completion_tokens += resp.completion_tokens;
 
-        // --- two-stage evaluation --------------------------------------
+        // --- two-stage evaluation (persistent-cache aware) ------------
         let mut eval_rng = self.rng.derive(&format!("eval/{trial_idx}"));
-        let outcome = self.ctx.evaluator.evaluate(&resp.text, self.ctx.task, &mut eval_rng);
+        let outcome = self.ctx.evaluator.evaluate_keyed(
+            &resp.text,
+            self.ctx.task,
+            self.ctx.model.name,
+            &mut eval_rng,
+        );
         self.trials_done += 1;
         if outcome.compiled() {
             self.compiled += 1;
@@ -407,6 +424,7 @@ impl<'a> Session<'a> {
             category: self.ctx.task.category,
             seed: self.ctx.seed,
             trials: self.trials_done,
+            budget: self.ctx.budget,
             compiled_trials: self.compiled,
             correct_trials: self.correct,
             best_speedup: self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0),

@@ -307,6 +307,7 @@ mod tests {
             category: cat,
             seed,
             trials: 45,
+            budget: 45,
             compiled_trials: 36,
             correct_trials: 27,
             best_speedup: speed,

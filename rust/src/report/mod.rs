@@ -1,6 +1,10 @@
 //! Report generators: one function per table/figure of the paper
 //! (DESIGN.md §6 experiment index). Each renders an ASCII view of the
 //! same rows/series the paper prints, from saved campaign records.
+//!
+//! Every generator aggregates whatever records it is given — a partial
+//! or resumed checkpoint journal (DESIGN.md §8) renders the same way a
+//! completed campaign does, just with fewer cells behind each number.
 
 use std::fmt::Write as _;
 
@@ -394,6 +398,7 @@ mod tests {
                     category: 1,
                     seed,
                     trials: 45,
+                    budget: 45,
                     compiled_trials: 36,
                     correct_trials: 27,
                     best_speedup: speed,

@@ -5,10 +5,10 @@
 //! The xla wrapper types hold raw C pointers and are `!Send`, so the
 //! client + compiled-executable cache live on one dedicated owner
 //! thread; callers talk to it over an mpsc channel. `Runtime` itself is
-//! cheap to clone and `Send + Sync`, which is what the tokio campaign
-//! orchestrator needs. Executables are compiled once per artifact path
-//! and cached for the lifetime of the runtime (the paper compiles each
-//! candidate once and times it many times).
+//! cheap to clone and `Send + Sync`, which is what the campaign's
+//! std::thread worker pool needs. Executables are compiled once per
+//! artifact path and cached for the lifetime of the runtime (the paper
+//! compiles each candidate once and times it many times).
 
 use std::collections::HashMap;
 use std::path::PathBuf;

@@ -1,0 +1,187 @@
+//! Content addressing for the evaluation cache: SHA-256 (FIPS 180-4,
+//! self-contained — the build environment is offline, so no crypto
+//! crate) plus the canonicalization rule that makes the key stable.
+//!
+//! A candidate's identity is its *canonical printed form*: the raw LLM
+//! emission is parsed and re-emitted through [`crate::dsl::printer`],
+//! so two textually different programs that parse to the same
+//! [`crate::dsl::KernelSpec`] (whitespace, token spacing) share one
+//! key, while any semantic or schedule difference changes it. The op
+//! name is mixed into the digest (NUL-separated) because the same text
+//! evaluates differently under different tasks (the `WrongOp` gate).
+
+use crate::dsl;
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+    0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+    0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+    0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+    0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+    0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+    0xc67178f2,
+];
+
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+    0x5be0cd19,
+];
+
+/// SHA-256 digest of `data`.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = H0;
+    let bit_len = (data.len() as u64).wrapping_mul(8);
+
+    // Padded message: data || 0x80 || zeros || 8-byte big-endian length.
+    let mut msg = Vec::with_capacity(data.len() + 72);
+    msg.extend_from_slice(data);
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bit_len.to_be_bytes());
+
+    let mut w = [0u32; 64];
+    for block in msg.chunks_exact(64) {
+        for (i, word) in w.iter_mut().take(16).enumerate() {
+            *word = u32::from_be_bytes([
+                block[4 * i],
+                block[4 * i + 1],
+                block[4 * i + 2],
+                block[4 * i + 3],
+            ]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+
+    let mut out = [0u8; 32];
+    for (i, word) in h.iter().enumerate() {
+        out[4 * i..4 * i + 4].copy_from_slice(&word.to_be_bytes());
+    }
+    out
+}
+
+/// Lowercase-hex SHA-256 of `data`.
+pub fn sha256_hex(data: &[u8]) -> String {
+    let mut s = String::with_capacity(64);
+    for b in sha256(data) {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Content-addressed identity of one (candidate, op) evaluation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EvalKey(pub String);
+
+impl EvalKey {
+    /// Key from an already-canonical printed form.
+    pub fn from_canonical(op: &str, canonical: &str) -> Self {
+        let mut buf = Vec::with_capacity(op.len() + 1 + canonical.len());
+        buf.extend_from_slice(op.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(canonical.as_bytes());
+        EvalKey(sha256_hex(&buf))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+/// Key for a raw candidate emission: parse, re-print canonically, hash.
+/// `None` when the text does not parse — unparseable candidates are a
+/// cheap deterministic `CompileFail` and are not worth a journal entry.
+pub fn key_for_source(op: &str, src: &str) -> Option<EvalKey> {
+    let spec = dsl::parse(src).ok()?;
+    Some(EvalKey::from_canonical(op, &dsl::print(&spec)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::KernelSpec;
+
+    #[test]
+    fn fips_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn multi_block_input() {
+        // > 64 bytes forces a second compression block.
+        let long = vec![b'a'; 200];
+        assert_eq!(sha256_hex(&long).len(), 64);
+        assert_ne!(sha256_hex(&long), sha256_hex(&long[..199]));
+    }
+
+    #[test]
+    fn key_is_canonical_not_textual() {
+        let spec = KernelSpec::baseline("matmul_64");
+        let src = crate::dsl::print(&spec);
+        // Same program, different surface text (whitespace churn).
+        let noisy = src.replace("; ", ";   ").replace("{\n", "{\n\n");
+        assert_ne!(src, noisy);
+        assert_eq!(
+            key_for_source("matmul_64", &src),
+            key_for_source("matmul_64", &noisy)
+        );
+        // Different op ⇒ different key for identical text.
+        assert_ne!(
+            key_for_source("matmul_64", &src),
+            key_for_source("softmax_64", &src)
+        );
+        // Unparseable ⇒ no key.
+        assert_eq!(key_for_source("matmul_64", "__global__ void k() {}"), None);
+    }
+}

@@ -1,0 +1,706 @@
+//! Persistent, content-addressed evaluation cache (DESIGN.md §8).
+//!
+//! The campaign grid (6 methods × 3 LLMs × 91 ops × 3 seeds × 45
+//! trials ≈ 73k candidate evaluations) re-discovers the same kernels
+//! constantly: every method bootstraps from the op's baseline schedule,
+//! and the SimLLM's mutation moves revisit popular schedule points
+//! across methods and seeds. The two-stage pipeline result for a
+//! candidate is *deterministic given its canonical form and the op* —
+//! compile gating, the PJRT functional verdict, and the noise-free
+//! cost-model timing contain no randomness (measurement noise is
+//! applied to the stored timing at replay time, from the caller's RNG
+//! stream, so a cache hit is bit-identical to a cold evaluation).
+//!
+//! [`EvalStore`] therefore journals every
+//! `(kernel_hash, op) → {verdict, functional diff, timing}` record to
+//! an append-only JSONL file (default: `<artifacts>/eval_cache.jsonl`)
+//! and serves lookups from an in-memory index. Identical candidates
+//! are evaluated exactly once across the whole campaign *and across
+//! process restarts*. The journaled `model` field is provenance only —
+//! the pipeline's verdicts do not depend on which LLM emitted the
+//! text, so keying on it would forfeit cross-model deduplication.
+//!
+//! What is deliberately **not** cached:
+//! * unparseable candidates — rejecting them is already the cheapest
+//!   path, and raw defect text has no canonical form;
+//! * `RuntimeFail` outcomes — PJRT/infrastructure errors may be
+//!   transient and must not poison a persistent store.
+//!
+//! Durability model: one line per record, flushed on write; a process
+//! killed mid-write corrupts at most the final line, which the loader
+//! skips (with a warning). `cache gc` compacts duplicate keys and
+//! folds the per-session `stats` trailer lines into one.
+
+pub mod hash;
+
+pub use hash::{key_for_source, sha256_hex, EvalKey};
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::costmodel::{BoundKind, Timing};
+use crate::util::json::{self, Json};
+use crate::{eyre, Result, WrapErr as _};
+
+/// The deterministic, replayable part of one candidate evaluation.
+#[derive(Debug, Clone)]
+pub enum StoredOutcome {
+    /// Stage-1 rejection (syntax / validation / resolution) — the
+    /// exact error string the compile gate produced.
+    CompileFail { error: String },
+    /// Stage-2 rejection: compiled but wrong numerics on PJRT.
+    FunctionalFail { max_abs_diff: f64 },
+    /// Cleared both gates; the noise-free cost-model timing. Measured
+    /// (noisy) numbers are re-derived at replay time.
+    Ok { timing: Timing },
+}
+
+/// One journal entry: outcome plus provenance.
+#[derive(Debug, Clone)]
+pub struct StoredEval {
+    pub op: String,
+    /// Which LLM first produced this candidate (provenance only; not
+    /// part of the lookup key — see module docs).
+    pub model: String,
+    pub outcome: StoredOutcome,
+}
+
+/// Append-only JSONL store with an in-memory index. Cheap to share:
+/// wrap in `Arc` and clone the handle.
+pub struct EvalStore {
+    path: PathBuf,
+    map: RwLock<HashMap<String, StoredEval>>,
+    writer: Mutex<std::fs::File>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Aggregate numbers for `cache stats` / `cache gc`.
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    pub entries: usize,
+    pub ok: usize,
+    pub compile_fail: usize,
+    pub functional_fail: usize,
+    pub ops: usize,
+    /// Cumulative hits/misses folded from journaled `stats` lines.
+    pub hits: u64,
+    pub misses: u64,
+    pub file_bytes: u64,
+    pub journal_lines: usize,
+}
+
+impl EvalStore {
+    /// Open (or create) the journal at `path` and index its entries.
+    /// The torn tail of a killed process is truncated before the
+    /// append handle opens (a fresh record must never concatenate onto
+    /// partial bytes); any other corrupt line is skipped with a
+    /// warning — the cache is advisory, never fatal.
+    pub fn open(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).context("creating eval-cache dir")?;
+            }
+        }
+        let torn = crate::util::truncate_torn_tail(&path).context("repairing eval-cache tail")?;
+        if torn > 0 {
+            eprintln!(
+                "warning: eval cache {}: truncated {torn} bytes of torn final line",
+                path.display()
+            );
+        }
+        let mut map = HashMap::new();
+        if path.exists() {
+            let f = std::fs::File::open(&path).context("opening eval cache")?;
+            for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse_line(&line) {
+                    Ok(Line::Eval { key, entry }) => {
+                        map.entry(key).or_insert(entry);
+                    }
+                    Ok(Line::Stats { .. }) => {}
+                    Err(e) => {
+                        eprintln!(
+                            "warning: eval cache {}: skipping bad line {}: {e}",
+                            path.display(),
+                            i + 1
+                        );
+                    }
+                }
+            }
+        }
+        let writer = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .context("opening eval cache for append")?;
+        Ok(Arc::new(Self {
+            path,
+            map: RwLock::new(map),
+            writer: Mutex::new(writer),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Cached result for `key`, counting a hit or miss.
+    pub fn lookup(&self, key: &EvalKey) -> Option<StoredEval> {
+        let found = self.map.read().unwrap().get(key.as_str()).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert + journal a fresh record. A key that is already present
+    /// (e.g. two workers racing on the same candidate) is left as-is
+    /// and not re-journaled.
+    pub fn record(&self, key: &EvalKey, entry: StoredEval) -> Result<()> {
+        {
+            let mut g = self.map.write().unwrap();
+            if g.contains_key(key.as_str()) {
+                return Ok(());
+            }
+            g.insert(key.as_str().to_string(), entry.clone());
+        }
+        let line = eval_line(key, &entry).to_string();
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(line.as_bytes())?;
+        w.write_all(b"\n")?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Unique cached evaluations.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hits served by this process.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Misses seen by this process.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Journal this session's hit/miss counters so `cache stats` can
+    /// report cumulative savings across process lifetimes. Call once
+    /// at the end of a campaign/run; a no-op when nothing was looked
+    /// up.
+    pub fn flush_session_stats(&self) -> Result<()> {
+        let (h, m) = (self.hits(), self.misses());
+        if h == 0 && m == 0 {
+            return Ok(());
+        }
+        let line = Json::obj(vec![
+            ("type", Json::Str("stats".into())),
+            ("hits", Json::Num(h as f64)),
+            ("misses", Json::Num(m as f64)),
+        ])
+        .to_string();
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(line.as_bytes())?;
+        w.write_all(b"\n")?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read-only aggregate view of a journal on disk.
+    pub fn stats(path: impl AsRef<Path>) -> Result<StoreStats> {
+        let path = path.as_ref();
+        let mut s = StoreStats::default();
+        if !path.exists() {
+            return Ok(s);
+        }
+        s.file_bytes = std::fs::metadata(path)?.len();
+        let f = std::fs::File::open(path).context("opening eval cache")?;
+        let mut seen = std::collections::HashSet::new();
+        let mut ops = std::collections::HashSet::new();
+        for line in std::io::BufReader::new(f).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            s.journal_lines += 1;
+            match parse_line(&line) {
+                Ok(Line::Eval { key, entry }) => {
+                    if !seen.insert(key) {
+                        continue;
+                    }
+                    s.entries += 1;
+                    ops.insert(entry.op.clone());
+                    match entry.outcome {
+                        StoredOutcome::Ok { .. } => s.ok += 1,
+                        StoredOutcome::CompileFail { .. } => s.compile_fail += 1,
+                        StoredOutcome::FunctionalFail { .. } => s.functional_fail += 1,
+                    }
+                }
+                Ok(Line::Stats { hits, misses }) => {
+                    s.hits += hits;
+                    s.misses += misses;
+                }
+                Err(_) => {}
+            }
+        }
+        s.ops = ops.len();
+        Ok(s)
+    }
+
+    /// Compact the journal in place: one line per unique key (first
+    /// occurrence wins — the journal is append-only, so the first line
+    /// is the original evaluation), all `stats` lines folded into one,
+    /// corrupt lines dropped. Returns (bytes_before, bytes_after).
+    pub fn gc(path: impl AsRef<Path>) -> Result<(u64, u64)> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(eyre!("no eval cache at {}", path.display()));
+        }
+        let before = std::fs::metadata(path)?.len();
+        let f = std::fs::File::open(path).context("opening eval cache")?;
+        let mut seen = std::collections::HashSet::new();
+        let mut kept: Vec<String> = Vec::new();
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for line in std::io::BufReader::new(f).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_line(&line) {
+                Ok(Line::Eval { key, .. }) => {
+                    if seen.insert(key) {
+                        kept.push(line);
+                    }
+                }
+                Ok(Line::Stats { hits: h, misses: m }) => {
+                    hits += h;
+                    misses += m;
+                }
+                Err(_) => {}
+            }
+        }
+        if hits > 0 || misses > 0 {
+            kept.push(
+                Json::obj(vec![
+                    ("type", Json::Str("stats".into())),
+                    ("hits", Json::Num(hits as f64)),
+                    ("misses", Json::Num(misses as f64)),
+                ])
+                .to_string(),
+            );
+        }
+        let tmp = path.with_extension("jsonl.gc.tmp");
+        {
+            let mut w = std::io::BufWriter::new(
+                std::fs::File::create(&tmp).context("creating gc temp file")?,
+            );
+            for line in &kept {
+                w.write_all(line.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path).context("replacing eval cache")?;
+        let after = std::fs::metadata(path)?.len();
+        Ok((before, after))
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSONL (de)serialization — util::json, no serde (offline environment).
+
+enum Line {
+    Eval { key: String, entry: StoredEval },
+    Stats { hits: u64, misses: u64 },
+}
+
+/// f64 → Json, preserving non-finite values (a shape-mismatch
+/// functional diff is `inf`, which bare JSON numbers cannot carry).
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn get_num(v: &Json, key: &str) -> Result<f64> {
+    match v.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(Json::Str(s)) => match s.as_str() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" => Ok(f64::NAN),
+            other => Err(eyre!("bad numeric field `{key}`: {other}")),
+        },
+        _ => Err(eyre!("missing numeric field `{key}`")),
+    }
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(String::from)
+        .ok_or_else(|| eyre!("missing string field `{key}`"))
+}
+
+fn bound_str(b: BoundKind) -> &'static str {
+    match b {
+        BoundKind::Compute => "compute",
+        BoundKind::Memory => "memory",
+        BoundKind::Launch => "launch",
+    }
+}
+
+fn bound_from(s: &str) -> Result<BoundKind> {
+    match s {
+        "compute" => Ok(BoundKind::Compute),
+        "memory" => Ok(BoundKind::Memory),
+        "launch" => Ok(BoundKind::Launch),
+        other => Err(eyre!("unknown bound kind `{other}`")),
+    }
+}
+
+fn timing_to_json(t: &Timing) -> Json {
+    Json::obj(vec![
+        ("time", num(t.time)),
+        ("t_compute", num(t.t_compute)),
+        ("t_mem", num(t.t_mem)),
+        ("t_overhead", num(t.t_overhead)),
+        ("traffic", num(t.traffic)),
+        ("occupancy", num(t.occupancy)),
+        ("eff_compute", num(t.eff_compute)),
+        ("eff_bw", num(t.eff_bw)),
+        ("launches", Json::Num(t.launches as f64)),
+        ("bound", Json::Str(bound_str(t.bound).into())),
+    ])
+}
+
+fn timing_from_json(v: &Json) -> Result<Timing> {
+    Ok(Timing {
+        time: get_num(v, "time")?,
+        t_compute: get_num(v, "t_compute")?,
+        t_mem: get_num(v, "t_mem")?,
+        t_overhead: get_num(v, "t_overhead")?,
+        traffic: get_num(v, "traffic")?,
+        occupancy: get_num(v, "occupancy")?,
+        eff_compute: get_num(v, "eff_compute")?,
+        eff_bw: get_num(v, "eff_bw")?,
+        launches: get_num(v, "launches")? as u32,
+        bound: bound_from(&get_str(v, "bound")?)?,
+    })
+}
+
+fn eval_line(key: &EvalKey, entry: &StoredEval) -> Json {
+    let mut fields = vec![
+        ("type", Json::Str("eval".into())),
+        ("key", Json::Str(key.as_str().to_string())),
+        ("op", Json::Str(entry.op.clone())),
+        ("model", Json::Str(entry.model.clone())),
+    ];
+    match &entry.outcome {
+        StoredOutcome::Ok { timing } => {
+            fields.push(("outcome", Json::Str("ok".into())));
+            fields.push(("timing", timing_to_json(timing)));
+        }
+        StoredOutcome::CompileFail { error } => {
+            fields.push(("outcome", Json::Str("compile_fail".into())));
+            fields.push(("error", Json::Str(error.clone())));
+        }
+        StoredOutcome::FunctionalFail { max_abs_diff } => {
+            fields.push(("outcome", Json::Str("functional_fail".into())));
+            fields.push(("max_abs_diff", num(*max_abs_diff)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn parse_line(line: &str) -> Result<Line> {
+    let v = json::parse(line).map_err(|e| eyre!("{e}"))?;
+    match v.get("type").and_then(|t| t.as_str()) {
+        Some("stats") => Ok(Line::Stats {
+            hits: v.get("hits").and_then(|x| x.as_u64()).unwrap_or(0),
+            misses: v.get("misses").and_then(|x| x.as_u64()).unwrap_or(0),
+        }),
+        Some("eval") => {
+            let key = get_str(&v, "key")?;
+            let op = get_str(&v, "op")?;
+            let model = get_str(&v, "model")?;
+            let outcome = match get_str(&v, "outcome")?.as_str() {
+                "ok" => StoredOutcome::Ok {
+                    timing: timing_from_json(
+                        v.get("timing").ok_or_else(|| eyre!("missing timing"))?,
+                    )?,
+                },
+                "compile_fail" => StoredOutcome::CompileFail { error: get_str(&v, "error")? },
+                "functional_fail" => StoredOutcome::FunctionalFail {
+                    max_abs_diff: get_num(&v, "max_abs_diff")?,
+                },
+                other => return Err(eyre!("unknown outcome `{other}`")),
+            };
+            Ok(Line::Eval { key, entry: StoredEval { op, model, outcome } })
+        }
+        other => Err(eyre!("unknown journal line type {other:?}")),
+    }
+}
+
+/// Human-readable `cache stats` rendering.
+pub fn stats_report(path: impl AsRef<Path>, s: &StoreStats) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    writeln!(out, "eval cache: {}", path.as_ref().display()).unwrap();
+    writeln!(
+        out,
+        "  entries: {} unique ({} journal lines, {} bytes)",
+        s.entries, s.journal_lines, s.file_bytes
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "  outcomes: {} ok, {} compile_fail, {} functional_fail",
+        s.ok, s.compile_fail, s.functional_fail
+    )
+    .unwrap();
+    writeln!(out, "  ops covered: {}", s.ops).unwrap();
+    writeln!(
+        out,
+        "  cumulative: {} hits, {} misses ({} evaluations saved)",
+        s.hits, s.misses, s.hits
+    )
+    .unwrap();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("evo_store_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_timing() -> Timing {
+        Timing {
+            time: 1.25e-4,
+            t_compute: 9e-5,
+            t_mem: 1.2e-4,
+            t_overhead: 5e-6,
+            traffic: 3.2e6,
+            occupancy: 0.66,
+            eff_compute: 0.4,
+            eff_bw: 0.8,
+            launches: 2,
+            bound: BoundKind::Memory,
+        }
+    }
+
+    #[test]
+    fn journal_roundtrip_across_reopen() {
+        let dir = tmpdir("rt");
+        let path = dir.join("cache.jsonl");
+        let k1 = EvalKey::from_canonical("matmul_64", "kernel a");
+        let k2 = EvalKey::from_canonical("matmul_64", "kernel b");
+        let k3 = EvalKey::from_canonical("relu_64", "kernel c");
+        {
+            let store = EvalStore::open(&path).unwrap();
+            store
+                .record(
+                    &k1,
+                    StoredEval {
+                        op: "matmul_64".into(),
+                        model: "GPT-4.1".into(),
+                        outcome: StoredOutcome::Ok { timing: sample_timing() },
+                    },
+                )
+                .unwrap();
+            store
+                .record(
+                    &k2,
+                    StoredEval {
+                        op: "matmul_64".into(),
+                        model: "Claude-Sonnet-4".into(),
+                        outcome: StoredOutcome::CompileFail {
+                            error: "validation error: smem overflow".into(),
+                        },
+                    },
+                )
+                .unwrap();
+            store
+                .record(
+                    &k3,
+                    StoredEval {
+                        op: "relu_64".into(),
+                        model: "DeepSeek-V3.1".into(),
+                        outcome: StoredOutcome::FunctionalFail {
+                            max_abs_diff: f64::INFINITY,
+                        },
+                    },
+                )
+                .unwrap();
+        }
+        let store = EvalStore::open(&path).unwrap();
+        assert_eq!(store.len(), 3);
+        match store.lookup(&k1).unwrap().outcome {
+            StoredOutcome::Ok { timing } => {
+                assert_eq!(timing.time, 1.25e-4);
+                assert_eq!(timing.launches, 2);
+                assert_eq!(timing.bound, BoundKind::Memory);
+            }
+            other => panic!("{other:?}"),
+        }
+        match store.lookup(&k2).unwrap().outcome {
+            StoredOutcome::CompileFail { error } => assert!(error.contains("smem")),
+            other => panic!("{other:?}"),
+        }
+        match store.lookup(&k3).unwrap().outcome {
+            StoredOutcome::FunctionalFail { max_abs_diff } => {
+                assert!(max_abs_diff.is_infinite())
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(store.hits(), 3);
+        assert_eq!(store.misses(), 0);
+        assert!(store.lookup(&EvalKey::from_canonical("x", "y")).is_none());
+        assert_eq!(store.misses(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_skipped() {
+        let dir = tmpdir("torn");
+        let path = dir.join("cache.jsonl");
+        let k = EvalKey::from_canonical("matmul_64", "kernel a");
+        {
+            let store = EvalStore::open(&path).unwrap();
+            store
+                .record(
+                    &k,
+                    StoredEval {
+                        op: "matmul_64".into(),
+                        model: "-".into(),
+                        outcome: StoredOutcome::CompileFail { error: "x".into() },
+                    },
+                )
+                .unwrap();
+        }
+        // Simulate a kill mid-append: torn, unparseable final line.
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"type\":\"eval\",\"key\":\"dead").unwrap();
+        }
+        // Reopen truncates the torn tail; a fresh record appended after
+        // the repair must not merge with the partial bytes.
+        let k2 = EvalKey::from_canonical("relu_64", "kernel b");
+        {
+            let store = EvalStore::open(&path).unwrap();
+            assert_eq!(store.len(), 1);
+            assert!(store.lookup(&k).is_some());
+            store
+                .record(
+                    &k2,
+                    StoredEval {
+                        op: "relu_64".into(),
+                        model: "-".into(),
+                        outcome: StoredOutcome::CompileFail { error: "y".into() },
+                    },
+                )
+                .unwrap();
+        }
+        let store = EvalStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2);
+        assert!(store.lookup(&k).is_some());
+        assert!(store.lookup(&k2).is_some());
+        // Every surviving line is well-formed (no merged garbage).
+        let s = EvalStore::stats(&path).unwrap();
+        assert_eq!(s.journal_lines, 2);
+        assert_eq!(s.entries, 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn gc_compacts_and_folds_stats() {
+        let dir = tmpdir("gc");
+        let path = dir.join("cache.jsonl");
+        let k = EvalKey::from_canonical("matmul_64", "kernel a");
+        {
+            let store = EvalStore::open(&path).unwrap();
+            store
+                .record(
+                    &k,
+                    StoredEval {
+                        op: "matmul_64".into(),
+                        model: "-".into(),
+                        outcome: StoredOutcome::Ok { timing: sample_timing() },
+                    },
+                )
+                .unwrap();
+            store.lookup(&k);
+            store.flush_session_stats().unwrap();
+        }
+        // A second session appends a duplicate line for the same key
+        // (as two racing processes would) plus its own stats.
+        {
+            use std::io::Write as _;
+            let entry = StoredEval {
+                op: "matmul_64".into(),
+                model: "-".into(),
+                outcome: StoredOutcome::Ok { timing: sample_timing() },
+            };
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{}", eval_line(&k, &entry).to_string()).unwrap();
+            writeln!(
+                f,
+                "{}",
+                Json::obj(vec![
+                    ("type", Json::Str("stats".into())),
+                    ("hits", Json::Num(4.0)),
+                    ("misses", Json::Num(2.0)),
+                ])
+                .to_string()
+            )
+            .unwrap();
+            writeln!(f, "not json at all").unwrap();
+        }
+        let before_stats = EvalStore::stats(&path).unwrap();
+        assert_eq!(before_stats.entries, 1);
+        assert_eq!(before_stats.hits, 5); // 1 + 4
+        assert_eq!(before_stats.misses, 3); // 1 + 2
+
+        let (before, after) = EvalStore::gc(&path).unwrap();
+        assert!(after < before, "{after} !< {before}");
+        let s = EvalStore::stats(&path).unwrap();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.journal_lines, 2); // 1 eval + 1 folded stats
+        assert_eq!(s.hits, 5);
+        assert_eq!(s.misses, 3);
+        // Journal still loads and serves the entry.
+        let store = EvalStore::open(&path).unwrap();
+        assert!(store.lookup(&k).is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

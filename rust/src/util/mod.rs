@@ -1,4 +1,5 @@
-//! Small shared utilities: deterministic RNG and statistics.
+//! Small shared utilities: deterministic RNG, statistics, a serde-free
+//! JSON reader/writer, and the offline criterion-style bench harness.
 
 pub mod bench;
 pub mod json;
@@ -7,3 +8,56 @@ pub mod stats;
 
 pub use rng::Rng;
 pub use stats::{mean, median, pearson, percentile};
+
+/// Repair a JSONL journal whose writer was killed mid-append: every
+/// well-formed line ends in `\n`, so any bytes after the final newline
+/// are a torn partial write. Truncates them (the whole file, when it
+/// contains no newline at all) so re-opening for append cannot
+/// concatenate a fresh record onto the torn tail and turn a
+/// recoverable loss into interior corruption. Returns the number of
+/// bytes trimmed; missing file is a no-op.
+pub fn truncate_torn_tail(path: &std::path::Path) -> std::io::Result<u64> {
+    let Ok(meta) = std::fs::metadata(path) else {
+        return Ok(0);
+    };
+    if meta.len() == 0 {
+        return Ok(0);
+    }
+    let bytes = std::fs::read(path)?;
+    let keep = match bytes.iter().rposition(|&b| b == b'\n') {
+        Some(pos) => (pos + 1) as u64,
+        None => 0,
+    };
+    let torn = meta.len().saturating_sub(keep);
+    if torn > 0 {
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(keep)?;
+    }
+    Ok(torn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torn_tail_truncation() {
+        let dir = std::env::temp_dir().join(format!("evo_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("j.jsonl");
+        // Missing file: no-op.
+        assert_eq!(truncate_torn_tail(&p).unwrap(), 0);
+        // Clean journal: untouched.
+        std::fs::write(&p, "{\"a\":1}\n{\"b\":2}\n").unwrap();
+        assert_eq!(truncate_torn_tail(&p).unwrap(), 0);
+        // Torn tail: trimmed back to the last complete line.
+        std::fs::write(&p, "{\"a\":1}\n{\"b\":2}\n{\"c\":").unwrap();
+        assert_eq!(truncate_torn_tail(&p).unwrap(), 5);
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"a\":1}\n{\"b\":2}\n");
+        // No newline at all: the whole file is one torn line.
+        std::fs::write(&p, "{\"a\"").unwrap();
+        assert_eq!(truncate_torn_tail(&p).unwrap(), 4);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,278 @@
+//! Persistent evaluation cache + campaign checkpoint/resume
+//! (DESIGN.md §8): hash stability, replay bit-identity, cross-method
+//! deduplication, and the kill-and-resume guarantee — a campaign
+//! interrupted mid-sweep and resumed must produce byte-identical
+//! records and reports to an uninterrupted run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::costmodel::baseline_schedule;
+use evoengineer::dsl::{self, KernelSpec};
+use evoengineer::evals::{EvalOutcome, Evaluator};
+use evoengineer::report;
+use evoengineer::runtime::Runtime;
+use evoengineer::store::{key_for_source, EvalStore};
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::util::Rng;
+
+fn registry() -> Arc<TaskRegistry> {
+    Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    )
+}
+
+fn evaluator() -> Evaluator {
+    Evaluator::new(registry(), Runtime::new().unwrap())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("evo_cache_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn baseline_src(op: &str, reg: &TaskRegistry) -> String {
+    let task = reg.get(op).unwrap();
+    dsl::print(&KernelSpec {
+        op: task.name.clone(),
+        semantics: "opt".into(),
+        schedule: baseline_schedule(task),
+    })
+}
+
+#[test]
+fn key_stable_under_whitespace_and_reprint() {
+    // No artifacts needed: keying is parse → canonical print → hash.
+    let spec = KernelSpec::baseline("matmul_64");
+    let src = dsl::print(&spec);
+    let reprinted = dsl::print(&dsl::parse(&src).unwrap());
+    let noisy = format!("  {}\n\n# trailing comment\n", src.replace("; ", " ;\n   "));
+    assert_ne!(src, noisy);
+    let k = key_for_source("matmul_64", &src).unwrap();
+    assert_eq!(k, key_for_source("matmul_64", &reprinted).unwrap());
+    assert_eq!(k, key_for_source("matmul_64", &noisy).unwrap());
+
+    // Any semantic or schedule change moves the key.
+    let mut other = spec.clone();
+    other.schedule.vector_width = spec.schedule.vector_width * 2;
+    assert_ne!(
+        k,
+        key_for_source("matmul_64", &dsl::print(&other)).unwrap()
+    );
+    let mut bug = spec;
+    bug.semantics = "bug_scale".into();
+    assert_ne!(k, key_for_source("matmul_64", &dsl::print(&bug)).unwrap());
+}
+
+/// Field-exact equality for outcomes (EvalOutcome has no PartialEq —
+/// Timing carries floats we want compared bit-for-bit here).
+fn assert_outcome_identical(a: &EvalOutcome, b: &EvalOutcome) {
+    match (a, b) {
+        (EvalOutcome::Ok(x), EvalOutcome::Ok(y)) => {
+            assert_eq!(x.time, y.time);
+            assert_eq!(x.speedup, y.speedup);
+            assert_eq!(x.pytorch_speedup, y.pytorch_speedup);
+            assert_eq!(x.true_speedup, y.true_speedup);
+            assert_eq!(x.true_pytorch_speedup, y.true_pytorch_speedup);
+            assert_eq!(x.timing.time, y.timing.time);
+            assert_eq!(x.timing.occupancy, y.timing.occupancy);
+            assert_eq!(x.timing.launches, y.timing.launches);
+        }
+        (
+            EvalOutcome::CompileFail { error: ea },
+            EvalOutcome::CompileFail { error: eb },
+        ) => assert_eq!(ea, eb),
+        (
+            EvalOutcome::FunctionalFail { max_abs_diff: da },
+            EvalOutcome::FunctionalFail { max_abs_diff: db },
+        ) => assert_eq!(da, db),
+        (x, y) => panic!("outcome kinds differ: {x:?} vs {y:?}"),
+    }
+}
+
+#[test]
+fn replay_is_bit_identical_to_cold_evaluation() {
+    let dir = tmpdir("replay");
+    let cache = dir.join("cache.jsonl");
+    let reg = registry();
+    let task = reg.get("softmax_64").unwrap().clone();
+    let src = baseline_src("softmax_64", &reg);
+    let garbage = "kernel softmax_64 { semantics opt }"; // parse error
+    let mut bug = dsl::parse(&src).unwrap();
+    bug.semantics = "bug_offset".into();
+    let bug_src = dsl::print(&bug);
+
+    // Ground truth: a plain evaluator with no persistent cache.
+    let plain = evaluator();
+    let eval_plain = |s: &str| {
+        let mut rng = Rng::new(7).derive("replay-test");
+        plain.evaluate(s, &task, &mut rng)
+    };
+
+    // Leg 1 populates the journal (cold misses)…
+    {
+        let ev = evaluator().with_store(EvalStore::open(&cache).unwrap());
+        for s in [src.as_str(), bug_src.as_str(), garbage] {
+            let mut rng = Rng::new(7).derive("replay-test");
+            assert_outcome_identical(&eval_plain(s), &ev.evaluate(s, &task, &mut rng));
+        }
+        let store = ev.store().unwrap();
+        assert_eq!(store.len(), 2, "garbage must not be journaled");
+        assert_eq!(store.hits(), 0);
+    }
+    // …leg 2 is a fresh process: everything replays from disk,
+    // bit-identical under the same RNG stream.
+    {
+        let ev = evaluator().with_store(EvalStore::open(&cache).unwrap());
+        for s in [src.as_str(), bug_src.as_str()] {
+            let mut rng = Rng::new(7).derive("replay-test");
+            assert_outcome_identical(&eval_plain(s), &ev.evaluate(s, &task, &mut rng));
+        }
+        assert_eq!(ev.store().unwrap().hits(), 2);
+        assert_eq!(ev.store().unwrap().misses(), 0);
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cross_method_dedup_evaluates_once() {
+    let dir = tmpdir("dedup");
+    let cache = dir.join("cache.jsonl");
+    let reg = registry();
+    let task = reg.get("relu_64").unwrap().clone();
+    let src = baseline_src("relu_64", &reg);
+    let noisy = src.replace("; ", ";  "); // different text, same kernel
+
+    let ev = evaluator().with_store(EvalStore::open(&cache).unwrap());
+    // The same candidate arriving from different methods/models/texts:
+    // one real evaluation, the rest served from the store.
+    let mut rng = Rng::new(1);
+    ev.evaluate_keyed(&src, &task, "GPT-4.1", &mut rng);
+    ev.evaluate_keyed(&noisy, &task, "Claude-Sonnet-4", &mut rng);
+    ev.evaluate_keyed(&src, &task, "DeepSeek-V3.1", &mut rng);
+    let store = ev.store().unwrap();
+    assert_eq!(store.len(), 1, "identical candidates must share one entry");
+    assert_eq!(store.misses(), 1);
+    assert_eq!(store.hits(), 2);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn killed_campaign_resumes_to_identical_report() {
+    let dir = tmpdir("resume");
+    let checkpoint = dir.join("records.jsonl.checkpoint.jsonl");
+    let cache = dir.join("eval_cache.jsonl");
+    // Methods that do not read the cross-op archive (aicuda's RAG is
+    // scheduling-dependent); everything else is deterministic per cell.
+    let base = CampaignConfig {
+        methods: vec!["evoengineer-free".into(), "funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0, 1],
+        max_ops: 2,
+        budget: 4,
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+
+    // Reference: one uninterrupted run, no checkpoint, no cache.
+    let full = campaign::run(&base, evaluator()).unwrap();
+    assert_eq!(full.len(), 8);
+
+    // Leg 1: same sweep, checkpointed + cached, killed after 3 cells.
+    let leg1_cfg = CampaignConfig {
+        checkpoint: Some(checkpoint.clone()),
+        stop_after: 3,
+        concurrency: 1,
+        ..base.clone()
+    };
+    let ev1 = evaluator().with_store(EvalStore::open(&cache).unwrap());
+    let partial = campaign::run(&leg1_cfg, ev1).unwrap();
+    assert!(partial.len() >= 3 && partial.len() < full.len(), "{}", partial.len());
+
+    // Harden the kill simulation: a real SIGKILL can tear the final
+    // journal line mid-write. Resume must repair, not trip over it.
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&checkpoint).unwrap();
+        write!(f, "{{\"method\":\"Evo").unwrap();
+    }
+
+    // Leg 2: resume. Must complete the grid and match the reference
+    // byte for byte, with warm cache hits on the second leg.
+    let leg2_cfg = CampaignConfig {
+        checkpoint: Some(checkpoint.clone()),
+        resume: true,
+        ..base.clone()
+    };
+    let ev2 = evaluator().with_store(EvalStore::open(&cache).unwrap());
+    let store2 = ev2.store().unwrap().clone();
+    let resumed = campaign::run(&leg2_cfg, ev2).unwrap();
+    assert_eq!(resumed.len(), full.len());
+    for (a, b) in full.iter().zip(&resumed) {
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "resumed record differs for {}/{}/{}/{}",
+            a.method,
+            a.model,
+            a.op,
+            a.seed
+        );
+    }
+    assert_eq!(report::table4(&full), report::table4(&resumed));
+    assert_eq!(report::fig1(&full), report::fig1(&resumed));
+    assert!(
+        store2.hits() > 0,
+        "second leg must be served warm candidates from the first"
+    );
+    // `cache stats` sees the journaled session counters.
+    let stats = EvalStore::stats(&cache).unwrap();
+    assert!(stats.hits >= store2.hits());
+    assert!(stats.entries > 0);
+
+    // Resuming a *finished* campaign runs nothing and still reports
+    // identically (all cells come from the journal).
+    let ev3 = evaluator();
+    let replayed = campaign::run(&leg2_cfg, ev3).unwrap();
+    assert_eq!(report::table4(&full), report::table4(&replayed));
+
+    // Resuming under a different --budget must re-run every cell
+    // rather than silently merging mixed-budget records.
+    let other_budget = CampaignConfig {
+        budget: 3,
+        checkpoint: Some(checkpoint.clone()),
+        resume: true,
+        ..base.clone()
+    };
+    let rerun = campaign::run(&other_budget, evaluator()).unwrap();
+    assert_eq!(rerun.len(), full.len());
+    assert!(rerun.iter().all(|r| r.budget == 3 && r.trials <= 3));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn checkpoint_journal_feeds_reports_midway() {
+    let dir = tmpdir("midreport");
+    let checkpoint = dir.join("ckpt.jsonl");
+    let cfg = CampaignConfig {
+        methods: vec!["evoengineer-free".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        max_ops: 2,
+        budget: 3,
+        quiet: true,
+        checkpoint: Some(checkpoint.clone()),
+        stop_after: 1,
+        concurrency: 1,
+        ..CampaignConfig::default()
+    };
+    campaign::run(&cfg, evaluator()).unwrap();
+    // A partial journal renders like any records file.
+    let partial = campaign::results::load_lenient(&checkpoint).unwrap();
+    assert_eq!(partial.len(), 1);
+    assert!(!report::table4(&partial).is_empty());
+    assert!(!report::fig8(&partial).is_empty());
+    std::fs::remove_dir_all(dir).ok();
+}

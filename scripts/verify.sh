@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (ROADMAP.md), plus rustdoc-as-lint so that
+# broken intra-doc links and drifted doc references (the DESIGN.md
+# kind of rot) fail fast.
+#
+# Usage: scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release"
+cargo build --release
+
+echo "== tier-1: cargo test -q"
+cargo test -q
+
+echo "== docs: cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "verify OK"
