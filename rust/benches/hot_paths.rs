@@ -7,18 +7,20 @@
 //!   render + generate             (prompt + SimLLM, per trial)
 //!   session trial                 (everything, per trial)
 //!   record JSON round-trip        (persistence, per run)
+//!   contended functional testing  (stage-2 PJRT pairs, per shard count)
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 use evoengineer::costmodel::{baseline_schedule, price, Gpu};
 use evoengineer::dsl::{self, KernelSpec};
-use evoengineer::evals::Evaluator;
+use evoengineer::evals::{functional_case_batch, Evaluator};
 use evoengineer::llm::{self, MODELS};
 use evoengineer::methods::{Archive, RunCtx, Session};
 use evoengineer::population::SingleBest;
-use evoengineer::runtime::Runtime;
-use evoengineer::tasks::TaskRegistry;
+use evoengineer::runtime::{Runtime, TensorValue};
+use evoengineer::tasks::{OpTask, TaskRegistry};
 use evoengineer::traverse::prompt::render;
 use evoengineer::traverse::{Guidance, GuidanceConfig};
 use evoengineer::util::bench::Bench;
@@ -146,4 +148,85 @@ fn main() {
         .unwrap()
     });
     b.report();
+
+    // Contended functional testing: 4 campaign-style workers hammering
+    // uncached ref/candidate pair batches (the stage-2 path the old
+    // single-owner runtime serialized). Throughput must scale with the
+    // shard count; the acceptance bar is >= 2x for 4 shards vs 1 shard
+    // under a 4-worker load.
+    const WORKERS: usize = 4;
+    const PAIRS_PER_WORKER: usize = 12;
+    let t1 = contended_pairs_throughput(&reg, 1, WORKERS, PAIRS_PER_WORKER);
+    let t4 = contended_pairs_throughput(&reg, 4, WORKERS, PAIRS_PER_WORKER);
+    println!(
+        "{:<40} {:>10.1} verdicts/s",
+        "runtime/contended_pairs_1_shard", t1
+    );
+    println!(
+        "{:<40} {:>10.1} verdicts/s",
+        "runtime/contended_pairs_4_shards", t4
+    );
+    println!(
+        "{:<40} {:>10.2}x  (target >= 2x)",
+        "runtime/shard_scaling_4v1",
+        t4 / t1
+    );
+    println!("# group `runtime`: 2 benchmarks + scaling ratio");
+}
+
+/// Measure ref/candidate pair-batch verdict throughput (pairs/sec)
+/// under `workers` concurrent threads against a `shards`-shard pool.
+/// Artifacts are pre-compiled and the case batches pre-generated (an
+/// `Arc` clone per submission, exactly like the evaluator), so the
+/// timed region measures contended PJRT execution only.
+fn contended_pairs_throughput(
+    reg: &Arc<TaskRegistry>,
+    shards: usize,
+    workers: usize,
+    pairs_per_worker: usize,
+) -> f64 {
+    let rt = Runtime::with_shards(shards).unwrap();
+    // A spread of small ops so the load distributes across shards; the
+    // batches are the same ones Evaluator::functional_uncached submits.
+    let ops: Vec<(OpTask, Arc<Vec<Vec<TensorValue>>>)> =
+        ["tanh_64", "relu_64", "sigmoid_64", "silu_big", "layernorm_64",
+            "softmax_256", "matmul_32", "kl_div_64"]
+            .iter()
+            .map(|&n| {
+                let op = reg.get(n).expect(n).clone();
+                let batch = functional_case_batch(&op);
+                (op, batch)
+            })
+            .collect();
+    // Warmup: compile every (ref, opt) executable on its shard.
+    for (op, batch) in &ops {
+        rt.execute_pairs(
+            reg.artifact_path(op, "ref").unwrap(),
+            reg.artifact_path(op, "opt").unwrap(),
+            batch.clone(),
+        )
+        .unwrap();
+    }
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let rt = rt.clone();
+            let ops = &ops;
+            let reg = reg.clone();
+            scope.spawn(move || {
+                for i in 0..pairs_per_worker {
+                    let (op, batch) = &ops[(w + i * workers) % ops.len()];
+                    let (wants, gots) = rt
+                        .execute_pairs(
+                            reg.artifact_path(op, "ref").unwrap(),
+                            reg.artifact_path(op, "opt").unwrap(),
+                            batch.clone(),
+                        )
+                        .unwrap();
+                    std::hint::black_box((wants, gots));
+                }
+            });
+        }
+    });
+    (workers * pairs_per_worker) as f64 / start.elapsed().as_secs_f64()
 }

@@ -240,13 +240,15 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     .min(total.max(1));
     if !cfg.quiet {
         eprintln!(
-            "campaign: {} methods x {} models x {} ops x {} seeds = {} runs ({} workers{})",
+            "campaign: {} methods x {} models x {} ops x {} seeds = {} runs \
+             ({} workers, {} runtime shards{})",
             method_names.len(),
             models.len(),
             ops.len(),
             cfg.seeds.len(),
             grid_total,
             concurrency,
+            evaluator.runtime_shards(),
             if prior.is_empty() {
                 String::new()
             } else {
@@ -339,21 +341,72 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
 }
 
 /// Stratified cut preserving category proportions (used by quick runs).
+///
+/// Allocation starts from one op per category (every category stays
+/// represented whenever `max` allows) and hands out the remaining
+/// slots one at a time to the bucket that is furthest below its exact
+/// proportional share — so an overshoot is trimmed from the most
+/// over-represented buckets instead of truncating whole trailing
+/// categories, and the result has exactly `min(max, ops.len())`
+/// elements. Buckets are keyed by the actual category value, so
+/// out-of-range categories (≥ 7) select fine instead of panicking.
 fn stratified_cut(ops: Vec<OpTask>, max: usize) -> Vec<OpTask> {
-    let mut by_cat: Vec<Vec<OpTask>> = vec![Vec::new(); 7];
+    if ops.len() <= max {
+        return ops;
+    }
     let total = ops.len();
+    let mut by_cat: std::collections::BTreeMap<u8, Vec<OpTask>> = std::collections::BTreeMap::new();
     for op in ops {
-        by_cat[op.category as usize].push(op);
+        by_cat.entry(op.category).or_default().push(op);
+    }
+    // (category, bucket, exact proportional share, allocated so far)
+    let mut alloc: Vec<(u8, Vec<OpTask>, f64, usize)> = by_cat
+        .into_iter()
+        .map(|(cat, bucket)| {
+            let exact = bucket.len() as f64 * max as f64 / total as f64;
+            (cat, bucket, exact, 0)
+        })
+        .collect();
+    let mut assigned = 0usize;
+    // Seed one per category while slots last; when max < #categories
+    // the largest-share categories win the scarce seeds (ties broken
+    // by category order), so the proportional contract holds even for
+    // tiny cuts. max >= #categories keeps every category represented.
+    let mut seed_order: Vec<usize> = (0..alloc.len()).collect();
+    seed_order.sort_by(|&a, &b| {
+        alloc[b]
+            .2
+            .partial_cmp(&alloc[a].2)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(alloc[a].0.cmp(&alloc[b].0))
+    });
+    for &i in &seed_order {
+        if assigned == max {
+            break;
+        }
+        alloc[i].3 = 1;
+        assigned += 1;
+    }
+    // Hand out the rest by largest deficit vs the exact share
+    // (ties broken by category order for determinism).
+    while assigned < max {
+        let next = alloc
+            .iter_mut()
+            .filter(|a| a.3 < a.1.len())
+            .max_by(|a, b| {
+                (a.2 - a.3 as f64)
+                    .partial_cmp(&(b.2 - b.3 as f64))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.0.cmp(&a.0)) // lower category wins ties
+            })
+            .expect("max < total ops, so some bucket has spare capacity");
+        next.3 += 1;
+        assigned += 1;
     }
     let mut out = Vec::with_capacity(max);
-    for bucket in by_cat.iter() {
-        if bucket.is_empty() {
-            continue;
-        }
-        let want = ((bucket.len() * max) as f64 / total as f64).round().max(1.0) as usize;
-        out.extend(bucket.iter().take(want).cloned());
+    for (_, bucket, _, take) in alloc {
+        out.extend(bucket.into_iter().take(take));
     }
-    out.truncate(max);
     out
 }
 
@@ -378,5 +431,88 @@ mod tests {
         assert!(cut.len() <= 12);
         let cats: std::collections::HashSet<u8> = cut.iter().map(|o| o.category).collect();
         assert!(cats.len() >= 5, "{cats:?}");
+    }
+
+    #[test]
+    fn stratified_cut_exact_size_keeps_every_category() {
+        let reg = crate::tasks::TaskRegistry::load(
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        // The old truncate(max) dropped whole trailing categories when
+        // per-bucket rounding overshot; the cut must now return exactly
+        // `max` ops with all 6 categories represented whenever max >= 6.
+        for max in [6, 7, 12, 20, 45, 90] {
+            let cut = stratified_cut(reg.ops.clone(), max);
+            assert_eq!(cut.len(), max, "max={max}");
+            let cats: std::collections::HashSet<u8> =
+                cut.iter().map(|o| o.category).collect();
+            assert_eq!(cats.len(), 6, "max={max}: {cats:?}");
+        }
+        // max >= total is the identity.
+        let all = stratified_cut(reg.ops.clone(), reg.ops.len());
+        assert_eq!(all.len(), reg.ops.len());
+    }
+
+    #[test]
+    fn stratified_cut_trims_most_over_represented_bucket() {
+        let reg = crate::tasks::TaskRegistry::load(
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        // 91 ops -> 12: Convolution (28 ops) must keep more slots than
+        // Cumulative (4 ops), i.e. the proportions survive the cut.
+        let cut = stratified_cut(reg.ops.clone(), 12);
+        let count = |cat: u8| cut.iter().filter(|o| o.category == cat).count();
+        assert!(count(2) > count(6), "conv={} cum={}", count(2), count(6));
+        assert!(count(6) >= 1, "trailing category dropped");
+    }
+
+    #[test]
+    fn stratified_cut_below_category_count_favors_large_categories() {
+        let reg = crate::tasks::TaskRegistry::load(
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        // max=3 < 6 categories: the three scarce seeds must go to the
+        // largest categories (2: Convolution 28, 3: Act/Pool 21,
+        // 1: MatMul 18), not to categories 1..=3 by index order.
+        let cut = stratified_cut(reg.ops.clone(), 3);
+        assert_eq!(cut.len(), 3);
+        let cats: std::collections::HashSet<u8> = cut.iter().map(|o| o.category).collect();
+        assert_eq!(cats, [1u8, 2, 3].into_iter().collect(), "{cats:?}");
+    }
+
+    fn synthetic_op(name: &str, category: u8) -> OpTask {
+        OpTask {
+            name: name.into(),
+            category,
+            family: "x".into(),
+            args: vec![],
+            out_shape: vec![1],
+            flops: 1.0,
+            bytes_moved: 1.0,
+            pt_launches: 1,
+            pt_passes: 1.0,
+            pt_efficiency: 0.5,
+            algo_penalty: 1.0,
+            atol: 1e-4,
+            rtol: 1e-3,
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn stratified_cut_survives_out_of_range_categories() {
+        // The old fixed 7-bucket indexing panicked on category >= 7;
+        // bucketing is now keyed by the actual category value.
+        let ops = vec![
+            synthetic_op("a", 7),
+            synthetic_op("b", 200),
+            synthetic_op("c", 1),
+            synthetic_op("d", 7),
+        ];
+        let cut = stratified_cut(ops, 2);
+        assert_eq!(cut.len(), 2);
     }
 }

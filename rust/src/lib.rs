@@ -12,7 +12,7 @@
 //! * [`dsl`] / [`ir`] — the code space `S_text`: KernelScript parsing,
 //!   printing, validation and lowering (the "nvcc" substrate).
 //! * [`tasks`] — the 91-operation dataset + artifact manifest.
-//! * [`runtime`] — PJRT executor for the AOT HLO artifacts.
+//! * [`runtime`] — sharded PJRT executor pool for the AOT HLO artifacts.
 //! * [`evals`] — the paper's two-stage evaluation pipeline.
 //! * [`costmodel`] — RTX-4090 analytical timing of candidate schedules.
 //! * [`llm`] — SimLLM: prompt-conditioned stochastic code generator.

@@ -32,12 +32,14 @@ USAGE:
 
 COMMANDS:
   smoke                      load artifacts and execute on PJRT (sanity)
+      --runtime-shards N     PJRT executor shards (default 0 = CPUs)
   optimize <op>              one optimization run, verbose
       --method NAME          (default evoengineer-full)
       --model NAME           (default gpt)
       --seed N               (default 0)
       --budget N             (default 45)
       --cache PATH           persistent eval cache (default off)
+      --runtime-shards N     PJRT executor shards (default 0 = CPUs)
   campaign                   run the method x model x op x seed sweep
       --methods A,B          (default: all six)
       --models A,B           (default: all three)
@@ -46,6 +48,7 @@ COMMANDS:
       --max-ops N            stratified cap on ops (default 0 = all 91)
       --budget N             trials per run (default 45)
       --concurrency N        workers (default: CPUs)
+      --runtime-shards N     PJRT executor shards (default 0 = CPUs)
       --out PATH             (default results/records.jsonl)
       --checkpoint PATH      cell journal (default <out>.checkpoint.jsonl)
       --resume               skip cells already in the checkpoint
@@ -138,8 +141,10 @@ fn run() -> Result<()> {
         .ok_or_else(|| eyre!("missing command\n{USAGE}"))?
         .as_str();
 
+    let runtime_shards = args.get_num("runtime-shards", 0usize)?;
+
     match cmd {
-        "smoke" => smoke(&artifacts),
+        "smoke" => smoke(&artifacts, runtime_shards),
         "optimize" => {
             let op = args
                 .positional
@@ -159,6 +164,7 @@ fn run() -> Result<()> {
                 args.get_num("seed", 0u64)?,
                 args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
                 cache.as_deref(),
+                runtime_shards,
             )
         }
         "campaign" => {
@@ -181,7 +187,7 @@ fn run() -> Result<()> {
                 stop_after: 0,
             };
             let cache = cache_path(&args.get("cache", ""), &artifacts);
-            campaign(&artifacts, cfg, cache.as_deref(), &out)
+            campaign(&artifacts, cfg, cache.as_deref(), &out, runtime_shards)
         }
         "cache" => {
             let action = args
@@ -236,9 +242,13 @@ fn cache_path(flag: &str, artifacts: &std::path::Path) -> Option<PathBuf> {
     }
 }
 
-fn make_evaluator(artifacts: &PathBuf, cache: Option<&std::path::Path>) -> Result<Evaluator> {
+fn make_evaluator(
+    artifacts: &PathBuf,
+    cache: Option<&std::path::Path>,
+    runtime_shards: usize,
+) -> Result<Evaluator> {
     let registry = std::sync::Arc::new(TaskRegistry::load(artifacts)?);
-    let runtime = Runtime::new()?;
+    let runtime = Runtime::with_shards(runtime_shards)?;
     let mut evaluator = Evaluator::new(registry, runtime);
     if let Some(path) = cache {
         evaluator = evaluator.with_store(EvalStore::open(path)?);
@@ -246,10 +256,10 @@ fn make_evaluator(artifacts: &PathBuf, cache: Option<&std::path::Path>) -> Resul
     Ok(evaluator)
 }
 
-fn smoke(artifacts: &PathBuf) -> Result<()> {
-    let evaluator = make_evaluator(artifacts, None)?;
+fn smoke(artifacts: &PathBuf, runtime_shards: usize) -> Result<()> {
+    let evaluator = make_evaluator(artifacts, None, runtime_shards)?;
     let reg = &evaluator.registry;
-    println!("manifest: {} ops", reg.ops.len());
+    println!("manifest: {} ops ({} runtime shards)", reg.ops.len(), evaluator.runtime_shards());
     let task = reg.get("matmul_64").expect("matmul_64 in dataset");
     for variant in ["ref", "opt", "bug_scale"] {
         let v = evaluator.functional(task, variant)?;
@@ -275,8 +285,9 @@ fn optimize(
     seed: u64,
     budget: usize,
     cache: Option<&std::path::Path>,
+    runtime_shards: usize,
 ) -> Result<()> {
-    let evaluator = make_evaluator(artifacts, cache)?;
+    let evaluator = make_evaluator(artifacts, cache, runtime_shards)?;
     let task = evaluator
         .registry
         .get(op)
@@ -334,8 +345,9 @@ fn campaign(
     cfg: CampaignConfig,
     cache: Option<&std::path::Path>,
     out: &PathBuf,
+    runtime_shards: usize,
 ) -> Result<()> {
-    let evaluator = make_evaluator(artifacts, cache)?;
+    let evaluator = make_evaluator(artifacts, cache, runtime_shards)?;
     let store = evaluator.store().cloned();
     let records = evoengineer::campaign::run(&cfg, evaluator)?;
     results::save(out, &records)?;

@@ -1,17 +1,42 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
-//! the CPU PJRT client (`xla` crate 0.1.6 — pattern from
-//! /opt/xla-example/load_hlo).
+//! CPU PJRT clients (`xla` crate 0.1.6 — pattern from
+//! /opt/xla-example/load_hlo; design: DESIGN.md §10).
 //!
-//! The xla wrapper types hold raw C pointers and are `!Send`, so the
-//! client + compiled-executable cache live on one dedicated owner
-//! thread; callers talk to it over an mpsc channel. `Runtime` itself is
-//! cheap to clone and `Send + Sync`, which is what the campaign's
-//! std::thread worker pool needs. Executables are compiled once per
-//! artifact path and cached for the lifetime of the runtime (the paper
-//! compiles each candidate once and times it many times).
+//! The xla wrapper types hold raw C pointers and are `!Send`, so
+//! clients and compiled-executable caches live on dedicated owner
+//! threads. Where the first version funneled every caller through a
+//! single owner thread (serializing stage-2 functional testing for the
+//! whole campaign), the runtime is now a **sharded executor pool**:
+//!
+//! * N owner threads (`Runtime::with_shards`; `0` = one per CPU), each
+//!   with its own `PjRtClient` and executable cache;
+//! * requests are routed by a stable FNV-1a hash of the artifact path
+//!   ([`Runtime::shard_of`]), so each executable compiles on exactly
+//!   one shard and distinct artifacts execute in parallel;
+//! * [`Runtime::execute_pairs`] submits a whole batch of functional
+//!   test cases as one request per artifact (one channel round-trip
+//!   per shard) instead of one `execute()` round-trip per case.
+//!
+//! `Runtime` itself is cheap to clone and `Send + Sync`, which is what
+//! both the campaign's `std::thread` worker pool and the evaluator's
+//! concurrent callers need. Executables are compiled once per artifact
+//! path, on the shard the path routes to, and cached for the lifetime
+//! of the runtime (the paper compiles each candidate once and times it
+//! many times).
+//!
+//! Shard 0's PJRT client is created eagerly during construction so a
+//! broken PJRT install fails fast in [`Runtime::new`]; the remaining
+//! shards create their clients lazily on first request, keeping
+//! construction cost proportional to actual use (tests that touch one
+//! artifact pay for one client, a full campaign warms them all).
+//!
+//! [`RuntimeStats`] counters are kept **per shard**; [`Runtime::stats`]
+//! sums them and [`Runtime::shard_stats`] exposes the per-shard
+//! breakdown. Because routing is stable, the aggregated `compiles`
+//! still counts each distinct artifact path at most once.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -31,11 +56,26 @@ impl TensorValue {
     }
 }
 
+/// One functional test case: the full input set for a single execution.
+pub type Case = Vec<TensorValue>;
+
 enum Req {
+    /// Force client creation (construction-time fail-fast probe).
+    Init {
+        resp: mpsc::SyncSender<Result<(), String>>,
+    },
     Execute {
         path: PathBuf,
         inputs: Vec<TensorValue>,
         resp: mpsc::SyncSender<Result<Vec<f32>, String>>,
+    },
+    /// Execute one artifact over many cases in a single round-trip.
+    /// The cases are shared (`Arc`) so the ref and candidate batches of
+    /// a functional verdict reuse the same generated input buffers.
+    ExecuteBatch {
+        path: PathBuf,
+        cases: Arc<Vec<Case>>,
+        resp: mpsc::SyncSender<Result<Vec<Vec<f32>>, String>>,
     },
     Stats {
         resp: mpsc::SyncSender<RuntimeStats>,
@@ -43,6 +83,12 @@ enum Req {
 }
 
 /// Counters exposed for the perf pass and EXPERIMENTS.md.
+///
+/// Counters are accumulated **per shard** and summed by
+/// [`Runtime::stats`]: `executions` counts submitted cases (a batch of
+/// five cases is five executions), while `compiles`/`cache_hits` count
+/// executable-cache outcomes per *request* (a batch resolves its
+/// executable once, so it contributes one compile or one hit).
 #[derive(Debug, Clone, Default)]
 pub struct RuntimeStats {
     pub executions: u64,
@@ -50,90 +96,226 @@ pub struct RuntimeStats {
     pub cache_hits: u64,
 }
 
-/// Handle to the PJRT owner thread. Clone freely.
+impl RuntimeStats {
+    fn absorb(&mut self, other: &RuntimeStats) {
+        self.executions += other.executions;
+        self.compiles += other.compiles;
+        self.cache_hits += other.cache_hits;
+    }
+}
+
+/// One owner thread's mailbox. The `Mutex` makes the `mpsc::Sender`
+/// shareable across the campaign's worker threads.
+struct Shard {
+    tx: Mutex<mpsc::Sender<Req>>,
+}
+
+/// Hard ceiling on the shard count: beyond this, extra shards only
+/// cost threads and (once touched) whole PJRT clients.
+pub const MAX_SHARDS: usize = 256;
+
+/// Handle to the sharded PJRT executor pool. Clone freely.
 #[derive(Clone)]
 pub struct Runtime {
-    tx: Arc<Mutex<mpsc::Sender<Req>>>,
+    shards: Arc<Vec<Shard>>,
+}
+
+/// Stable artifact-path → shard routing (FNV-1a over the path bytes).
+/// Deterministic across processes and runtime instances: the same path
+/// always lands on the same shard for a given shard count.
+fn route(path: &Path, shards: usize) -> usize {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for &b in path.to_string_lossy().as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    (h % shards as u64) as usize
 }
 
 impl Runtime {
-    /// Spawn the owner thread with a fresh CPU PJRT client.
+    /// Spawn the executor pool with one shard per CPU.
     pub fn new() -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Req>();
-        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(), String>>(1);
-        std::thread::Builder::new()
-            .name("pjrt-owner".into())
-            .spawn(move || owner_thread(rx, ready_tx))
-            .map_err(|e| eyre!("spawning pjrt owner: {e}"))?;
-        ready_rx
+        Self::with_shards(0)
+    }
+
+    /// Spawn the executor pool with `shards` owner threads (`0` = one
+    /// per CPU, via `available_parallelism`; capped at [`MAX_SHARDS`] —
+    /// every shard that actually executes work owns a full PJRT client
+    /// with its own intra-op thread pool, so absurd counts would only
+    /// burn memory). Fails fast if PJRT itself is unavailable (shard
+    /// 0's client is created eagerly).
+    pub fn with_shards(shards: usize) -> Result<Self> {
+        let n = if shards == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            shards
+        }
+        .min(MAX_SHARDS);
+        let mut pool = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<Req>();
+            std::thread::Builder::new()
+                .name(format!("pjrt-owner-{i}"))
+                .spawn(move || owner_thread(rx))
+                .map_err(|e| eyre!("spawning pjrt owner {i}: {e}"))?;
+            pool.push(Shard { tx: Mutex::new(tx) });
+        }
+        let rt = Self { shards: Arc::new(pool) };
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        rt.send(0, Req::Init { resp: resp_tx })?;
+        resp_rx
             .recv()
-            .map_err(|e| eyre!("pjrt owner died during init: {e}"))?
-            .map_err(|e| eyre!("PjRtClient::cpu failed: {e}"))?;
-        Ok(Self { tx: Arc::new(Mutex::new(tx)) })
+            .map_err(|_| eyre!("pjrt owner died during init"))?
+            .map_err(|e| eyre!("{e}"))?;
+        Ok(rt)
+    }
+
+    /// Number of executor shards in the pool.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard `path` routes to (stable: same path → same shard).
+    pub fn shard_of(&self, path: &Path) -> usize {
+        route(path, self.shards.len())
+    }
+
+    fn send(&self, shard: usize, req: Req) -> Result<()> {
+        let tx = self.shards[shard].tx.lock().expect("runtime sender poisoned");
+        tx.send(req).map_err(|_| eyre!("pjrt owner thread {shard} is gone"))
     }
 
     /// Execute the artifact at `path` with the given inputs; returns the
     /// flattened f32 output (artifacts are lowered as 1-tuples).
     pub fn execute(&self, path: PathBuf, inputs: Vec<TensorValue>) -> Result<Vec<f32>> {
+        let shard = self.shard_of(&path);
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        {
-            let tx = self.tx.lock().expect("runtime sender poisoned");
-            tx.send(Req::Execute { path, inputs, resp: resp_tx })
-                .map_err(|_| eyre!("pjrt owner thread is gone"))?;
-        }
+        self.send(shard, Req::Execute { path, inputs, resp: resp_tx })?;
         resp_rx
             .recv()
             .map_err(|_| eyre!("pjrt owner dropped the response"))?
             .map_err(|e| eyre!("pjrt execution failed: {e}"))
     }
 
-    /// Snapshot execution counters.
-    pub fn stats(&self) -> Result<RuntimeStats> {
+    /// Execute one artifact over a batch of cases in a single
+    /// round-trip to its shard; returns one flattened output per case.
+    pub fn execute_batch(&self, path: PathBuf, cases: Arc<Vec<Case>>) -> Result<Vec<Vec<f32>>> {
+        let shard = self.shard_of(&path);
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        {
-            let tx = self.tx.lock().expect("runtime sender poisoned");
-            tx.send(Req::Stats { resp: resp_tx })
-                .map_err(|_| eyre!("pjrt owner thread is gone"))?;
+        self.send(shard, Req::ExecuteBatch { path, cases, resp: resp_tx })?;
+        resp_rx
+            .recv()
+            .map_err(|_| eyre!("pjrt owner dropped the response"))?
+            .map_err(|e| eyre!("pjrt execution failed: {e}"))
+    }
+
+    /// Execute a reference/candidate artifact pair over the same shared
+    /// batch of cases: both batch requests are submitted before either
+    /// response is awaited, so the two artifacts run concurrently when
+    /// they route to different shards, and each shard sees exactly one
+    /// round-trip. Returns `(ref_outputs, candidate_outputs)`, one
+    /// flattened output per case each.
+    pub fn execute_pairs(
+        &self,
+        ref_path: PathBuf,
+        cand_path: PathBuf,
+        cases: Arc<Vec<Case>>,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let ref_shard = self.shard_of(&ref_path);
+        let cand_shard = self.shard_of(&cand_path);
+        let (ref_tx, ref_rx) = mpsc::sync_channel(1);
+        let (cand_tx, cand_rx) = mpsc::sync_channel(1);
+        self.send(
+            ref_shard,
+            Req::ExecuteBatch { path: ref_path, cases: cases.clone(), resp: ref_tx },
+        )?;
+        self.send(cand_shard, Req::ExecuteBatch { path: cand_path, cases, resp: cand_tx })?;
+        let want = ref_rx
+            .recv()
+            .map_err(|_| eyre!("pjrt owner dropped the response"))?
+            .map_err(|e| eyre!("pjrt execution failed: {e}"))?;
+        let got = cand_rx
+            .recv()
+            .map_err(|_| eyre!("pjrt owner dropped the response"))?
+            .map_err(|e| eyre!("pjrt execution failed: {e}"))?;
+        Ok((want, got))
+    }
+
+    /// Snapshot execution counters, summed across all shards.
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let mut total = RuntimeStats::default();
+        for s in self.shard_stats()? {
+            total.absorb(&s);
         }
-        resp_rx.recv().map_err(|_| eyre!("pjrt owner dropped the response"))
+        Ok(total)
+    }
+
+    /// Per-shard counter snapshots, in shard order.
+    pub fn shard_stats(&self) -> Result<Vec<RuntimeStats>> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        for shard in 0..self.shards.len() {
+            let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+            self.send(shard, Req::Stats { resp: resp_tx })?;
+            out.push(
+                resp_rx.recv().map_err(|_| eyre!("pjrt owner dropped the response"))?,
+            );
+        }
+        Ok(out)
     }
 }
 
-fn owner_thread(rx: mpsc::Receiver<Req>, ready: mpsc::SyncSender<Result<(), String>>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
-            let _ = ready.send(Ok(()));
-            c
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e.to_string()));
-            return;
-        }
-    };
+fn owner_thread(rx: mpsc::Receiver<Req>) {
+    let mut client: Option<xla::PjRtClient> = None;
     let mut cache: HashMap<PathBuf, xla::PjRtLoadedExecutable> = HashMap::new();
     let mut stats = RuntimeStats::default();
 
     while let Ok(req) = rx.recv() {
         match req {
+            Req::Init { resp } => {
+                let _ = resp.send(ensure_client(&mut client).map(|_| ()));
+            }
             Req::Stats { resp } => {
                 let _ = resp.send(stats.clone());
             }
             Req::Execute { path, inputs, resp } => {
-                let result = run_one(&client, &mut cache, &mut stats, &path, &inputs);
+                let result = match ensure_client(&mut client) {
+                    Ok(c) => run_one(c, &mut cache, &mut stats, &path, &inputs),
+                    Err(e) => Err(e),
+                };
                 stats.executions += 1;
+                let _ = resp.send(result);
+            }
+            Req::ExecuteBatch { path, cases, resp } => {
+                let result = match ensure_client(&mut client) {
+                    Ok(c) => run_batch(c, &mut cache, &mut stats, &path, &cases),
+                    Err(e) => Err(e),
+                };
+                stats.executions += cases.len() as u64;
                 let _ = resp.send(result);
             }
         }
     }
 }
 
-fn run_one(
+/// Lazily create this shard's PJRT client (shard 0 is forced eagerly
+/// by the construction-time `Init` probe).
+fn ensure_client(slot: &mut Option<xla::PjRtClient>) -> Result<&xla::PjRtClient, String> {
+    if slot.is_none() {
+        let c = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu failed: {e}"))?;
+        *slot = Some(c);
+    }
+    Ok(slot.as_ref().expect("just initialized"))
+}
+
+/// Compile-or-fetch the executable for `path` on this shard's cache.
+fn compiled<'a>(
     client: &xla::PjRtClient,
-    cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    cache: &'a mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
     stats: &mut RuntimeStats,
     path: &PathBuf,
-    inputs: &[TensorValue],
-) -> Result<Vec<f32>, String> {
+) -> Result<&'a xla::PjRtLoadedExecutable, String> {
     if !cache.contains_key(path) {
         let proto =
             xla::HloModuleProto::from_text_file(path).map_err(|e| format!("load {path:?}: {e}"))?;
@@ -144,8 +326,32 @@ fn run_one(
     } else {
         stats.cache_hits += 1;
     }
-    let exe = cache.get(path).expect("just inserted");
+    Ok(cache.get(path).expect("just inserted"))
+}
 
+fn run_one(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    stats: &mut RuntimeStats,
+    path: &PathBuf,
+    inputs: &[TensorValue],
+) -> Result<Vec<f32>, String> {
+    let exe = compiled(client, cache, stats, path)?;
+    exec_case(exe, inputs)
+}
+
+fn run_batch(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    stats: &mut RuntimeStats,
+    path: &PathBuf,
+    cases: &[Case],
+) -> Result<Vec<Vec<f32>>, String> {
+    let exe = compiled(client, cache, stats, path)?;
+    cases.iter().map(|inputs| exec_case(exe, inputs)).collect()
+}
+
+fn exec_case(exe: &xla::PjRtLoadedExecutable, inputs: &[TensorValue]) -> Result<Vec<f32>, String> {
     let mut literals = Vec::with_capacity(inputs.len());
     for t in inputs {
         let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
@@ -163,4 +369,33 @@ fn run_one(
     // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
     let out = lit.to_tuple1().map_err(|e| format!("to_tuple1: {e}"))?;
     out.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let p = Path::new("artifacts/matmul_64/ref.hlo.txt");
+        for shards in 1..=8 {
+            let first = route(p, shards);
+            assert!(first < shards);
+            // Same path, same shard count -> same shard, every time.
+            assert_eq!(route(p, shards), first);
+        }
+        // A single shard takes everything.
+        assert_eq!(route(Path::new("/any/where.hlo.txt"), 1), 0);
+    }
+
+    #[test]
+    fn routing_spreads_distinct_paths() {
+        let shards = 4;
+        let hit: std::collections::HashSet<usize> = (0..64)
+            .map(|i| route(Path::new(&format!("artifacts/op_{i}/ref.hlo.txt")), shards))
+            .collect();
+        // 64 distinct artifact paths must not all collapse onto one
+        // shard (FNV-1a spreads short ASCII keys well).
+        assert!(hit.len() >= 2, "{hit:?}");
+    }
 }

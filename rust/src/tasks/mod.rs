@@ -82,6 +82,21 @@ fn need<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
 }
 
 fn parse_op(v: &Json) -> Result<OpTask> {
+    let name = need(v, "name")?.as_str().unwrap_or_default().to_string();
+    // A missing or malformed category must be a load error, not a
+    // silent `0`: ops with category outside 1..=6 vanish from every
+    // per-category table (metrics iterate 1..=6) and would corrupt the
+    // Table-4/5 denominators without anyone noticing.
+    let category = need(v, "category")
+        .and_then(|c| c.as_u64().ok_or_else(|| eyre!("category is not an integer")))
+        .and_then(|c| {
+            if (1..=6).contains(&c) {
+                Ok(c as u8)
+            } else {
+                Err(eyre!("category {c} is outside 1..=6"))
+            }
+        })
+        .with_context(|| format!("manifest: op `{name}` has a missing or invalid category"))?;
     let args = need(v, "args")?
         .as_arr()
         .ok_or_else(|| eyre!("args not an array"))?
@@ -106,8 +121,8 @@ fn parse_op(v: &Json) -> Result<OpTask> {
         _ => return Err(eyre!("artifacts not an object")),
     };
     Ok(OpTask {
-        name: need(v, "name")?.as_str().unwrap_or_default().to_string(),
-        category: need(v, "category")?.as_u64().unwrap_or(0) as u8,
+        name,
+        category,
         family: need(v, "family")?.as_str().unwrap_or_default().to_string(),
         args,
         out_shape: need(v, "out_shape")?
@@ -229,6 +244,49 @@ mod tests {
             assert!(!op.args.is_empty(), "{}", op.name);
             assert!(op.atol > 0.0 && op.rtol > 0.0, "{}", op.name);
         }
+    }
+
+    fn op_json(category: &str) -> String {
+        format!(
+            r#"{{"name": "weird_op", "category": {category}, "family": "x",
+                 "args": [{{"shape": [4], "gen": "uniform"}}], "out_shape": [4],
+                 "flops": 1.0, "bytes_moved": 1.0, "pt_launches": 1,
+                 "pt_passes": 1.0, "pt_efficiency": 0.5, "algo_penalty": 1.0,
+                 "atol": 0.0001, "rtol": 0.0001,
+                 "artifacts": {{"ref": "weird_op/ref.hlo.txt"}}}}"#
+        )
+    }
+
+    #[test]
+    fn out_of_range_category_is_a_load_error_naming_the_op() {
+        for bad in ["0", "7", "200"] {
+            let doc = json::parse(&op_json(bad)).unwrap();
+            let err = parse_op(&doc).expect_err(bad);
+            let msg = format!("{err:#}");
+            assert!(msg.contains("weird_op"), "{msg}");
+            assert!(msg.contains("category"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn malformed_category_is_a_load_error_naming_the_op() {
+        let doc = json::parse(&op_json("\"three\"")).unwrap();
+        let err = parse_op(&doc).expect_err("string category");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("weird_op"), "{msg}");
+        // Missing entirely: same treatment.
+        let doc = json::parse(&op_json("1").replacen("\"category\": 1,", "", 1)).unwrap();
+        let err = parse_op(&doc).expect_err("missing category");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("weird_op"), "{msg}");
+    }
+
+    #[test]
+    fn valid_category_still_loads() {
+        let doc = json::parse(&op_json("6")).unwrap();
+        let op = parse_op(&doc).unwrap();
+        assert_eq!(op.category, 6);
+        assert_eq!(op.name, "weird_op");
     }
 
     #[test]

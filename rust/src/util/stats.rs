@@ -42,10 +42,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 }
 
 /// Pearson correlation coefficient (the paper's Figure-9 r≈0.9).
+///
+/// Degenerate inputs — mismatched lengths, empty slices, or a
+/// constant series (zero variance, for which r is mathematically
+/// undefined) — return NaN rather than panicking or clamping to ~0.
 pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
-    assert_eq!(xs.len(), ys.len());
-    let n = xs.len() as f64;
-    if xs.is_empty() {
+    if xs.len() != ys.len() || xs.is_empty() {
         return f64::NAN;
     }
     let mx = mean(xs);
@@ -58,8 +60,11 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
         sxx += (x - mx) * (x - mx);
         syy += (y - my) * (y - my);
     }
-    let _ = n;
-    sxy / (sxx.sqrt() * syy.sqrt()).max(1e-300)
+    let denom = (sxx * syy).sqrt();
+    if denom == 0.0 {
+        return f64::NAN;
+    }
+    sxy / denom
 }
 
 #[cfg(test)]
@@ -93,5 +98,24 @@ mod tests {
         assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
         let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
         assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_input_is_nan() {
+        // Zero variance on either side: r is undefined, not ~0.
+        assert!(pearson(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]).is_nan());
+        assert!(pearson(&[1.0, 2.0, 3.0], &[5.0, 5.0, 5.0]).is_nan());
+        assert!(pearson(&[2.0, 2.0], &[2.0, 2.0]).is_nan());
+    }
+
+    #[test]
+    fn pearson_length_mismatch_is_nan_not_panic() {
+        assert!(pearson(&[1.0, 2.0], &[1.0, 2.0, 3.0]).is_nan());
+        assert!(pearson(&[], &[1.0]).is_nan());
+    }
+
+    #[test]
+    fn pearson_empty_is_nan() {
+        assert!(pearson(&[], &[]).is_nan());
     }
 }

@@ -168,6 +168,138 @@ fn runtime_is_shareable_across_threads() {
 }
 
 #[test]
+fn concurrent_execution_across_shard_pool() {
+    // >= 4 worker threads against a >= 2-shard pool: every result must
+    // match what a single-shard runtime computes for the same inputs.
+    let reg = Arc::new(registry());
+    let ops = ["tanh_64", "relu_64", "sigmoid_64", "softmax_256"];
+    let single = Runtime::with_shards(1).unwrap();
+    let mut expected = Vec::new();
+    for (t, op) in ops.iter().enumerate() {
+        let task = reg.get(op).unwrap();
+        let out = single
+            .execute(reg.artifact_path(task, "opt").unwrap(), inputs_for(&reg, op, t))
+            .unwrap();
+        expected.push(out);
+    }
+    let rt = Runtime::with_shards(4).unwrap();
+    assert_eq!(rt.shard_count(), 4);
+    let mut handles = Vec::new();
+    for (t, op) in ops.iter().enumerate() {
+        let reg = reg.clone();
+        let rt = rt.clone();
+        let op = op.to_string();
+        handles.push(std::thread::spawn(move || {
+            let task = reg.get(&op).unwrap();
+            rt.execute(reg.artifact_path(task, "opt").unwrap(), inputs_for(&reg, &op, t))
+                .unwrap()
+        }));
+    }
+    for (h, want) in handles.into_iter().zip(&expected) {
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn per_shard_compile_once_and_stats_aggregate() {
+    let reg = registry();
+    let rt = Runtime::with_shards(2).unwrap();
+    let paths: Vec<_> = ["relu_64", "tanh_64", "sigmoid_64"]
+        .iter()
+        .map(|op| reg.artifact_path(reg.get(op).unwrap(), "ref").unwrap())
+        .collect();
+    // Two passes over three distinct artifacts: each compiles exactly
+    // once in the whole pool (stable routing pins it to one shard),
+    // the second pass is all cache hits.
+    for pass in 0..2 {
+        for (i, path) in paths.iter().enumerate() {
+            let op = ["relu_64", "tanh_64", "sigmoid_64"][i];
+            rt.execute(path.clone(), inputs_for(&reg, op, pass)).unwrap();
+        }
+    }
+    let total = rt.stats().unwrap();
+    assert_eq!(total.compiles, 3, "{total:?}");
+    assert_eq!(total.executions, 6, "{total:?}");
+    assert_eq!(total.cache_hits, 3, "{total:?}");
+    // The aggregate is exactly the sum of the per-shard counters.
+    let per_shard = rt.shard_stats().unwrap();
+    assert_eq!(per_shard.len(), 2);
+    assert_eq!(per_shard.iter().map(|s| s.compiles).sum::<u64>(), total.compiles);
+    assert_eq!(per_shard.iter().map(|s| s.executions).sum::<u64>(), total.executions);
+    assert_eq!(per_shard.iter().map(|s| s.cache_hits).sum::<u64>(), total.cache_hits);
+    // No shard compiled an artifact that routes elsewhere.
+    for (shard, s) in per_shard.iter().enumerate() {
+        let routed_here = paths.iter().filter(|p| rt.shard_of(p) == shard).count() as u64;
+        assert_eq!(s.compiles, routed_here, "shard {shard}: {s:?}");
+    }
+}
+
+#[test]
+fn shard_routing_is_stable() {
+    let reg = registry();
+    let task = reg.get("matmul_32").unwrap();
+    let path = reg.artifact_path(task, "ref").unwrap();
+    let a = Runtime::with_shards(3).unwrap();
+    let b = Runtime::with_shards(3).unwrap();
+    let first = a.shard_of(&path);
+    assert!(first < 3);
+    // Same path -> same shard: across repeated calls and across
+    // independent runtime instances with the same shard count.
+    for _ in 0..10 {
+        assert_eq!(a.shard_of(&path), first);
+    }
+    assert_eq!(b.shard_of(&path), first);
+}
+
+#[test]
+fn execute_pairs_matches_sequential_execution() {
+    let reg = registry();
+    let rt = Runtime::with_shards(2).unwrap();
+    let task = reg.get("layernorm_64").unwrap();
+    let ref_path = reg.artifact_path(task, "ref").unwrap();
+    let opt_path = reg.artifact_path(task, "opt").unwrap();
+    let cases: Arc<Vec<Vec<TensorValue>>> =
+        Arc::new((0..5).map(|c| inputs_for(&reg, "layernorm_64", c)).collect());
+    let (wants, gots) = rt.execute_pairs(ref_path.clone(), opt_path.clone(), cases).unwrap();
+    assert_eq!(wants.len(), 5);
+    assert_eq!(gots.len(), 5);
+    for c in 0..5 {
+        let seq_want = rt.execute(ref_path.clone(), inputs_for(&reg, "layernorm_64", c)).unwrap();
+        let seq_got = rt.execute(opt_path.clone(), inputs_for(&reg, "layernorm_64", c)).unwrap();
+        assert_eq!(wants[c], seq_want, "case {c}");
+        assert_eq!(gots[c], seq_got, "case {c}");
+    }
+}
+
+#[test]
+fn batched_execution_counts_cases_and_resolves_executables_once() {
+    let reg = registry();
+    let rt = Runtime::with_shards(1).unwrap();
+    let task = reg.get("silu_big").unwrap();
+    let ref_path = reg.artifact_path(task, "ref").unwrap();
+    let opt_path = reg.artifact_path(task, "opt").unwrap();
+    let cases: Arc<Vec<Vec<TensorValue>>> =
+        Arc::new((0..5).map(|c| inputs_for(&reg, "silu_big", c)).collect());
+    rt.execute_pairs(ref_path.clone(), opt_path.clone(), cases.clone()).unwrap();
+    let stats = rt.stats().unwrap();
+    // 5 cases x 2 artifacts = 10 executions, but only 2 compiles and no
+    // cache churn: a batch resolves its executable once per request.
+    assert_eq!(stats.executions, 10, "{stats:?}");
+    assert_eq!(stats.compiles, 2, "{stats:?}");
+    assert_eq!(stats.cache_hits, 0, "{stats:?}");
+    // A second identical batch: two cache hits (one per artifact).
+    rt.execute_pairs(ref_path, opt_path, cases).unwrap();
+    let stats = rt.stats().unwrap();
+    assert_eq!(stats.executions, 20, "{stats:?}");
+    assert_eq!(stats.compiles, 2, "{stats:?}");
+    assert_eq!(stats.cache_hits, 2, "{stats:?}");
+}
+
+#[test]
 fn missing_artifact_is_an_error_not_a_panic() {
     let rt = Runtime::new().unwrap();
     let err = rt.execute(PathBuf::from("/nonexistent/x.hlo.txt"), vec![]);
