@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use evoengineer::evals::Evaluator;
 use evoengineer::llm::profile;
-use evoengineer::methods::{self, Archive, RunCtx};
+use evoengineer::methods::{self, Archive, RepairPolicy, RunCtx};
 use evoengineer::runtime::Runtime;
 use evoengineer::tasks::TaskRegistry;
 use evoengineer::Result;
@@ -35,6 +35,10 @@ fn main() -> Result<()> {
         seed: 0,
         archive: &archive,
         budget: 45,
+        // Stage-0 guard off: the historical pipeline. Try
+        // RepairPolicy::Repair { max_attempts: 2 } (or the CLI's
+        // `--repair repair`) for the guard + LLM repair loop.
+        repair: RepairPolicy::Off,
     };
     let record = method.run(&ctx);
 

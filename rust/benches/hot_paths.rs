@@ -17,7 +17,7 @@ use evoengineer::costmodel::{baseline_schedule, price, Gpu};
 use evoengineer::dsl::{self, KernelSpec};
 use evoengineer::evals::{functional_case_batch, Evaluator};
 use evoengineer::llm::{self, MODELS};
-use evoengineer::methods::{Archive, RunCtx, Session};
+use evoengineer::methods::{Archive, RepairPolicy, RunCtx, Session};
 use evoengineer::population::SingleBest;
 use evoengineer::runtime::{Runtime, TensorValue};
 use evoengineer::tasks::{OpTask, TaskRegistry};
@@ -122,6 +122,7 @@ fn main() {
         seed: 0,
         archive: &archive,
         budget: usize::MAX / 2,
+        repair: RepairPolicy::Off,
     };
     let mut session = Session::new(&ctx, "bench");
     let mut pop = SingleBest::new();

@@ -34,7 +34,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::evals::Evaluator;
 use crate::llm::{profile, ModelProfile};
-use crate::methods::{self, Archive, ArchiveEntry, KernelRunRecord, RunCtx};
+use crate::methods::{self, Archive, ArchiveEntry, KernelRunRecord, RepairPolicy, RunCtx};
 use crate::tasks::OpTask;
 use crate::{eyre, Result};
 
@@ -53,6 +53,9 @@ pub struct CampaignConfig {
     pub max_ops: usize,
     /// Trial budget per run (the paper's 45).
     pub budget: usize,
+    /// Stage-0 guard / repair policy applied to every cell (the
+    /// campaign-level ablation axis; DESIGN.md §11).
+    pub repair: RepairPolicy,
     /// Worker parallelism (0 = number of CPUs).
     pub concurrency: usize,
     /// Progress lines to stderr.
@@ -78,6 +81,7 @@ impl Default for CampaignConfig {
             op_filter: String::new(),
             max_ops: 0,
             budget: crate::TRIAL_BUDGET,
+            repair: RepairPolicy::Off,
             concurrency: 0,
             quiet: false,
             checkpoint: None,
@@ -265,6 +269,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         None => None,
     };
     let budget = cfg.budget;
+    let repair = cfg.repair;
     let quiet = cfg.quiet;
     let stop_after = cfg.stop_after;
     let jobs = Arc::new(jobs);
@@ -299,6 +304,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
                     seed: job.seed,
                     archive: &archive,
                     budget,
+                    repair,
                 };
                 let rec = method.run(&ctx);
                 if let Some(appender) = appender {

@@ -151,6 +151,10 @@ mod tests {
             budget: 45,
             compiled_trials: 40,
             correct_trials: 30,
+            guard_rejected_trials: 3,
+            repaired_trials: 1,
+            repair_attempts: 2,
+            repair_policy: "repair:2".into(),
             best_speedup: 2.5,
             best_pytorch_speedup: 1.2,
             any_valid: true,
@@ -174,6 +178,11 @@ mod tests {
         assert_eq!(back[0].trajectory, vec![1.0, 2.0, 2.5]);
         assert_eq!(back[0].best_src, records[0].best_src);
         assert_eq!(back[0].best_speedup, 2.5);
+        // Stage-0 bookkeeping survives the round-trip.
+        assert_eq!(back[0].guard_rejected_trials, 3);
+        assert_eq!(back[0].repaired_trials, 1);
+        assert_eq!(back[0].repair_attempts, 2);
+        assert_eq!(back[0].repair_policy, "repair:2");
         std::fs::remove_dir_all(dir).ok();
     }
 

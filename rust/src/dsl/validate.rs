@@ -9,6 +9,15 @@
 //! * estimated register pressure must fit regs_per_thread (spill ->
 //!   hard error above the 255 ceiling, soft perf penalty otherwise —
 //!   the cost model prices the soft case)
+//!
+//! Two views of the same rules:
+//! * [`validate`] / [`validate_schedule`] — the historical first-error
+//!   compile-gate API (stage 1 of the evaluation pipeline);
+//! * [`schedule_violations`] — the *exhaustive* structured checker the
+//!   stage-0 guard consumes: every violated limit is reported, each
+//!   tagged with a [`ViolationKind`] and the offending field, so the
+//!   repair loop can target fixes instead of re-discovering limits one
+//!   compile at a time.
 
 use std::fmt;
 
@@ -31,71 +40,148 @@ impl fmt::Display for ValidationError {
 
 impl std::error::Error for ValidationError {}
 
-fn err(msg: impl Into<String>) -> Result<(), ValidationError> {
-    Err(ValidationError(msg.into()))
+/// Which hardware limit a schedule violates. The guard maps these to
+/// structured diagnostics; the repair loop keys targeted fixes on them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// Tile dimension outside 1..=[`MAX_TILE`].
+    TileRange,
+    /// Vector width not a supported packing (1/2/4/8).
+    VectorWidth,
+    /// Unroll factor outside 1..=16.
+    Unroll,
+    /// Pipeline stages outside 1..=4.
+    Stages,
+    /// Multi-stage pipelining without shared-memory staging.
+    StagingRequired,
+    /// Threads/block not a multiple of 32 in 32..=[`MAX_THREADS`].
+    ThreadsPerBlock,
+    /// Register budget outside 16..=[`MAX_REGS`].
+    RegsRange,
+    /// Shared-memory request over the per-block ceiling.
+    SmemOverflow,
+    /// Estimated register pressure over the hardware ceiling.
+    RegPressure,
 }
 
-/// Validate one schedule against the hardware model.
-pub fn validate_schedule(s: &Schedule) -> Result<(), ValidationError> {
-    for (name, v) in [("tile_m", s.tile_m), ("tile_n", s.tile_n), ("tile_k", s.tile_k)] {
-        if v == 0 || v > MAX_TILE {
-            return err(format!("{name}={v} outside 1..={MAX_TILE}"));
+/// One violated limit: kind + offending field + human message (the
+/// message text matches what the first-error gate has always emitted).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    pub field: &'static str,
+    pub message: String,
+}
+
+/// Exhaustive structured check of one schedule against the hardware
+/// model: *every* violated limit is returned, in a fixed deterministic
+/// order (same schedule → same list).
+pub fn schedule_violations(s: &Schedule) -> Vec<Violation> {
+    let mut v = Vec::new();
+    for (name, val) in [("tile_m", s.tile_m), ("tile_n", s.tile_n), ("tile_k", s.tile_k)] {
+        if val == 0 || val > MAX_TILE {
+            v.push(Violation {
+                kind: ViolationKind::TileRange,
+                field: name,
+                message: format!("{name}={val} outside 1..={MAX_TILE}"),
+            });
         }
     }
     if !matches!(s.vector_width, 1 | 2 | 4 | 8) {
-        return err(format!(
-            "vector_width={} not a supported packing (1/2/4/8)",
-            s.vector_width
-        ));
+        v.push(Violation {
+            kind: ViolationKind::VectorWidth,
+            field: "vector_width",
+            message: format!(
+                "vector_width={} not a supported packing (1/2/4/8)",
+                s.vector_width
+            ),
+        });
     }
     if s.unroll == 0 || s.unroll > 16 {
-        return err(format!("unroll={} outside 1..=16", s.unroll));
+        v.push(Violation {
+            kind: ViolationKind::Unroll,
+            field: "unroll",
+            message: format!("unroll={} outside 1..=16", s.unroll),
+        });
     }
     if s.stages == 0 || s.stages > 4 {
-        return err(format!("stages={} outside 1..=4", s.stages));
+        v.push(Violation {
+            kind: ViolationKind::Stages,
+            field: "stages",
+            message: format!("stages={} outside 1..=4", s.stages),
+        });
     }
     if s.stages > 1 && !s.smem_staging {
-        return err("multi-stage pipelining requires smem_staging");
+        v.push(Violation {
+            kind: ViolationKind::StagingRequired,
+            field: "smem_staging",
+            message: "multi-stage pipelining requires smem_staging".into(),
+        });
     }
     if s.threads_per_block < 32
         || s.threads_per_block > MAX_THREADS
         || s.threads_per_block % 32 != 0
     {
-        return err(format!(
-            "threads_per_block={} must be a multiple of 32 in 32..={MAX_THREADS}",
-            s.threads_per_block
-        ));
+        v.push(Violation {
+            kind: ViolationKind::ThreadsPerBlock,
+            field: "threads_per_block",
+            message: format!(
+                "threads_per_block={} must be a multiple of 32 in 32..={MAX_THREADS}",
+                s.threads_per_block
+            ),
+        });
     }
     if s.regs_per_thread < 16 || s.regs_per_thread > MAX_REGS {
-        return err(format!(
-            "regs_per_thread={} outside 16..={MAX_REGS}",
-            s.regs_per_thread
-        ));
+        v.push(Violation {
+            kind: ViolationKind::RegsRange,
+            field: "regs_per_thread",
+            message: format!(
+                "regs_per_thread={} outside 16..={MAX_REGS}",
+                s.regs_per_thread
+            ),
+        });
     }
     let smem = s.smem_bytes();
     if smem > MAX_SMEM_BYTES {
-        return err(format!(
-            "shared memory {smem}B exceeds the {MAX_SMEM_BYTES}B/block limit (sm_89)"
-        ));
+        v.push(Violation {
+            kind: ViolationKind::SmemOverflow,
+            field: "smem_staging",
+            message: format!(
+                "shared memory {smem}B exceeds the {MAX_SMEM_BYTES}B/block limit (sm_89)"
+            ),
+        });
     }
     if s.est_registers() > MAX_REGS {
-        return err(format!(
-            "estimated register pressure {} exceeds the {MAX_REGS}-register ceiling \
-             (output tile too large for the block)",
-            s.est_registers()
-        ));
+        v.push(Violation {
+            kind: ViolationKind::RegPressure,
+            field: "regs_per_thread",
+            message: format!(
+                "estimated register pressure {} exceeds the {MAX_REGS}-register ceiling \
+                 (output tile too large for the block)",
+                s.est_registers()
+            ),
+        });
     }
-    Ok(())
+    v
+}
+
+/// Validate one schedule against the hardware model (first violation
+/// wins — the historical compile-gate behaviour).
+pub fn validate_schedule(s: &Schedule) -> Result<(), ValidationError> {
+    match schedule_violations(s).into_iter().next() {
+        Some(v) => Err(ValidationError(v.message)),
+        None => Ok(()),
+    }
 }
 
 /// Validate a whole program (schedule checks; op/semantics existence is
 /// checked at lowering time against the artifact manifest).
 pub fn validate(spec: &KernelSpec) -> Result<(), ValidationError> {
     if spec.op.is_empty() {
-        return err("empty kernel name");
+        return Err(ValidationError("empty kernel name".into()));
     }
     if spec.semantics.is_empty() {
-        return err("empty semantics variant");
+        return Err(ValidationError("empty semantics variant".into()));
     }
     validate_schedule(&spec.schedule)
 }
@@ -108,6 +194,7 @@ mod tests {
     #[test]
     fn baseline_is_valid() {
         validate(&KernelSpec::baseline("matmul_64")).unwrap();
+        assert!(schedule_violations(&KernelSpec::baseline("matmul_64").schedule).is_empty());
     }
 
     #[test]
@@ -166,5 +253,26 @@ mod tests {
         let mut spec = KernelSpec::baseline("x");
         spec.schedule.tile_k = 0;
         assert!(validate(&spec).is_err());
+    }
+
+    #[test]
+    fn violations_are_exhaustive_and_tagged() {
+        // One schedule, three simultaneous limit breaks: the structured
+        // checker reports all of them; the legacy gate only the first.
+        let mut s = KernelSpec::baseline("x").schedule;
+        s.tile_m = 0; // TileRange
+        s.vector_width = 5; // VectorWidth
+        s.threads_per_block = 100; // ThreadsPerBlock
+        let v = schedule_violations(&s);
+        let kinds: Vec<ViolationKind> = v.iter().map(|x| x.kind).collect();
+        assert!(kinds.contains(&ViolationKind::TileRange), "{v:?}");
+        assert!(kinds.contains(&ViolationKind::VectorWidth), "{v:?}");
+        assert!(kinds.contains(&ViolationKind::ThreadsPerBlock), "{v:?}");
+        assert!(v.len() >= 3);
+        // First-error wrapper reports the first of the same list.
+        let e = validate_schedule(&s).unwrap_err();
+        assert_eq!(e.0, v[0].message);
+        // Deterministic: same schedule, same list.
+        assert_eq!(schedule_violations(&s), v);
     }
 }

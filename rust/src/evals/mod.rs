@@ -1,5 +1,12 @@
-//! The paper's two-stage evaluation pipeline (§4.3):
+//! The paper's two-stage evaluation pipeline (§4.3), fronted by an
+//! optional stage-0 static guard (DESIGN.md §11):
 //!
+//! 0. **Stage-0 validity guard** — [`crate::guard`]: pure static
+//!    shape/rank/limit checks over the candidate text, run *before*
+//!    any compile when a repair policy is active. Rejections carry
+//!    structured diagnostics, are journaled in the persistent store
+//!    under a guard-namespaced key ([`crate::store::EvalKey::guarded`])
+//!    and never reach the compile gate or the PJRT runtime pool.
 //! 1. **Compilation Check** — KernelScript front-end + lowering against
 //!    the artifact manifest (real lexing/parsing/resource validation).
 //! 2. **Functional Testing** — five random test cases executed on the
@@ -86,6 +93,9 @@ pub struct EvalSuccess {
 /// Outcome of one candidate evaluation.
 #[derive(Debug, Clone)]
 pub enum EvalOutcome {
+    /// Stage-0 rejection by the static validity guard, before any
+    /// compile — the structured diagnostics the repair loop saw.
+    GuardReject { diagnostics: Vec<crate::guard::GuardDiagnostic> },
     /// Stage-1 rejection (syntax / validation / resolution).
     CompileFail { error: String },
     /// Stage-2 rejection: compiled but produced wrong numerics.
@@ -97,7 +107,10 @@ pub enum EvalOutcome {
 
 impl EvalOutcome {
     pub fn compiled(&self) -> bool {
-        !matches!(self, EvalOutcome::CompileFail { .. })
+        !matches!(
+            self,
+            EvalOutcome::CompileFail { .. } | EvalOutcome::GuardReject { .. }
+        )
     }
 
     pub fn correct(&self) -> bool {
@@ -208,6 +221,69 @@ impl Evaluator {
         outcome
     }
 
+    /// Stage 0: the static validity guard, as a pure function — never
+    /// touches the compile gate, the runtime pool, or the cache.
+    pub fn guard_check(&self, src: &str, task: &OpTask) -> crate::guard::GuardReport {
+        crate::guard::check_source(src, task)
+    }
+
+    /// Finalize a stage-0 rejection: journal the verdict (under the
+    /// guard-namespaced **raw-text** key — stage-0 diagnostics depend
+    /// on surface features like shadowed bindings that the canonical
+    /// re-print erases, so the verdict is an identity of the raw
+    /// emission, and it can never shadow or be shadowed by a
+    /// full-pipeline record) and return the outcome. Consumes no RNG,
+    /// so replays are trivially bit-identical. Unparseable candidates
+    /// are not journaled (same policy as stage-1 syntax rejections:
+    /// re-rejecting them is already the cheapest path).
+    pub fn reject_stage0(
+        &self,
+        src: &str,
+        task: &OpTask,
+        model: &str,
+        report: &crate::guard::GuardReport,
+    ) -> EvalOutcome {
+        debug_assert!(!report.pass(), "reject_stage0 called with a passing report");
+        if let Some(store) = &self.store {
+            if dsl::parse(src).is_ok() {
+                let key = EvalKey::guarded(&task.name, src);
+                if let Some(stored) = store.lookup(&key) {
+                    if let StoredOutcome::GuardReject { diagnostics } = stored.outcome {
+                        return EvalOutcome::GuardReject { diagnostics };
+                    }
+                }
+                let entry = StoredEval {
+                    op: task.name.clone(),
+                    model: model.to_string(),
+                    outcome: StoredOutcome::GuardReject {
+                        diagnostics: report.diagnostics.clone(),
+                    },
+                };
+                if let Err(e) = store.record(&key, entry) {
+                    eprintln!("warning: eval cache write failed: {e:#}");
+                }
+            }
+        }
+        EvalOutcome::GuardReject { diagnostics: report.diagnostics.clone() }
+    }
+
+    /// Guard-gated evaluation: stage 0 first, stages 1–3 only when the
+    /// guard passes (the `diagnose` policy's view of the pipeline).
+    pub fn evaluate_guarded(
+        &self,
+        src: &str,
+        task: &OpTask,
+        model: &str,
+        rng: &mut Rng,
+    ) -> EvalOutcome {
+        let report = self.guard_check(src, task);
+        if report.pass() {
+            self.evaluate_keyed(src, task, model, rng)
+        } else {
+            self.reject_stage0(src, task, model, &report)
+        }
+    }
+
     /// The full pipeline with no persistent-cache consultation.
     fn evaluate_cold(&self, src: &str, task: &OpTask, rng: &mut Rng) -> EvalOutcome {
         // Stage 1: compile.
@@ -223,6 +299,9 @@ impl Evaluator {
     /// persisted.
     fn storable(outcome: &EvalOutcome) -> Option<StoredOutcome> {
         match outcome {
+            EvalOutcome::GuardReject { diagnostics } => Some(StoredOutcome::GuardReject {
+                diagnostics: diagnostics.clone(),
+            }),
             EvalOutcome::CompileFail { error } => {
                 Some(StoredOutcome::CompileFail { error: error.clone() })
             }
@@ -240,6 +319,9 @@ impl Evaluator {
     /// bit-identical to the evaluation it stands in for.
     fn replay(&self, stored: &StoredOutcome, task: &OpTask, rng: &mut Rng) -> EvalOutcome {
         match stored {
+            StoredOutcome::GuardReject { diagnostics } => EvalOutcome::GuardReject {
+                diagnostics: diagnostics.clone(),
+            },
             StoredOutcome::CompileFail { error } => {
                 EvalOutcome::CompileFail { error: error.clone() }
             }

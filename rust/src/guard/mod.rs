@@ -1,0 +1,481 @@
+//! Stage-0 static validity guard (DESIGN.md §11).
+//!
+//! The paper's two-stage pipeline (§4.3) discovers invalidity only
+//! *after* paying the most expensive step — a full compile per
+//! candidate. Following the tiered-verification lesson of "Towards
+//! Robust Agentic CUDA Kernel Benchmarking" (Lange et al., 2025) and
+//! CUDA-LLM's front-loaded static checks, this module runs a pure
+//! static pipeline over the candidate *before* anything touches the
+//! compile gate or the PJRT runtime pool:
+//!
+//! 1. **Syntax** — lex/parse (the text must be a program at all);
+//! 2. **Shadowed bindings** — duplicate schedule-field assignments
+//!    (last-wins shadowing the parser silently accepts);
+//! 3. **Undefined refs** — the kernel names an op other than the task
+//!    under optimization, or a semantics variant with no artifact;
+//! 4. **Non-terminating constructs** — zero-step loop controls (zero
+//!    tiles / unroll / stages / threads) that can never make progress;
+//! 5. **Shape mismatches** — schedule vs the op's [`ArgSpec`]s, via
+//!    [`shape`] inference (oversized tiles, over-wide vector loads,
+//!    zero-extent operands);
+//! 6. **Output-spec violations** — output partitioning incompatible
+//!    with the declared `out_shape` (rank/layout/tiling);
+//! 7. **Resource limits** — every violated sm_89 limit from
+//!    [`dsl::validate::schedule_violations`], exhaustively.
+//!
+//! The result is a [`GuardReport`]: an ordered list of structured
+//! [`GuardDiagnostic`]s, each carrying a machine-readable code, the
+//! offending field, a human message, and (where a targeted fix exists)
+//! a repair hint the LLM repair loop ([`crate::llm::repair`]) can
+//! apply. The whole check is a pure function of (source text, op spec):
+//! same inputs produce byte-identical diagnostics in the same order,
+//! which is what lets guard verdicts be journaled in the eval cache and
+//! replayed bit-identically.
+//!
+//! [`ArgSpec`]: crate::tasks::ArgSpec
+
+pub mod shape;
+
+use std::fmt;
+
+use crate::dsl::{self, lexer, validate, KernelSpec};
+use crate::tasks::OpTask;
+
+/// Machine-readable diagnostic class (the taxonomy of DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GuardCode {
+    /// Lexer/parser rejection — the text is not a program.
+    Syntax,
+    /// Duplicate schedule-field assignment (last-wins shadowing).
+    ShadowedBinding,
+    /// Reference to an op or semantics variant that does not exist.
+    UndefinedRef,
+    /// Zero-step loop construct that can never terminate/progress.
+    NonTerminating,
+    /// Schedule references more data than the op's ArgSpecs declare.
+    ShapeMismatch,
+    /// Output partitioning incompatible with the declared out_shape.
+    OutputSpecViolation,
+    /// Hardware resource limit violated (sm_89 model).
+    ResourceLimit,
+}
+
+impl GuardCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GuardCode::Syntax => "syntax",
+            GuardCode::ShadowedBinding => "shadowed_binding",
+            GuardCode::UndefinedRef => "undefined_ref",
+            GuardCode::NonTerminating => "non_terminating",
+            GuardCode::ShapeMismatch => "shape_mismatch",
+            GuardCode::OutputSpecViolation => "output_spec_violation",
+            GuardCode::ResourceLimit => "resource_limit",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        Some(match s {
+            "syntax" => GuardCode::Syntax,
+            "shadowed_binding" => GuardCode::ShadowedBinding,
+            "undefined_ref" => GuardCode::UndefinedRef,
+            "non_terminating" => GuardCode::NonTerminating,
+            "shape_mismatch" => GuardCode::ShapeMismatch,
+            "output_spec_violation" => GuardCode::OutputSpecViolation,
+            "resource_limit" => GuardCode::ResourceLimit,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for GuardCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One structured stage-0 finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GuardDiagnostic {
+    pub code: GuardCode,
+    /// Field/symbol the diagnostic anchors to ("" = whole program).
+    pub field: String,
+    pub message: String,
+    /// Targeted repair: set `hint.0` to `hint.1` (`op` / `semantics` /
+    /// a schedule field). `None` when no single-field fix exists.
+    pub hint: Option<(String, String)>,
+}
+
+impl fmt::Display for GuardDiagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.field.is_empty() {
+            write!(f, "[{}] {}", self.code, self.message)
+        } else {
+            write!(f, "[{}] {}: {}", self.code, self.field, self.message)
+        }
+    }
+}
+
+/// The guard's verdict for one candidate: empty = pass.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct GuardReport {
+    pub diagnostics: Vec<GuardDiagnostic>,
+}
+
+impl GuardReport {
+    pub fn pass(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// The diagnostics as the error text a repair prompt would carry.
+    pub fn summary(&self) -> String {
+        self.diagnostics
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Does any diagnostic carry this code?
+    pub fn has(&self, code: GuardCode) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+}
+
+/// Stage-0 check of a raw candidate emission against `task`. Pure and
+/// deterministic; never touches the compile gate or the runtime pool.
+pub fn check_source(src: &str, task: &OpTask) -> GuardReport {
+    let spec = match dsl::parse(src) {
+        Ok(spec) => spec,
+        Err(e) => {
+            return GuardReport {
+                diagnostics: vec![GuardDiagnostic {
+                    code: GuardCode::Syntax,
+                    field: String::new(),
+                    message: format!("not a parseable program: {e}"),
+                    hint: None,
+                }],
+            }
+        }
+    };
+    let mut diagnostics = shadowed_bindings(src);
+    diagnostics.extend(check_spec(&spec, task).diagnostics);
+    GuardReport { diagnostics }
+}
+
+/// Stage-0 check of an already-parsed program (source-level checks —
+/// syntax, shadowed bindings — are skipped).
+pub fn check_spec(spec: &KernelSpec, task: &OpTask) -> GuardReport {
+    let mut d = Vec::new();
+
+    // --- undefined refs -------------------------------------------------
+    if spec.op != task.name {
+        d.push(GuardDiagnostic {
+            code: GuardCode::UndefinedRef,
+            field: "kernel".to_string(),
+            message: format!(
+                "kernel implements `{}` but the task under optimization is `{}`",
+                spec.op, task.name
+            ),
+            hint: Some(("op".to_string(), task.name.clone())),
+        });
+    }
+    if !task.artifacts.contains_key(&spec.semantics) {
+        let hint = ["opt", "ref"]
+            .iter()
+            .find(|v| task.artifacts.contains_key(**v))
+            .map(|v| ("semantics".to_string(), (*v).to_string()));
+        d.push(GuardDiagnostic {
+            code: GuardCode::UndefinedRef,
+            field: "semantics".to_string(),
+            message: format!(
+                "undefined semantics variant `{}` (no such artifact for `{}`)",
+                spec.semantics, task.name
+            ),
+            hint,
+        });
+    }
+
+    // --- non-terminating constructs ------------------------------------
+    let s = &spec.schedule;
+    for (name, val, reset) in [
+        ("tile_m", s.tile_m, "8"),
+        ("tile_n", s.tile_n, "8"),
+        ("tile_k", s.tile_k, "8"),
+        ("unroll", s.unroll, "1"),
+        ("stages", s.stages, "1"),
+        ("threads_per_block", s.threads_per_block, "128"),
+    ] {
+        if val == 0 {
+            d.push(GuardDiagnostic {
+                code: GuardCode::NonTerminating,
+                field: name.to_string(),
+                message: format!(
+                    "{name}=0 is a zero-step loop construct — the kernel can never make progress"
+                ),
+                hint: Some((name.to_string(), reset.to_string())),
+            });
+        }
+    }
+
+    // --- shape / output-spec inference ----------------------------------
+    let facts = shape::infer(task);
+    d.extend(shape::shape_checks(s, task, &facts));
+    d.extend(shape::output_checks(s, task, &facts));
+
+    // --- resource limits (exhaustive structured validate) ---------------
+    for v in validate::schedule_violations(s) {
+        // Zero-valued fields were already reported as non-terminating;
+        // the duplicate range message adds no information.
+        if matches!(v.kind, validate::ViolationKind::TileRange) && tile_value(s, v.field) == 0 {
+            continue;
+        }
+        let hint = resource_hint(&v);
+        d.push(GuardDiagnostic {
+            code: GuardCode::ResourceLimit,
+            field: v.field.to_string(),
+            message: v.message,
+            hint,
+        });
+    }
+
+    GuardReport { diagnostics: d }
+}
+
+fn tile_value(s: &crate::dsl::Schedule, field: &str) -> u32 {
+    match field {
+        "tile_m" => s.tile_m,
+        "tile_n" => s.tile_n,
+        "tile_k" => s.tile_k,
+        _ => 1,
+    }
+}
+
+/// Targeted single-field fix for a resource violation, when one exists.
+fn resource_hint(v: &validate::Violation) -> Option<(String, String)> {
+    use validate::ViolationKind as K;
+    let value = match v.kind {
+        K::TileRange => validate::MAX_TILE.to_string(),
+        K::VectorWidth => "4".to_string(),
+        K::Unroll => "4".to_string(),
+        K::Stages => "2".to_string(),
+        K::StagingRequired => "true".to_string(),
+        K::ThreadsPerBlock => "256".to_string(),
+        K::RegsRange => "128".to_string(),
+        // Multi-field rebalances: no single assignment fixes these.
+        K::SmemOverflow | K::RegPressure => return None,
+    };
+    Some((v.field.to_string(), value))
+}
+
+/// Scan the schedule block for duplicate field assignments — bindings
+/// the parser silently resolves last-wins, which almost always means
+/// the emitter contradicted itself.
+fn shadowed_bindings(src: &str) -> Vec<GuardDiagnostic> {
+    let Ok(toks) = lexer::lex(src) else {
+        return Vec::new(); // unparseable text is reported as Syntax
+    };
+    let mut out = Vec::new();
+    let mut seen: Vec<&str> = Vec::new();
+    let mut reported: Vec<&str> = Vec::new();
+    let mut in_schedule = false;
+    let mut i = 0;
+    while i < toks.len() {
+        match &toks[i].tok {
+            lexer::Tok::Ident(name) if !in_schedule && name == "schedule" => {
+                if matches!(toks.get(i + 1).map(|t| &t.tok), Some(lexer::Tok::LBrace)) {
+                    in_schedule = true;
+                    i += 2;
+                    continue;
+                }
+            }
+            lexer::Tok::RBrace if in_schedule => {
+                in_schedule = false;
+            }
+            lexer::Tok::Ident(name) if in_schedule => {
+                if matches!(toks.get(i + 1).map(|t| &t.tok), Some(lexer::Tok::Colon)) {
+                    if seen.contains(&name.as_str()) {
+                        if !reported.contains(&name.as_str()) {
+                            reported.push(name.as_str());
+                            out.push(GuardDiagnostic {
+                                code: GuardCode::ShadowedBinding,
+                                field: name.clone(),
+                                message: format!(
+                                    "schedule field `{name}` is assigned more than once \
+                                     (the last assignment shadows the earlier ones)"
+                                ),
+                                hint: None,
+                            });
+                        }
+                    } else {
+                        seen.push(name.as_str());
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{print, KernelSpec};
+    use crate::tasks::{ArgSpec, OpTask};
+    use std::collections::HashMap;
+
+    fn task() -> OpTask {
+        let mut artifacts = HashMap::new();
+        for v in ["ref", "opt", "bug_scale", "bug_offset"] {
+            artifacts.insert(v.to_string(), format!("matmul_64/{v}.hlo.txt"));
+        }
+        OpTask {
+            name: "matmul_64".into(),
+            category: 1,
+            family: "matmul".into(),
+            args: vec![
+                ArgSpec { shape: vec![64, 64], gen: "uniform".into() },
+                ArgSpec { shape: vec![64, 64], gen: "uniform".into() },
+            ],
+            out_shape: vec![64, 64],
+            flops: 524288.0,
+            bytes_moved: 49152.0,
+            pt_launches: 1,
+            pt_passes: 1.0,
+            pt_efficiency: 0.8,
+            algo_penalty: 1.0,
+            atol: 5e-4,
+            rtol: 1e-3,
+            artifacts,
+        }
+    }
+
+    #[test]
+    fn valid_baseline_passes() {
+        let t = task();
+        let report = check_source(&print(&KernelSpec::baseline("matmul_64")), &t);
+        assert!(report.pass(), "{}", report.summary());
+    }
+
+    #[test]
+    fn syntax_garbage_is_one_structured_diagnostic() {
+        let report = check_source("__global__ void k() {}", &task());
+        assert_eq!(report.diagnostics.len(), 1);
+        assert_eq!(report.diagnostics[0].code, GuardCode::Syntax);
+        assert!(report.has(GuardCode::Syntax));
+    }
+
+    #[test]
+    fn undefined_refs_are_flagged_with_hints() {
+        let t = task();
+        let mut spec = KernelSpec::baseline("matmul_64");
+        spec.semantics = "turbo_v9".into();
+        let report = check_spec(&spec, &t);
+        assert!(report.has(GuardCode::UndefinedRef), "{}", report.summary());
+        let diag = &report.diagnostics[0];
+        assert_eq!(diag.field, "semantics");
+        assert_eq!(diag.hint, Some(("semantics".into(), "opt".into())));
+
+        let wrong_op = KernelSpec::baseline("softmax_64");
+        let report = check_spec(&wrong_op, &t);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == GuardCode::UndefinedRef && d.field == "kernel"));
+    }
+
+    #[test]
+    fn zero_step_constructs_are_non_terminating() {
+        let t = task();
+        let mut spec = KernelSpec::baseline("matmul_64");
+        spec.schedule.tile_k = 0;
+        spec.schedule.unroll = 0;
+        let report = check_spec(&spec, &t);
+        let nt: Vec<&GuardDiagnostic> = report
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == GuardCode::NonTerminating)
+            .collect();
+        assert_eq!(nt.len(), 2, "{}", report.summary());
+        // The zero values are not double-reported as tile-range limits.
+        assert!(
+            !report.diagnostics.iter().any(|d| d.code == GuardCode::ResourceLimit
+                && d.field == "tile_k"),
+            "{}",
+            report.summary()
+        );
+        // unroll=0 still appears exactly once.
+        assert_eq!(
+            report.diagnostics.iter().filter(|d| d.field == "unroll").count(),
+            2, // NonTerminating + the unroll range ResourceLimit
+        );
+    }
+
+    #[test]
+    fn resource_limits_collected_exhaustively() {
+        let t = task();
+        let mut spec = KernelSpec::baseline("matmul_64");
+        spec.schedule.vector_width = 3;
+        spec.schedule.threads_per_block = 100;
+        let report = check_spec(&spec, &t);
+        let rl: Vec<&GuardDiagnostic> = report
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == GuardCode::ResourceLimit)
+            .collect();
+        assert_eq!(rl.len(), 2, "{}", report.summary());
+        assert_eq!(rl[0].hint, Some(("vector_width".into(), "4".into())));
+        assert_eq!(rl[1].hint, Some(("threads_per_block".into(), "256".into())));
+    }
+
+    #[test]
+    fn shadowed_bindings_detected_once_per_field() {
+        let src = "kernel matmul_64 { semantics: opt; schedule { \
+                   tile_m: 8; tile_m: 16; tile_m: 32; tile_n: 8; } }";
+        let report = check_source(src, &task());
+        let shadowed: Vec<&GuardDiagnostic> = report
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == GuardCode::ShadowedBinding)
+            .collect();
+        assert_eq!(shadowed.len(), 1, "{}", report.summary());
+        assert_eq!(shadowed[0].field, "tile_m");
+        // A clean program has none.
+        assert!(check_source(
+            "kernel matmul_64 { semantics: opt; schedule { tile_m: 8; tile_n: 8; } }",
+            &task()
+        )
+        .pass());
+    }
+
+    #[test]
+    fn diagnostics_are_stable() {
+        // Same source → byte-identical diagnostic list, every time.
+        let src = "kernel matmul_64 { semantics: turbo; schedule { \
+                   tile_m: 8; tile_m: 16; vector_width: 3; unroll: 0; } }";
+        let t = task();
+        let a = check_source(src, &t);
+        let b = check_source(src, &t);
+        let c = check_source(src, &t);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+        assert!(a.diagnostics.len() >= 4, "{}", a.summary());
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        for code in [
+            GuardCode::Syntax,
+            GuardCode::ShadowedBinding,
+            GuardCode::UndefinedRef,
+            GuardCode::NonTerminating,
+            GuardCode::ShapeMismatch,
+            GuardCode::OutputSpecViolation,
+            GuardCode::ResourceLimit,
+        ] {
+            assert_eq!(GuardCode::from_str(code.as_str()), Some(code));
+        }
+        assert_eq!(GuardCode::from_str("nope"), None);
+    }
+}

@@ -1,0 +1,274 @@
+//! Shape / rank inference for the stage-0 guard: derive the iteration-
+//! space facts of an op from its [`ArgSpec`](crate::tasks::ArgSpec)s
+//! and output spec, then check a candidate schedule against them.
+//!
+//! The discipline mirrors what a static CUDA checker can prove without
+//! compiling: a block tile wider than the hardware tile quantum must
+//! fit inside *some* operand axis, a vector load cannot be wider than
+//! the largest operand, a zero-extent operand cannot be staged, and a
+//! scalar (rank-0) output cannot be partitioned into more than one
+//! tile. Everything here is a pure function of (schedule, op spec) —
+//! same inputs, same diagnostics, in the same order.
+
+use crate::dsl::{Layout, Schedule};
+use crate::tasks::OpTask;
+
+use super::{GuardCode, GuardDiagnostic};
+
+/// Hardware tile quantum (lanes): tiles up to this extent are realizable
+/// on any operand via masking/padding; beyond it the tile must fit an
+/// actual operand axis. 64 = two sm_89 warps, the MMA macro-tile width —
+/// also the padding quantum the AOT pipeline lowers shapes to, so the
+/// shipped baseline kernels (which tile up to 64 regardless of op size)
+/// always pass.
+pub const TILE_QUANTUM: usize = 64;
+
+/// Inferred iteration-space facts for one op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeFacts {
+    /// Rank of the declared output.
+    pub out_rank: usize,
+    /// Total output elements (product of `out_shape`; 1 for rank 0).
+    pub out_numel: usize,
+    /// Largest axis extent across all args and the output (>= 1).
+    pub max_extent: usize,
+    /// Largest single-operand element count (0 when the op has no args).
+    pub max_arg_numel: usize,
+    /// Indices of args whose shape contains a zero extent.
+    pub zero_args: Vec<usize>,
+}
+
+impl ShapeFacts {
+    /// Largest tile extent a schedule may request for this op: the
+    /// padded operand extent, floored at the hardware tile quantum.
+    pub fn tile_bound(&self) -> usize {
+        self.max_extent.next_power_of_two().max(TILE_QUANTUM)
+    }
+}
+
+/// Infer [`ShapeFacts`] from an op's manifest entry.
+pub fn infer(task: &OpTask) -> ShapeFacts {
+    let mut max_extent = 1usize;
+    let mut max_arg_numel = 0usize;
+    let mut zero_args = Vec::new();
+    for (i, arg) in task.args.iter().enumerate() {
+        if arg.shape.iter().any(|&d| d == 0) {
+            zero_args.push(i);
+        }
+        for &d in &arg.shape {
+            max_extent = max_extent.max(d);
+        }
+        max_arg_numel = max_arg_numel.max(arg.numel());
+    }
+    for &d in &task.out_shape {
+        max_extent = max_extent.max(d);
+    }
+    ShapeFacts {
+        out_rank: task.out_shape.len(),
+        out_numel: task.out_numel(),
+        max_extent,
+        max_arg_numel,
+        zero_args,
+    }
+}
+
+/// Shape-mismatch diagnostics: the schedule references more data than
+/// the op's [`ArgSpec`]s declare.
+pub fn shape_checks(s: &Schedule, task: &OpTask, facts: &ShapeFacts) -> Vec<GuardDiagnostic> {
+    let mut out = Vec::new();
+    for &i in &facts.zero_args {
+        out.push(GuardDiagnostic {
+            code: GuardCode::ShapeMismatch,
+            field: format!("arg{i}"),
+            message: format!(
+                "argument {i} of `{}` has a zero-size shape {:?} — nothing to stage",
+                task.name, task.args[i].shape
+            ),
+            hint: None,
+        });
+    }
+    let bound = facts.tile_bound();
+    for (name, val) in [
+        ("tile_m", s.tile_m),
+        ("tile_n", s.tile_n),
+        ("tile_k", s.tile_k),
+    ] {
+        if val as usize > bound {
+            out.push(GuardDiagnostic {
+                code: GuardCode::ShapeMismatch,
+                field: name.to_string(),
+                message: format!(
+                    "{name}={val} exceeds every operand extent of `{}` \
+                     (largest axis {}, padded tile bound {bound})",
+                    task.name, facts.max_extent
+                ),
+                hint: Some((
+                    name.to_string(),
+                    bound.min(crate::dsl::validate::MAX_TILE as usize).max(1).to_string(),
+                )),
+            });
+        }
+    }
+    if !task.args.is_empty() && s.vector_width as usize > facts.max_arg_numel {
+        out.push(GuardDiagnostic {
+            code: GuardCode::ShapeMismatch,
+            field: "vector_width".to_string(),
+            message: format!(
+                "vector_width={} is wider than the largest operand of `{}` ({} elements)",
+                s.vector_width, task.name, facts.max_arg_numel
+            ),
+            hint: Some(("vector_width".to_string(), "1".to_string())),
+        });
+    }
+    out
+}
+
+/// Output-spec diagnostics: the schedule's output partitioning is
+/// incompatible with the declared `out_shape`.
+pub fn output_checks(s: &Schedule, task: &OpTask, facts: &ShapeFacts) -> Vec<GuardDiagnostic> {
+    let mut out = Vec::new();
+    if facts.out_numel == 0 {
+        out.push(GuardDiagnostic {
+            code: GuardCode::OutputSpecViolation,
+            field: "out".to_string(),
+            message: format!(
+                "`{}` declares a zero-element output {:?} — the kernel can produce nothing",
+                task.name, task.out_shape
+            ),
+            hint: None,
+        });
+    }
+    if facts.out_rank < 2 && s.layout == Layout::ColMajor {
+        out.push(GuardDiagnostic {
+            code: GuardCode::OutputSpecViolation,
+            field: "layout".to_string(),
+            message: format!(
+                "col_major staging needs a second output axis, but `{}` has output rank {}",
+                task.name, facts.out_rank
+            ),
+            hint: Some(("layout".to_string(), "row_major".to_string())),
+        });
+    }
+    if facts.out_rank == 0 {
+        for (name, val) in [("tile_m", s.tile_m), ("tile_n", s.tile_n)] {
+            if val > 1 {
+                out.push(GuardDiagnostic {
+                    code: GuardCode::OutputSpecViolation,
+                    field: name.to_string(),
+                    message: format!(
+                        "scalar (rank-0) output of `{}` cannot be partitioned: {name}={val}",
+                        task.name
+                    ),
+                    hint: Some((name.to_string(), "1".to_string())),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::ArgSpec;
+
+    fn task(args: Vec<Vec<usize>>, out: Vec<usize>) -> OpTask {
+        OpTask {
+            name: "synthetic".into(),
+            category: 1,
+            family: "x".into(),
+            args: args
+                .into_iter()
+                .map(|shape| ArgSpec { shape, gen: "uniform".into() })
+                .collect(),
+            out_shape: out,
+            flops: 1.0,
+            bytes_moved: 1.0,
+            pt_launches: 1,
+            pt_passes: 1.0,
+            pt_efficiency: 0.5,
+            algo_penalty: 1.0,
+            atol: 1e-4,
+            rtol: 1e-3,
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn facts_cover_args_and_output() {
+        let t = task(vec![vec![64, 64], vec![64, 64]], vec![64, 64]);
+        let f = infer(&t);
+        assert_eq!(f.out_rank, 2);
+        assert_eq!(f.out_numel, 4096);
+        assert_eq!(f.max_extent, 64);
+        assert_eq!(f.max_arg_numel, 4096);
+        assert!(f.zero_args.is_empty());
+        assert_eq!(f.tile_bound(), 64);
+    }
+
+    #[test]
+    fn small_ops_keep_the_quantum_bound() {
+        // conv2d-style op: extents 16, but the tile bound floors at the
+        // hardware quantum so shipped 64-wide baselines stay legal.
+        let t = task(vec![vec![8, 16, 16]], vec![8, 16, 16]);
+        assert_eq!(infer(&t).tile_bound(), TILE_QUANTUM);
+    }
+
+    #[test]
+    fn zero_extent_args_and_outputs_are_flagged() {
+        let t = task(vec![vec![64, 0]], vec![0, 4]);
+        let f = infer(&t);
+        assert_eq!(f.zero_args, vec![0]);
+        assert_eq!(f.out_numel, 0);
+        let s = Schedule::default();
+        assert!(shape_checks(&s, &t, &f)
+            .iter()
+            .any(|d| d.code == GuardCode::ShapeMismatch && d.field == "arg0"));
+        assert!(output_checks(&s, &t, &f)
+            .iter()
+            .any(|d| d.code == GuardCode::OutputSpecViolation && d.field == "out"));
+    }
+
+    #[test]
+    fn rank0_output_rules() {
+        let t = task(vec![vec![64, 64]], vec![]);
+        let f = infer(&t);
+        assert_eq!(f.out_rank, 0);
+        assert_eq!(f.out_numel, 1);
+        let mut s = Schedule::default(); // tile 8x8
+        let d = output_checks(&s, &t, &f);
+        assert_eq!(d.len(), 2, "{d:?}"); // tile_m and tile_n both > 1
+        assert!(d.iter().all(|x| x.code == GuardCode::OutputSpecViolation));
+        s.tile_m = 1;
+        s.tile_n = 1;
+        assert!(output_checks(&s, &t, &f).is_empty());
+        // col_major on a rank-0 output is also a violation.
+        s.layout = Layout::ColMajor;
+        assert_eq!(output_checks(&s, &t, &f).len(), 1);
+    }
+
+    #[test]
+    fn oversized_tiles_are_shape_mismatches_with_hints() {
+        let t = task(vec![vec![64, 64], vec![64, 64]], vec![64, 64]);
+        let f = infer(&t);
+        let mut s = Schedule::default();
+        s.tile_m = 128; // legal per resource limits, too big for the op
+        let d = shape_checks(&s, &t, &f);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].code, GuardCode::ShapeMismatch);
+        assert_eq!(d[0].hint, Some(("tile_m".into(), "64".into())));
+        s.tile_m = 64;
+        assert!(shape_checks(&s, &t, &f).is_empty());
+    }
+
+    #[test]
+    fn vector_width_wider_than_any_operand_is_flagged() {
+        let t = task(vec![vec![2]], vec![2]);
+        let f = infer(&t);
+        let mut s = Schedule::default();
+        s.vector_width = 4;
+        let d = shape_checks(&s, &t, &f);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].hint, Some(("vector_width".into(), "1".into())));
+    }
+}

@@ -13,7 +13,10 @@
 //!   printing, validation and lowering (the "nvcc" substrate).
 //! * [`tasks`] — the 91-operation dataset + artifact manifest.
 //! * [`runtime`] — sharded PJRT executor pool for the AOT HLO artifacts.
-//! * [`evals`] — the paper's two-stage evaluation pipeline.
+//! * [`guard`] — stage-0 static validity guard (shape/rank inference,
+//!   structured diagnostics) that runs before any compile.
+//! * [`evals`] — the paper's two-stage evaluation pipeline, fronted by
+//!   the stage-0 guard when a repair policy is active.
 //! * [`costmodel`] — RTX-4090 analytical timing of candidate schedules.
 //! * [`llm`] — SimLLM: prompt-conditioned stochastic code generator.
 //! * [`traverse`] — the two-layer traverse technique (solution-guiding
@@ -30,6 +33,7 @@ pub mod campaign;
 pub mod costmodel;
 pub mod dsl;
 pub mod evals;
+pub mod guard;
 pub mod ir;
 pub mod llm;
 pub mod metrics;

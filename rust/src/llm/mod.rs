@@ -44,6 +44,75 @@ pub fn count_tokens(text: &str) -> u64 {
     (text.len() as u64).div_ceil(4)
 }
 
+/// One repair call: the SimLLM is shown its own rejected emission plus
+/// the stage-0 guard diagnostics (DESIGN.md §11) and asked to fix it.
+///
+/// Like a real model it repairs *from the diagnostics*: mechanical
+/// text mends for syntax findings, targeted field assignments from the
+/// structured repair hints, a make-consistent rebalance for the
+/// multi-field resource findings — each applied with a skill-dependent
+/// probability, so repair success is imperfect and model-dependent but
+/// fully deterministic given the RNG stream. Token accounting is real:
+/// the prompt charges for the source + diagnostics the repair request
+/// would carry, the completion for the re-emitted program.
+pub fn repair(
+    src: &str,
+    report: &crate::guard::GuardReport,
+    profile: &ModelProfile,
+    rng: &mut Rng,
+) -> LlmResponse {
+    let diag_text = report.summary();
+    // What the repair request would contain: instructions + program +
+    // the structured diagnostics.
+    const REPAIR_INSTRUCTION: &str =
+        "Fix the kernel so it passes the static checks; keep the optimization intent.";
+    let prompt_tokens =
+        count_tokens(src) + count_tokens(&diag_text) + count_tokens(REPAIR_INSTRUCTION);
+
+    // Skilled models land targeted fixes more reliably.
+    let p_fix = (0.55 + 0.40 * profile.skill).min(0.95);
+
+    let mut text = src.to_string();
+    if report.has(crate::guard::GuardCode::Syntax) && rng.chance(p_fix) {
+        text = mutate::mend_text(&text);
+    }
+    let mut notes: Vec<String> = Vec::new();
+    if let Ok(mut spec) = dsl::parse(&text) {
+        for d in &report.diagnostics {
+            if let Some((field, value)) = &d.hint {
+                if rng.chance(p_fix) && mutate::apply_named_fix(&mut spec, field, value) {
+                    notes.push(format!("set {field} to {value} (guard: {})", d.code));
+                }
+            }
+        }
+        // Multi-field resource findings (smem overflow, register
+        // pressure) have no single-assignment hint; a competent model
+        // rebalances the schedule the way a compiler pragma would.
+        let needs_rebalance = report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == crate::guard::GuardCode::ResourceLimit && d.hint.is_none());
+        if needs_rebalance && rng.chance(p_fix) {
+            mutate::make_consistent(&mut spec.schedule);
+            notes.push("rebalanced the schedule within resource limits".into());
+        }
+        // Canonical re-print (also collapses shadowed bindings).
+        text = dsl::print(&spec);
+    }
+
+    let insight = notes
+        .last()
+        .cloned()
+        .unwrap_or_else(|| "attempted a repair from the diagnostics".into());
+    let completion_overhead = (profile.verbosity * 80.0) as u64; // short apology + fix
+    LlmResponse {
+        prompt_tokens,
+        completion_tokens: count_tokens(&text) + count_tokens(&insight) + completion_overhead,
+        text,
+        insight,
+    }
+}
+
 /// Run one SimLLM completion for `prompt` under `profile`.
 pub fn generate(prompt: &str, profile: &ModelProfile, rng: &mut Rng) -> LlmResponse {
     let ctx = parse::parse_prompt(prompt);
@@ -238,6 +307,74 @@ mod tests {
             v_rich > v_bare,
             "rich prompt should be more valid: bare={v_bare} rich={v_rich}"
         );
+    }
+
+    #[test]
+    fn repair_applies_hints_deterministically() {
+        use crate::guard::{GuardCode, GuardDiagnostic, GuardReport};
+        let mut spec = KernelSpec::baseline("matmul_64");
+        spec.semantics = "turbo".into();
+        spec.schedule.vector_width = 3;
+        let src = dsl::print(&spec);
+        let report = GuardReport {
+            diagnostics: vec![
+                GuardDiagnostic {
+                    code: GuardCode::UndefinedRef,
+                    field: "semantics".into(),
+                    message: "undefined semantics variant `turbo`".into(),
+                    hint: Some(("semantics".into(), "opt".into())),
+                },
+                GuardDiagnostic {
+                    code: GuardCode::ResourceLimit,
+                    field: "vector_width".into(),
+                    message: "vector_width=3 not a supported packing".into(),
+                    hint: Some(("vector_width".into(), "4".into())),
+                },
+            ],
+        };
+        // Deterministic given the RNG stream.
+        let a = repair(&src, &report, &MODELS[0], &mut Rng::new(1));
+        let b = repair(&src, &report, &MODELS[0], &mut Rng::new(1));
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.insight, b.insight);
+        assert!(a.prompt_tokens > 0 && a.completion_tokens > 0);
+        // Targeted fixes land most of the time (skill-dependent, not
+        // always — repair is imperfect like a real model's).
+        let mut both_fixed = 0;
+        for seed in 0..100 {
+            let r = repair(&src, &report, &MODELS[0], &mut Rng::new(seed));
+            if let Ok(s) = dsl::parse(&r.text) {
+                if s.semantics == "opt" && s.schedule.vector_width == 4 {
+                    both_fixed += 1;
+                }
+            }
+        }
+        assert!(both_fixed > 40, "{both_fixed}/100 repairs landed both fixes");
+        assert!(both_fixed < 100, "repair should not be infallible");
+    }
+
+    #[test]
+    fn repair_mends_syntax_defects() {
+        use crate::guard::{GuardCode, GuardDiagnostic, GuardReport};
+        let text = dsl::print(&KernelSpec::baseline("matmul_64"));
+        let broken = text.replacen("schedule", "schedul", 1);
+        assert!(dsl::parse(&broken).is_err());
+        let report = GuardReport {
+            diagnostics: vec![GuardDiagnostic {
+                code: GuardCode::Syntax,
+                field: String::new(),
+                message: "not a parseable program".into(),
+                hint: None,
+            }],
+        };
+        let mut mended = 0;
+        for seed in 0..60 {
+            let r = repair(&broken, &report, &MODELS[2], &mut Rng::new(seed));
+            if dsl::parse(&r.text).is_ok() {
+                mended += 1;
+            }
+        }
+        assert!(mended > 30, "{mended}/60 syntax repairs parsed");
     }
 
     #[test]

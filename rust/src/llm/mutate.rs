@@ -259,6 +259,44 @@ pub fn make_consistent(s: &mut Schedule) {
     }
 }
 
+/// Apply a structured guard repair hint: `op` and `semantics` address
+/// the program header, anything else a schedule field. Returns whether
+/// the assignment applied (the hook [`crate::llm::repair`] feeds
+/// stage-0 [`GuardDiagnostic`](crate::guard::GuardDiagnostic) hints
+/// through).
+pub fn apply_named_fix(spec: &mut crate::dsl::KernelSpec, field: &str, value: &str) -> bool {
+    match field {
+        "op" => {
+            spec.op = value.to_string();
+            true
+        }
+        "semantics" => {
+            spec.semantics = value.to_string();
+            true
+        }
+        _ => set_field(&mut spec.schedule, field, value),
+    }
+}
+
+/// Mechanically mend the textual slips [`corrupt_text`] injects: a
+/// misspelled `schedule` keyword, a `:` flipped to `=`, an unbalanced
+/// closing brace. (A dropped semicolon is not mechanically recoverable
+/// without a parse, which is exactly why syntax repair sometimes
+/// fails — like a real LLM regenerating from a diagnostic.)
+pub fn mend_text(text: &str) -> String {
+    let mut t = text.replace("schedul ", "schedule ").replace("schedul{", "schedule{");
+    if t.contains('=') {
+        // `=` never appears in legal KernelScript; it is a flipped `:`.
+        t = t.replacen('=', ":", 1);
+    }
+    let opens = t.matches('{').count();
+    let closes = t.matches('}').count();
+    for _ in closes..opens {
+        t.push_str("\n}");
+    }
+    t
+}
+
 /// Inject an illegal-schedule defect (stage-1 validation failure).
 pub fn inject_legality_defect(s: &mut Schedule, rng: &mut Rng) -> String {
     match rng.below(4) {
@@ -367,6 +405,44 @@ mod tests {
             let spec = KernelSpec { op: "x".into(), semantics: "opt".into(), schedule: s };
             validate(&spec).unwrap_or_else(|e| panic!("iteration {i}: {e}\n{spec:?}"));
         }
+    }
+
+    #[test]
+    fn mend_text_recovers_most_corruptions() {
+        let text = print(&KernelSpec::baseline("matmul_64"));
+        let mut rng = Rng::new(9);
+        let mut mended = 0;
+        let mut broken = 0;
+        for i in 0..80 {
+            let mut r = rng.derive(&format!("m{i}"));
+            let bad = corrupt_text(&text, &mut r);
+            if parse(&bad).is_ok() {
+                continue; // corruption happened to stay parseable
+            }
+            broken += 1;
+            if parse(&mend_text(&bad)).is_ok() {
+                mended += 1;
+            }
+        }
+        // 3 of the 4 corruption classes are mechanically invertible.
+        assert!(
+            mended * 2 > broken,
+            "only {mended}/{broken} corrupted programs mended"
+        );
+        // Clean text is left semantically untouched.
+        assert_eq!(parse(&mend_text(&text)).unwrap(), parse(&text).unwrap());
+    }
+
+    #[test]
+    fn apply_named_fix_addresses_header_and_schedule() {
+        let mut spec = KernelSpec::baseline("matmul_64");
+        assert!(apply_named_fix(&mut spec, "semantics", "ref"));
+        assert_eq!(spec.semantics, "ref");
+        assert!(apply_named_fix(&mut spec, "op", "softmax_64"));
+        assert_eq!(spec.op, "softmax_64");
+        assert!(apply_named_fix(&mut spec, "tile_m", "64"));
+        assert_eq!(spec.schedule.tile_m, 64);
+        assert!(!apply_named_fix(&mut spec, "warp_size", "32"));
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::path::PathBuf;
 use evoengineer::campaign::{results, CampaignConfig};
 use evoengineer::evals::Evaluator;
 use evoengineer::llm::profile;
-use evoengineer::methods::{self, Archive, RunCtx};
+use evoengineer::methods::{self, Archive, RepairPolicy, RunCtx};
 use evoengineer::runtime::Runtime;
 use evoengineer::store::EvalStore;
 use evoengineer::tasks::TaskRegistry;
@@ -33,11 +33,15 @@ USAGE:
 COMMANDS:
   smoke                      load artifacts and execute on PJRT (sanity)
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
+      --repair MODE          also demo the stage-0 guard: off|diagnose|
+                             repair|repair:K (default off)
   optimize <op>              one optimization run, verbose
       --method NAME          (default evoengineer-full)
       --model NAME           (default gpt)
       --seed N               (default 0)
       --budget N             (default 45)
+      --repair MODE          stage-0 guard policy: off|diagnose|repair|
+                             repair:K (default off; repair = repair:2)
       --cache PATH           persistent eval cache (default off)
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
   campaign                   run the method x model x op x seed sweep
@@ -47,6 +51,8 @@ COMMANDS:
       --ops SUBSTR           op-name filter
       --max-ops N            stratified cap on ops (default 0 = all 91)
       --budget N             trials per run (default 45)
+      --repair MODE          stage-0 guard policy for every cell:
+                             off|diagnose|repair|repair:K (default off)
       --concurrency N        workers (default: CPUs)
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
       --out PATH             (default results/records.jsonl)
@@ -56,7 +62,8 @@ COMMANDS:
       --cache PATH|off       persistent eval cache
                              (default <artifacts>/eval_cache.jsonl)
   report <which>             regenerate a table/figure from records
-      which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|methods|all
+      which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|
+             validity|convergence|methods|all
       --records PATH         (default results/records.jsonl; a partial
                              checkpoint journal also works)
       --model NAME           model filter for fig4 (fig6/7 = other models)
@@ -142,9 +149,10 @@ fn run() -> Result<()> {
         .as_str();
 
     let runtime_shards = args.get_num("runtime-shards", 0usize)?;
+    let repair = RepairPolicy::parse(&args.get("repair", "off"))?;
 
     match cmd {
-        "smoke" => smoke(&artifacts, runtime_shards),
+        "smoke" => smoke(&artifacts, runtime_shards, repair),
         "optimize" => {
             let op = args
                 .positional
@@ -163,6 +171,7 @@ fn run() -> Result<()> {
                 &args.get("model", "gpt"),
                 args.get_num("seed", 0u64)?,
                 args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
+                repair,
                 cache.as_deref(),
                 runtime_shards,
             )
@@ -180,6 +189,7 @@ fn run() -> Result<()> {
                 op_filter: args.get("ops", ""),
                 max_ops: args.get_num("max-ops", 0usize)?,
                 budget: args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
+                repair,
                 concurrency: args.get_num("concurrency", 0usize)?,
                 quiet: args.has("quiet"),
                 checkpoint: Some(checkpoint),
@@ -256,7 +266,7 @@ fn make_evaluator(
     Ok(evaluator)
 }
 
-fn smoke(artifacts: &PathBuf, runtime_shards: usize) -> Result<()> {
+fn smoke(artifacts: &PathBuf, runtime_shards: usize, repair: RepairPolicy) -> Result<()> {
     let evaluator = make_evaluator(artifacts, None, runtime_shards)?;
     let reg = &evaluator.registry;
     println!("manifest: {} ops ({} runtime shards)", reg.ops.len(), evaluator.runtime_shards());
@@ -273,10 +283,70 @@ fn smoke(artifacts: &PathBuf, runtime_shards: usize) -> Result<()> {
         "runtime: {} executions, {} compiles, {} cache hits",
         stats.executions, stats.compiles, stats.cache_hits
     );
+    if repair != RepairPolicy::Off {
+        guard_demo(&evaluator, repair)?;
+    }
     println!("smoke OK");
     Ok(())
 }
 
+/// `smoke --repair MODE`: run the stage-0 guard over one candidate per
+/// invalid class and show the structured diagnostics (and, under a
+/// repair policy, whether the LLM repair loop mends each one).
+fn guard_demo(evaluator: &Evaluator, repair: RepairPolicy) -> Result<()> {
+    use evoengineer::dsl::{self, KernelSpec};
+    use evoengineer::llm;
+
+    let task = evaluator.registry.get("matmul_64").expect("matmul_64 in dataset").clone();
+    let base = KernelSpec::baseline(&task.name);
+
+    let mut cases: Vec<(&str, String)> = Vec::new();
+    cases.push(("syntax", dsl::print(&base).replacen("schedule", "schedul", 1)));
+    cases.push((
+        "shadowed binding",
+        "kernel matmul_64 { semantics: opt; schedule { tile_m: 8; tile_m: 64; } }".into(),
+    ));
+    let mut spec = base.clone();
+    spec.semantics = "turbo_v9".into();
+    cases.push(("undefined ref", dsl::print(&spec)));
+    let mut spec = base.clone();
+    spec.schedule.tile_k = 0;
+    cases.push(("non-terminating", dsl::print(&spec)));
+    let mut spec = base.clone();
+    spec.schedule.tile_m = 256; // resource-legal, too big for the op
+    cases.push(("shape mismatch", dsl::print(&spec)));
+    let mut spec = base.clone();
+    spec.schedule.threads_per_block = 100;
+    cases.push(("resource limit", dsl::print(&spec)));
+
+    println!("\nstage-0 guard ({}):", repair.label());
+    let rng = evoengineer::util::Rng::new(0).derive("guard-demo");
+    for (label, src) in &cases {
+        let report = evaluator.guard_check(src, &task);
+        println!("  {label}: {} diagnostic(s)", report.diagnostics.len());
+        for d in &report.diagnostics {
+            println!("    {d}");
+        }
+        if let RepairPolicy::Repair { max_attempts } = repair {
+            let mut text = src.clone();
+            let mut rep = report;
+            let mut attempt = 0;
+            while !rep.pass() && attempt < max_attempts {
+                let mut r = rng.derive(&format!("{label}/{attempt}"));
+                text = llm::repair(&text, &rep, profile::by_name("gpt").unwrap(), &mut r).text;
+                rep = evaluator.guard_check(&text, &task);
+                attempt += 1;
+            }
+            println!(
+                "    repair after {attempt} attempt(s): {}",
+                if rep.pass() { "PASS" } else { "still rejected" }
+            );
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
 fn optimize(
     artifacts: &PathBuf,
     op: &str,
@@ -284,6 +354,7 @@ fn optimize(
     model: &str,
     seed: u64,
     budget: usize,
+    repair: RepairPolicy,
     cache: Option<&std::path::Path>,
     runtime_shards: usize,
 ) -> Result<()> {
@@ -303,6 +374,7 @@ fn optimize(
         seed,
         archive: &archive,
         budget,
+        repair,
     };
     let rec = method.run(&ctx);
     println!(
@@ -317,6 +389,12 @@ fn optimize(
         rec.prompt_tokens,
         rec.completion_tokens
     );
+    if rec.repair_policy != "off" {
+        println!(
+            "stage-0 guard ({}): {} rejected, {} repaired ({} repair calls in the budget)",
+            rec.repair_policy, rec.guard_rejected_trials, rec.repaired_trials, rec.repair_attempts
+        );
+    }
     print!("trajectory:");
     for (i, s) in rec.trajectory.iter().enumerate() {
         if i % 5 == 0 {
@@ -362,6 +440,9 @@ fn campaign(
         );
     }
     println!("\n{}", report::table4(&records));
+    if records.iter().any(|r| r.repair_policy != "off") {
+        println!("\n{}", report::validity(&records));
+    }
     Ok(())
 }
 
@@ -384,6 +465,7 @@ fn run_report(artifacts: &PathBuf, which: &str, records_path: &PathBuf, model: &
             let records = results::load_lenient(records_path)?;
             match which {
                 "table4" => report::table4(&records),
+                "validity" => report::validity(&records),
                 "table7" => report::table7(&records),
                 "table8" => report::table8(&records),
                 "fig1" => report::fig1(&records),
@@ -398,6 +480,7 @@ fn run_report(artifacts: &PathBuf, which: &str, records_path: &PathBuf, model: &
                         report::table5(&reg),
                         report::methods_table(),
                         report::table4(&records),
+                        report::validity(&records),
                         report::fig1(&records),
                         report::fig4(&records, model),
                         report::fig5(&records),

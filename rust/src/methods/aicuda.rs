@@ -169,6 +169,7 @@ mod tests {
             seed: 4,
             archive: &archive,
             budget: 45,
+            repair: crate::methods::RepairPolicy::Off,
         };
         let rec = AiCudaEngineer::new().run(&ctx);
         assert!(rec.trials <= 45);
@@ -181,6 +182,7 @@ mod tests {
             seed: 4,
             archive: &archive,
             budget: 45,
+            repair: crate::methods::RepairPolicy::Off,
         };
         let free = crate::methods::EvoEngineer::new(crate::methods::EvoVariant::Free)
             .run(&free_ctx);

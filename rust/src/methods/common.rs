@@ -3,6 +3,7 @@
 //! One `Session` = one (method, model, op, seed) optimization run with
 //! the paper's 45-trial budget. `Session::trial` performs the full
 //! closed loop: guidance assembly → prompt render → SimLLM call →
+//! stage-0 validity guard (+ LLM repair loop, per [`RepairPolicy`]) →
 //! two-stage evaluation → population update → insight recording →
 //! token accounting.
 
@@ -72,6 +73,68 @@ impl Archive {
     }
 }
 
+/// Stage-0 guard policy for a run (DESIGN.md §11) — the new ablation
+/// axis every method inherits through [`RunCtx`]:
+///
+/// * `Off` — the historical pipeline: every emission goes straight to
+///   the compile gate (byte-identical behaviour to pre-guard runs).
+/// * `Diagnose` — the static guard runs before any compile; failing
+///   candidates are rejected at stage 0 with structured diagnostics
+///   (saving the compile) but the trial is spent.
+/// * `Repair { max_attempts }` — failing candidates get up to
+///   `max_attempts` LLM repair calls fed by the diagnostics; **each
+///   repair attempt consumes one unit of the paper's 45-trial budget**
+///   (a repair call is an LLM call), so repaired runs stay comparable
+///   under the paper's accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RepairPolicy {
+    #[default]
+    Off,
+    Diagnose,
+    Repair {
+        max_attempts: usize,
+    },
+}
+
+impl RepairPolicy {
+    /// Default repair attempts per trial for `--repair repair`.
+    pub const DEFAULT_ATTEMPTS: usize = 2;
+
+    /// Parse a `--repair` CLI value: `off` | `diagnose` | `repair` |
+    /// `repair:K`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "" | "off" => Ok(RepairPolicy::Off),
+            "diagnose" => Ok(RepairPolicy::Diagnose),
+            "repair" => Ok(RepairPolicy::Repair { max_attempts: Self::DEFAULT_ATTEMPTS }),
+            other => {
+                if let Some(k) = other.strip_prefix("repair:") {
+                    let max_attempts: usize = k
+                        .parse()
+                        .map_err(|_| crate::eyre!("bad repair attempt count `{k}`"))?;
+                    if max_attempts == 0 {
+                        return Err(crate::eyre!("repair:K needs K >= 1"));
+                    }
+                    Ok(RepairPolicy::Repair { max_attempts })
+                } else {
+                    Err(crate::eyre!(
+                        "unknown --repair policy `{other}` (off|diagnose|repair|repair:K)"
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Stable label recorded with every run (the ablation key).
+    pub fn label(&self) -> String {
+        match self {
+            RepairPolicy::Off => "off".into(),
+            RepairPolicy::Diagnose => "diagnose".into(),
+            RepairPolicy::Repair { max_attempts } => format!("repair:{max_attempts}"),
+        }
+    }
+}
+
 /// Inputs shared by every method run.
 pub struct RunCtx<'a> {
     pub evaluator: &'a Evaluator,
@@ -81,6 +144,8 @@ pub struct RunCtx<'a> {
     pub archive: &'a Archive,
     /// Trial budget (the paper's 45).
     pub budget: usize,
+    /// Stage-0 guard / repair policy (method ablation axis).
+    pub repair: RepairPolicy,
 }
 
 /// Final record of one (method, model, op, seed) run — the unit the
@@ -99,6 +164,17 @@ pub struct KernelRunRecord {
     pub budget: usize,
     pub compiled_trials: usize,
     pub correct_trials: usize,
+    /// Trials whose final candidate was rejected at stage 0 by the
+    /// static guard (after any repair attempts were exhausted).
+    pub guard_rejected_trials: usize,
+    /// Trials whose emission initially failed the guard but passed
+    /// after LLM repair (overlay on the other outcome buckets).
+    pub repaired_trials: usize,
+    /// Extra LLM repair calls made (each consumed one budget unit);
+    /// `trials - repair_attempts` = number of evaluated trial groups.
+    pub repair_attempts: usize,
+    /// The [`RepairPolicy`] label the run executed under.
+    pub repair_policy: String,
     /// Best valid speedup vs baseline; 1.0 when no valid improvement
     /// was found (the paper's failure convention, §5.1).
     pub best_speedup: f64,
@@ -131,6 +207,10 @@ impl KernelRunRecord {
             ("budget", Json::Num(self.budget as f64)),
             ("compiled_trials", Json::Num(self.compiled_trials as f64)),
             ("correct_trials", Json::Num(self.correct_trials as f64)),
+            ("guard_rejected_trials", Json::Num(self.guard_rejected_trials as f64)),
+            ("repaired_trials", Json::Num(self.repaired_trials as f64)),
+            ("repair_attempts", Json::Num(self.repair_attempts as f64)),
+            ("repair_policy", Json::Str(self.repair_policy.clone())),
             ("best_speedup", Json::Num(self.best_speedup)),
             ("best_pytorch_speedup", Json::Num(self.best_pytorch_speedup)),
             ("any_valid", Json::Bool(self.any_valid)),
@@ -177,6 +257,24 @@ impl KernelRunRecord {
                 .unwrap_or(n("trials")? as usize),
             compiled_trials: n("compiled_trials")? as usize,
             correct_trials: n("correct_trials")? as usize,
+            // Absent in pre-guard record files: no stage-0 activity.
+            guard_rejected_trials: v
+                .get("guard_rejected_trials")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            repaired_trials: v
+                .get("repaired_trials")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            repair_attempts: v
+                .get("repair_attempts")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            repair_policy: v
+                .get("repair_policy")
+                .and_then(|x| x.as_str())
+                .unwrap_or("off")
+                .to_string(),
             best_speedup: n("best_speedup")?,
             best_pytorch_speedup: n("best_pytorch_speedup")?,
             any_valid: v.get("any_valid").and_then(|x| x.as_bool()).unwrap_or(false),
@@ -202,6 +300,9 @@ pub struct Session<'a> {
     trials_done: usize,
     compiled: usize,
     correct: usize,
+    guard_rejected: usize,
+    repaired: usize,
+    repair_attempts: usize,
     best: Option<Candidate>,
     best_pt: f64,
     trajectory: Vec<f64>,
@@ -222,6 +323,9 @@ impl<'a> Session<'a> {
             trials_done: 0,
             compiled: 0,
             correct: 0,
+            guard_rejected: 0,
+            repaired: 0,
+            repair_attempts: 0,
             best: None,
             best_pt: 0.0,
             trajectory: Vec::new(),
@@ -239,7 +343,9 @@ impl<'a> Session<'a> {
     /// Evaluate the op's given starting kernel (the dataset's "initial
     /// C++/CUDA implementation" — quality-tiered per op, see
     /// costmodel::baseline_schedule) and seed the population with it.
-    /// Does not consume budget: the paper provides this kernel.
+    /// Does not consume budget, and is exempt from the stage-0 guard:
+    /// the paper *provides* this kernel — it is dataset ground truth,
+    /// not an untrusted LLM emission.
     pub fn bootstrap(&mut self, pop: &mut dyn Population) {
         let spec = dsl::KernelSpec {
             op: self.ctx.task.name.clone(),
@@ -343,16 +449,64 @@ impl<'a> Session<'a> {
         let resp = llm::generate(&prompt, self.ctx.model, &mut llm_rng);
         self.prompt_tokens += resp.prompt_tokens;
         self.completion_tokens += resp.completion_tokens;
-
-        // --- two-stage evaluation (persistent-cache aware) ------------
-        let mut eval_rng = self.rng.derive(&format!("eval/{trial_idx}"));
-        let outcome = self.ctx.evaluator.evaluate_keyed(
-            &resp.text,
-            self.ctx.task,
-            self.ctx.model.name,
-            &mut eval_rng,
-        );
         self.trials_done += 1;
+
+        // --- stage 0: static validity guard + LLM repair loop ---------
+        // (DESIGN.md §11.) Under `Repair`, each attempt is one more LLM
+        // call and consumes one budget unit, per the paper's 45-trial
+        // accounting; the loop stops early when the budget runs out.
+        let mut text = resp.text;
+        let mut was_repaired = false;
+        let guard_report = match self.ctx.repair {
+            RepairPolicy::Off => None,
+            RepairPolicy::Diagnose => {
+                Some(self.ctx.evaluator.guard_check(&text, self.ctx.task))
+            }
+            RepairPolicy::Repair { max_attempts } => {
+                let mut report = self.ctx.evaluator.guard_check(&text, self.ctx.task);
+                let initially_failed = !report.pass();
+                let mut attempt = 0;
+                while !report.pass() && attempt < max_attempts && self.budget_left() > 0 {
+                    let mut repair_rng =
+                        self.rng.derive(&format!("repair/{trial_idx}/{attempt}"));
+                    let fix = llm::repair(&text, &report, self.ctx.model, &mut repair_rng);
+                    self.prompt_tokens += fix.prompt_tokens;
+                    self.completion_tokens += fix.completion_tokens;
+                    self.trials_done += 1;
+                    self.repair_attempts += 1;
+                    text = fix.text;
+                    report = self.ctx.evaluator.guard_check(&text, self.ctx.task);
+                    attempt += 1;
+                }
+                if initially_failed && report.pass() {
+                    was_repaired = true;
+                }
+                Some(report)
+            }
+        };
+
+        // --- two-stage evaluation (stage-0-gated, cache aware) --------
+        let mut eval_rng = self.rng.derive(&format!("eval/{trial_idx}"));
+        let outcome = match &guard_report {
+            Some(report) if !report.pass() => {
+                self.guard_rejected += 1;
+                self.ctx.evaluator.reject_stage0(
+                    &text,
+                    self.ctx.task,
+                    self.ctx.model.name,
+                    report,
+                )
+            }
+            _ => self.ctx.evaluator.evaluate_keyed(
+                &text,
+                self.ctx.task,
+                self.ctx.model.name,
+                &mut eval_rng,
+            ),
+        };
+        if was_repaired {
+            self.repaired += 1;
+        }
         if outcome.compiled() {
             self.compiled += 1;
         }
@@ -360,8 +514,7 @@ impl<'a> Session<'a> {
             self.correct += 1;
         }
 
-        let cand =
-            self.candidate_from(resp.text, outcome, trial_idx, Some(resp.insight.clone()));
+        let cand = self.candidate_from(text, outcome, trial_idx, Some(resp.insight.clone()));
 
         // --- insight recording (solution-insight pair with observed
         // delta — what EvoEngineer "explicitly leverages", Table 2) ----
@@ -427,6 +580,10 @@ impl<'a> Session<'a> {
             budget: self.ctx.budget,
             compiled_trials: self.compiled,
             correct_trials: self.correct,
+            guard_rejected_trials: self.guard_rejected,
+            repaired_trials: self.repaired,
+            repair_attempts: self.repair_attempts,
+            repair_policy: self.ctx.repair.label(),
             best_speedup: self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0),
             best_pytorch_speedup: self.best_pt,
             any_valid: self.best.is_some(),

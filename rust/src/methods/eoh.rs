@@ -98,6 +98,7 @@ mod tests {
             seed: 2,
             archive: &archive,
             budget: 45,
+            repair: crate::methods::RepairPolicy::Off,
         };
         let rec = Eoh::new().run(&ctx);
         assert_eq!(rec.trials, 45); // 5 + 10*4

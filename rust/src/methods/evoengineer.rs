@@ -97,7 +97,7 @@ mod tests {
     use super::*;
     use crate::evals::Evaluator;
     use crate::llm::MODELS;
-    use crate::methods::common::Archive;
+    use crate::methods::common::{Archive, RepairPolicy};
     use crate::runtime::Runtime;
     use crate::tasks::TaskRegistry;
     use std::sync::Arc;
@@ -124,6 +124,7 @@ mod tests {
             seed: 1,
             archive: &archive,
             budget: 45,
+            repair: RepairPolicy::Off,
         };
         let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx);
         assert_eq!(rec.trials, 45);
@@ -147,6 +148,7 @@ mod tests {
                 seed,
                 archive: &archive,
                 budget: 20,
+                repair: RepairPolicy::Off,
             };
             EvoEngineer::new(EvoVariant::Full).run(&ctx)
         };
@@ -164,6 +166,73 @@ mod tests {
     }
 
     #[test]
+    fn repair_policy_is_deterministic_and_budget_accounted() {
+        // Category 6 + GPT has the highest defect rates, so the guard
+        // and repair loop both fire within a 45-trial run.
+        let evaluator = eval();
+        let task = evaluator.registry.get("cumsum_rows_64").unwrap().clone();
+        let archive = Archive::new();
+        let run = |repair| {
+            let ctx = RunCtx {
+                evaluator: &evaluator,
+                task: &task,
+                model: &MODELS[0],
+                seed: 0,
+                archive: &archive,
+                budget: 45,
+                repair,
+            };
+            EvoEngineer::new(EvoVariant::Free).run(&ctx)
+        };
+        let off = run(RepairPolicy::Off);
+        assert_eq!(off.repair_policy, "off");
+        assert_eq!(off.guard_rejected_trials, 0);
+        assert_eq!(off.repair_attempts, 0);
+        assert_eq!(off.trials, 45);
+
+        let diagnose = run(RepairPolicy::Diagnose);
+        assert_eq!(diagnose.repair_policy, "diagnose");
+        assert_eq!(diagnose.trials, 45);
+        assert_eq!(diagnose.repair_attempts, 0);
+        assert!(
+            diagnose.guard_rejected_trials > 0,
+            "45 cat-6 trials must trip the stage-0 guard at least once"
+        );
+        // Stage-0 rejections are a subset of what stage 1 would have
+        // rejected plus the guard's stricter static discipline; either
+        // way they never count as compiled.
+        assert!(diagnose.compiled_trials + diagnose.guard_rejected_trials <= 45);
+
+        let repaired = run(RepairPolicy::Repair { max_attempts: 2 });
+        assert_eq!(repaired.repair_policy, "repair:2");
+        // Repair attempts consume budget: 45 units total, split between
+        // generate calls and repair calls.
+        assert_eq!(repaired.trials, 45);
+        assert!(repaired.repair_attempts > 0, "no repairs fired in 45 trials");
+        assert!(repaired.repaired_trials > 0, "no repair ever succeeded");
+        assert!(repaired.repair_attempts < 45);
+        // The evaluated trial groups: one terminal outcome each.
+        let groups = repaired.trials - repaired.repair_attempts;
+        assert!(repaired.guard_rejected_trials + repaired.compiled_trials <= groups);
+        // Repair lowers stage-0 rejections vs diagnose (same stream of
+        // emissions, some now mended).
+        assert!(
+            repaired.guard_rejected_trials < diagnose.guard_rejected_trials,
+            "repair={} diagnose={}",
+            repaired.guard_rejected_trials,
+            diagnose.guard_rejected_trials
+        );
+
+        // Seed-determinism of the full repair loop.
+        let again = run(RepairPolicy::Repair { max_attempts: 2 });
+        assert_eq!(repaired.trajectory, again.trajectory);
+        assert_eq!(repaired.prompt_tokens, again.prompt_tokens);
+        assert_eq!(repaired.completion_tokens, again.completion_tokens);
+        assert_eq!(repaired.guard_rejected_trials, again.guard_rejected_trials);
+        assert_eq!(repaired.repaired_trials, again.repaired_trials);
+    }
+
+    #[test]
     fn insight_uses_more_prompt_tokens_than_free() {
         let evaluator = eval();
         let task = evaluator.registry.get("matmul_64").unwrap().clone();
@@ -176,6 +245,7 @@ mod tests {
                 seed: 3,
                 archive: &archive,
                 budget: 30,
+                repair: RepairPolicy::Off,
             };
             EvoEngineer::new(variant).run(&ctx)
         };

@@ -67,6 +67,7 @@ mod tests {
             seed: 5,
             archive: &archive,
             budget: 45,
+            repair: crate::methods::RepairPolicy::Off,
         };
         let rec = FunSearch::new().run(&ctx);
         assert_eq!(rec.trials, 45);

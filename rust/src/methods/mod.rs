@@ -12,7 +12,7 @@ pub mod evoengineer;
 pub mod funsearch;
 
 pub use aicuda::AiCudaEngineer;
-pub use common::{Archive, ArchiveEntry, KernelRunRecord, RunCtx, Session};
+pub use common::{Archive, ArchiveEntry, KernelRunRecord, RepairPolicy, RunCtx, Session};
 pub use eoh::Eoh;
 pub use evoengineer::{EvoEngineer, EvoVariant};
 pub use funsearch::FunSearch;

@@ -98,6 +98,67 @@ pub fn table4(records: &[KernelRunRecord]) -> BTreeMap<GroupKey, Vec<Table4Cell>
     out
 }
 
+/// One cell of the stage-aware validity breakdown (DESIGN.md §11): the
+/// five-way split of trial outcomes, as percentages of the evaluated
+/// trial groups (`trials - repair_attempts` — each group ends in
+/// exactly one terminal outcome), plus the repaired overlay.
+#[derive(Debug, Clone, Default)]
+pub struct ValidityCell {
+    /// % rejected at stage 0 by the static guard.
+    pub stage0_pct: f64,
+    /// % whose emission initially failed the guard but was repaired
+    /// (overlay: these land in one of the other buckets too).
+    pub repaired_pct: f64,
+    /// % rejected at stage 1 (compile gate).
+    pub compile_fail_pct: f64,
+    /// % compiled but functionally wrong (stage 2 / runtime).
+    pub incorrect_pct: f64,
+    /// % fully correct (the paper's Functional Pass@1).
+    pub correct_pct: f64,
+    /// Evaluated trial groups behind the percentages.
+    pub groups: usize,
+}
+
+fn validity_cell(records: &[&KernelRunRecord]) -> ValidityCell {
+    if records.is_empty() {
+        return ValidityCell::default();
+    }
+    let groups: usize = records.iter().map(|r| r.trials - r.repair_attempts.min(r.trials)).sum();
+    let stage0: usize = records.iter().map(|r| r.guard_rejected_trials).sum();
+    let repaired: usize = records.iter().map(|r| r.repaired_trials).sum();
+    let compiled: usize = records.iter().map(|r| r.compiled_trials).sum();
+    let correct: usize = records.iter().map(|r| r.correct_trials).sum();
+    let compile_fail = groups.saturating_sub(stage0).saturating_sub(compiled);
+    let incorrect = compiled.saturating_sub(correct);
+    let pct = |n: usize| 100.0 * n as f64 / groups.max(1) as f64;
+    ValidityCell {
+        stage0_pct: pct(stage0),
+        repaired_pct: pct(repaired),
+        compile_fail_pct: pct(compile_fail),
+        incorrect_pct: pct(incorrect),
+        correct_pct: pct(correct),
+        groups,
+    }
+}
+
+/// Full stage-aware validity table: (method, model) -> [cell per
+/// category 1..=6, overall] — the per-category split the campaign
+/// report prints when a repair policy was active.
+pub fn validity_table(records: &[KernelRunRecord]) -> BTreeMap<GroupKey, Vec<ValidityCell>> {
+    let mut out = BTreeMap::new();
+    for (key, recs) in group(records) {
+        let mut cells = Vec::with_capacity(7);
+        for cat in 1..=6u8 {
+            let subset: Vec<&KernelRunRecord> =
+                recs.iter().copied().filter(|r| r.category == cat).collect();
+            cells.push(validity_cell(&subset));
+        }
+        cells.push(validity_cell(&recs)); // overall
+        out.insert(key, cells);
+    }
+    out
+}
+
 /// Figure-1 point: overall median speedup vs functional-correctness
 /// rate for one (method, model).
 #[derive(Debug, Clone)]
@@ -310,6 +371,10 @@ mod tests {
             budget: 45,
             compiled_trials: 36,
             correct_trials: 27,
+            guard_rejected_trials: 0,
+            repaired_trials: 0,
+            repair_attempts: 0,
+            repair_policy: "off".into(),
             best_speedup: speed,
             best_pytorch_speedup: if valid { speed * 0.8 } else { 0.0 },
             any_valid: valid,
@@ -336,6 +401,40 @@ mod tests {
         assert!((cell.median_speedup - 1.875).abs() < 1e-9);
         assert!((cell.compile_rate - 80.0).abs() < 1e-9);
         assert!((cell.correct_rate - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validity_cell_five_way_split() {
+        let mut r = rec("M", "a", 1, 0, 2.0, true);
+        // 45 budget units: 5 repair calls -> 40 evaluated groups.
+        // 4 stage-0 rejected, 30 compiled (of which 24 correct),
+        // => 40 - 4 - 30 = 6 compile-failed; 3 repaired overlay.
+        r.trials = 45;
+        r.repair_attempts = 5;
+        r.guard_rejected_trials = 4;
+        r.compiled_trials = 30;
+        r.correct_trials = 24;
+        r.repaired_trials = 3;
+        let records = vec![r];
+        let table = validity_table(&records);
+        let cells = table.get(&("M".into(), "GPT-4.1".into())).unwrap();
+        let overall = &cells[6];
+        assert_eq!(overall.groups, 40);
+        assert!((overall.stage0_pct - 10.0).abs() < 1e-9);
+        assert!((overall.compile_fail_pct - 15.0).abs() < 1e-9);
+        assert!((overall.incorrect_pct - 15.0).abs() < 1e-9);
+        assert!((overall.correct_pct - 60.0).abs() < 1e-9);
+        assert!((overall.repaired_pct - 7.5).abs() < 1e-9);
+        // The four disjoint buckets cover every evaluated group.
+        let total = overall.stage0_pct
+            + overall.compile_fail_pct
+            + overall.incorrect_pct
+            + overall.correct_pct;
+        assert!((total - 100.0).abs() < 1e-9);
+        // Category 1 cell equals overall (single record, category 1);
+        // other categories are empty.
+        assert_eq!(cells[0].groups, 40);
+        assert_eq!(cells[1].groups, 0);
     }
 
     #[test]

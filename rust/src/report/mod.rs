@@ -61,6 +61,65 @@ pub fn table4(records: &[KernelRunRecord]) -> String {
     out
 }
 
+/// Stage-aware validity breakdown (DESIGN.md §11): per category and
+/// overall, the share of trials rejected at stage 0 by the static
+/// guard / repaired by the LLM loop / rejected at the compile gate /
+/// compiled-but-incorrect / fully correct.
+pub fn validity(records: &[KernelRunRecord]) -> String {
+    let data = metrics::validity_table(records);
+    let policies: std::collections::BTreeSet<&str> =
+        records.iter().map(|r| r.repair_policy.as_str()).collect();
+    let mut out = String::new();
+    writeln!(
+        out,
+        "VALIDITY — trial outcomes by stage, % of evaluated trials \
+         (per category 1..6 + overall)"
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "repair policy: {}",
+        policies.into_iter().collect::<Vec<_>>().join(", ")
+    )
+    .unwrap();
+    let mut keys: Vec<&metrics::GroupKey> = data.keys().collect();
+    keys.sort_by(|a, b| (&a.1, &a.0).cmp(&(&b.1, &b.0)));
+    for section in [
+        "Stage-0 rejected %",
+        "Repaired %",
+        "Compile-failed %",
+        "Incorrect %",
+        "Correct %",
+    ] {
+        writeln!(out, "\n== {section} ==").unwrap();
+        writeln!(
+            out,
+            "{:<14} {:<28} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>8}",
+            "Model", "Method", "1", "2", "3", "4", "5", "6", "Overall"
+        )
+        .unwrap();
+        writeln!(out, "{}", hr(102)).unwrap();
+        for key in &keys {
+            let cells = &data[*key];
+            let field = |c: &metrics::ValidityCell| -> f64 {
+                match section {
+                    "Stage-0 rejected %" => c.stage0_pct,
+                    "Repaired %" => c.repaired_pct,
+                    "Compile-failed %" => c.compile_fail_pct,
+                    "Incorrect %" => c.incorrect_pct,
+                    _ => c.correct_pct,
+                }
+            };
+            write!(out, "{:<14} {:<28}", key.1, key.0).unwrap();
+            for c in cells.iter() {
+                write!(out, " {:>7.2}", field(c)).unwrap();
+            }
+            writeln!(out).unwrap();
+        }
+    }
+    out
+}
+
 /// Table 5 — dataset composition.
 pub fn table5(registry: &TaskRegistry) -> String {
     let mut out = String::new();
@@ -401,6 +460,10 @@ mod tests {
                     budget: 45,
                     compiled_trials: 36,
                     correct_trials: 27,
+                    guard_rejected_trials: 4,
+                    repaired_trials: 2,
+                    repair_attempts: 3,
+                    repair_policy: "repair:2".into(),
                     best_speedup: speed,
                     best_pytorch_speedup: pt,
                     any_valid: true,
@@ -427,11 +490,24 @@ mod tests {
             table8(&recs),
             fig9(&recs),
             methods_table(),
+            validity(&recs),
         ] {
             assert!(!text.is_empty());
         }
         assert!(fig5(&recs).contains("matmul_64"));
         assert!(table7(&recs).contains("AI CUDA Engineer"));
+    }
+
+    #[test]
+    fn validity_report_breaks_out_stages() {
+        let text = validity(&records());
+        assert!(text.contains("Stage-0 rejected %"), "{text}");
+        assert!(text.contains("Repaired %"), "{text}");
+        assert!(text.contains("Compile-failed %"), "{text}");
+        assert!(text.contains("Incorrect %"), "{text}");
+        assert!(text.contains("Correct %"), "{text}");
+        assert!(text.contains("repair policy: repair:2"), "{text}");
+        assert!(text.contains("EvoEngineer-Free"), "{text}");
     }
 
     #[test]

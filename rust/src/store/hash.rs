@@ -123,6 +123,29 @@ impl EvalKey {
         EvalKey(sha256_hex(&buf))
     }
 
+    /// Key for a *stage-0 guard verdict* on a candidate. Two
+    /// differences from [`EvalKey::from_canonical`]:
+    ///
+    /// * the `guard\0` prefix namespaces guard rejections away from
+    ///   full-pipeline records — a guard-gated run must never replay a
+    ///   stage-0 rejection as a stage-1..3 outcome, and an unguarded
+    ///   run must never pick up a guard rejection for a candidate it
+    ///   would have compiled (DESIGN.md §11);
+    /// * the digest covers the **raw emission text**, not the
+    ///   canonical re-print: stage-0 diagnostics depend on surface
+    ///   features canonicalization erases (a shadowed schedule binding
+    ///   prints identically to its clean last-wins form), so keying on
+    ///   the canonical form would let distinct raw candidates replay
+    ///   each other's diagnostics.
+    pub fn guarded(op: &str, raw_src: &str) -> Self {
+        let mut buf = Vec::with_capacity(6 + op.len() + 1 + raw_src.len());
+        buf.extend_from_slice(b"guard\0");
+        buf.extend_from_slice(op.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(raw_src.as_bytes());
+        EvalKey(sha256_hex(&buf))
+    }
+
     pub fn as_str(&self) -> &str {
         &self.0
     }
@@ -183,5 +206,26 @@ mod tests {
         );
         // Unparseable ⇒ no key.
         assert_eq!(key_for_source("matmul_64", "__global__ void k() {}"), None);
+    }
+
+    #[test]
+    fn guard_keys_are_namespaced_and_raw_textual() {
+        let spec = KernelSpec::baseline("matmul_64");
+        let canonical = crate::dsl::print(&spec);
+        let full = EvalKey::from_canonical("matmul_64", &canonical);
+        let guard = EvalKey::guarded("matmul_64", &canonical);
+        // Same candidate, disjoint key spaces.
+        assert_ne!(full, guard);
+        // Deterministic within each space.
+        assert_eq!(guard, EvalKey::guarded("matmul_64", &canonical));
+        assert_ne!(guard, EvalKey::guarded("softmax_64", &canonical));
+        // Guard keys are *raw-text* identities: a shadowed-binding
+        // variant canonicalizes to the same printed form but must not
+        // share a guard key with it.
+        let shadowed = canonical.replacen("tile_m: 8;", "tile_m: 4; tile_m: 8;", 1);
+        assert_ne!(
+            EvalKey::guarded("matmul_64", &shadowed),
+            EvalKey::guarded("matmul_64", &canonical)
+        );
     }
 }

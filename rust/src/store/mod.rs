@@ -48,6 +48,11 @@ use crate::{eyre, Result, WrapErr as _};
 /// The deterministic, replayable part of one candidate evaluation.
 #[derive(Debug, Clone)]
 pub enum StoredOutcome {
+    /// Stage-0 rejection by the static validity guard (DESIGN.md §11):
+    /// the exact structured diagnostics, journaled under a
+    /// guard-namespaced key ([`EvalKey::guarded`]) so a replay is
+    /// bit-identical and never shadows a full-pipeline record.
+    GuardReject { diagnostics: Vec<crate::guard::GuardDiagnostic> },
     /// Stage-1 rejection (syntax / validation / resolution) — the
     /// exact error string the compile gate produced.
     CompileFail { error: String },
@@ -85,6 +90,7 @@ pub struct StoreStats {
     pub ok: usize,
     pub compile_fail: usize,
     pub functional_fail: usize,
+    pub guard_rejected: usize,
     pub ops: usize,
     /// Cumulative hits/misses folded from journaled `stats` lines.
     pub hits: u64,
@@ -252,6 +258,7 @@ impl EvalStore {
                         StoredOutcome::Ok { .. } => s.ok += 1,
                         StoredOutcome::CompileFail { .. } => s.compile_fail += 1,
                         StoredOutcome::FunctionalFail { .. } => s.functional_fail += 1,
+                        StoredOutcome::GuardReject { .. } => s.guard_rejected += 1,
                     }
                 }
                 Ok(Line::Stats { hits, misses }) => {
@@ -433,8 +440,47 @@ fn eval_line(key: &EvalKey, entry: &StoredEval) -> Json {
             fields.push(("outcome", Json::Str("functional_fail".into())));
             fields.push(("max_abs_diff", num(*max_abs_diff)));
         }
+        StoredOutcome::GuardReject { diagnostics } => {
+            fields.push(("outcome", Json::Str("guard_reject".into())));
+            fields.push((
+                "diagnostics",
+                Json::Arr(diagnostics.iter().map(diagnostic_to_json).collect()),
+            ));
+        }
     }
     Json::obj(fields)
+}
+
+fn diagnostic_to_json(d: &crate::guard::GuardDiagnostic) -> Json {
+    let mut fields = vec![
+        ("code", Json::Str(d.code.as_str().to_string())),
+        ("field", Json::Str(d.field.clone())),
+        ("message", Json::Str(d.message.clone())),
+    ];
+    if let Some((hf, hv)) = &d.hint {
+        fields.push(("hint_field", Json::Str(hf.clone())));
+        fields.push(("hint_value", Json::Str(hv.clone())));
+    }
+    Json::obj(fields)
+}
+
+fn diagnostic_from_json(v: &Json) -> Result<crate::guard::GuardDiagnostic> {
+    let code_str = get_str(v, "code")?;
+    let code = crate::guard::GuardCode::from_str(&code_str)
+        .ok_or_else(|| eyre!("unknown guard code `{code_str}`"))?;
+    let hint = match (v.get("hint_field"), v.get("hint_value")) {
+        (Some(f), Some(val)) => Some((
+            f.as_str().ok_or_else(|| eyre!("bad hint_field"))?.to_string(),
+            val.as_str().ok_or_else(|| eyre!("bad hint_value"))?.to_string(),
+        )),
+        _ => None,
+    };
+    Ok(crate::guard::GuardDiagnostic {
+        code,
+        field: get_str(v, "field")?,
+        message: get_str(v, "message")?,
+        hint,
+    })
 }
 
 fn parse_line(line: &str) -> Result<Line> {
@@ -458,6 +504,15 @@ fn parse_line(line: &str) -> Result<Line> {
                 "functional_fail" => StoredOutcome::FunctionalFail {
                     max_abs_diff: get_num(&v, "max_abs_diff")?,
                 },
+                "guard_reject" => StoredOutcome::GuardReject {
+                    diagnostics: v
+                        .get("diagnostics")
+                        .and_then(|d| d.as_arr())
+                        .ok_or_else(|| eyre!("missing diagnostics"))?
+                        .iter()
+                        .map(diagnostic_from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                },
                 other => return Err(eyre!("unknown outcome `{other}`")),
             };
             Ok(Line::Eval { key, entry: StoredEval { op, model, outcome } })
@@ -479,8 +534,8 @@ pub fn stats_report(path: impl AsRef<Path>, s: &StoreStats) -> String {
     .unwrap();
     writeln!(
         out,
-        "  outcomes: {} ok, {} compile_fail, {} functional_fail",
-        s.ok, s.compile_fail, s.functional_fail
+        "  outcomes: {} ok, {} compile_fail, {} functional_fail, {} guard_rejected",
+        s.ok, s.compile_fail, s.functional_fail, s.guard_rejected
     )
     .unwrap();
     writeln!(out, "  ops covered: {}", s.ops).unwrap();
@@ -586,6 +641,57 @@ mod tests {
         assert_eq!(store.misses(), 0);
         assert!(store.lookup(&EvalKey::from_canonical("x", "y")).is_none());
         assert_eq!(store.misses(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn guard_reject_roundtrip_across_reopen() {
+        use crate::guard::{GuardCode, GuardDiagnostic};
+        let dir = tmpdir("guard");
+        let path = dir.join("cache.jsonl");
+        let key = EvalKey::guarded("matmul_64", "kernel a");
+        let diagnostics = vec![
+            GuardDiagnostic {
+                code: GuardCode::ShapeMismatch,
+                field: "tile_m".into(),
+                message: "tile_m=256 exceeds every operand extent".into(),
+                hint: Some(("tile_m".into(), "64".into())),
+            },
+            GuardDiagnostic {
+                code: GuardCode::NonTerminating,
+                field: "tile_k".into(),
+                message: "tile_k=0 is a zero-step loop construct".into(),
+                hint: None,
+            },
+        ];
+        {
+            let store = EvalStore::open(&path).unwrap();
+            store
+                .record(
+                    &key,
+                    StoredEval {
+                        op: "matmul_64".into(),
+                        model: "GPT-4.1".into(),
+                        outcome: StoredOutcome::GuardReject {
+                            diagnostics: diagnostics.clone(),
+                        },
+                    },
+                )
+                .unwrap();
+        }
+        // Bit-identical replay after reopen: codes, fields, messages,
+        // hints (and hint absence) all survive the journal round-trip.
+        let store = EvalStore::open(&path).unwrap();
+        match store.lookup(&key).unwrap().outcome {
+            StoredOutcome::GuardReject { diagnostics: back } => {
+                assert_eq!(back, diagnostics)
+            }
+            other => panic!("{other:?}"),
+        }
+        let s = EvalStore::stats(&path).unwrap();
+        assert_eq!(s.guard_rejected, 1);
+        assert_eq!(s.entries, 1);
+        assert!(stats_report(&path, &s).contains("1 guard_rejected"));
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -184,6 +184,7 @@ fn zero_budget_run_is_well_formed() {
         seed: 0,
         archive: &archive,
         budget: 0,
+        repair: evoengineer::methods::RepairPolicy::Off,
     };
     for method in evoengineer::methods::all_methods() {
         let rec = method.run(&ctx);

@@ -1,0 +1,284 @@
+//! Stage-0 guard integration tests (DESIGN.md §11): the guard against
+//! real manifest ops, the invalid-candidate taxonomy, edge-case shapes,
+//! and the cache-level guarantees — guard-rejected candidates never
+//! reach the PJRT runtime pool, and guarded runs replay bit-identically
+//! from the persistent store.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::costmodel::baseline_schedule;
+use evoengineer::dsl::{self, KernelSpec};
+use evoengineer::evals::{EvalOutcome, Evaluator};
+use evoengineer::guard::{self, GuardCode};
+use evoengineer::llm::MODELS;
+use evoengineer::methods::{EvoEngineer, EvoVariant, Method};
+use evoengineer::methods::{Archive, RepairPolicy, RunCtx};
+use evoengineer::runtime::Runtime;
+use evoengineer::store::EvalStore;
+use evoengineer::tasks::{ArgSpec, OpTask, TaskRegistry};
+use evoengineer::util::Rng;
+
+fn registry() -> Arc<TaskRegistry> {
+    Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    )
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "evo_guard_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .subsec_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn synthetic_task(args: Vec<Vec<usize>>, out: Vec<usize>) -> OpTask {
+    let mut artifacts = HashMap::new();
+    artifacts.insert("ref".to_string(), "x/ref.hlo.txt".to_string());
+    artifacts.insert("opt".to_string(), "x/opt.hlo.txt".to_string());
+    OpTask {
+        name: "synthetic".into(),
+        category: 1,
+        family: "x".into(),
+        args: args
+            .into_iter()
+            .map(|shape| ArgSpec { shape, gen: "uniform".into() })
+            .collect(),
+        out_shape: out,
+        flops: 1.0,
+        bytes_moved: 1.0,
+        pt_launches: 1,
+        pt_passes: 1.0,
+        pt_efficiency: 0.5,
+        algo_penalty: 1.0,
+        atol: 1e-4,
+        rtol: 1e-3,
+        artifacts,
+    }
+}
+
+/// Calibration contract: the guard must accept the dataset's shipped
+/// starting kernel for every one of the 91 ops — the bootstrap is
+/// ground truth, and a guarded run whose own baseline were rejected
+/// would be meaningless.
+#[test]
+fn guard_passes_every_baseline_kernel() {
+    let reg = registry();
+    for op in &reg.ops {
+        let spec = KernelSpec {
+            op: op.name.clone(),
+            semantics: "opt".into(),
+            schedule: baseline_schedule(op),
+        };
+        let report = guard::check_source(&dsl::print(&spec), op);
+        assert!(
+            report.pass(),
+            "{}: baseline rejected by stage-0 guard:\n{}",
+            op.name,
+            report.summary()
+        );
+    }
+}
+
+/// The invalid-candidate taxonomy: each class rejected with a
+/// structured diagnostic carrying the right code.
+#[test]
+fn invalid_classes_rejected_with_structured_diagnostics() {
+    let reg = registry();
+    let task = reg.get("matmul_64").unwrap();
+    let base = KernelSpec::baseline("matmul_64");
+
+    // Syntax.
+    let broken = dsl::print(&base).replacen(';', " ", 1);
+    assert!(guard::check_source(&broken, task).has(GuardCode::Syntax));
+
+    // Shadowed binding.
+    let shadowed =
+        "kernel matmul_64 { semantics: opt; schedule { tile_m: 8; tile_m: 64; } }";
+    assert!(guard::check_source(shadowed, task).has(GuardCode::ShadowedBinding));
+
+    // Undefined refs: hallucinated variant + wrong op.
+    let mut spec = base.clone();
+    spec.semantics = "turbo_v9".into();
+    assert!(guard::check_source(&dsl::print(&spec), task).has(GuardCode::UndefinedRef));
+    let wrong = KernelSpec::baseline("softmax_64");
+    assert!(guard::check_source(&dsl::print(&wrong), task).has(GuardCode::UndefinedRef));
+
+    // Non-terminating construct (zero-step loop).
+    let mut spec = base.clone();
+    spec.schedule.tile_k = 0;
+    assert!(guard::check_source(&dsl::print(&spec), task).has(GuardCode::NonTerminating));
+
+    // Shape mismatch vs the op's ArgSpecs: resource-legal tile, but
+    // larger than every operand axis of a 64-extent op.
+    let mut spec = base.clone();
+    spec.schedule.tile_m = 128;
+    let report = guard::check_source(&dsl::print(&spec), task);
+    assert!(report.has(GuardCode::ShapeMismatch), "{}", report.summary());
+    assert!(
+        !report.has(GuardCode::ResourceLimit),
+        "tile_m=128 is resource-legal; only the shape check should fire: {}",
+        report.summary()
+    );
+
+    // Resource limit (exhaustive structured validate).
+    let mut spec = base.clone();
+    spec.schedule.threads_per_block = 100;
+    spec.schedule.vector_width = 3;
+    let report = guard::check_source(&dsl::print(&spec), task);
+    let limits = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.code == GuardCode::ResourceLimit)
+        .count();
+    assert_eq!(limits, 2, "{}", report.summary());
+}
+
+/// Edge cases the shape inference must handle without panicking:
+/// rank-0 outputs, zero-size shapes — and stable diagnostics.
+#[test]
+fn rank0_and_zero_size_edge_cases() {
+    // Rank-0 (scalar) output: default 8x8 tiling violates the output
+    // spec; a 1x1 row-major schedule passes.
+    let scalar = synthetic_task(vec![vec![64, 64]], vec![]);
+    let mut spec = KernelSpec::baseline("synthetic");
+    let report = guard::check_spec(&spec, &scalar);
+    assert!(report.has(GuardCode::OutputSpecViolation), "{}", report.summary());
+    spec.schedule.tile_m = 1;
+    spec.schedule.tile_n = 1;
+    assert!(guard::check_spec(&spec, &scalar).pass());
+
+    // Zero-size arg and zero-size output.
+    let degenerate = synthetic_task(vec![vec![64, 0]], vec![0]);
+    let report = guard::check_spec(&KernelSpec::baseline("synthetic"), &degenerate);
+    assert!(report.has(GuardCode::ShapeMismatch), "{}", report.summary());
+    assert!(report.has(GuardCode::OutputSpecViolation), "{}", report.summary());
+
+    // Diagnostics stability across repeated checks (same AST -> same
+    // diagnostic list, byte for byte, including ordering).
+    let again = guard::check_spec(&KernelSpec::baseline("synthetic"), &degenerate);
+    assert_eq!(report, again);
+}
+
+/// The cache-level guarantee: a guard-rejected candidate is journaled
+/// (under the guard-namespaced key) and never reaches the PJRT runtime
+/// pool — and the guard record never shadows the full-pipeline record
+/// for the same candidate.
+#[test]
+fn guard_rejected_candidates_never_reach_runtime_pool() {
+    let reg = registry();
+    let dir = tmpdir("pool");
+    let cache = dir.join("cache.jsonl");
+
+    let task = reg.get("matmul_64").unwrap().clone();
+    // Compile-legal (passes stage-1 validation) but guard-rejected:
+    // only stage 0 stands between this candidate and a PJRT compile.
+    let mut spec = KernelSpec::baseline("matmul_64");
+    spec.schedule.tile_m = 128;
+    let src = dsl::print(&spec);
+
+    {
+        let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap())
+            .with_store(EvalStore::open(&cache).unwrap());
+        let mut rng = Rng::new(0);
+        let out = ev.evaluate_guarded(&src, &task, "-", &mut rng);
+        let EvalOutcome::GuardReject { diagnostics } = &out else {
+            panic!("expected GuardReject, got {out:?}");
+        };
+        assert!(!diagnostics.is_empty());
+        assert!(!out.compiled() && !out.correct());
+        let stats = ev.runtime_stats().unwrap();
+        assert_eq!(stats.executions, 0, "guard-rejected candidate executed on PJRT");
+        assert_eq!(stats.compiles, 0, "guard-rejected candidate compiled on PJRT");
+        assert_eq!(ev.store().unwrap().len(), 1);
+    }
+
+    // Fresh process: the journaled verdict replays bit-identically,
+    // still without touching the runtime pool.
+    let first_diags = {
+        let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap())
+            .with_store(EvalStore::open(&cache).unwrap());
+        let mut rng = Rng::new(7); // guard replay consumes no RNG
+        let out = ev.evaluate_guarded(&src, &task, "-", &mut rng);
+        let EvalOutcome::GuardReject { diagnostics } = out else {
+            panic!("expected replayed GuardReject");
+        };
+        assert_eq!(ev.store().unwrap().hits(), 1);
+        assert_eq!(ev.runtime_stats().unwrap().executions, 0);
+
+        // Namespacing: the same candidate through the *unguarded*
+        // pipeline compiles and runs fine — the guard verdict must not
+        // shadow it (and vice versa).
+        let mut rng = Rng::new(1);
+        let full = ev.evaluate(&src, &task, &mut rng);
+        assert!(
+            matches!(full, EvalOutcome::Ok(_)),
+            "guard-namespaced record leaked into the full pipeline: {full:?}"
+        );
+        assert!(ev.runtime_stats().unwrap().executions > 0);
+        // And the guarded view still rejects after the full record
+        // landed under the normal key.
+        let mut rng = Rng::new(2);
+        assert!(matches!(
+            ev.evaluate_guarded(&src, &task, "-", &mut rng),
+            EvalOutcome::GuardReject { .. }
+        ));
+        diagnostics
+    };
+
+    // The diagnostics that replayed are exactly the ones journaled.
+    let report = guard::check_source(&src, &task);
+    assert_eq!(first_diags, report.diagnostics);
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A guarded + repaired optimization run replays bit-identically from
+/// the persistent cache: same records, zero live PJRT work on the
+/// second leg.
+#[test]
+fn repair_loop_cache_replay_is_bit_identical() {
+    let reg = registry();
+    let dir = tmpdir("replay");
+    let cache = dir.join("cache.jsonl");
+
+    let task = reg.get("cumsum_rows_64").unwrap().clone();
+    let archive = Archive::new();
+    let run = |store: Arc<EvalStore>| {
+        let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap()).with_store(store);
+        let ctx = RunCtx {
+            evaluator: &ev,
+            task: &task,
+            model: &MODELS[0],
+            seed: 3,
+            archive: &archive,
+            budget: 25,
+            repair: RepairPolicy::Repair { max_attempts: 2 },
+        };
+        let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx);
+        (rec, ev.runtime_stats().unwrap().executions)
+    };
+
+    let (cold, cold_exec) = run(EvalStore::open(&cache).unwrap());
+    assert!(cold_exec > 0, "cold run must verify functionally on PJRT");
+
+    let (warm, warm_exec) = run(EvalStore::open(&cache).unwrap());
+    assert_eq!(
+        cold.to_json().to_string(),
+        warm.to_json().to_string(),
+        "guarded+repaired replay diverged from the cold run"
+    );
+    assert_eq!(
+        warm_exec, 0,
+        "warm replay performed live PJRT executions ({warm_exec})"
+    );
+
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -10,7 +10,7 @@ use evoengineer::costmodel::baseline_schedule;
 use evoengineer::dsl::{self, KernelSpec};
 use evoengineer::evals::{EvalOutcome, Evaluator};
 use evoengineer::llm::{self, MODELS};
-use evoengineer::methods::{self, Archive, RunCtx};
+use evoengineer::methods::{self, Archive, RepairPolicy, RunCtx};
 use evoengineer::metrics;
 use evoengineer::report;
 use evoengineer::runtime::Runtime;
@@ -131,6 +131,7 @@ fn all_methods_run_on_all_categories() {
                 seed: 11,
                 archive: &archive,
                 budget: 12,
+                repair: RepairPolicy::Off,
             };
             let rec = method.run(&ctx);
             assert!(rec.trials <= 12, "{}", method.name());
@@ -211,6 +212,47 @@ fn validity_ordering_matches_the_paper() {
 }
 
 #[test]
+fn guarded_campaign_reports_stage_breakdown() {
+    // A campaign slice under the repair policy: every record carries
+    // the ablation label, the stage-0 machinery fires, and the
+    // validity report breaks trials out per stage.
+    let cfg = CampaignConfig {
+        methods: vec!["evoengineer-free".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        max_ops: 4,
+        budget: 15,
+        repair: methods::RepairPolicy::Repair { max_attempts: 2 },
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+    let records = campaign::run(&cfg, evaluator()).unwrap();
+    assert_eq!(records.len(), 4);
+    assert!(records.iter().all(|r| r.repair_policy == "repair:2"));
+    assert!(records.iter().all(|r| r.trials <= 15));
+    assert!(
+        records.iter().any(|r| r.repair_attempts > 0),
+        "no repair calls fired across 4 ops x 15 trials"
+    );
+    let text = report::validity(&records);
+    assert!(text.contains("Stage-0 rejected %"), "{text}");
+    assert!(text.contains("repair policy: repair:2"), "{text}");
+
+    // Stage-0 bookkeeping survives the records JSONL round-trip.
+    let dir = std::env::temp_dir().join(format!("evo_guard_it_{}", std::process::id()));
+    let path = dir.join("r.jsonl");
+    results::save(&path, &records).unwrap();
+    let back = results::load(&path).unwrap();
+    for (a, b) in records.iter().zip(&back) {
+        assert_eq!(a.guard_rejected_trials, b.guard_rejected_trials);
+        assert_eq!(a.repaired_trials, b.repaired_trials);
+        assert_eq!(a.repair_attempts, b.repair_attempts);
+        assert_eq!(a.repair_policy, b.repair_policy);
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn token_ordering_matches_figure4() {
     let ev = evaluator();
     let archive = Archive::new();
@@ -223,6 +265,7 @@ fn token_ordering_matches_figure4() {
             seed: 0,
             archive: &archive,
             budget: 30,
+            repair: RepairPolicy::Off,
         };
         let rec = methods::by_name(name).unwrap().run(&ctx);
         rec.total_tokens()

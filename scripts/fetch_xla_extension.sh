@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# Download the xla_extension native library (the PJRT implementation
+# behind the rust `xla` crate) and verify it against the pinned SHA-256
+# in scripts/xla_extension.sha256 before unpacking — a release tarball
+# swapped underneath us must fail loudly, not link silently.
+#
+# Trust-on-first-use: while the pin file still holds the REPLACE_ME
+# sentinel, the script prints the computed digest (and writes it to the
+# GitHub step summary when available) and proceeds with a loud warning,
+# so CI stays green until a maintainer commits the recorded value; once
+# a real pin is present, any mismatch is a hard failure.
+#
+# Usage: scripts/fetch_xla_extension.sh   (in CI; exports env via
+#        $GITHUB_ENV when set, prints exports otherwise)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+URL="${XLA_EXTENSION_URL:-https://github.com/elixir-nx/xla/releases/download/v0.4.4/xla_extension-x86_64-linux-gnu-cpu.tar.gz}"
+PIN_FILE="scripts/xla_extension.sha256"
+TARBALL="xla_extension.tar.gz"
+
+curl -fsSL -o "$TARBALL" "$URL"
+DIGEST="$(sha256sum "$TARBALL" | awk '{print $1}')"
+PINNED="$(awk '{print $1}' "$PIN_FILE")"
+
+if [ "$PINNED" = "REPLACE_ME" ]; then
+  echo "WARNING: xla_extension pin is the REPLACE_ME sentinel — download NOT verified."
+  echo "Computed digest of $URL:"
+  echo "  $DIGEST"
+  echo "Activate the pin:  echo '$DIGEST  $TARBALL' > $PIN_FILE"
+  if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+    {
+      echo "### :warning: xla_extension checksum unpinned (trust-on-first-use)"
+      echo '```'
+      echo "$DIGEST  $TARBALL"
+      echo '```'
+      echo "Commit this into \`$PIN_FILE\` to activate enforcement."
+    } >> "$GITHUB_STEP_SUMMARY"
+  fi
+elif [ "$DIGEST" != "$PINNED" ]; then
+  echo "xla_extension checksum mismatch!" >&2
+  echo "  pinned:   $PINNED ($PIN_FILE)" >&2
+  echo "  computed: $DIGEST" >&2
+  exit 1
+else
+  echo "xla_extension checksum OK ($DIGEST)"
+fi
+
+tar xzf "$TARBALL"
+if [ -n "${GITHUB_ENV:-}" ]; then
+  echo "XLA_EXTENSION_DIR=$PWD/xla_extension" >> "$GITHUB_ENV"
+  echo "LD_LIBRARY_PATH=$PWD/xla_extension/lib:${LD_LIBRARY_PATH:-}" >> "$GITHUB_ENV"
+else
+  echo "export XLA_EXTENSION_DIR=$PWD/xla_extension"
+  echo "export LD_LIBRARY_PATH=$PWD/xla_extension/lib:${LD_LIBRARY_PATH:-}"
+fi

@@ -16,4 +16,7 @@ cargo test -q
 echo "== docs: cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+echo "== benches: cargo bench --no-run (must always compile)"
+cargo bench --no-run
+
 echo "verify OK"
