@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use evoengineer::evals::Evaluator;
-use evoengineer::llm::profile;
+use evoengineer::llm::{profile, SimProvider};
 use evoengineer::methods::{self, Archive, RepairPolicy, RunCtx};
 use evoengineer::runtime::Runtime;
 use evoengineer::tasks::TaskRegistry;
@@ -23,24 +23,29 @@ fn main() -> Result<()> {
 
     // 3. Pick a task, a method, and a model.
     let task = registry.get("matmul_128").expect("matmul_128").clone();
-    let method = methods::by_name("evoengineer-full").unwrap();
+    let method = methods::by_name("evoengineer-full")?;
     let model = profile::by_name("claude").unwrap();
 
     // 4. Run one 45-trial optimization campaign on that kernel.
     let archive = Archive::new();
+    // The generation backend: SimLLM here; swap in ReplayProvider or
+    // (with the http-provider feature) HttpProvider without touching
+    // anything below this line.
+    let provider = SimProvider::new();
     let ctx = RunCtx {
         evaluator: &evaluator,
         task: &task,
         model,
         seed: 0,
         archive: &archive,
+        provider: &provider,
         budget: 45,
         // Stage-0 guard off: the historical pipeline. Try
         // RepairPolicy::Repair { max_attempts: 2 } (or the CLI's
         // `--repair repair`) for the guard + LLM repair loop.
         repair: RepairPolicy::Off,
     };
-    let record = method.run(&ctx);
+    let record = method.run(&ctx)?;
 
     // 5. Inspect the outcome.
     println!(

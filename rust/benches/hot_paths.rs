@@ -16,7 +16,7 @@ use std::time::Instant;
 use evoengineer::costmodel::{baseline_schedule, price, Gpu};
 use evoengineer::dsl::{self, KernelSpec};
 use evoengineer::evals::{functional_case_batch, Evaluator};
-use evoengineer::llm::{self, MODELS};
+use evoengineer::llm::{self, SimProvider, MODELS};
 use evoengineer::methods::{Archive, RepairPolicy, RunCtx, Session};
 use evoengineer::population::SingleBest;
 use evoengineer::runtime::{Runtime, TensorValue};
@@ -115,12 +115,14 @@ fn main() {
 
     // One complete trial through a Session (everything end to end).
     let archive = Archive::new();
+    let provider = SimProvider::new();
     let ctx = RunCtx {
         evaluator: &evaluator,
         task: &task,
         model: &MODELS[0],
         seed: 0,
         archive: &archive,
+        provider: &provider,
         budget: usize::MAX / 2,
         repair: RepairPolicy::Off,
     };

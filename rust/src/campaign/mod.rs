@@ -29,11 +29,11 @@ pub mod results;
 
 use std::collections::HashSet;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::evals::Evaluator;
-use crate::llm::{profile, ModelProfile};
+use crate::llm::{profile, provider, ModelProfile, ProviderSpec};
 use crate::methods::{self, Archive, ArchiveEntry, KernelRunRecord, RepairPolicy, RunCtx};
 use crate::tasks::OpTask;
 use crate::{eyre, Result};
@@ -56,6 +56,15 @@ pub struct CampaignConfig {
     /// Stage-0 guard / repair policy applied to every cell (the
     /// campaign-level ablation axis; DESIGN.md §11).
     pub repair: RepairPolicy,
+    /// Generation backend for every cell (DESIGN.md §12): the SimLLM,
+    /// a recorded transcript journal, or a live HTTP endpoint.
+    pub provider: ProviderSpec,
+    /// Transcript journal: every live provider call is appended here,
+    /// keyed by request hash, so the whole campaign can be re-run with
+    /// `ProviderSpec::Replay` and zero live generation. `None` = no
+    /// recording; ignored under replay (the journal already *is* the
+    /// record).
+    pub transcripts: Option<PathBuf>,
     /// Worker parallelism (0 = number of CPUs).
     pub concurrency: usize,
     /// Progress lines to stderr.
@@ -82,6 +91,8 @@ impl Default for CampaignConfig {
             max_ops: 0,
             budget: crate::TRIAL_BUDGET,
             repair: RepairPolicy::Off,
+            provider: ProviderSpec::Sim,
+            transcripts: None,
             concurrency: 0,
             quiet: false,
             checkpoint: None,
@@ -105,14 +116,7 @@ fn resolve_method_names(names: &[String]) -> Result<Vec<String>> {
     if names.is_empty() {
         return Ok(methods::all_methods().iter().map(|m| m.name()).collect());
     }
-    names
-        .iter()
-        .map(|n| {
-            methods::by_name(n)
-                .map(|m| m.name())
-                .ok_or_else(|| eyre!("unknown method `{n}`"))
-        })
-        .collect()
+    names.iter().map(|n| methods::by_name(n).map(|m| m.name())).collect()
 }
 
 /// One grid point.
@@ -140,6 +144,13 @@ fn cell_of(r: &KernelRunRecord) -> (String, String, String, u64) {
 pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRecord>> {
     let models = resolve_models(&cfg.models)?;
     let method_names = resolve_method_names(&cfg.methods)?;
+    // One provider shared by every worker (they are Sync); recording
+    // wraps it transparently when a transcript journal is configured.
+    let transcripts = match &cfg.provider {
+        ProviderSpec::Replay(_) => None, // a replayed run records nothing
+        _ => cfg.transcripts.as_deref(),
+    };
+    let llm_provider = provider::build(&cfg.provider, transcripts)?;
     let mut ops: Vec<OpTask> = evaluator
         .registry
         .ops
@@ -245,7 +256,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     if !cfg.quiet {
         eprintln!(
             "campaign: {} methods x {} models x {} ops x {} seeds = {} runs \
-             ({} workers, {} runtime shards{})",
+             ({} workers, {} runtime shards, provider {}{})",
             method_names.len(),
             models.len(),
             ops.len(),
@@ -253,6 +264,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             grid_total,
             concurrency,
             evaluator.runtime_shards(),
+            llm_provider.label(),
             if prior.is_empty() {
                 String::new()
             } else {
@@ -277,6 +289,11 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     let done = Arc::new(AtomicUsize::new(0));
     let out: Arc<Mutex<Vec<Option<KernelRunRecord>>>> =
         Arc::new(Mutex::new(vec![None; total]));
+    // First provider failure (transcript miss, HTTP outage) aborts the
+    // sweep: the flag stops workers claiming new cells, the error is
+    // surfaced to the caller. Already-journaled cells stay resumable.
+    let failed = Arc::new(AtomicBool::new(false));
+    let first_error: Arc<Mutex<Option<anyhow::Error>>> = Arc::new(Mutex::new(None));
 
     std::thread::scope(|scope| {
         for _ in 0..concurrency {
@@ -287,9 +304,15 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             let evaluator = evaluator.clone();
             let archive = archive.clone();
             let appender = &appender;
+            let llm_provider = llm_provider.clone();
+            let failed = failed.clone();
+            let first_error = first_error.clone();
             scope.spawn(move || loop {
                 if stop_after > 0 && done.load(Ordering::Relaxed) >= stop_after {
                     break; // simulated kill: stop claiming work
+                }
+                if failed.load(Ordering::Relaxed) {
+                    break; // another worker hit a provider failure
                 }
                 let idx = next.fetch_add(1, Ordering::Relaxed);
                 if idx >= jobs.len() {
@@ -305,8 +328,22 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
                     archive: &archive,
                     budget,
                     repair,
+                    provider: llm_provider.as_ref(),
                 };
-                let rec = method.run(&ctx);
+                let rec = match method.run(&ctx) {
+                    Ok(rec) => rec,
+                    Err(e) => {
+                        failed.store(true, Ordering::Relaxed);
+                        let mut g = first_error.lock().unwrap();
+                        if g.is_none() {
+                            *g = Some(e.context(format!(
+                                "cell {} / {} / {} / seed {}",
+                                job.method, job.model.name, job.op.name, job.seed
+                            )));
+                        }
+                        break;
+                    }
+                };
                 if let Some(appender) = appender {
                     if let Err(e) = appender.lock().unwrap().append(&rec) {
                         eprintln!("warning: checkpoint append failed: {e:#}");
@@ -320,6 +357,10 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             });
         }
     });
+
+    if let Some(e) = first_error.lock().unwrap().take() {
+        return Err(e);
+    }
 
     // Persist this process's cache hit/miss counters for `cache stats`.
     if let Some(store) = evaluator.store() {
@@ -425,6 +466,19 @@ mod tests {
         assert_eq!(resolve_models(&[]).unwrap().len(), 3);
         assert_eq!(resolve_method_names(&[]).unwrap().len(), 6);
         assert!(resolve_models(&["martian".into()]).is_err());
+    }
+
+    #[test]
+    fn ambiguous_method_filter_is_an_error() {
+        // `--methods evoengineer` used to silently pick the first
+        // variant; the campaign must now refuse the ambiguous filter.
+        let err = resolve_method_names(&["evoengineer".into()]).unwrap_err();
+        assert!(err.to_string().contains("ambiguous"), "{err}");
+        // Unique fragments still work for CLI ergonomics.
+        assert_eq!(
+            resolve_method_names(&["eoh".into()]).unwrap(),
+            vec!["EvoEngineer-Solution (EoH)".to_string()]
+        );
     }
 
     #[test]

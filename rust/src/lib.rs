@@ -18,7 +18,9 @@
 //! * [`evals`] — the paper's two-stage evaluation pipeline, fronted by
 //!   the stage-0 guard when a repair policy is active.
 //! * [`costmodel`] — RTX-4090 analytical timing of candidate schedules.
-//! * [`llm`] — SimLLM: prompt-conditioned stochastic code generator.
+//! * [`llm`] — the pluggable provider seam (typed generation/repair
+//!   requests; sim, transcript-replay and HTTP backends) with the
+//!   SimLLM as the default prompt-conditioned stochastic generator.
 //! * [`traverse`] — the two-layer traverse technique (solution-guiding
 //!   layer + prompt-engineering layer, paper §4.1.1).
 //! * [`population`] — population management strategies (paper §4.1.2).
@@ -26,7 +28,8 @@
 //!   AI CUDA Engineer (paper §4.2, Appendix A.8).
 //! * [`campaign`] — std::thread worker pool over method × model × op ×
 //!   seed, with checkpoint/resume journaling (DESIGN.md §8).
-//! * [`store`] — persistent content-addressed evaluation cache.
+//! * [`store`] — persistent content-addressed evaluation cache and
+//!   the provider-call transcript journal.
 //! * [`metrics`] / [`report`] — every table & figure of the paper.
 
 pub mod campaign;

@@ -1,0 +1,648 @@
+//! `HttpProvider` — OpenAI-compatible chat-completions backend for the
+//! provider seam (DESIGN.md §12), behind the `http-provider` cargo
+//! feature.
+//!
+//! The build environment is offline (no HTTP crates in the pre-seeded
+//! cache), so the client is a minimal hand-rolled HTTP/1.1
+//! implementation over `std::net::TcpStream`: plain `http://` only
+//! (front a TLS endpoint with a local gateway), `Connection: close`
+//! per request, Content-Length and chunked response bodies. That is
+//! exactly enough for a local vLLM / llama.cpp / LiteLLM-style
+//! gateway, and for the stub-server tests below.
+//!
+//! Configuration comes from the environment (all optional except the
+//! endpoint when the defaults don't fit):
+//!
+//! | variable                | default                    | meaning |
+//! |-------------------------|----------------------------|---------|
+//! | `EVO_HTTP_BASE_URL`     | `http://127.0.0.1:8000/v1` | endpoint base; `/chat/completions` is appended |
+//! | `EVO_HTTP_API_KEY`      | unset                      | sent as `Authorization: Bearer …` |
+//! | `EVO_HTTP_MODEL`        | unset                      | overrides the request's model id |
+//! | `EVO_HTTP_RETRIES`      | `3`                        | retries after connect errors / 5xx |
+//! | `EVO_HTTP_BACKOFF_MS`   | `250`                      | base backoff, doubling per retry |
+//! | `EVO_HTTP_TIMEOUT_MS`   | `60000`                    | connect/read/write timeout |
+//! | `EVO_HTTP_TOKEN_BUDGET` | unset                      | **hard** cutoff on total tokens |
+//!
+//! The token budget is a hard stop, not advisory: each call atomically
+//! *reserves* its prompt-side estimate before dialing out (so N racing
+//! campaign workers cannot all slip under the line) and reconciles to
+//! the endpoint's reported usage afterwards; once the budget is
+//! crossed, every further call errors, which aborts the campaign sweep
+//! cleanly. Overshoot is bounded by the completions already in flight
+//! — a runaway endpoint cannot burn an unbounded bill.
+//!
+//! Determinism caveat: a real model is not a pure function of the
+//! request, so HTTP runs are only replayable through the transcript
+//! journal (`--transcripts` + `--provider replay:<path>`), never by
+//! re-running live. The request seed is forwarded (31-bit, the common
+//! API range) for endpoints that support seeded sampling.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpStream, ToSocketAddrs as _};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::{self, Json};
+use crate::{eyre, Result, WrapErr as _};
+
+use super::count_tokens;
+use super::provider::{
+    GenerationRequest, GenerationResponse, GenerationRole, Provider, TokenUsage,
+};
+
+/// Connection + policy configuration (see module docs for the env
+/// mapping).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    pub base_url: String,
+    pub api_key: Option<String>,
+    /// Overrides the request's model id (the sim profile names are not
+    /// real API model ids).
+    pub model_override: Option<String>,
+    pub retries: u32,
+    pub backoff_ms: u64,
+    pub timeout_ms: u64,
+    /// Hard cutoff on cumulative prompt+completion tokens.
+    pub token_budget: Option<u64>,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            base_url: "http://127.0.0.1:8000/v1".into(),
+            api_key: None,
+            model_override: None,
+            retries: 3,
+            backoff_ms: 250,
+            timeout_ms: 60_000,
+            token_budget: None,
+        }
+    }
+}
+
+fn env_num<T: std::str::FromStr>(key: &str) -> Result<Option<T>> {
+    match std::env::var(key) {
+        Ok(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| eyre!("bad numeric value in ${key}: {v}")),
+        Err(_) => Ok(None),
+    }
+}
+
+impl HttpConfig {
+    /// Read the `EVO_HTTP_*` environment.
+    pub fn from_env() -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Ok(v) = std::env::var("EVO_HTTP_BASE_URL") {
+            cfg.base_url = v;
+        }
+        if let Ok(v) = std::env::var("EVO_HTTP_API_KEY") {
+            cfg.api_key = Some(v);
+        }
+        if let Ok(v) = std::env::var("EVO_HTTP_MODEL") {
+            cfg.model_override = Some(v);
+        }
+        if let Some(v) = env_num("EVO_HTTP_RETRIES")? {
+            cfg.retries = v;
+        }
+        if let Some(v) = env_num("EVO_HTTP_BACKOFF_MS")? {
+            cfg.backoff_ms = v;
+        }
+        if let Some(v) = env_num("EVO_HTTP_TIMEOUT_MS")? {
+            cfg.timeout_ms = v;
+        }
+        cfg.token_budget = env_num("EVO_HTTP_TOKEN_BUDGET")?;
+        Ok(cfg)
+    }
+}
+
+const GENERATE_SYSTEM: &str = "You are an expert GPU kernel engineer. Respond with a single \
+KernelScript program for the operation in the prompt (no commentary, no code fences), then one \
+final line `INSIGHT: <one-line optimization insight>`.";
+const REPAIR_SYSTEM: &str = "You are an expert GPU kernel engineer. Fix the kernel so it \
+passes the static checks; keep the optimization intent. Respond with the corrected \
+KernelScript program only, then one final line `INSIGHT: <what you fixed>`.";
+
+/// OpenAI-compatible chat-completions provider.
+pub struct HttpProvider {
+    cfg: HttpConfig,
+    /// Host header value (host or host:port as written in the URL).
+    host: String,
+    /// `host:port` used for the TCP connect.
+    authority: String,
+    /// URL path prefix (e.g. `/v1`), no trailing slash.
+    path: String,
+    spent: AtomicU64,
+}
+
+impl HttpProvider {
+    pub fn new(cfg: HttpConfig) -> Result<Self> {
+        let rest = cfg.base_url.strip_prefix("http://").ok_or_else(|| {
+            eyre!(
+                "EVO_HTTP_BASE_URL must be plain http:// (the offline client has no TLS; \
+                 front an https endpoint with a local gateway): `{}`",
+                cfg.base_url
+            )
+        })?;
+        let (hostport, path) = match rest.find('/') {
+            Some(i) => (&rest[..i], rest[i..].trim_end_matches('/')),
+            None => (rest, ""),
+        };
+        if hostport.is_empty() {
+            return Err(eyre!("EVO_HTTP_BASE_URL has no host: `{}`", cfg.base_url));
+        }
+        let authority = if hostport.contains(':') {
+            hostport.to_string()
+        } else {
+            format!("{hostport}:80")
+        };
+        Ok(Self {
+            host: hostport.to_string(),
+            authority,
+            path: path.to_string(),
+            spent: AtomicU64::new(0),
+            cfg,
+        })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::new(HttpConfig::from_env()?)
+    }
+
+    /// Cumulative prompt+completion tokens consumed by this provider.
+    pub fn tokens_spent(&self) -> u64 {
+        self.spent.load(Ordering::Relaxed)
+    }
+
+    fn body_for(&self, req: &GenerationRequest) -> String {
+        let model = self
+            .cfg
+            .model_override
+            .clone()
+            .unwrap_or_else(|| req.model.clone());
+        let msg = |role: &str, content: &str| {
+            Json::obj(vec![
+                ("role", Json::Str(role.to_string())),
+                ("content", Json::Str(content.to_string())),
+            ])
+        };
+        let (system, user) = match req.role {
+            GenerationRole::Generate => (GENERATE_SYSTEM, req.prompt.clone()),
+            GenerationRole::Repair => {
+                let mut diags = String::new();
+                for d in &req.diagnostics {
+                    diags.push_str(&format!("- {d}\n"));
+                }
+                (
+                    REPAIR_SYSTEM,
+                    format!("## PROGRAM\n{}\n\n## DIAGNOSTICS\n{diags}", req.prompt),
+                )
+            }
+        };
+        Json::obj(vec![
+            ("model", Json::Str(model)),
+            ("messages", Json::Arr(vec![msg("system", system), msg("user", &user)])),
+            // Common API seed range is 32-bit; forward the low 31 bits
+            // of the deterministic request seed.
+            ("seed", Json::Num((req.seed & 0x7fff_ffff) as f64)),
+        ])
+        .to_string()
+    }
+
+    fn post_chat(&self, body: &str) -> Result<(u16, String)> {
+        let timeout = Duration::from_millis(self.cfg.timeout_ms.max(1));
+        let addr = self
+            .authority
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {}", self.authority))?
+            .next()
+            .ok_or_else(|| eyre!("no address for {}", self.authority))?;
+        let mut stream = TcpStream::connect_timeout(&addr, timeout)
+            .with_context(|| format!("connecting to {}", self.authority))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let mut head = format!(
+            "POST {}/chat/completions HTTP/1.1\r\nHost: {}\r\n\
+             Content-Type: application/json\r\nAccept: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n",
+            self.path,
+            self.host,
+            body.len()
+        );
+        if let Some(key) = &self.cfg.api_key {
+            head.push_str(&format!("Authorization: Bearer {key}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+        let mut raw = Vec::new();
+        stream
+            .read_to_end(&mut raw)
+            .context("reading chat-completions response")?;
+        parse_http_response(&raw)
+    }
+}
+
+impl HttpProvider {
+    fn post_with_retries(&self, body: &str, req: &GenerationRequest) -> Result<GenerationResponse> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                let factor = 1u64 << (attempt - 1).min(6);
+                std::thread::sleep(Duration::from_millis(
+                    self.cfg.backoff_ms.saturating_mul(factor),
+                ));
+            }
+            match self.post_chat(body) {
+                Err(e) => last_err = Some(e),
+                Ok((status, text)) if status >= 500 => {
+                    last_err = Some(eyre!("HTTP {status}: {}", snippet(&text)));
+                }
+                Ok((status, text)) if !(200..300).contains(&status) => {
+                    // 4xx etc.: the request itself is bad; retrying
+                    // cannot help.
+                    return Err(eyre!(
+                        "http provider: HTTP {status} (not retryable): {}",
+                        snippet(&text)
+                    ));
+                }
+                Ok((_, text)) => return parse_chat_response(&text, req),
+            }
+        }
+        Err(last_err
+            .expect("retry loop ran at least once")
+            .context(format!(
+                "http provider: giving up after {} attempt(s)",
+                self.cfg.retries + 1
+            )))
+    }
+}
+
+impl Provider for HttpProvider {
+    fn label(&self) -> &str {
+        "http"
+    }
+
+    fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse> {
+        let body = self.body_for(req);
+        // Hard budget under concurrency: atomically *reserve* the
+        // prompt-side estimate before the call (check-then-act would
+        // let N racing workers all slip under the line), then swap the
+        // reservation for the endpoint's reported usage afterwards.
+        // Overshoot is bounded by the in-flight completions, not by N
+        // whole calls.
+        let reservation = count_tokens(&body);
+        if let Some(budget) = self.cfg.token_budget {
+            let prior = self.spent.fetch_add(reservation, Ordering::Relaxed);
+            if prior >= budget {
+                self.spent.fetch_sub(reservation, Ordering::Relaxed);
+                return Err(eyre!(
+                    "http provider: hard token budget exhausted ({prior}/{budget} tokens); \
+                     raise EVO_HTTP_TOKEN_BUDGET to continue"
+                ));
+            }
+        } else {
+            self.spent.fetch_add(reservation, Ordering::Relaxed);
+        }
+        match self.post_with_retries(&body, req) {
+            Ok(resp) => {
+                self.spent.fetch_add(resp.usage.total(), Ordering::Relaxed);
+                self.spent.fetch_sub(reservation, Ordering::Relaxed);
+                Ok(resp)
+            }
+            Err(e) => {
+                self.spent.fetch_sub(reservation, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+}
+
+fn snippet(text: &str) -> String {
+    let t = text.trim();
+    match t.char_indices().nth(200) {
+        None => t.to_string(),
+        Some((i, _)) => format!("{}…", &t[..i]),
+    }
+}
+
+/// Split a raw HTTP/1.1 response into (status, body text). Handles
+/// Content-Length and chunked bodies (Connection: close means EOF
+/// bounds everything else).
+fn parse_http_response(raw: &[u8]) -> Result<(u16, String)> {
+    let sep = find_subslice(raw, b"\r\n\r\n")
+        .ok_or_else(|| eyre!("malformed HTTP response: no header/body separator"))?;
+    let head = String::from_utf8_lossy(&raw[..sep]);
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| eyre!("malformed HTTP status line: `{status_line}`"))?;
+    let mut chunked = false;
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        let lower = line.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("transfer-encoding:") {
+            chunked = v.trim().contains("chunked");
+        } else if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v.trim().parse().ok();
+        }
+    }
+    let body = &raw[sep + 4..];
+    let body = if chunked {
+        dechunk(body)?
+    } else if let Some(len) = content_length {
+        body.get(..len.min(body.len())).unwrap_or(body).to_vec()
+    } else {
+        body.to_vec()
+    };
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn dechunk(mut body: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let pos = find_subslice(body, b"\r\n")
+            .ok_or_else(|| eyre!("malformed chunked body: no size line"))?;
+        let size_str = std::str::from_utf8(&body[..pos]).unwrap_or("");
+        let size = usize::from_str_radix(
+            size_str.split(';').next().unwrap_or("").trim(),
+            16,
+        )
+        .map_err(|_| eyre!("malformed chunk size `{size_str}`"))?;
+        body = &body[pos + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        if body.len() < size + 2 {
+            return Err(eyre!("truncated chunked body"));
+        }
+        out.extend_from_slice(&body[..size]);
+        body = &body[size + 2..];
+    }
+}
+
+/// Pull (program text, insight) out of the assistant message: code
+/// fences are stripped, the trailing `INSIGHT:` line becomes the
+/// solution insight (the solution-insight pair every method requests).
+fn split_content(content: &str) -> (String, String) {
+    let mut insight = String::new();
+    let mut kept: Vec<&str> = Vec::new();
+    for line in content.lines() {
+        let t = line.trim();
+        if t.starts_with("```") {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("INSIGHT:") {
+            insight = rest.trim().to_string();
+            continue;
+        }
+        kept.push(line);
+    }
+    if insight.is_empty() {
+        insight = "no insight reported".into();
+    }
+    (kept.join("\n").trim().to_string(), insight)
+}
+
+fn parse_chat_response(text: &str, req: &GenerationRequest) -> Result<GenerationResponse> {
+    let v = json::parse(text).map_err(|e| eyre!("bad chat-completions JSON: {e}"))?;
+    let content = v
+        .get("choices")
+        .and_then(|c| c.as_arr())
+        .and_then(|a| a.first())
+        .and_then(|c| c.get("message"))
+        .and_then(|m| m.get("content"))
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| eyre!("chat response missing choices[0].message.content"))?;
+    let (out_text, insight) = split_content(content);
+    let usage = v.get("usage");
+    // Real usage when the endpoint reports it; the 4-chars/token
+    // estimate otherwise (same rule the SimLLM uses).
+    let prompt_tokens = usage
+        .and_then(|u| u.get("prompt_tokens"))
+        .and_then(|x| x.as_u64())
+        .unwrap_or_else(|| count_tokens(&req.prompt));
+    let completion_tokens = usage
+        .and_then(|u| u.get("completion_tokens"))
+        .and_then(|x| x.as_u64())
+        .unwrap_or_else(|| count_tokens(content));
+    Ok(GenerationResponse {
+        text: out_text,
+        insight,
+        usage: TokenUsage { prompt_tokens, completion_tokens },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead as _, BufReader, Read as _, Write as _};
+    use std::net::TcpListener;
+
+    /// One-shot stub server: serves the canned responses in order (one
+    /// connection each) and returns the raw requests it saw.
+    fn stub(responses: Vec<String>) -> (String, std::thread::JoinHandle<Vec<String>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            for resp in responses {
+                let (mut stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut head = String::new();
+                let mut content_length = 0usize;
+                loop {
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    if line == "\r\n" || line.is_empty() {
+                        break;
+                    }
+                    if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:")
+                    {
+                        content_length = v.trim().parse().unwrap();
+                    }
+                    head.push_str(&line);
+                }
+                let mut body = vec![0u8; content_length];
+                reader.read_exact(&mut body).unwrap();
+                seen.push(format!("{head}\n{}", String::from_utf8_lossy(&body)));
+                stream.write_all(resp.as_bytes()).unwrap();
+                stream.flush().ok();
+            }
+            seen
+        });
+        (format!("http://{addr}/v1"), handle)
+    }
+
+    fn chat_body(content: &str, pt: u64, ct: u64) -> String {
+        Json::obj(vec![
+            (
+                "choices",
+                Json::Arr(vec![Json::obj(vec![(
+                    "message",
+                    Json::obj(vec![
+                        ("role", Json::Str("assistant".into())),
+                        ("content", Json::Str(content.into())),
+                    ]),
+                )])]),
+            ),
+            (
+                "usage",
+                Json::obj(vec![
+                    ("prompt_tokens", Json::Num(pt as f64)),
+                    ("completion_tokens", Json::Num(ct as f64)),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+
+    fn ok_response(content: &str, pt: u64, ct: u64) -> String {
+        let body = chat_body(content, pt, ct);
+        format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+    }
+
+    fn cfg_for(base_url: &str) -> HttpConfig {
+        HttpConfig {
+            base_url: base_url.to_string(),
+            api_key: Some("test-key".into()),
+            retries: 2,
+            backoff_ms: 1,
+            timeout_ms: 5_000,
+            ..HttpConfig::default()
+        }
+    }
+
+    #[test]
+    fn generate_roundtrip_with_auth_and_usage() {
+        let content = "kernel matmul_64 { semantics: opt; }\nINSIGHT: wider loads";
+        let (url, handle) = stub(vec![ok_response(content, 321, 45)]);
+        let provider = HttpProvider::new(cfg_for(&url)).unwrap();
+        let req = GenerationRequest::generate("GPT-4.1", "## TASK\nop: matmul_64\n", 42);
+        let resp = provider.call(&req).unwrap();
+        assert_eq!(resp.text, "kernel matmul_64 { semantics: opt; }");
+        assert_eq!(resp.insight, "wider loads");
+        assert_eq!(resp.usage.prompt_tokens, 321);
+        assert_eq!(resp.usage.completion_tokens, 45);
+        assert_eq!(provider.tokens_spent(), 366);
+        let seen = handle.join().unwrap();
+        assert!(seen[0].contains("POST /v1/chat/completions"), "{}", seen[0]);
+        assert!(seen[0].contains("Authorization: Bearer test-key"), "{}", seen[0]);
+        assert!(seen[0].contains("op: matmul_64"), "{}", seen[0]);
+        assert!(seen[0].contains("\"seed\":42"), "{}", seen[0]);
+    }
+
+    #[test]
+    fn repair_requests_carry_diagnostics() {
+        use crate::guard::{GuardCode, GuardDiagnostic, GuardReport};
+        let (url, handle) = stub(vec![ok_response("kernel x { }\nINSIGHT: fixed", 10, 5)]);
+        let provider = HttpProvider::new(cfg_for(&url)).unwrap();
+        let report = GuardReport {
+            diagnostics: vec![GuardDiagnostic {
+                code: GuardCode::NonTerminating,
+                field: "tile_k".into(),
+                message: "tile_k=0 is a zero-step loop construct".into(),
+                hint: None,
+            }],
+        };
+        let req = GenerationRequest::repair("GPT-4.1", "kernel x { tile_k: 0; }", &report, 7);
+        provider.call(&req).unwrap();
+        let seen = handle.join().unwrap();
+        assert!(seen[0].contains("DIAGNOSTICS"), "{}", seen[0]);
+        assert!(seen[0].contains("tile_k=0"), "{}", seen[0]);
+    }
+
+    #[test]
+    fn retries_5xx_then_succeeds() {
+        let boom = "HTTP/1.1 503 Service Unavailable\r\nContent-Length: 4\r\n\
+                    Connection: close\r\n\r\nbusy";
+        let (url, handle) = stub(vec![
+            boom.to_string(),
+            ok_response("kernel y { }\nINSIGHT: ok", 1, 1),
+        ]);
+        let provider = HttpProvider::new(cfg_for(&url)).unwrap();
+        let req = GenerationRequest::generate("GPT-4.1", "p", 1);
+        let resp = provider.call(&req).unwrap();
+        assert_eq!(resp.text, "kernel y { }");
+        assert_eq!(handle.join().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bad_request_is_not_retried() {
+        let denied = "HTTP/1.1 401 Unauthorized\r\nContent-Length: 6\r\n\
+                      Connection: close\r\n\r\ndenied";
+        let (url, handle) = stub(vec![denied.to_string()]);
+        let provider = HttpProvider::new(cfg_for(&url)).unwrap();
+        let req = GenerationRequest::generate("GPT-4.1", "p", 1);
+        let err = provider.call(&req).unwrap_err().to_string();
+        assert!(err.contains("401"), "{err}");
+        assert!(err.contains("not retryable"), "{err}");
+        assert_eq!(handle.join().unwrap().len(), 1, "401 must not be retried");
+    }
+
+    #[test]
+    fn hard_token_budget_cuts_off() {
+        let (url, handle) = stub(vec![ok_response("kernel z { }\nINSIGHT: ok", 90, 20)]);
+        let mut cfg = cfg_for(&url);
+        cfg.token_budget = Some(100);
+        let provider = HttpProvider::new(cfg).unwrap();
+        let req = GenerationRequest::generate("GPT-4.1", "p", 1);
+        provider.call(&req).unwrap(); // 110 tokens spent > 100 budget
+        let err = provider.call(&req).unwrap_err().to_string();
+        assert!(err.contains("token budget exhausted"), "{err}");
+        assert_eq!(handle.join().unwrap().len(), 1, "no request after cutoff");
+    }
+
+    #[test]
+    fn chunked_responses_are_decoded() {
+        let body = chat_body("kernel c { }\nINSIGHT: chunky", 2, 3);
+        let (a, b) = body.split_at(body.len() / 2);
+        let raw = format!(
+            "HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n\
+             {:x}\r\n{a}\r\n{:x}\r\n{b}\r\n0\r\n\r\n",
+            a.len(),
+            b.len()
+        );
+        let (status, text) = parse_http_response(raw.as_bytes()).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(text, body);
+    }
+
+    #[test]
+    fn split_content_handles_fences_and_missing_insight() {
+        let (text, insight) =
+            split_content("```kernelscript\nkernel a { }\n```\nINSIGHT: tiled better");
+        assert_eq!(text, "kernel a { }");
+        assert_eq!(insight, "tiled better");
+        let (text, insight) = split_content("kernel b { }");
+        assert_eq!(text, "kernel b { }");
+        assert_eq!(insight, "no insight reported");
+    }
+
+    #[test]
+    fn config_rejects_https_and_missing_host() {
+        assert!(HttpProvider::new(HttpConfig {
+            base_url: "https://api.example.com/v1".into(),
+            ..HttpConfig::default()
+        })
+        .is_err());
+        assert!(HttpProvider::new(HttpConfig {
+            base_url: "http:///v1".into(),
+            ..HttpConfig::default()
+        })
+        .is_err());
+    }
+}

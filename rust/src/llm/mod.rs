@@ -17,12 +17,27 @@
 //!   configurations trade exploration for validity.
 //! * Token accounting is real: prompt tokens from the actual prompt
 //!   length, completion tokens from the actual emitted text (Figure 4).
+//!
+//! Since the provider redesign (DESIGN.md §12) the SimLLM is one
+//! backend behind the typed [`Provider`] seam: `Session::trial` and
+//! the repair loop issue [`GenerationRequest`]s, and [`SimProvider`]
+//! expands each request's seed to the exact RNG stream the old inline
+//! call sites derived — the free functions below remain the sim
+//! backend's implementation (and its conformance oracle).
 
 pub mod mutate;
 pub mod parse;
 pub mod profile;
+pub mod provider;
+
+#[cfg(feature = "http-provider")]
+pub mod http;
 
 pub use profile::{ModelProfile, MODELS};
+pub use provider::{
+    GenerationRequest, GenerationResponse, GenerationRole, Provider, ProviderSpec,
+    RecordingProvider, ReplayProvider, SimProvider, TokenUsage,
+};
 
 use crate::dsl::{self, KernelSpec};
 use crate::util::Rng;

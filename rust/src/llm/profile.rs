@@ -34,6 +34,19 @@ pub struct ModelProfile {
     pub category_validity: [f64; 6],
     /// Completion-length factor (reasoning verbosity).
     pub verbosity: f64,
+    /// API price, USD per million prompt tokens (paper Table 6 —
+    /// feeds the per-provider cost accounting in `report tokens`).
+    pub usd_per_mtok_prompt: f64,
+    /// API price, USD per million completion tokens (paper Table 6).
+    pub usd_per_mtok_completion: f64,
+}
+
+impl ModelProfile {
+    /// Modeled API cost of a token count under this profile's pricing.
+    pub fn cost_usd(&self, prompt_tokens: u64, completion_tokens: u64) -> f64 {
+        prompt_tokens as f64 / 1e6 * self.usd_per_mtok_prompt
+            + completion_tokens as f64 / 1e6 * self.usd_per_mtok_completion
+    }
 }
 
 /// GPT-4.1, DeepSeek-V3.1, Claude-Sonnet-4 — in the paper's order.
@@ -49,6 +62,8 @@ pub static MODELS: &[ModelProfile] = &[
         category_skill: [1.00, 0.95, 1.05, 0.55, 1.35, 0.90],
         category_validity: [0.90, 1.00, 0.95, 1.10, 0.90, 2.30],
         verbosity: 1.00,
+        usd_per_mtok_prompt: 2.00,
+        usd_per_mtok_completion: 8.00,
     },
     ModelProfile {
         name: "DeepSeek-V3.1",
@@ -61,6 +76,8 @@ pub static MODELS: &[ModelProfile] = &[
         category_skill: [0.80, 0.85, 0.95, 1.45, 1.00, 0.95],
         category_validity: [0.80, 1.00, 1.00, 1.00, 0.90, 2.60],
         verbosity: 0.90,
+        usd_per_mtok_prompt: 0.56,
+        usd_per_mtok_completion: 1.68,
     },
     ModelProfile {
         name: "Claude-Sonnet-4",
@@ -73,6 +90,8 @@ pub static MODELS: &[ModelProfile] = &[
         category_skill: [1.00, 1.00, 1.30, 1.25, 1.05, 1.00],
         category_validity: [0.85, 0.95, 0.90, 1.00, 0.90, 1.80],
         verbosity: 1.15,
+        usd_per_mtok_prompt: 3.00,
+        usd_per_mtok_completion: 15.00,
     },
 ];
 
@@ -109,6 +128,20 @@ mod tests {
         for m in MODELS {
             assert!(m.category_validity[5] > 1.0, "{}", m.name);
         }
+    }
+
+    #[test]
+    fn pricing_is_positive_and_completion_heavier() {
+        for m in MODELS {
+            assert!(m.usd_per_mtok_prompt > 0.0, "{}", m.name);
+            assert!(
+                m.usd_per_mtok_completion > m.usd_per_mtok_prompt,
+                "{}: completion tokens price above prompt tokens",
+                m.name
+            );
+        }
+        // 1M prompt + 1M completion tokens of GPT-4.1 = $10 (Table 6).
+        assert!((MODELS[0].cost_usd(1_000_000, 1_000_000) - 10.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! The pluggable LLM provider API (DESIGN.md §12) — the seam every
+//! generation backend plugs into.
+//!
+//! The paper runs three real models through one evolution framework;
+//! this module makes the model an interchangeable, journaled component
+//! so the same campaign can run against the SimLLM, a recorded
+//! transcript, or a live OpenAI-compatible endpoint:
+//!
+//! * [`Provider`] — the trait: one typed call,
+//!   [`GenerationRequest`] → [`GenerationResponse`].
+//! * [`SimProvider`] — the SimLLM behind the seam. Byte-identical to
+//!   the pre-provider free functions for a given seed: the request's
+//!   `seed` is exactly the word [`Rng::derive`] would have expanded,
+//!   so cached eval records and guarded replays all stay valid.
+//! * [`RecordingProvider`] — transparent decorator that journals every
+//!   call of an inner provider to a [`TranscriptStore`], keyed by the
+//!   request content hash.
+//! * [`ReplayProvider`] — serves calls from a transcript journal with
+//!   **no** fallback backend: replayed campaigns perform zero live
+//!   generation, and a request outside the journal is a hard error.
+//!   Replay impersonates the recorded backend's label so run records
+//!   match the recording run byte-for-byte.
+//! * `HttpProvider` (behind the `http-provider` cargo feature, in
+//!   `llm::http`) — OpenAI-compatible chat-completions client with
+//!   retry/backoff and a hard token-budget cutoff.
+//!
+//! The honesty contract of the SimLLM (module docs of [`crate::llm`])
+//! is inherited wholesale: a provider sees only the rendered prompt
+//! text (plus, for repair calls, the rejected emission and the
+//! structured stage-0 diagnostics), and returns raw untrusted text
+//! plus real token accounting.
+//!
+//! [`Rng::derive`]: crate::util::Rng::derive
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::guard::{GuardDiagnostic, GuardReport};
+use crate::store::{sha256_hex, TranscriptEntry, TranscriptStore};
+use crate::util::Rng;
+use crate::{eyre, Result};
+
+use super::profile;
+
+/// What the caller is asking the model to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GenerationRole {
+    /// Propose a candidate kernel from a rendered prompt.
+    Generate,
+    /// Mend a rejected emission using stage-0 guard diagnostics.
+    Repair,
+}
+
+impl GenerationRole {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GenerationRole::Generate => "generate",
+            GenerationRole::Repair => "repair",
+        }
+    }
+}
+
+impl std::fmt::Display for GenerationRole {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One typed LLM call. The request is self-contained: everything a
+/// backend may condition on is in here, which is what makes calls
+/// hashable, journalable and replayable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenerationRequest {
+    pub role: GenerationRole,
+    /// Model identity — a [`profile::ModelProfile`] name for the sim
+    /// backend, a remote model id for HTTP.
+    pub model: String,
+    /// The rendered prompt (`Generate`) or the rejected emission being
+    /// repaired (`Repair`).
+    pub prompt: String,
+    /// Structured stage-0 diagnostics (`Repair` calls only; empty for
+    /// `Generate`).
+    pub diagnostics: Vec<GuardDiagnostic>,
+    /// Deterministic stream id, produced by
+    /// [`Rng::derive_seed`](crate::util::Rng::derive_seed) exactly
+    /// where the pre-provider code derived its per-call RNG — the sim
+    /// backend expands it to the identical stream.
+    pub seed: u64,
+}
+
+impl GenerationRequest {
+    /// A `Generate` call for a rendered prompt.
+    pub fn generate(model: &str, prompt: &str, seed: u64) -> Self {
+        GenerationRequest {
+            role: GenerationRole::Generate,
+            model: model.to_string(),
+            prompt: prompt.to_string(),
+            diagnostics: Vec::new(),
+            seed,
+        }
+    }
+
+    /// A `Repair` call for a guard-rejected emission.
+    pub fn repair(model: &str, src: &str, report: &GuardReport, seed: u64) -> Self {
+        GenerationRequest {
+            role: GenerationRole::Repair,
+            model: model.to_string(),
+            prompt: src.to_string(),
+            diagnostics: report.diagnostics.clone(),
+            seed,
+        }
+    }
+
+    /// Content hash of the request — the transcript journal key. The
+    /// encoding is canonical (length-framed, NUL-separated fields over
+    /// role, model, seed, prompt and every diagnostic), so two
+    /// requests share a hash iff a backend could not tell them apart.
+    pub fn hash(&self) -> String {
+        let mut buf: Vec<u8> = Vec::with_capacity(64 + self.prompt.len());
+        buf.extend_from_slice(b"genreq\0v1\0");
+        buf.extend_from_slice(self.role.as_str().as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(self.model.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&self.seed.to_be_bytes());
+        buf.extend_from_slice(&(self.prompt.len() as u64).to_be_bytes());
+        buf.extend_from_slice(self.prompt.as_bytes());
+        for d in &self.diagnostics {
+            buf.push(0);
+            buf.extend_from_slice(d.code.as_str().as_bytes());
+            buf.push(0);
+            buf.extend_from_slice(d.field.as_bytes());
+            buf.push(0);
+            buf.extend_from_slice(d.message.as_bytes());
+            buf.push(0);
+            if let Some((hf, hv)) = &d.hint {
+                buf.extend_from_slice(hf.as_bytes());
+                buf.push(0);
+                buf.extend_from_slice(hv.as_bytes());
+            }
+            buf.push(0);
+        }
+        sha256_hex(&buf)
+    }
+}
+
+/// Real token accounting for one call (prompt side measured from what
+/// was sent, completion side from what came back).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TokenUsage {
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+}
+
+impl TokenUsage {
+    pub fn total(&self) -> u64 {
+        self.prompt_tokens + self.completion_tokens
+    }
+}
+
+/// One call's result: raw untrusted text, the solution insight, and
+/// token accounting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenerationResponse {
+    pub text: String,
+    pub insight: String,
+    pub usage: TokenUsage,
+}
+
+/// A generation backend. Implementations must be `Send + Sync`: the
+/// campaign worker pool shares one provider across threads.
+pub trait Provider: Send + Sync {
+    /// Stable backend label recorded in every run record ("sim",
+    /// "http", or — for replay — the label of the backend that
+    /// *recorded* the transcript).
+    fn label(&self) -> &str;
+
+    /// Execute one typed call.
+    fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse>;
+}
+
+// ---------------------------------------------------------------------
+// SimProvider
+
+/// The SimLLM behind the provider seam.
+///
+/// Delegates to the free functions [`crate::llm::generate`] /
+/// [`crate::llm::repair`] with `Rng::new(req.seed)` — byte-identical
+/// to the pre-provider call sites for the same derived seed (proven by
+/// `tests/provider_conformance.rs`).
+#[derive(Debug, Default)]
+pub struct SimProvider {
+    calls: AtomicU64,
+}
+
+impl SimProvider {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Live generations performed by this instance (the
+    /// record-then-replay identity test's zero-live-calls proof).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl Provider for SimProvider {
+    fn label(&self) -> &str {
+        "sim"
+    }
+
+    fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse> {
+        let prof = profile::by_name(&req.model)
+            .ok_or_else(|| eyre!("sim provider: unknown model `{}`", req.model))?;
+        let mut rng = Rng::new(req.seed);
+        let resp = match req.role {
+            GenerationRole::Generate => super::generate(&req.prompt, prof, &mut rng),
+            GenerationRole::Repair => {
+                let report = GuardReport { diagnostics: req.diagnostics.clone() };
+                super::repair(&req.prompt, &report, prof, &mut rng)
+            }
+        };
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(GenerationResponse {
+            text: resp.text,
+            insight: resp.insight,
+            usage: TokenUsage {
+                prompt_tokens: resp.prompt_tokens,
+                completion_tokens: resp.completion_tokens,
+            },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// RecordingProvider
+
+/// Transparent decorator: every call of the inner provider is appended
+/// to a [`TranscriptStore`] keyed by the request hash. The label stays
+/// the inner backend's — recording is provenance-neutral.
+pub struct RecordingProvider {
+    inner: Arc<dyn Provider>,
+    journal: Arc<TranscriptStore>,
+}
+
+impl RecordingProvider {
+    /// Wrap `inner`, declaring it as the journal's source backend.
+    /// Fails if the journal was recorded by a different backend.
+    pub fn new(inner: Arc<dyn Provider>, journal: Arc<TranscriptStore>) -> Result<Self> {
+        journal.record_source(inner.label())?;
+        Ok(Self { inner, journal })
+    }
+
+    pub fn journal(&self) -> &Arc<TranscriptStore> {
+        &self.journal
+    }
+}
+
+impl Provider for RecordingProvider {
+    fn label(&self) -> &str {
+        self.inner.label()
+    }
+
+    fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse> {
+        let resp = self.inner.call(req)?;
+        let entry = TranscriptEntry {
+            role: req.role.as_str().to_string(),
+            model: req.model.clone(),
+            seed: req.seed,
+            text: resp.text.clone(),
+            insight: resp.insight.clone(),
+            prompt_tokens: resp.usage.prompt_tokens,
+            completion_tokens: resp.usage.completion_tokens,
+        };
+        if let Err(e) = self.journal.append(&req.hash(), entry) {
+            // Advisory, like the eval cache: a failed journal write
+            // must not kill the run that produced the response.
+            eprintln!("warning: transcript append failed: {e:#}");
+        }
+        Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReplayProvider
+
+/// Serves every call from a recorded transcript journal. No inner
+/// backend: a request the journal does not cover is a hard error, so a
+/// successful replay run performed zero live generation by
+/// construction.
+pub struct ReplayProvider {
+    journal: Arc<TranscriptStore>,
+    /// Impersonated label (the journal's recorded source backend).
+    label: String,
+}
+
+impl ReplayProvider {
+    /// Open a journal for replay. The file must exist.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(eyre!(
+                "no transcript journal at {} — record one first (run with \
+                 `--provider sim` or `--provider http` and `--transcripts`)",
+                path.display()
+            ));
+        }
+        let journal = TranscriptStore::open(path)?;
+        let label = journal.source().unwrap_or_else(|| "replay".to_string());
+        Ok(Self { journal, label })
+    }
+
+    pub fn len(&self) -> usize {
+        self.journal.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.journal.is_empty()
+    }
+}
+
+impl Provider for ReplayProvider {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse> {
+        let entry = self.journal.lookup(&req.hash()).ok_or_else(|| {
+            eyre!(
+                "transcript miss: no recorded {} call for model {} (seed {}) in {} — \
+                 the journal does not cover this run's grid/budget; re-record it \
+                 (archive-reading methods like AI CUDA Engineer additionally need \
+                 --concurrency 1 on both legs, DESIGN.md §12)",
+                req.role,
+                req.model,
+                req.seed,
+                self.journal.path().display()
+            )
+        })?;
+        Ok(GenerationResponse {
+            text: entry.text,
+            insight: entry.insight,
+            usage: TokenUsage {
+                prompt_tokens: entry.prompt_tokens,
+                completion_tokens: entry.completion_tokens,
+            },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// ProviderSpec: CLI / config surface
+
+/// Which backend to run — the parsed form of the `--provider` flag
+/// (`sim` | `replay:<path>` | `http`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum ProviderSpec {
+    #[default]
+    Sim,
+    Replay(PathBuf),
+    Http,
+}
+
+impl ProviderSpec {
+    /// Parse a `--provider` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "" | "sim" => Ok(ProviderSpec::Sim),
+            "http" => Ok(ProviderSpec::Http),
+            "replay" => Err(eyre!(
+                "`--provider replay` needs a journal: replay:<transcripts.jsonl>"
+            )),
+            other => {
+                if let Some(path) = other.strip_prefix("replay:") {
+                    if path.is_empty() {
+                        return Err(eyre!("empty replay journal path"));
+                    }
+                    Ok(ProviderSpec::Replay(PathBuf::from(path)))
+                } else {
+                    Err(eyre!(
+                        "unknown --provider `{other}` (sim | replay:<path> | http)"
+                    ))
+                }
+            }
+        }
+    }
+
+    /// The flag syntax this spec round-trips to.
+    pub fn label(&self) -> String {
+        match self {
+            ProviderSpec::Sim => "sim".into(),
+            ProviderSpec::Replay(p) => format!("replay:{}", p.display()),
+            ProviderSpec::Http => "http".into(),
+        }
+    }
+}
+
+#[cfg(feature = "http-provider")]
+fn http_backend() -> Result<Arc<dyn Provider>> {
+    Ok(Arc::new(super::http::HttpProvider::from_env()?))
+}
+
+#[cfg(not(feature = "http-provider"))]
+fn http_backend() -> Result<Arc<dyn Provider>> {
+    Err(eyre!(
+        "this binary was built without the `http-provider` feature; \
+         rebuild with `cargo build --features http-provider`"
+    ))
+}
+
+/// Build a provider from a spec, optionally recording every live call
+/// to `transcripts` (ignored for replay — a replayed run records
+/// nothing, its journal already is the record).
+pub fn build(spec: &ProviderSpec, transcripts: Option<&Path>) -> Result<Arc<dyn Provider>> {
+    let base: Arc<dyn Provider> = match spec {
+        ProviderSpec::Sim => Arc::new(SimProvider::new()),
+        ProviderSpec::Replay(path) => return Ok(Arc::new(ReplayProvider::open(path)?)),
+        ProviderSpec::Http => http_backend()?,
+    };
+    match transcripts {
+        Some(path) => {
+            let journal = TranscriptStore::open(path)?;
+            Ok(Arc::new(RecordingProvider::new(base, journal)?))
+        }
+        None => Ok(base),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guard::GuardCode;
+
+    fn sample_report() -> GuardReport {
+        GuardReport {
+            diagnostics: vec![GuardDiagnostic {
+                code: GuardCode::ResourceLimit,
+                field: "vector_width".into(),
+                message: "vector_width=3 not a supported packing".into(),
+                hint: Some(("vector_width".into(), "4".into())),
+            }],
+        }
+    }
+
+    #[test]
+    fn request_hash_stable_and_sensitive() {
+        let a = GenerationRequest::generate("GPT-4.1", "prompt body", 42);
+        assert_eq!(a.hash(), a.hash());
+        assert_eq!(a.hash().len(), 64);
+        let mut b = a.clone();
+        b.seed = 43;
+        assert_ne!(a.hash(), b.hash());
+        let mut c = a.clone();
+        c.prompt.push('x');
+        assert_ne!(a.hash(), c.hash());
+        let mut d = a.clone();
+        d.model = "Claude-Sonnet-4".into();
+        assert_ne!(a.hash(), d.hash());
+        let e = GenerationRequest::repair("GPT-4.1", "prompt body", &GuardReport::default(), 42);
+        assert_ne!(a.hash(), e.hash(), "role must be part of the hash");
+        let f = GenerationRequest::repair("GPT-4.1", "prompt body", &sample_report(), 42);
+        assert_ne!(e.hash(), f.hash(), "diagnostics must be part of the hash");
+    }
+
+    #[test]
+    fn provider_spec_parses() {
+        assert_eq!(ProviderSpec::parse("sim").unwrap(), ProviderSpec::Sim);
+        assert_eq!(ProviderSpec::parse("").unwrap(), ProviderSpec::Sim);
+        assert_eq!(ProviderSpec::parse("http").unwrap(), ProviderSpec::Http);
+        assert_eq!(
+            ProviderSpec::parse("replay:a/b.jsonl").unwrap(),
+            ProviderSpec::Replay(PathBuf::from("a/b.jsonl"))
+        );
+        assert!(ProviderSpec::parse("replay").is_err());
+        assert!(ProviderSpec::parse("replay:").is_err());
+        assert!(ProviderSpec::parse("martian").is_err());
+    }
+
+    #[test]
+    fn sim_provider_rejects_unknown_model() {
+        let p = SimProvider::new();
+        let req = GenerationRequest::generate("llama", "x", 0);
+        assert!(p.call(&req).is_err());
+        assert_eq!(p.calls(), 0);
+    }
+}

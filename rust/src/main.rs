@@ -17,7 +17,7 @@ use std::path::PathBuf;
 
 use evoengineer::campaign::{results, CampaignConfig};
 use evoengineer::evals::Evaluator;
-use evoengineer::llm::profile;
+use evoengineer::llm::{profile, provider, GenerationRequest, Provider, ProviderSpec};
 use evoengineer::methods::{self, Archive, RepairPolicy, RunCtx};
 use evoengineer::runtime::Runtime;
 use evoengineer::store::EvalStore;
@@ -35,6 +35,8 @@ COMMANDS:
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
       --repair MODE          also demo the stage-0 guard: off|diagnose|
                              repair|repair:K (default off)
+      --provider P           generation backend for the guard demo:
+                             sim|replay:<path>|http (default sim)
   optimize <op>              one optimization run, verbose
       --method NAME          (default evoengineer-full)
       --model NAME           (default gpt)
@@ -42,6 +44,11 @@ COMMANDS:
       --budget N             (default 45)
       --repair MODE          stage-0 guard policy: off|diagnose|repair|
                              repair:K (default off; repair = repair:2)
+      --provider P           generation backend: sim|replay:<path>|http
+                             (default sim; http needs the http-provider
+                             build feature + EVO_HTTP_* env)
+      --transcripts PATH     record every provider call to a journal
+                             (default off for single runs)
       --cache PATH           persistent eval cache (default off)
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
   campaign                   run the method x model x op x seed sweep
@@ -53,6 +60,12 @@ COMMANDS:
       --budget N             trials per run (default 45)
       --repair MODE          stage-0 guard policy for every cell:
                              off|diagnose|repair|repair:K (default off)
+      --provider P           generation backend for every cell:
+                             sim|replay:<path>|http (default sim)
+      --transcripts PATH|off provider-call journal; a recorded campaign
+                             replays bit-identically with zero live
+                             generation via --provider replay:<path>
+                             (default <artifacts>/transcripts.jsonl)
       --concurrency N        workers (default: CPUs)
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
       --out PATH             (default results/records.jsonl)
@@ -63,7 +76,7 @@ COMMANDS:
                              (default <artifacts>/eval_cache.jsonl)
   report <which>             regenerate a table/figure from records
       which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|
-             validity|convergence|methods|all
+             validity|tokens|convergence|methods|all
       --records PATH         (default results/records.jsonl; a partial
                              checkpoint journal also works)
       --model NAME           model filter for fig4 (fig6/7 = other models)
@@ -150,17 +163,23 @@ fn run() -> Result<()> {
 
     let runtime_shards = args.get_num("runtime-shards", 0usize)?;
     let repair = RepairPolicy::parse(&args.get("repair", "off"))?;
+    let provider_spec = ProviderSpec::parse(&args.get("provider", "sim"))?;
 
     match cmd {
-        "smoke" => smoke(&artifacts, runtime_shards, repair),
+        "smoke" => smoke(&artifacts, runtime_shards, repair, &provider_spec),
         "optimize" => {
             let op = args
                 .positional
                 .get(1)
                 .ok_or_else(|| eyre!("optimize needs an op name"))?;
-            // Cache is opt-in for single runs (default off keeps a
-            // one-shot `optimize` free of filesystem side effects).
+            // Cache and transcripts are opt-in for single runs (default
+            // off keeps a one-shot `optimize` free of filesystem side
+            // effects).
             let cache = match args.get("cache", "off").as_str() {
+                "off" | "" => None,
+                p => Some(PathBuf::from(p)),
+            };
+            let transcripts = match args.get("transcripts", "off").as_str() {
                 "off" | "" => None,
                 p => Some(PathBuf::from(p)),
             };
@@ -172,6 +191,8 @@ fn run() -> Result<()> {
                 args.get_num("seed", 0u64)?,
                 args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
                 repair,
+                &provider_spec,
+                transcripts.as_deref(),
                 cache.as_deref(),
                 runtime_shards,
             )
@@ -182,6 +203,16 @@ fn run() -> Result<()> {
                 "checkpoint",
                 &format!("{}.checkpoint.jsonl", out.display()),
             ));
+            // Campaigns record transcripts by default: the journal is
+            // what makes the sweep re-runnable with zero live
+            // generation (`--provider replay:<path>`).
+            let transcripts = match args
+                .get("transcripts", &artifacts.join("transcripts.jsonl").display().to_string())
+                .as_str()
+            {
+                "off" | "" => None,
+                p => Some(PathBuf::from(p)),
+            };
             let cfg = CampaignConfig {
                 methods: split_csv(&args.get("methods", "")),
                 models: split_csv(&args.get("models", "")),
@@ -190,6 +221,8 @@ fn run() -> Result<()> {
                 max_ops: args.get_num("max-ops", 0usize)?,
                 budget: args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
                 repair,
+                provider: provider_spec,
+                transcripts,
                 concurrency: args.get_num("concurrency", 0usize)?,
                 quiet: args.has("quiet"),
                 checkpoint: Some(checkpoint),
@@ -266,7 +299,12 @@ fn make_evaluator(
     Ok(evaluator)
 }
 
-fn smoke(artifacts: &PathBuf, runtime_shards: usize, repair: RepairPolicy) -> Result<()> {
+fn smoke(
+    artifacts: &PathBuf,
+    runtime_shards: usize,
+    repair: RepairPolicy,
+    provider_spec: &ProviderSpec,
+) -> Result<()> {
     let evaluator = make_evaluator(artifacts, None, runtime_shards)?;
     let reg = &evaluator.registry;
     println!("manifest: {} ops ({} runtime shards)", reg.ops.len(), evaluator.runtime_shards());
@@ -284,7 +322,8 @@ fn smoke(artifacts: &PathBuf, runtime_shards: usize, repair: RepairPolicy) -> Re
         stats.executions, stats.compiles, stats.cache_hits
     );
     if repair != RepairPolicy::Off {
-        guard_demo(&evaluator, repair)?;
+        let llm_provider = provider::build(provider_spec, None)?;
+        guard_demo(&evaluator, repair, llm_provider.as_ref())?;
     }
     println!("smoke OK");
     Ok(())
@@ -292,10 +331,14 @@ fn smoke(artifacts: &PathBuf, runtime_shards: usize, repair: RepairPolicy) -> Re
 
 /// `smoke --repair MODE`: run the stage-0 guard over one candidate per
 /// invalid class and show the structured diagnostics (and, under a
-/// repair policy, whether the LLM repair loop mends each one).
-fn guard_demo(evaluator: &Evaluator, repair: RepairPolicy) -> Result<()> {
+/// repair policy, whether the LLM repair loop mends each one — issued
+/// as typed `Repair` requests through the configured provider).
+fn guard_demo(
+    evaluator: &Evaluator,
+    repair: RepairPolicy,
+    llm_provider: &dyn Provider,
+) -> Result<()> {
     use evoengineer::dsl::{self, KernelSpec};
-    use evoengineer::llm;
 
     let task = evaluator.registry.get("matmul_64").expect("matmul_64 in dataset").clone();
     let base = KernelSpec::baseline(&task.name);
@@ -319,8 +362,9 @@ fn guard_demo(evaluator: &Evaluator, repair: RepairPolicy) -> Result<()> {
     spec.schedule.threads_per_block = 100;
     cases.push(("resource limit", dsl::print(&spec)));
 
-    println!("\nstage-0 guard ({}):", repair.label());
+    println!("\nstage-0 guard ({}, provider {}):", repair.label(), llm_provider.label());
     let rng = evoengineer::util::Rng::new(0).derive("guard-demo");
+    let model = profile::by_name("gpt").expect("gpt profile").name;
     for (label, src) in &cases {
         let report = evaluator.guard_check(src, &task);
         println!("  {label}: {} diagnostic(s)", report.diagnostics.len());
@@ -332,8 +376,9 @@ fn guard_demo(evaluator: &Evaluator, repair: RepairPolicy) -> Result<()> {
             let mut rep = report;
             let mut attempt = 0;
             while !rep.pass() && attempt < max_attempts {
-                let mut r = rng.derive(&format!("{label}/{attempt}"));
-                text = llm::repair(&text, &rep, profile::by_name("gpt").unwrap(), &mut r).text;
+                let seed = rng.derive_seed(&format!("{label}/{attempt}"));
+                let req = GenerationRequest::repair(model, &text, &rep, seed);
+                text = llm_provider.call(&req)?.text;
                 rep = evaluator.guard_check(&text, &task);
                 attempt += 1;
             }
@@ -355,6 +400,8 @@ fn optimize(
     seed: u64,
     budget: usize,
     repair: RepairPolicy,
+    provider_spec: &ProviderSpec,
+    transcripts: Option<&std::path::Path>,
     cache: Option<&std::path::Path>,
     runtime_shards: usize,
 ) -> Result<()> {
@@ -364,8 +411,9 @@ fn optimize(
         .get(op)
         .ok_or_else(|| eyre!("unknown op `{op}`"))?
         .clone();
-    let method = methods::by_name(method).ok_or_else(|| eyre!("unknown method `{method}`"))?;
+    let method = methods::by_name(method)?;
     let model = profile::by_name(model).ok_or_else(|| eyre!("unknown model `{model}`"))?;
+    let llm_provider = provider::build(provider_spec, transcripts)?;
     let archive = Archive::new();
     let ctx = RunCtx {
         evaluator: &evaluator,
@@ -375,20 +423,32 @@ fn optimize(
         archive: &archive,
         budget,
         repair,
+        provider: llm_provider.as_ref(),
     };
-    let rec = method.run(&ctx);
+    let rec = method.run(&ctx)?;
     println!(
         "{} / {} on {} (seed {seed}): best speedup {:.2}x vs baseline, {:.2}x vs PyTorch",
         rec.method, rec.model, rec.op, rec.best_speedup, rec.best_pytorch_speedup
     );
     println!(
-        "trials: {} (compiled {:.0}%, correct {:.0}%), tokens: {} prompt + {} completion",
+        "trials: {} (compiled {:.0}%, correct {:.0}%), tokens: {} prompt + {} completion \
+         (provider {})",
         rec.trials,
         100.0 * rec.compiled_trials as f64 / rec.trials.max(1) as f64,
         100.0 * rec.correct_trials as f64 / rec.trials.max(1) as f64,
         rec.prompt_tokens,
-        rec.completion_tokens
+        rec.completion_tokens,
+        rec.provider
     );
+    match (provider_spec, transcripts) {
+        // provider::build ignores --transcripts under replay: the
+        // journal already is the record, nothing new is written.
+        (ProviderSpec::Replay(journal), _) => {
+            println!("replayed every generation from {} (zero live calls)", journal.display())
+        }
+        (_, Some(path)) => println!("transcripts: recorded to {}", path.display()),
+        _ => {}
+    }
     if rec.repair_policy != "off" {
         println!(
             "stage-0 guard ({}): {} rejected, {} repaired ({} repair calls in the budget)",
@@ -430,6 +490,18 @@ fn campaign(
     let records = evoengineer::campaign::run(&cfg, evaluator)?;
     results::save(out, &records)?;
     println!("saved {} records to {}", records.len(), out.display());
+    match (&cfg.provider, &cfg.transcripts) {
+        (ProviderSpec::Replay(path), _) => {
+            println!("replayed every generation from {} (zero live calls)", path.display())
+        }
+        (_, Some(path)) => println!(
+            "transcripts: recorded to {} (re-run bit-identically with \
+             --provider replay:{})",
+            path.display(),
+            path.display()
+        ),
+        _ => {}
+    }
     if let Some(store) = store {
         println!(
             "eval cache: {} hits, {} misses this run ({} entries in {})",
@@ -443,6 +515,7 @@ fn campaign(
     if records.iter().any(|r| r.repair_policy != "off") {
         println!("\n{}", report::validity(&records));
     }
+    println!("\n{}", report::tokens(&records));
     Ok(())
 }
 
@@ -466,6 +539,7 @@ fn run_report(artifacts: &PathBuf, which: &str, records_path: &PathBuf, model: &
             match which {
                 "table4" => report::table4(&records),
                 "validity" => report::validity(&records),
+                "tokens" => report::tokens(&records),
                 "table7" => report::table7(&records),
                 "table8" => report::table8(&records),
                 "fig1" => report::fig1(&records),
@@ -481,6 +555,7 @@ fn run_report(artifacts: &PathBuf, which: &str, records_path: &PathBuf, model: &
                         report::methods_table(),
                         report::table4(&records),
                         report::validity(&records),
+                        report::tokens(&records),
                         report::fig1(&records),
                         report::fig4(&records, model),
                         report::fig5(&records),

@@ -50,7 +50,7 @@ impl Method for AiCudaEngineer {
         "AI CUDA Engineer".into()
     }
 
-    fn run(&self, ctx: &RunCtx) -> KernelRunRecord {
+    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
         let name = self.name();
         let mut session = Session::new(ctx, &name);
         let mut pop = Elite::new(5); // "providing five correct kernels"
@@ -68,7 +68,7 @@ impl Method for AiCudaEngineer {
         // --- Stage 1: Convert ------------------------------------------
         let mut converted = false;
         for _ in 0..CONVERT_RETRIES {
-            match session.trial(&convert_cfg, &mut pop, CONVERT, None, None) {
+            match session.trial(&convert_cfg, &mut pop, CONVERT, None, None)? {
                 Some(cand) if cand.compiled => {
                     converted = true;
                     break;
@@ -79,18 +79,18 @@ impl Method for AiCudaEngineer {
         }
         if !converted {
             // Terminal conversion failure: the op is classified failed.
-            return session.finish(&name);
+            return Ok(session.finish(&name));
         }
 
         // --- Stage 2: Translate ------------------------------------------
         // One pass; failure does not halt.
-        let _ = session.trial(&convert_cfg, &mut pop, TRANSLATE, None, None);
+        let _ = session.trial(&convert_cfg, &mut pop, TRANSLATE, None, None)?;
 
         // --- Stage 3: Optimize ---------------------------------------------
         let optimize_cfg = GuidanceConfig::aicuda();
         while session.budget_left() > COMPOSE_TRIALS {
             if session
-                .trial(&optimize_cfg, &mut pop, OPTIMIZE, None, None)
+                .trial(&optimize_cfg, &mut pop, OPTIMIZE, None, None)?
                 .is_none()
             {
                 break;
@@ -121,13 +121,13 @@ impl Method for AiCudaEngineer {
                 Some(rag_cands.clone())
             };
             if session
-                .trial(&optimize_cfg, &mut pop, COMPOSE, None, history)
+                .trial(&optimize_cfg, &mut pop, COMPOSE, None, history)?
                 .is_none()
             {
                 break;
             }
         }
-        session.finish(&name)
+        Ok(session.finish(&name))
     }
 }
 
@@ -135,7 +135,7 @@ impl Method for AiCudaEngineer {
 mod tests {
     use super::*;
     use crate::evals::Evaluator;
-    use crate::llm::MODELS;
+    use crate::llm::{SimProvider, MODELS};
     use crate::methods::common::{Archive, ArchiveEntry};
     use crate::runtime::Runtime;
     use crate::tasks::TaskRegistry;
@@ -156,6 +156,7 @@ mod tests {
         let evaluator = eval();
         let task = evaluator.registry.get("matmul_32").unwrap().clone();
         let archive = Archive::new();
+        let provider = SimProvider::new();
         archive.record(ArchiveEntry {
             op: "matmul_64".into(),
             family: "matmul".into(),
@@ -168,10 +169,11 @@ mod tests {
             model: &MODELS[0],
             seed: 4,
             archive: &archive,
+            provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
         };
-        let rec = AiCudaEngineer::new().run(&ctx);
+        let rec = AiCudaEngineer::new().run(&ctx).unwrap();
         assert!(rec.trials <= 45);
         assert!(rec.trials >= 40, "{}", rec.trials);
         // Verbose prompting must cost notably more than a Free run.
@@ -181,11 +183,13 @@ mod tests {
             model: &MODELS[0],
             seed: 4,
             archive: &archive,
+            provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
         };
         let free = crate::methods::EvoEngineer::new(crate::methods::EvoVariant::Free)
-            .run(&free_ctx);
+            .run(&free_ctx)
+            .unwrap();
         assert!(
             rec.prompt_tokens > 2 * free.prompt_tokens,
             "aicuda={} free={}",

@@ -2,10 +2,11 @@
 //!
 //! One `Session` = one (method, model, op, seed) optimization run with
 //! the paper's 45-trial budget. `Session::trial` performs the full
-//! closed loop: guidance assembly → prompt render → SimLLM call →
-//! stage-0 validity guard (+ LLM repair loop, per [`RepairPolicy`]) →
-//! two-stage evaluation → population update → insight recording →
-//! token accounting.
+//! closed loop: guidance assembly → prompt render → provider call
+//! (typed [`GenerationRequest`] through the [`Provider`] seam,
+//! DESIGN.md §12) → stage-0 validity guard (+ LLM repair loop, per
+//! [`RepairPolicy`]) → two-stage evaluation → population update →
+//! insight recording → token accounting.
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
@@ -13,7 +14,7 @@ use std::sync::{Arc, RwLock};
 use crate::costmodel::price;
 use crate::dsl;
 use crate::evals::{EvalOutcome, Evaluator};
-use crate::llm::{self, ModelProfile};
+use crate::llm::{GenerationRequest, ModelProfile, Provider};
 use crate::population::{Candidate, Population};
 use crate::tasks::OpTask;
 use crate::traverse::prompt::{profiling_line, render};
@@ -55,11 +56,15 @@ impl Archive {
     pub fn similar(&self, op: &str, family: &str, k: usize) -> Vec<ArchiveEntry> {
         let g = self.inner.read().unwrap();
         let mut entries: Vec<&ArchiveEntry> = g.values().filter(|e| e.op != op).collect();
+        // total_cmp, not partial_cmp().unwrap(): a NaN speedup (e.g.
+        // from a degenerate benchmark) must rank last, not panic the
+        // sort; mapping NaN below every finite value keeps it out of
+        // the top-k regardless of NaN sign.
+        let rank = |x: f64| if x.is_nan() { f64::NEG_INFINITY } else { x };
         entries.sort_by(|a, b| {
             let fa = (a.family == family) as u8;
             let fb = (b.family == family) as u8;
-            fb.cmp(&fa)
-                .then(b.speedup.partial_cmp(&a.speedup).unwrap())
+            fb.cmp(&fa).then(rank(b.speedup).total_cmp(&rank(a.speedup)))
         });
         entries.into_iter().take(k).cloned().collect()
     }
@@ -146,6 +151,9 @@ pub struct RunCtx<'a> {
     pub budget: usize,
     /// Stage-0 guard / repair policy (method ablation axis).
     pub repair: RepairPolicy,
+    /// The generation backend every trial's `Generate`/`Repair` call
+    /// goes through (DESIGN.md §12).
+    pub provider: &'a dyn Provider,
 }
 
 /// Final record of one (method, model, op, seed) run — the unit the
@@ -175,6 +183,10 @@ pub struct KernelRunRecord {
     pub repair_attempts: usize,
     /// The [`RepairPolicy`] label the run executed under.
     pub repair_policy: String,
+    /// Label of the generation backend ("sim", "http"; a replayed run
+    /// carries the label of the backend that recorded its transcript,
+    /// so record/replay runs are byte-identical).
+    pub provider: String,
     /// Best valid speedup vs baseline; 1.0 when no valid improvement
     /// was found (the paper's failure convention, §5.1).
     pub best_speedup: f64,
@@ -211,6 +223,7 @@ impl KernelRunRecord {
             ("repaired_trials", Json::Num(self.repaired_trials as f64)),
             ("repair_attempts", Json::Num(self.repair_attempts as f64)),
             ("repair_policy", Json::Str(self.repair_policy.clone())),
+            ("provider", Json::Str(self.provider.clone())),
             ("best_speedup", Json::Num(self.best_speedup)),
             ("best_pytorch_speedup", Json::Num(self.best_pytorch_speedup)),
             ("any_valid", Json::Bool(self.any_valid)),
@@ -274,6 +287,13 @@ impl KernelRunRecord {
                 .get("repair_policy")
                 .and_then(|x| x.as_str())
                 .unwrap_or("off")
+                .to_string(),
+            // Absent in pre-provider record files: every historical
+            // run was generated by the SimLLM.
+            provider: v
+                .get("provider")
+                .and_then(|x| x.as_str())
+                .unwrap_or("sim")
                 .to_string(),
             best_speedup: n("best_speedup")?,
             best_pytorch_speedup: n("best_pytorch_speedup")?,
@@ -391,12 +411,15 @@ impl<'a> Session<'a> {
     /// Top insights by recorded benefit (for the I3 prompt section).
     fn top_insights(&self, k: usize) -> Vec<&InsightRecord> {
         let mut v: Vec<&InsightRecord> = self.insights.iter().collect();
-        v.sort_by(|a, b| b.delta.partial_cmp(&a.delta).unwrap());
+        v.sort_by(|a, b| b.delta.total_cmp(&a.delta));
         v.truncate(k);
         v
     }
 
-    /// Run one full trial. Returns `None` when the budget is spent.
+    /// Run one full trial. Returns `Ok(None)` when the budget is
+    /// spent; `Err` only when the generation backend fails (an HTTP
+    /// error after retries, a transcript miss under replay — the sim
+    /// backend is infallible for known models).
     ///
     /// `parent_override` pins the prompt's CURRENT KERNEL (EoH's M1/M2
     /// operate on an explicit parent); `history_override` substitutes
@@ -408,9 +431,9 @@ impl<'a> Session<'a> {
         instruction: &str,
         parent_override: Option<Candidate>,
         history_override: Option<Vec<Candidate>>,
-    ) -> Option<Candidate> {
+    ) -> crate::Result<Option<Candidate>> {
         if self.budget_left() == 0 {
-            return None;
+            return Ok(None);
         }
         let trial_idx = self.trials_done;
         let mut trial_rng = self.rng.derive(&format!("trial/{trial_idx}"));
@@ -443,12 +466,16 @@ impl<'a> Session<'a> {
             instruction: instruction.to_string(),
         };
 
-        // --- prompt engineering layer + LLM call ----------------------
+        // --- prompt engineering layer + provider call -----------------
+        // The request seed is the exact word the old inline
+        // `self.rng.derive("llm/{trial_idx}")` expanded, so the sim
+        // backend reproduces the historical stream byte-for-byte.
         let prompt = render(cfg, &guidance);
-        let mut llm_rng = self.rng.derive(&format!("llm/{trial_idx}"));
-        let resp = llm::generate(&prompt, self.ctx.model, &mut llm_rng);
-        self.prompt_tokens += resp.prompt_tokens;
-        self.completion_tokens += resp.completion_tokens;
+        let llm_seed = self.rng.derive_seed(&format!("llm/{trial_idx}"));
+        let req = GenerationRequest::generate(self.ctx.model.name, &prompt, llm_seed);
+        let resp = self.ctx.provider.call(&req)?;
+        self.prompt_tokens += resp.usage.prompt_tokens;
+        self.completion_tokens += resp.usage.completion_tokens;
         self.trials_done += 1;
 
         // --- stage 0: static validity guard + LLM repair loop ---------
@@ -467,11 +494,17 @@ impl<'a> Session<'a> {
                 let initially_failed = !report.pass();
                 let mut attempt = 0;
                 while !report.pass() && attempt < max_attempts && self.budget_left() > 0 {
-                    let mut repair_rng =
-                        self.rng.derive(&format!("repair/{trial_idx}/{attempt}"));
-                    let fix = llm::repair(&text, &report, self.ctx.model, &mut repair_rng);
-                    self.prompt_tokens += fix.prompt_tokens;
-                    self.completion_tokens += fix.completion_tokens;
+                    let repair_seed =
+                        self.rng.derive_seed(&format!("repair/{trial_idx}/{attempt}"));
+                    let req = GenerationRequest::repair(
+                        self.ctx.model.name,
+                        &text,
+                        &report,
+                        repair_seed,
+                    );
+                    let fix = self.ctx.provider.call(&req)?;
+                    self.prompt_tokens += fix.usage.prompt_tokens;
+                    self.completion_tokens += fix.usage.completion_tokens;
                     self.trials_done += 1;
                     self.repair_attempts += 1;
                     text = fix.text;
@@ -532,8 +565,7 @@ impl<'a> Session<'a> {
         // per-trial top-k selection sorts this vec — see EXPERIMENTS.md
         // §Perf — and long sessions must not grow it unboundedly).
         if self.insights.len() > 128 {
-            self.insights
-                .sort_by(|a, b| b.delta.partial_cmp(&a.delta).unwrap());
+            self.insights.sort_by(|a, b| b.delta.total_cmp(&a.delta));
             self.insights.truncate(64);
         }
 
@@ -557,7 +589,7 @@ impl<'a> Session<'a> {
             .push(self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0));
 
         pop.insert(cand.clone());
-        Some(cand)
+        Ok(Some(cand))
     }
 
     /// Close the session: publish to the archive, emit the record.
@@ -584,6 +616,7 @@ impl<'a> Session<'a> {
             repaired_trials: self.repaired,
             repair_attempts: self.repair_attempts,
             repair_policy: self.ctx.repair.label(),
+            provider: self.ctx.provider.label().to_string(),
             best_speedup: self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0),
             best_pytorch_speedup: self.best_pt,
             any_valid: self.best.is_some(),
@@ -592,5 +625,66 @@ impl<'a> Session<'a> {
             trajectory: self.trajectory,
             best_src: self.best.map(|b| b.src),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(op: &str, family: &str, speedup: f64) -> ArchiveEntry {
+        ArchiveEntry {
+            op: op.into(),
+            family: family.into(),
+            src: format!("kernel {op}"),
+            speedup,
+        }
+    }
+
+    #[test]
+    fn archive_similar_orders_by_family_then_speedup() {
+        let a = Archive::new();
+        a.record(entry("m1", "matmul", 2.0));
+        a.record(entry("m2", "matmul", 3.0));
+        a.record(entry("r1", "reduce", 9.0));
+        let sim = a.similar("self", "matmul", 3);
+        assert_eq!(sim.len(), 3);
+        assert_eq!(sim[0].op, "m2"); // same family, fastest first
+        assert_eq!(sim[1].op, "m1");
+        assert_eq!(sim[2].op, "r1"); // other family last despite 9.0x
+    }
+
+    #[test]
+    fn archive_similar_survives_nan_speedups() {
+        // Regression: partial_cmp().unwrap() panicked on NaN entries
+        // (a degenerate benchmark can produce a NaN speedup); the sort
+        // must instead rank NaN last and never panic.
+        let a = Archive::new();
+        a.record(entry("nan_op", "matmul", f64::NAN));
+        a.record(entry("m1", "matmul", 2.0));
+        a.record(entry("m2", "matmul", 1.5));
+        a.record(entry("nan_op2", "matmul", f64::NAN));
+        let sim = a.similar("self", "matmul", 4);
+        assert_eq!(sim.len(), 4);
+        assert_eq!(sim[0].op, "m1");
+        assert_eq!(sim[1].op, "m2");
+        assert!(sim[2].speedup.is_nan());
+        assert!(sim[3].speedup.is_nan());
+        // NaN entries never displace finite ones from a tight top-k.
+        let top2 = a.similar("self", "matmul", 2);
+        assert_eq!(top2.len(), 2);
+        assert!(top2.iter().all(|e| !e.speedup.is_nan()), "{top2:?}");
+    }
+
+    #[test]
+    fn repair_policy_parse_roundtrip() {
+        assert_eq!(RepairPolicy::parse("off").unwrap(), RepairPolicy::Off);
+        assert_eq!(RepairPolicy::parse("diagnose").unwrap(), RepairPolicy::Diagnose);
+        assert_eq!(
+            RepairPolicy::parse("repair:3").unwrap(),
+            RepairPolicy::Repair { max_attempts: 3 }
+        );
+        assert!(RepairPolicy::parse("repair:0").is_err());
+        assert!(RepairPolicy::parse("mend").is_err());
     }
 }

@@ -38,7 +38,7 @@ impl Method for Eoh {
         "EvoEngineer-Solution (EoH)".into()
     }
 
-    fn run(&self, ctx: &RunCtx) -> KernelRunRecord {
+    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
         let name = self.name();
         let cfg = GuidanceConfig::eoh();
         let mut session = Session::new(ctx, &name);
@@ -47,8 +47,8 @@ impl Method for Eoh {
 
         // Initialization: 5 trials (§A.4).
         for _ in 0..5 {
-            if session.trial(&cfg, &mut pop, E1, None, None).is_none() {
-                return session.finish(&name);
+            if session.trial(&cfg, &mut pop, E1, None, None)?.is_none() {
+                return Ok(session.finish(&name));
             }
         }
 
@@ -61,12 +61,12 @@ impl Method for Eoh {
                 } else {
                     None
                 };
-                if session.trial(&cfg, &mut pop, op, parent, None).is_none() {
+                if session.trial(&cfg, &mut pop, op, parent, None)?.is_none() {
                     break 'gens;
                 }
             }
         }
-        session.finish(&name)
+        Ok(session.finish(&name))
     }
 }
 
@@ -74,7 +74,7 @@ impl Method for Eoh {
 mod tests {
     use super::*;
     use crate::evals::Evaluator;
-    use crate::llm::MODELS;
+    use crate::llm::{SimProvider, MODELS};
     use crate::methods::common::Archive;
     use crate::runtime::Runtime;
     use crate::tasks::TaskRegistry;
@@ -91,16 +91,18 @@ mod tests {
         let evaluator = Evaluator::new(reg, Runtime::new().unwrap());
         let task = evaluator.registry.get("gelu_64").unwrap().clone();
         let archive = Archive::new();
+        let provider = SimProvider::new();
         let ctx = RunCtx {
             evaluator: &evaluator,
             task: &task,
             model: &MODELS[1],
             seed: 2,
             archive: &archive,
+            provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
         };
-        let rec = Eoh::new().run(&ctx);
+        let rec = Eoh::new().run(&ctx).unwrap();
         assert_eq!(rec.trials, 45); // 5 + 10*4
         assert!(rec.best_speedup >= 1.0);
     }

@@ -55,7 +55,7 @@ impl Method for EvoEngineer {
         }
     }
 
-    fn run(&self, ctx: &RunCtx) -> KernelRunRecord {
+    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
         let name = self.name();
         let cfg = self.config();
         let mut session = Session::new(ctx, &name);
@@ -64,31 +64,28 @@ impl Method for EvoEngineer {
             EvoVariant::Free | EvoVariant::Insight => {
                 let mut pop = SingleBest::new();
                 session.bootstrap(&mut pop);
-                while session
-                    .trial(&cfg, &mut pop, IMPROVE, None, None)
-                    .is_some()
-                {}
+                while session.trial(&cfg, &mut pop, IMPROVE, None, None)?.is_some() {}
             }
             EvoVariant::Full => {
                 let mut pop = Elite::new(4);
                 session.bootstrap(&mut pop);
                 // Initialization: 5 from-scratch proposals (§A.4).
                 for _ in 0..5 {
-                    if session.trial(&cfg, &mut pop, INIT, None, None).is_none() {
+                    if session.trial(&cfg, &mut pop, INIT, None, None)?.is_none() {
                         break;
                     }
                 }
                 // 10 generations × 4 offspring = 40 trials.
                 'gens: for _gen in 0..10 {
                     for _off in 0..4 {
-                        if session.trial(&cfg, &mut pop, IMPROVE, None, None).is_none() {
+                        if session.trial(&cfg, &mut pop, IMPROVE, None, None)?.is_none() {
                             break 'gens;
                         }
                     }
                 }
             }
         }
-        session.finish(&name)
+        Ok(session.finish(&name))
     }
 }
 
@@ -96,7 +93,7 @@ impl Method for EvoEngineer {
 mod tests {
     use super::*;
     use crate::evals::Evaluator;
-    use crate::llm::MODELS;
+    use crate::llm::{SimProvider, MODELS};
     use crate::methods::common::{Archive, RepairPolicy};
     use crate::runtime::Runtime;
     use crate::tasks::TaskRegistry;
@@ -117,16 +114,18 @@ mod tests {
         let evaluator = eval();
         let task = evaluator.registry.get("relu_64").unwrap().clone();
         let archive = Archive::new();
+        let provider = SimProvider::new();
         let ctx = RunCtx {
             evaluator: &evaluator,
             task: &task,
             model: &MODELS[0],
             seed: 1,
             archive: &archive,
+            provider: &provider,
             budget: 45,
             repair: RepairPolicy::Off,
         };
-        let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx);
+        let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap();
         assert_eq!(rec.trials, 45);
         assert_eq!(rec.trajectory.len(), 45);
         assert!(rec.best_speedup >= 1.0);
@@ -140,6 +139,7 @@ mod tests {
         let evaluator = eval();
         let task = evaluator.registry.get("softmax_64").unwrap().clone();
         let archive = Archive::new();
+        let provider = SimProvider::new();
         let run = |seed| {
             let ctx = RunCtx {
                 evaluator: &evaluator,
@@ -147,10 +147,11 @@ mod tests {
                 model: &MODELS[2],
                 seed,
                 archive: &archive,
+                provider: &provider,
                 budget: 20,
                 repair: RepairPolicy::Off,
             };
-            EvoEngineer::new(EvoVariant::Full).run(&ctx)
+            EvoEngineer::new(EvoVariant::Full).run(&ctx).unwrap()
         };
         let a = run(7);
         let b = run(7);
@@ -172,6 +173,7 @@ mod tests {
         let evaluator = eval();
         let task = evaluator.registry.get("cumsum_rows_64").unwrap().clone();
         let archive = Archive::new();
+        let provider = SimProvider::new();
         let run = |repair| {
             let ctx = RunCtx {
                 evaluator: &evaluator,
@@ -179,10 +181,11 @@ mod tests {
                 model: &MODELS[0],
                 seed: 0,
                 archive: &archive,
+                provider: &provider,
                 budget: 45,
                 repair,
             };
-            EvoEngineer::new(EvoVariant::Free).run(&ctx)
+            EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap()
         };
         let off = run(RepairPolicy::Off);
         assert_eq!(off.repair_policy, "off");
@@ -237,6 +240,7 @@ mod tests {
         let evaluator = eval();
         let task = evaluator.registry.get("matmul_64").unwrap().clone();
         let archive = Archive::new();
+        let provider = SimProvider::new();
         let mk = |variant| {
             let ctx = RunCtx {
                 evaluator: &evaluator,
@@ -244,10 +248,11 @@ mod tests {
                 model: &MODELS[0],
                 seed: 3,
                 archive: &archive,
+                provider: &provider,
                 budget: 30,
                 repair: RepairPolicy::Off,
             };
-            EvoEngineer::new(variant).run(&ctx)
+            EvoEngineer::new(variant).run(&ctx).unwrap()
         };
         let free = mk(EvoVariant::Free);
         let full = mk(EvoVariant::Full);

@@ -28,14 +28,14 @@ impl Method for FunSearch {
         "FunSearch".into()
     }
 
-    fn run(&self, ctx: &RunCtx) -> KernelRunRecord {
+    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
         let name = self.name();
         let cfg = GuidanceConfig::funsearch();
         let mut session = Session::new(ctx, &name);
         let mut pop = Islands::funsearch();
         session.bootstrap(&mut pop);
-        while session.trial(&cfg, &mut pop, IMPROVE, None, None).is_some() {}
-        session.finish(&name)
+        while session.trial(&cfg, &mut pop, IMPROVE, None, None)?.is_some() {}
+        Ok(session.finish(&name))
     }
 }
 
@@ -43,7 +43,7 @@ impl Method for FunSearch {
 mod tests {
     use super::*;
     use crate::evals::Evaluator;
-    use crate::llm::MODELS;
+    use crate::llm::{SimProvider, MODELS};
     use crate::methods::common::Archive;
     use crate::runtime::Runtime;
     use crate::tasks::TaskRegistry;
@@ -60,16 +60,18 @@ mod tests {
         let evaluator = Evaluator::new(reg, Runtime::new().unwrap());
         let task = evaluator.registry.get("cumsum_rows_64").unwrap().clone();
         let archive = Archive::new();
+        let provider = SimProvider::new();
         let ctx = RunCtx {
             evaluator: &evaluator,
             task: &task,
             model: &MODELS[0],
             seed: 5,
             archive: &archive,
+            provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
         };
-        let rec = FunSearch::new().run(&ctx);
+        let rec = FunSearch::new().run(&ctx).unwrap();
         assert_eq!(rec.trials, 45);
         assert!(rec.best_speedup >= 1.0);
     }

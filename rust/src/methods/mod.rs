@@ -18,10 +18,12 @@ pub use evoengineer::{EvoEngineer, EvoVariant};
 pub use funsearch::FunSearch;
 
 /// A kernel-optimization method: consumes a 45-trial budget on one op
-/// and reports the run record.
+/// and reports the run record. `Err` only when the generation backend
+/// fails mid-run (HTTP failure after retries, transcript miss under
+/// replay); the sim backend never errors for known models.
 pub trait Method: Send + Sync {
     fn name(&self) -> String;
-    fn run(&self, ctx: &RunCtx) -> KernelRunRecord;
+    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord>;
 }
 
 /// All six methods in the paper's presentation order.
@@ -36,12 +38,48 @@ pub fn all_methods() -> Vec<Box<dyn Method>> {
     ]
 }
 
-/// Look a method up by (case-insensitive) name fragment.
-pub fn by_name(name: &str) -> Option<Box<dyn Method>> {
-    let needle = name.to_ascii_lowercase().replace(['-', '_'], "");
-    all_methods()
-        .into_iter()
-        .find(|m| m.name().to_ascii_lowercase().replace(['-', '_'], "").contains(&needle))
+/// Normalized form used for method-name matching: lowercase, letters
+/// and digits only ("EvoEngineer-Solution (EoH)" → "evoengineersolutioneoh").
+fn normalize(name: &str) -> String {
+    name.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+/// Look a method up by (case-insensitive) name. An exact normalized
+/// match always wins; otherwise the name is treated as a fragment and
+/// must match exactly one method — an ambiguous fragment (e.g.
+/// "evoengineer", which matches all four EvoEngineer configurations)
+/// is an error listing the candidates instead of silently resolving to
+/// whichever variant happens to come first.
+pub fn by_name(name: &str) -> crate::Result<Box<dyn Method>> {
+    let needle = normalize(name);
+    let mut methods = all_methods();
+    if let Some(i) = methods.iter().position(|m| normalize(&m.name()) == needle) {
+        return Ok(methods.swap_remove(i));
+    }
+    let mut matches: Vec<usize> = methods
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| !needle.is_empty() && normalize(&m.name()).contains(&needle))
+        .map(|(i, _)| i)
+        .collect();
+    match matches.len() {
+        1 => Ok(methods.swap_remove(matches.pop().expect("one match"))),
+        0 => Err(crate::eyre!(
+            "unknown method `{name}` (available: {})",
+            methods.iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
+        )),
+        _ => Err(crate::eyre!(
+            "ambiguous method `{name}`: matches {} — use the full name",
+            matches
+                .iter()
+                .map(|&i| methods[i].name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -58,9 +96,39 @@ mod tests {
     }
 
     #[test]
-    fn lookup() {
-        assert!(by_name("funsearch").is_some());
-        assert!(by_name("evoengineer-full").is_some());
-        assert!(by_name("nope").is_none());
+    fn lookup_exact_and_unique_fragments() {
+        assert_eq!(by_name("funsearch").unwrap().name(), "FunSearch");
+        assert_eq!(by_name("evoengineer-full").unwrap().name(), "EvoEngineer-Full");
+        assert_eq!(by_name("EvoEngineer_Free").unwrap().name(), "EvoEngineer-Free");
+        // Unique fragments still resolve.
+        assert_eq!(by_name("eoh").unwrap().name(), "EvoEngineer-Solution (EoH)");
+        assert_eq!(by_name("ai cuda").unwrap().name(), "AI CUDA Engineer");
+        assert_eq!(by_name("insight").unwrap().name(), "EvoEngineer-Insight");
+    }
+
+    #[test]
+    fn lookup_rejects_unknown_with_candidates() {
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown method `nope`"), "{err}");
+        assert!(err.contains("FunSearch"), "{err}");
+        let empty = by_name("").unwrap_err().to_string();
+        assert!(empty.contains("unknown method"), "{empty}");
+    }
+
+    #[test]
+    fn lookup_rejects_ambiguous_fragment_listing_candidates() {
+        // Regression: "evoengineer" silently resolved to the first
+        // variant in presentation order; it must now error and name
+        // every matching configuration.
+        let err = by_name("evoengineer").unwrap_err().to_string();
+        assert!(err.contains("ambiguous method `evoengineer`"), "{err}");
+        for candidate in [
+            "EvoEngineer-Free",
+            "EvoEngineer-Insight",
+            "EvoEngineer-Full",
+            "EvoEngineer-Solution (EoH)",
+        ] {
+            assert!(err.contains(candidate), "{err} missing {candidate}");
+        }
     }
 }

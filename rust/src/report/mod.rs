@@ -120,6 +120,52 @@ pub fn validity(records: &[KernelRunRecord]) -> String {
     out
 }
 
+/// Per-provider/model token usage and modeled API cost (the provider
+/// seam's accounting view, DESIGN.md §12; pricing per paper Table 6).
+pub fn tokens(records: &[KernelRunRecord]) -> String {
+    let rows = metrics::token_cost_table(records);
+    let mut out = String::new();
+    writeln!(out, "TOKENS — usage and modeled API cost per provider x model").unwrap();
+    writeln!(
+        out,
+        "{:<10} {:<16} {:>6} {:>14} {:>14} {:>12}",
+        "Provider", "Model", "Runs", "Prompt tok", "Compl. tok", "Cost USD"
+    )
+    .unwrap();
+    writeln!(out, "{}", hr(78)).unwrap();
+    let mut total_tokens = 0u64;
+    let mut total_cost = 0.0f64;
+    let mut any_unpriced = false;
+    for row in &rows {
+        let cost = match row.cost_usd {
+            Some(c) => {
+                total_cost += c;
+                format!("{c:.2}")
+            }
+            None => {
+                any_unpriced = true;
+                "n/a".to_string()
+            }
+        };
+        total_tokens += row.total_tokens();
+        writeln!(
+            out,
+            "{:<10} {:<16} {:>6} {:>14} {:>14} {:>12}",
+            row.provider, row.model, row.runs, row.prompt_tokens, row.completion_tokens, cost
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "total: {} tokens, ${:.2}{}",
+        total_tokens,
+        total_cost,
+        if any_unpriced { " (+ unpriced models)" } else { "" }
+    )
+    .unwrap();
+    out
+}
+
 /// Table 5 — dataset composition.
 pub fn table5(registry: &TaskRegistry) -> String {
     let mut out = String::new();
@@ -464,6 +510,7 @@ mod tests {
                     repaired_trials: 2,
                     repair_attempts: 3,
                     repair_policy: "repair:2".into(),
+                    provider: "sim".into(),
                     best_speedup: speed,
                     best_pytorch_speedup: pt,
                     any_valid: true,
@@ -491,11 +538,24 @@ mod tests {
             fig9(&recs),
             methods_table(),
             validity(&recs),
+            tokens(&recs),
         ] {
             assert!(!text.is_empty());
         }
         assert!(fig5(&recs).contains("matmul_64"));
         assert!(table7(&recs).contains("AI CUDA Engineer"));
+    }
+
+    #[test]
+    fn token_report_prices_known_models() {
+        let text = tokens(&records());
+        assert!(text.contains("Provider"), "{text}");
+        assert!(text.contains("sim"), "{text}");
+        assert!(text.contains("GPT-4.1"), "{text}");
+        // 4 runs x (1000 prompt + 400 completion) tokens priced at
+        // Table 6 rates: a nonzero dollar figure must appear.
+        assert!(text.contains("total: 5600 tokens"), "{text}");
+        assert!(!text.contains("n/a"), "{text}");
     }
 
     #[test]

@@ -32,8 +32,10 @@
 //! folds the per-session `stats` trailer lines into one.
 
 pub mod hash;
+pub mod transcript;
 
 pub use hash::{key_for_source, sha256_hex, EvalKey};
+pub use transcript::{TranscriptEntry, TranscriptStore};
 
 use std::collections::HashMap;
 use std::io::{BufRead, Write as _};

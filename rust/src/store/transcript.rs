@@ -1,0 +1,339 @@
+//! Transcript journal for LLM provider calls (DESIGN.md §12).
+//!
+//! Every live provider call (SimLLM or HTTP) can be recorded to an
+//! append-only JSONL journal — by default `<artifacts>/transcripts.jsonl`
+//! — keyed by the [`GenerationRequest`] content hash. A recorded
+//! campaign can then be re-run with `--provider replay:<path>` and
+//! every generation is served from the journal, bit-identically and
+//! with **zero live generator calls**: the replay backend has no inner
+//! provider to fall back to, so a request outside the journal is a
+//! hard error, not a silent regeneration.
+//!
+//! Journal format (one JSON object per line):
+//!
+//! * `{"type":"meta","format":1,"provider":"sim"}` — written once,
+//!   before the first call line: which backend generated the entries.
+//!   Replay impersonates this label so records and reports match the
+//!   recording run byte-for-byte.
+//! * `{"type":"call","key":"<sha256 of the request>","role":"generate",
+//!   "model":"GPT-4.1","seed":"1234...","text":"...","insight":"...",
+//!   "prompt_tokens":N,"completion_tokens":N}` — one provider call.
+//!   `seed` is a decimal *string* (u64 seeds exceed the f64-exact
+//!   integer range our JSON numbers can carry).
+//!
+//! Durability matches the eval cache: one flushed line per record, a
+//! torn final line from a killed process is truncated on reopen, and
+//! duplicate keys keep their first (original) entry.
+//!
+//! [`GenerationRequest`]: crate::llm::GenerationRequest
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::util::json::{self, Json};
+use crate::{eyre, Result, WrapErr as _};
+
+/// One journaled provider call: everything the caller got back, plus
+/// the request identity needed to audit it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TranscriptEntry {
+    /// `"generate"` or `"repair"` (the [`GenerationRole`] label).
+    ///
+    /// [`GenerationRole`]: crate::llm::GenerationRole
+    pub role: String,
+    pub model: String,
+    pub seed: u64,
+    pub text: String,
+    pub insight: String,
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+}
+
+/// Append-only transcript journal with an in-memory index.
+pub struct TranscriptStore {
+    path: PathBuf,
+    map: RwLock<HashMap<String, TranscriptEntry>>,
+    writer: Mutex<std::fs::File>,
+    /// Label of the backend that generated the journal's entries
+    /// (from the `meta` line; set on first `record_source`).
+    source: RwLock<Option<String>>,
+}
+
+impl TranscriptStore {
+    /// Open (or create) the journal at `path` and index its entries.
+    /// Torn final lines are truncated; other corrupt lines are skipped
+    /// with a warning.
+    pub fn open(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).context("creating transcript dir")?;
+            }
+        }
+        let torn =
+            crate::util::truncate_torn_tail(&path).context("repairing transcript tail")?;
+        if torn > 0 {
+            eprintln!(
+                "warning: transcript {}: truncated {torn} bytes of torn final line",
+                path.display()
+            );
+        }
+        let mut map = HashMap::new();
+        let mut source = None;
+        if path.exists() {
+            let f = std::fs::File::open(&path).context("opening transcript journal")?;
+            for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse_line(&line) {
+                    Ok(Line::Meta { provider }) => {
+                        source.get_or_insert(provider);
+                    }
+                    Ok(Line::Call { key, entry }) => {
+                        map.entry(key).or_insert(entry);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "warning: transcript {}: skipping bad line {}: {e}",
+                            path.display(),
+                            i + 1
+                        );
+                    }
+                }
+            }
+        }
+        let writer = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .context("opening transcript journal for append")?;
+        Ok(Arc::new(Self {
+            path,
+            map: RwLock::new(map),
+            writer: Mutex::new(writer),
+            source: RwLock::new(source),
+        }))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Label of the backend that generated this journal, if recorded.
+    pub fn source(&self) -> Option<String> {
+        self.source.read().unwrap().clone()
+    }
+
+    /// Declare the generating backend. Journals are single-source: a
+    /// journal recorded by one backend refuses calls from another (the
+    /// replay impersonation contract would otherwise be ambiguous).
+    pub fn record_source(&self, label: &str) -> Result<()> {
+        {
+            let g = self.source.read().unwrap();
+            match g.as_deref() {
+                Some(existing) if existing == label => return Ok(()),
+                Some(existing) => {
+                    return Err(eyre!(
+                        "transcript journal {} was recorded by `{existing}`; refusing to \
+                         append `{label}` calls (use a fresh journal per backend)",
+                        self.path.display()
+                    ))
+                }
+                None => {}
+            }
+        }
+        let mut g = self.source.write().unwrap();
+        if g.is_none() {
+            let line = Json::obj(vec![
+                ("type", Json::Str("meta".into())),
+                ("format", Json::Num(1.0)),
+                ("provider", Json::Str(label.to_string())),
+            ])
+            .to_string();
+            let mut w = self.writer.lock().unwrap();
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+            w.flush()?;
+            *g = Some(label.to_string());
+        }
+        Ok(())
+    }
+
+    /// Journaled response for a request hash.
+    pub fn lookup(&self, key: &str) -> Option<TranscriptEntry> {
+        self.map.read().unwrap().get(key).cloned()
+    }
+
+    /// Append one call. A key already present (identical request seen
+    /// twice — same prompt, seed and role) keeps its first entry and
+    /// is not re-journaled.
+    pub fn append(&self, key: &str, entry: TranscriptEntry) -> Result<()> {
+        {
+            let mut g = self.map.write().unwrap();
+            if g.contains_key(key) {
+                return Ok(());
+            }
+            g.insert(key.to_string(), entry.clone());
+        }
+        let line = call_line(key, &entry).to_string();
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(line.as_bytes())?;
+        w.write_all(b"\n")?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Unique journaled calls.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+enum Line {
+    Meta { provider: String },
+    Call { key: String, entry: TranscriptEntry },
+}
+
+fn call_line(key: &str, e: &TranscriptEntry) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("call".into())),
+        ("key", Json::Str(key.to_string())),
+        ("role", Json::Str(e.role.clone())),
+        ("model", Json::Str(e.model.clone())),
+        // Decimal string: u64 seeds exceed f64-exact integers.
+        ("seed", Json::Str(e.seed.to_string())),
+        ("text", Json::Str(e.text.clone())),
+        ("insight", Json::Str(e.insight.clone())),
+        ("prompt_tokens", Json::Num(e.prompt_tokens as f64)),
+        ("completion_tokens", Json::Num(e.completion_tokens as f64)),
+    ])
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(String::from)
+        .ok_or_else(|| eyre!("missing string field `{key}`"))
+}
+
+fn parse_line(line: &str) -> Result<Line> {
+    let v = json::parse(line).map_err(|e| eyre!("{e}"))?;
+    match v.get("type").and_then(|t| t.as_str()) {
+        Some("meta") => Ok(Line::Meta { provider: get_str(&v, "provider")? }),
+        Some("call") => {
+            let key = get_str(&v, "key")?;
+            let seed_str = get_str(&v, "seed")?;
+            let seed: u64 = seed_str
+                .parse()
+                .map_err(|_| eyre!("bad seed `{seed_str}`"))?;
+            let entry = TranscriptEntry {
+                role: get_str(&v, "role")?,
+                model: get_str(&v, "model")?,
+                seed,
+                text: get_str(&v, "text")?,
+                insight: get_str(&v, "insight")?,
+                prompt_tokens: v
+                    .get("prompt_tokens")
+                    .and_then(|x| x.as_u64())
+                    .ok_or_else(|| eyre!("missing prompt_tokens"))?,
+                completion_tokens: v
+                    .get("completion_tokens")
+                    .and_then(|x| x.as_u64())
+                    .ok_or_else(|| eyre!("missing completion_tokens"))?,
+            };
+            Ok(Line::Call { key, entry })
+        }
+        other => Err(eyre!("unknown transcript line type {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("evo_transcript_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join("transcripts.jsonl")
+    }
+
+    fn sample(seed: u64) -> TranscriptEntry {
+        TranscriptEntry {
+            role: "generate".into(),
+            model: "GPT-4.1".into(),
+            seed,
+            text: "kernel matmul_64 { semantics: opt; }".into(),
+            insight: "widened the loads".into(),
+            prompt_tokens: 120,
+            completion_tokens: 48,
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_reopen_with_meta() {
+        let path = tmpfile("rt");
+        std::fs::remove_file(&path).ok();
+        // u64 seed beyond f64-exact range must survive the journal.
+        let big_seed = u64::MAX - 12345;
+        {
+            let t = TranscriptStore::open(&path).unwrap();
+            t.record_source("sim").unwrap();
+            t.append("k1", sample(big_seed)).unwrap();
+            let mut repair = sample(7);
+            repair.role = "repair".into();
+            t.append("k2", repair).unwrap();
+            // Duplicate key: first entry wins, no second line.
+            let mut dup = sample(1);
+            dup.text = "SHOULD NOT APPEAR".into();
+            t.append("k1", dup).unwrap();
+        }
+        let t = TranscriptStore::open(&path).unwrap();
+        assert_eq!(t.source().as_deref(), Some("sim"));
+        assert_eq!(t.len(), 2);
+        let back = t.lookup("k1").unwrap();
+        assert_eq!(back, sample(big_seed));
+        assert_eq!(t.lookup("k2").unwrap().role, "repair");
+        assert!(t.lookup("k3").is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn single_source_contract() {
+        let path = tmpfile("src");
+        std::fs::remove_file(&path).ok();
+        let t = TranscriptStore::open(&path).unwrap();
+        t.record_source("sim").unwrap();
+        t.record_source("sim").unwrap(); // idempotent
+        let err = t.record_source("http").unwrap_err();
+        assert!(err.to_string().contains("recorded by `sim`"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated() {
+        let path = tmpfile("torn");
+        std::fs::remove_file(&path).ok();
+        {
+            let t = TranscriptStore::open(&path).unwrap();
+            t.record_source("sim").unwrap();
+            t.append("k1", sample(3)).unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"type\":\"call\",\"key\":\"dead").unwrap();
+        }
+        let t = TranscriptStore::open(&path).unwrap();
+        assert_eq!(t.len(), 1);
+        assert!(t.lookup("k1").is_some());
+        std::fs::remove_file(&path).ok();
+    }
+}

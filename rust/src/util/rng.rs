@@ -32,15 +32,24 @@ impl Rng {
         }
     }
 
-    /// Derive a child stream from a label — used to give every
-    /// (op, trial, purpose) tuple its own independent stream.
-    pub fn derive(&self, label: &str) -> Rng {
+    /// The u64 seed [`Rng::derive`] would expand for `label` — the
+    /// whole child stream in one word. This is the provider seam
+    /// (DESIGN.md §12): a [`crate::llm::GenerationRequest`] carries
+    /// this seed, and `Rng::new(seed)` on the other side reproduces
+    /// the exact stream `derive` would have handed out in-process.
+    pub fn derive_seed(&self, label: &str) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a
         for b in label.as_bytes() {
             h ^= *b as u64;
             h = h.wrapping_mul(0x1000_0000_01b3);
         }
-        Rng::new(h ^ self.s[0] ^ self.s[2].rotate_left(17))
+        h ^ self.s[0] ^ self.s[2].rotate_left(17)
+    }
+
+    /// Derive a child stream from a label — used to give every
+    /// (op, trial, purpose) tuple its own independent stream.
+    pub fn derive(&self, label: &str) -> Rng {
+        Rng::new(self.derive_seed(label))
     }
 
     #[inline]
@@ -109,6 +118,22 @@ mod tests {
         let mut b = Rng::new(42);
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derive_seed_reconstructs_the_derived_stream() {
+        // The provider-seam contract: `derive(label)` and
+        // `Rng::new(derive_seed(label))` are the same stream, so a
+        // seed shipped in a GenerationRequest reproduces exactly what
+        // the in-process derivation would have produced.
+        let base = Rng::new(0xDEAD_BEEF).derive("session/x");
+        for label in ["llm/0", "repair/3/1", ""] {
+            let mut a = base.derive(label);
+            let mut b = Rng::new(base.derive_seed(label));
+            for _ in 0..32 {
+                assert_eq!(a.next_u64(), b.next_u64(), "label {label:?}");
+            }
         }
     }
 

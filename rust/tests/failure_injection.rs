@@ -177,17 +177,19 @@ fn zero_budget_run_is_well_formed() {
     let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap());
     let task = reg.get("matmul_32").unwrap().clone();
     let archive = Archive::new();
+    let provider = evoengineer::llm::SimProvider::new();
     let ctx = evoengineer::methods::RunCtx {
         evaluator: &ev,
         task: &task,
         model: &evoengineer::llm::MODELS[0],
         seed: 0,
         archive: &archive,
+        provider: &provider,
         budget: 0,
         repair: evoengineer::methods::RepairPolicy::Off,
     };
     for method in evoengineer::methods::all_methods() {
-        let rec = method.run(&ctx);
+        let rec = method.run(&ctx).unwrap();
         assert_eq!(rec.trials, 0, "{}", method.name());
         assert_eq!(rec.best_speedup, 1.0);
         assert!(!rec.any_valid);

@@ -12,7 +12,7 @@ use evoengineer::costmodel::baseline_schedule;
 use evoengineer::dsl::{self, KernelSpec};
 use evoengineer::evals::{EvalOutcome, Evaluator};
 use evoengineer::guard::{self, GuardCode};
-use evoengineer::llm::MODELS;
+use evoengineer::llm::{SimProvider, MODELS};
 use evoengineer::methods::{EvoEngineer, EvoVariant, Method};
 use evoengineer::methods::{Archive, RepairPolicy, RunCtx};
 use evoengineer::runtime::Runtime;
@@ -251,6 +251,7 @@ fn repair_loop_cache_replay_is_bit_identical() {
 
     let task = reg.get("cumsum_rows_64").unwrap().clone();
     let archive = Archive::new();
+    let provider = SimProvider::new();
     let run = |store: Arc<EvalStore>| {
         let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap()).with_store(store);
         let ctx = RunCtx {
@@ -259,10 +260,11 @@ fn repair_loop_cache_replay_is_bit_identical() {
             model: &MODELS[0],
             seed: 3,
             archive: &archive,
+            provider: &provider,
             budget: 25,
             repair: RepairPolicy::Repair { max_attempts: 2 },
         };
-        let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx);
+        let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap();
         (rec, ev.runtime_stats().unwrap().executions)
     };
 

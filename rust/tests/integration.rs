@@ -9,7 +9,7 @@ use evoengineer::campaign::{self, results, CampaignConfig};
 use evoengineer::costmodel::baseline_schedule;
 use evoengineer::dsl::{self, KernelSpec};
 use evoengineer::evals::{EvalOutcome, Evaluator};
-use evoengineer::llm::{self, MODELS};
+use evoengineer::llm::{self, SimProvider, MODELS};
 use evoengineer::methods::{self, Archive, RepairPolicy, RunCtx};
 use evoengineer::metrics;
 use evoengineer::report;
@@ -121,6 +121,7 @@ fn prompt_to_llm_loop_respects_information() {
 fn all_methods_run_on_all_categories() {
     let ev = evaluator();
     let archive = Archive::new();
+    let provider = SimProvider::new();
     for method in methods::all_methods() {
         for op_name in ["matmul_32", "cumsum_rows_64"] {
             let task = ev.registry.get(op_name).unwrap().clone();
@@ -130,10 +131,11 @@ fn all_methods_run_on_all_categories() {
                 model: &MODELS[0],
                 seed: 11,
                 archive: &archive,
+                provider: &provider,
                 budget: 12,
                 repair: RepairPolicy::Off,
             };
-            let rec = method.run(&ctx);
+            let rec = method.run(&ctx).unwrap();
             assert!(rec.trials <= 12, "{}", method.name());
             assert!(rec.best_speedup >= 1.0);
             assert_eq!(rec.op, op_name);
@@ -256,6 +258,7 @@ fn guarded_campaign_reports_stage_breakdown() {
 fn token_ordering_matches_figure4() {
     let ev = evaluator();
     let archive = Archive::new();
+    let provider = SimProvider::new();
     let task = ev.registry.get("matmul_64").unwrap().clone();
     let tokens = |name: &str| {
         let ctx = RunCtx {
@@ -264,10 +267,11 @@ fn token_ordering_matches_figure4() {
             model: &MODELS[0],
             seed: 0,
             archive: &archive,
+            provider: &provider,
             budget: 30,
             repair: RepairPolicy::Off,
         };
-        let rec = methods::by_name(name).unwrap().run(&ctx);
+        let rec = methods::by_name(name).unwrap().run(&ctx).unwrap();
         rec.total_tokens()
     };
     let free = tokens("evoengineer-free");

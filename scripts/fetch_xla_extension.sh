@@ -1,49 +1,76 @@
 #!/usr/bin/env bash
 # Download the xla_extension native library (the PJRT implementation
 # behind the rust `xla` crate) and verify it against the pinned SHA-256
-# in scripts/xla_extension.sha256 before unpacking — a release tarball
-# swapped underneath us must fail loudly, not link silently.
+# in scripts/xla_extension.sha256 before unpacking.
 #
-# Trust-on-first-use: while the pin file still holds the REPLACE_ME
-# sentinel, the script prints the computed digest (and writes it to the
-# GitHub step summary when available) and proceeds with a loud warning,
-# so CI stays green until a maintainer commits the recorded value; once
-# a real pin is present, any mismatch is a hard failure.
+# Enforcement is unconditional — there is no trust-on-first-use path:
 #
-# Usage: scripts/fetch_xla_extension.sh   (in CI; exports env via
-#        $GITHUB_ENV when set, prints exports otherwise)
+#   * digest mismatch           -> hard failure (a release tarball swapped
+#                                  underneath us must fail loudly, not
+#                                  link silently);
+#   * pin file missing/UNPINNED -> hard failure with the recording
+#                                  one-liner (an unpinned download is a
+#                                  silent supply-chain hole, not a warning).
+#
+# To (re)record the pin from a machine you trust:
+#
+#   scripts/fetch_xla_extension.sh --record-pin
+#
+# which downloads the tarball, writes its digest to the pin file, and
+# unpacks it. Verify the recorded value against an independent source
+# (e.g. a second network path) before committing it.
+#
+# Usage: scripts/fetch_xla_extension.sh [--record-pin]
+#        (in CI; exports env via $GITHUB_ENV when set, prints exports
+#        otherwise)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 URL="${XLA_EXTENSION_URL:-https://github.com/elixir-nx/xla/releases/download/v0.4.4/xla_extension-x86_64-linux-gnu-cpu.tar.gz}"
 PIN_FILE="scripts/xla_extension.sha256"
 TARBALL="xla_extension.tar.gz"
+RECORD_PIN=0
+if [ "${1:-}" = "--record-pin" ]; then
+  RECORD_PIN=1
+fi
 
 curl -fsSL -o "$TARBALL" "$URL"
 DIGEST="$(sha256sum "$TARBALL" | awk '{print $1}')"
-PINNED="$(awk '{print $1}' "$PIN_FILE")"
 
-if [ "$PINNED" = "REPLACE_ME" ]; then
-  echo "WARNING: xla_extension pin is the REPLACE_ME sentinel — download NOT verified."
-  echo "Computed digest of $URL:"
+if [ "$RECORD_PIN" = 1 ]; then
+  echo "$DIGEST  $TARBALL" > "$PIN_FILE"
+  echo "recorded pin for $URL:"
   echo "  $DIGEST"
-  echo "Activate the pin:  echo '$DIGEST  $TARBALL' > $PIN_FILE"
-  if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
-    {
-      echo "### :warning: xla_extension checksum unpinned (trust-on-first-use)"
-      echo '```'
-      echo "$DIGEST  $TARBALL"
-      echo '```'
-      echo "Commit this into \`$PIN_FILE\` to activate enforcement."
-    } >> "$GITHUB_STEP_SUMMARY"
-  fi
-elif [ "$DIGEST" != "$PINNED" ]; then
-  echo "xla_extension checksum mismatch!" >&2
-  echo "  pinned:   $PINNED ($PIN_FILE)" >&2
-  echo "  computed: $DIGEST" >&2
-  exit 1
+  echo "Verify this digest against an independent source, then commit $PIN_FILE."
 else
-  echo "xla_extension checksum OK ($DIGEST)"
+  PINNED="$(awk 'NR==1 {print $1}' "$PIN_FILE" 2>/dev/null || true)"
+  if [ -z "$PINNED" ] || [ "$PINNED" = "UNPINNED" ] || [ "$PINNED" = "REPLACE_ME" ]; then
+    echo "xla_extension checksum pin is not recorded — refusing the unverified download." >&2
+    echo "  computed digest of $URL:" >&2
+    echo "    $DIGEST" >&2
+    echo "  record it from a trusted machine with:" >&2
+    echo "    scripts/fetch_xla_extension.sh --record-pin" >&2
+    if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+      {
+        echo "### :x: xla_extension pin not recorded — job failed by design"
+        echo "One-time bootstrap: verify this digest against an independent"
+        echo "download, then commit it as \`$PIN_FILE\`:"
+        echo '```'
+        echo "$DIGEST  $TARBALL"
+        echo '```'
+      } >> "$GITHUB_STEP_SUMMARY"
+    fi
+    exit 1
+  elif [ "$DIGEST" != "$PINNED" ]; then
+    echo "xla_extension checksum mismatch!" >&2
+    echo "  pinned:   $PINNED ($PIN_FILE)" >&2
+    echo "  computed: $DIGEST" >&2
+    echo "Either the upstream release changed or the download was tampered with." >&2
+    echo "Investigate before re-recording the pin (--record-pin)." >&2
+    exit 1
+  else
+    echo "xla_extension checksum OK ($DIGEST)"
+  fi
 fi
 
 tar xzf "$TARBALL"

@@ -19,4 +19,8 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "== benches: cargo bench --no-run (must always compile)"
 cargo bench --no-run
 
+echo "== feature matrix: the optional http-provider backend must never rot"
+cargo build --release -p evoengineer --no-default-features
+cargo build --release -p evoengineer --features http-provider
+
 echo "verify OK"
