@@ -27,14 +27,19 @@
 
 pub mod results;
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::evals::Evaluator;
 use crate::llm::{profile, provider, ModelProfile, ProviderSpec};
-use crate::methods::{self, Archive, ArchiveEntry, KernelRunRecord, RepairPolicy, RunCtx};
+use crate::methods::engine::{self, EngineOpts, EventSink, Interrupted, TrialGate};
+use crate::methods::{
+    self, Archive, ArchiveEntry, JournalSink, KernelRunRecord, Method, ProgressSink, RepairPolicy,
+    RunCtx,
+};
+use crate::store::events::{self, EventJournal};
 use crate::tasks::OpTask;
 use crate::{eyre, Result};
 
@@ -75,10 +80,25 @@ pub struct CampaignConfig {
     /// Skip cells already present in the checkpoint journal and merge
     /// their records into the result.
     pub resume: bool,
-    /// Stop claiming new jobs after this many completions in this
-    /// process (0 = run to completion). Test hook that simulates a
-    /// mid-sweep kill at a cell boundary; not exposed on the CLI.
+    /// Claim at most this many cells in this process (0 = run to
+    /// completion). Test hook that simulates a mid-sweep kill at a
+    /// cell boundary; claim-gated, so exactly `min(stop_after, grid)`
+    /// cells complete regardless of worker scheduling. Not exposed on
+    /// the CLI.
     pub stop_after: usize,
+    /// Simulated mid-*cell* kill: abort the sweep after this many
+    /// trial groups have started across the whole process (0 = off).
+    /// The interrupted cell is not checkpointed; `--resume` finishes
+    /// it at trial granularity (DESIGN.md §13). Test hook, not exposed
+    /// on the CLI.
+    pub stop_after_trials: usize,
+    /// Structured per-trial event journal (`--events`): every cell's
+    /// [`TrialEvent`](crate::store::TrialEvent)s are appended here.
+    pub events: Option<PathBuf>,
+    /// Speculative generation-prefetch workers per cell (`--prefetch`,
+    /// 0 = off): provider calls for predicted future trials overlap
+    /// with compile+bench of the current one (DESIGN.md §13).
+    pub prefetch: usize,
 }
 
 impl Default for CampaignConfig {
@@ -98,6 +118,9 @@ impl Default for CampaignConfig {
             checkpoint: None,
             resume: false,
             stop_after: 0,
+            stop_after_trials: 0,
+            events: None,
+            prefetch: 0,
         }
     }
 }
@@ -112,17 +135,23 @@ fn resolve_models(names: &[String]) -> Result<Vec<&'static ModelProfile>> {
         .collect()
 }
 
-fn resolve_method_names(names: &[String]) -> Result<Vec<String>> {
+/// Resolve each requested method exactly once, up front — the workers
+/// share the `Arc`s instead of re-running the name lookup per claimed
+/// cell.
+fn resolve_methods(names: &[String]) -> Result<Vec<Arc<dyn Method>>> {
     if names.is_empty() {
-        return Ok(methods::all_methods().iter().map(|m| m.name()).collect());
+        return Ok(methods::all_methods().into_iter().map(Arc::from).collect());
     }
-    names.iter().map(|n| methods::by_name(n).map(|m| m.name())).collect()
+    names
+        .iter()
+        .map(|n| methods::by_name(n).map(Arc::from))
+        .collect()
 }
 
 /// One grid point.
 #[derive(Clone)]
 struct Job {
-    method: String,
+    method: Arc<dyn Method>,
     model: &'static ModelProfile,
     op: OpTask,
     seed: u64,
@@ -143,14 +172,18 @@ fn cell_of(r: &KernelRunRecord) -> (String, String, String, u64) {
 /// re-run still reports exactly the requested sweep).
 pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRecord>> {
     let models = resolve_models(&cfg.models)?;
-    let method_names = resolve_method_names(&cfg.methods)?;
+    let method_impls = resolve_methods(&cfg.methods)?;
+    let method_names: Vec<String> = method_impls.iter().map(|m| m.name()).collect();
     // One provider shared by every worker (they are Sync); recording
     // wraps it transparently when a transcript journal is configured.
+    // On resume, already-journaled calls are served from the journal
+    // (trial-granular resume: an interrupted cell's completed trials
+    // replay with zero live generation).
     let transcripts = match &cfg.provider {
         ProviderSpec::Replay(_) => None, // a replayed run records nothing
         _ => cfg.transcripts.as_deref(),
     };
-    let llm_provider = provider::build(&cfg.provider, transcripts)?;
+    let llm_provider = provider::build(&cfg.provider, transcripts, cfg.resume)?;
     let mut ops: Vec<OpTask> = evaluator
         .registry
         .ops
@@ -165,7 +198,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     anyhow::ensure!(!ops.is_empty(), "no ops match the filter");
 
     let mut jobs = Vec::new();
-    for method in &method_names {
+    for method in &method_impls {
         for model in &models {
             for op in &ops {
                 for &seed in &cfg.seeds {
@@ -191,7 +224,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             .ok_or_else(|| eyre!("--resume requires a checkpoint journal"))?;
         let grid: HashSet<(String, String, String, u64)> = jobs
             .iter()
-            .map(|j| (j.method.clone(), j.model.name.to_string(), j.op.name.clone(), j.seed))
+            .map(|j| (j.method.name(), j.model.name.to_string(), j.op.name.clone(), j.seed))
             .collect();
         let loaded = results::load_lenient(path)?;
         let mut budget_mismatch = 0usize;
@@ -223,7 +256,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         prior.retain(|r| seen.insert(cell_of(r)));
         jobs.retain(|j| {
             !seen.contains(&(
-                j.method.clone(),
+                j.method.name(),
                 j.model.name.to_string(),
                 j.op.name.clone(),
                 j.seed,
@@ -280,6 +313,38 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         Some(path) => Some(Mutex::new(results::Appender::create(path)?)),
         None => None,
     };
+
+    // Engine plumbing (DESIGN.md §13): the per-trial event sinks shared
+    // by every worker, the trial-granular kill gate, and — on resume —
+    // the prior event journal's per-cell (trial, src_hash) index used
+    // to verify that replayed trials of half-finished cells re-derive
+    // bit-identical emissions.
+    let mut sinks: Vec<Arc<dyn EventSink>> = Vec::new();
+    let mut verify_replay: HashMap<events::CellKey, Vec<(usize, String)>> = HashMap::new();
+    if let Some(path) = &cfg.events {
+        if cfg.resume && path.exists() {
+            verify_replay = events::completed_trials(&EventJournal::load(path)?);
+            if !cfg.quiet && !verify_replay.is_empty() {
+                eprintln!(
+                    "campaign: event journal holds {} half-finished cell(s); their \
+                     completed trials replay warm and are verified against it",
+                    verify_replay.len()
+                );
+            }
+        }
+        let journal = if cfg.resume {
+            EventJournal::open(path)?
+        } else {
+            EventJournal::create(path)?
+        };
+        sinks.push(Arc::new(JournalSink::new(journal)));
+    }
+    if !cfg.quiet {
+        sinks.push(Arc::new(ProgressSink::campaign(total)));
+    }
+    let trial_gate = (cfg.stop_after_trials > 0)
+        .then(|| Arc::new(TrialGate::new(cfg.stop_after_trials)));
+
     let budget = cfg.budget;
     let repair = cfg.repair;
     let quiet = cfg.quiet;
@@ -292,7 +357,10 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     // First provider failure (transcript miss, HTTP outage) aborts the
     // sweep: the flag stops workers claiming new cells, the error is
     // surfaced to the caller. Already-journaled cells stay resumable.
+    // A TrialGate interruption sets only `interrupted` — a simulated
+    // kill is a healthy partial sweep, not a failure.
     let failed = Arc::new(AtomicBool::new(false));
+    let interrupted = Arc::new(AtomicBool::new(false));
     let first_error: Arc<Mutex<Option<anyhow::Error>>> = Arc::new(Mutex::new(None));
 
     std::thread::scope(|scope| {
@@ -306,20 +374,26 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             let appender = &appender;
             let llm_provider = llm_provider.clone();
             let failed = failed.clone();
+            let interrupted = interrupted.clone();
             let first_error = first_error.clone();
+            let sinks = sinks.clone();
+            let trial_gate = trial_gate.clone();
+            let verify_replay = &verify_replay;
             scope.spawn(move || loop {
-                if stop_after > 0 && done.load(Ordering::Relaxed) >= stop_after {
-                    break; // simulated kill: stop claiming work
-                }
-                if failed.load(Ordering::Relaxed) {
-                    break; // another worker hit a provider failure
+                if failed.load(Ordering::Relaxed) || interrupted.load(Ordering::Relaxed) {
+                    break; // another worker hit a failure / simulated kill
                 }
                 let idx = next.fetch_add(1, Ordering::Relaxed);
                 if idx >= jobs.len() {
                     break;
                 }
+                if stop_after > 0 && idx >= stop_after {
+                    // Simulated cell-boundary kill: the claim gate makes
+                    // the completed-cell count exactly min(stop_after,
+                    // grid), with no completion-count race.
+                    break;
+                }
                 let job = &jobs[idx];
-                let method = methods::by_name(&job.method).expect("method resolved above");
                 let ctx = RunCtx {
                     evaluator: &evaluator,
                     task: &job.op,
@@ -330,15 +404,37 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
                     repair,
                     provider: llm_provider.as_ref(),
                 };
-                let rec = match method.run(&ctx) {
+                let journaled = verify_replay.get(&(
+                    job.method.name(),
+                    job.model.name.to_string(),
+                    job.op.name.clone(),
+                    job.seed,
+                ));
+                let opts = EngineOpts {
+                    sinks: sinks.clone(),
+                    prefetch: cfg.prefetch,
+                    trial_gate: trial_gate.clone(),
+                    resumed: journaled.is_some(),
+                    verify_replay: journaled.cloned().unwrap_or_default(),
+                };
+                let rec = match engine::drive(job.method.as_ref(), &ctx, &opts) {
                     Ok(rec) => rec,
+                    Err(e) if e.downcast_ref::<Interrupted>().is_some() => {
+                        // Mid-cell simulated kill: the cell is not
+                        // checkpointed; --resume finishes it.
+                        interrupted.store(true, Ordering::Relaxed);
+                        break;
+                    }
                     Err(e) => {
                         failed.store(true, Ordering::Relaxed);
                         let mut g = first_error.lock().unwrap();
                         if g.is_none() {
                             *g = Some(e.context(format!(
                                 "cell {} / {} / {} / seed {}",
-                                job.method, job.model.name, job.op.name, job.seed
+                                job.method.name(),
+                                job.model.name,
+                                job.op.name,
+                                job.seed
                             )));
                         }
                         break;
@@ -376,7 +472,16 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         .into_iter()
         .flatten()
         .collect();
-    if cfg.stop_after == 0 && completed.len() != total {
+    let was_interrupted = interrupted.load(Ordering::Relaxed);
+    if was_interrupted && !cfg.quiet {
+        eprintln!(
+            "campaign: interrupted after {} trial groups (--stop-after-trials); \
+             {} cells completed, resume to finish",
+            cfg.stop_after_trials,
+            completed.len()
+        );
+    }
+    if cfg.stop_after == 0 && !was_interrupted && completed.len() != total {
         return Err(eyre!("worker pool lost records: {}/{total}", completed.len()));
     }
     let mut records = prior;
@@ -464,7 +569,7 @@ mod tests {
     #[test]
     fn resolve_defaults() {
         assert_eq!(resolve_models(&[]).unwrap().len(), 3);
-        assert_eq!(resolve_method_names(&[]).unwrap().len(), 6);
+        assert_eq!(resolve_methods(&[]).unwrap().len(), 6);
         assert!(resolve_models(&["martian".into()]).is_err());
     }
 
@@ -472,13 +577,12 @@ mod tests {
     fn ambiguous_method_filter_is_an_error() {
         // `--methods evoengineer` used to silently pick the first
         // variant; the campaign must now refuse the ambiguous filter.
-        let err = resolve_method_names(&["evoengineer".into()]).unwrap_err();
+        let err = resolve_methods(&["evoengineer".into()]).unwrap_err();
         assert!(err.to_string().contains("ambiguous"), "{err}");
         // Unique fragments still work for CLI ergonomics.
-        assert_eq!(
-            resolve_method_names(&["eoh".into()]).unwrap(),
-            vec!["EvoEngineer-Solution (EoH)".to_string()]
-        );
+        let resolved = resolve_methods(&["eoh".into()]).unwrap();
+        assert_eq!(resolved.len(), 1);
+        assert_eq!(resolved[0].name(), "EvoEngineer-Solution (EoH)");
     }
 
     #[test]

@@ -240,9 +240,19 @@ impl Provider for SimProvider {
 /// Transparent decorator: every call of the inner provider is appended
 /// to a [`TranscriptStore`] keyed by the request hash. The label stays
 /// the inner backend's — recording is provenance-neutral.
+///
+/// With [`RecordingProvider::with_reuse`], requests the journal
+/// already covers are served from it without touching the inner
+/// backend — the trial-granular resume mechanism (DESIGN.md §13): a
+/// resumed campaign leg replays an interrupted cell's completed trials
+/// from the journal (zero live generation, bit-identical) and goes
+/// live only from the first unrecorded call. Responses are identical
+/// either way for a deterministic backend; for HTTP this is what makes
+/// mid-cell resume cheap *and* reproducible.
 pub struct RecordingProvider {
     inner: Arc<dyn Provider>,
     journal: Arc<TranscriptStore>,
+    reuse: bool,
 }
 
 impl RecordingProvider {
@@ -250,7 +260,14 @@ impl RecordingProvider {
     /// Fails if the journal was recorded by a different backend.
     pub fn new(inner: Arc<dyn Provider>, journal: Arc<TranscriptStore>) -> Result<Self> {
         journal.record_source(inner.label())?;
-        Ok(Self { inner, journal })
+        Ok(Self { inner, journal, reuse: false })
+    }
+
+    /// Serve already-journaled requests from the journal instead of
+    /// re-calling the inner backend.
+    pub fn with_reuse(mut self, reuse: bool) -> Self {
+        self.reuse = reuse;
+        self
     }
 
     pub fn journal(&self) -> &Arc<TranscriptStore> {
@@ -264,6 +281,18 @@ impl Provider for RecordingProvider {
     }
 
     fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse> {
+        if self.reuse {
+            if let Some(entry) = self.journal.lookup(&req.hash()) {
+                return Ok(GenerationResponse {
+                    text: entry.text,
+                    insight: entry.insight,
+                    usage: TokenUsage {
+                        prompt_tokens: entry.prompt_tokens,
+                        completion_tokens: entry.completion_tokens,
+                    },
+                });
+            }
+        }
         let resp = self.inner.call(req)?;
         let entry = TranscriptEntry {
             role: req.role.as_str().to_string(),
@@ -412,8 +441,15 @@ fn http_backend() -> Result<Arc<dyn Provider>> {
 
 /// Build a provider from a spec, optionally recording every live call
 /// to `transcripts` (ignored for replay — a replayed run records
-/// nothing, its journal already is the record).
-pub fn build(spec: &ProviderSpec, transcripts: Option<&Path>) -> Result<Arc<dyn Provider>> {
+/// nothing, its journal already is the record). With `reuse`, a
+/// recording provider serves requests the journal already covers from
+/// the journal (a resumed campaign leg replays completed trials with
+/// zero live generation — DESIGN.md §13).
+pub fn build(
+    spec: &ProviderSpec,
+    transcripts: Option<&Path>,
+    reuse: bool,
+) -> Result<Arc<dyn Provider>> {
     let base: Arc<dyn Provider> = match spec {
         ProviderSpec::Sim => Arc::new(SimProvider::new()),
         ProviderSpec::Replay(path) => return Ok(Arc::new(ReplayProvider::open(path)?)),
@@ -422,7 +458,7 @@ pub fn build(spec: &ProviderSpec, transcripts: Option<&Path>) -> Result<Arc<dyn 
     match transcripts {
         Some(path) => {
             let journal = TranscriptStore::open(path)?;
-            Ok(Arc::new(RecordingProvider::new(base, journal)?))
+            Ok(Arc::new(RecordingProvider::new(base, journal)?.with_reuse(reuse)))
         }
         None => Ok(base),
     }

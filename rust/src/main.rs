@@ -14,12 +14,15 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use evoengineer::campaign::{results, CampaignConfig};
 use evoengineer::evals::Evaluator;
 use evoengineer::llm::{profile, provider, GenerationRequest, Provider, ProviderSpec};
-use evoengineer::methods::{self, Archive, RepairPolicy, RunCtx};
+use evoengineer::methods::engine::{self, EngineOpts, EventSink};
+use evoengineer::methods::{self, Archive, JournalSink, ProgressSink, RepairPolicy, RunCtx};
 use evoengineer::runtime::Runtime;
+use evoengineer::store::events::EventJournal;
 use evoengineer::store::EvalStore;
 use evoengineer::tasks::TaskRegistry;
 use evoengineer::{eyre, report, Result};
@@ -49,6 +52,13 @@ COMMANDS:
                              build feature + EVO_HTTP_* env)
       --transcripts PATH     record every provider call to a journal
                              (default off for single runs)
+      --events PATH          append structured per-trial events to a
+                             journal (default off; stderr always shows
+                             live per-trial progress)
+      --prefetch N           speculative generation-prefetch workers:
+                             provider calls for predicted future trials
+                             overlap with compile+bench (default 0 =
+                             off; byte-identical records either way)
       --cache PATH           persistent eval cache (default off)
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
   campaign                   run the method x model x op x seed sweep
@@ -70,15 +80,25 @@ COMMANDS:
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
       --out PATH             (default results/records.jsonl)
       --checkpoint PATH      cell journal (default <out>.checkpoint.jsonl)
-      --resume               skip cells already in the checkpoint
+      --resume               skip cells already in the checkpoint;
+                             half-finished cells replay their completed
+                             trials warm (eval cache + transcripts) and
+                             continue live at trial granularity
+      --events PATH|off      per-trial event journal (default off);
+                             uploaded nightly by CI, rendered by
+                             `report events`, verified on --resume
+      --prefetch N           speculative generation-prefetch workers
+                             per cell (default 0 = off)
       --quiet                suppress progress lines
       --cache PATH|off       persistent eval cache
                              (default <artifacts>/eval_cache.jsonl)
   report <which>             regenerate a table/figure from records
       which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|
-             validity|tokens|convergence|methods|all
+             validity|tokens|convergence|methods|events|all
       --records PATH         (default results/records.jsonl; a partial
                              checkpoint journal also works)
+      --events PATH          event journal for `report events`
+                             (default results/events.jsonl)
       --model NAME           model filter for fig4 (fig6/7 = other models)
   cache <stats|gc>           inspect / compact the persistent eval cache
       --cache PATH           (default <artifacts>/eval_cache.jsonl)
@@ -183,6 +203,10 @@ fn run() -> Result<()> {
                 "off" | "" => None,
                 p => Some(PathBuf::from(p)),
             };
+            let events = match args.get("events", "off").as_str() {
+                "off" | "" => None,
+                p => Some(PathBuf::from(p)),
+            };
             optimize(
                 &artifacts,
                 op,
@@ -193,6 +217,8 @@ fn run() -> Result<()> {
                 repair,
                 &provider_spec,
                 transcripts.as_deref(),
+                events.as_deref(),
+                args.get_num("prefetch", 0usize)?,
                 cache.as_deref(),
                 runtime_shards,
             )
@@ -213,6 +239,10 @@ fn run() -> Result<()> {
                 "off" | "" => None,
                 p => Some(PathBuf::from(p)),
             };
+            let events = match args.get("events", "off").as_str() {
+                "off" | "" => None,
+                p => Some(PathBuf::from(p)),
+            };
             let cfg = CampaignConfig {
                 methods: split_csv(&args.get("methods", "")),
                 models: split_csv(&args.get("models", "")),
@@ -228,6 +258,9 @@ fn run() -> Result<()> {
                 checkpoint: Some(checkpoint),
                 resume: args.has("resume"),
                 stop_after: 0,
+                stop_after_trials: 0,
+                events,
+                prefetch: args.get_num("prefetch", 0usize)?,
             };
             let cache = cache_path(&args.get("cache", ""), &artifacts);
             campaign(&artifacts, cfg, cache.as_deref(), &out, runtime_shards)
@@ -268,6 +301,7 @@ fn run() -> Result<()> {
                 &artifacts,
                 which,
                 &PathBuf::from(args.get("records", "results/records.jsonl")),
+                &PathBuf::from(args.get("events", "results/events.jsonl")),
                 &args.get("model", ""),
             )
         }
@@ -322,7 +356,7 @@ fn smoke(
         stats.executions, stats.compiles, stats.cache_hits
     );
     if repair != RepairPolicy::Off {
-        let llm_provider = provider::build(provider_spec, None)?;
+        let llm_provider = provider::build(provider_spec, None, false)?;
         guard_demo(&evaluator, repair, llm_provider.as_ref())?;
     }
     println!("smoke OK");
@@ -402,6 +436,8 @@ fn optimize(
     repair: RepairPolicy,
     provider_spec: &ProviderSpec,
     transcripts: Option<&std::path::Path>,
+    events: Option<&std::path::Path>,
+    prefetch: usize,
     cache: Option<&std::path::Path>,
     runtime_shards: usize,
 ) -> Result<()> {
@@ -413,7 +449,7 @@ fn optimize(
         .clone();
     let method = methods::by_name(method)?;
     let model = profile::by_name(model).ok_or_else(|| eyre!("unknown model `{model}`"))?;
-    let llm_provider = provider::build(provider_spec, transcripts)?;
+    let llm_provider = provider::build(provider_spec, transcripts, false)?;
     let archive = Archive::new();
     let ctx = RunCtx {
         evaluator: &evaluator,
@@ -425,7 +461,14 @@ fn optimize(
         repair,
         provider: llm_provider.as_ref(),
     };
-    let rec = method.run(&ctx)?;
+    // Single runs are "verbose": the progress sink narrates every
+    // trial live on stderr; --events additionally journals them.
+    let mut sinks: Vec<Arc<dyn EventSink>> = vec![Arc::new(ProgressSink::single_run())];
+    if let Some(path) = events {
+        sinks.push(Arc::new(JournalSink::new(EventJournal::create(path)?)));
+    }
+    let opts = EngineOpts { sinks, prefetch, ..EngineOpts::default() };
+    let rec = engine::drive(method.as_ref(), &ctx, &opts)?;
     println!(
         "{} / {} on {} (seed {seed}): best speedup {:.2}x vs baseline, {:.2}x vs PyTorch",
         rec.method, rec.model, rec.op, rec.best_speedup, rec.best_pytorch_speedup
@@ -448,6 +491,9 @@ fn optimize(
         }
         (_, Some(path)) => println!("transcripts: recorded to {}", path.display()),
         _ => {}
+    }
+    if let Some(path) = events {
+        println!("events: journaled to {} (render with `repro report events`)", path.display());
     }
     if rec.repair_policy != "off" {
         println!(
@@ -502,6 +548,13 @@ fn campaign(
         ),
         _ => {}
     }
+    if let Some(path) = &cfg.events {
+        println!(
+            "events: per-trial journal at {} (render with `repro report events --events {}`)",
+            path.display(),
+            path.display()
+        );
+    }
     if let Some(store) = store {
         println!(
             "eval cache: {} hits, {} misses this run ({} entries in {})",
@@ -519,13 +572,27 @@ fn campaign(
     Ok(())
 }
 
-fn run_report(artifacts: &PathBuf, which: &str, records_path: &PathBuf, model: &str) -> Result<()> {
+fn run_report(
+    artifacts: &PathBuf,
+    which: &str,
+    records_path: &PathBuf,
+    events_path: &PathBuf,
+    model: &str,
+) -> Result<()> {
     let text = match which {
         "table5" => {
             let reg = TaskRegistry::load(artifacts)?;
             report::table5(&reg)
         }
         "methods" => report::methods_table(),
+        "events" => {
+            if !events_path.exists() {
+                return Err(eyre!(
+                    "opening {events_path:?} — run a campaign or optimize with `--events` first"
+                ));
+            }
+            report::events(&EventJournal::load(events_path)?)
+        }
         _ => {
             // Lenient load: a mid-campaign checkpoint journal (possibly
             // with a torn final line) renders just as well as a

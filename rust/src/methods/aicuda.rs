@@ -17,10 +17,11 @@
 //!   of *other* ops from the shared archive (family similarity as the
 //!   embedding-search stand-in).
 
-use crate::population::Elite;
+use crate::population::{Candidate, Elite, Population};
 use crate::traverse::{GuidanceConfig, PromptStyle};
 
-use super::common::{KernelRunRecord, RunCtx, Session};
+use super::common::{RunCtx, Session};
+use super::engine::{GenerateStep, MethodState, Step};
 use super::Method;
 
 pub struct AiCudaEngineer;
@@ -45,89 +46,152 @@ Compose their optimization strategies into this operation's kernel.";
 const CONVERT_RETRIES: usize = 10;
 const COMPOSE_TRIALS: usize = 5;
 
+/// Convert/Translate prompting: task description only, verbose style.
+///
+/// NOTE: unlike the evolutionary methods, AI CUDA Engineer does not
+/// start from the dataset's baseline kernel — Convert must produce it
+/// (that is the stage's purpose), so the state machine never yields a
+/// bootstrap `Evaluate` step.
+fn convert_cfg() -> GuidanceConfig {
+    GuidanceConfig {
+        n_history: 0,
+        n_insights: 0,
+        profiling: false,
+        style: PromptStyle::Verbose,
+    }
+}
+
+enum Phase {
+    /// Stage 1: up to [`CONVERT_RETRIES`] attempts until one compiles;
+    /// exhausting them classifies the whole op as failed (§A.8.1).
+    Convert { attempts: usize },
+    /// Stage 2: one restyling pass; failure does not halt.
+    Translate,
+    /// Stage 3: the heavyweight loop, until only the Compose reserve
+    /// of the budget remains.
+    Optimize,
+    /// Stage 4: RAG proposals seeded from the shared archive, captured
+    /// once at phase entry (same timing as the pre-redesign loop, so
+    /// the prompts — and hence transcript coverage — are unchanged).
+    Compose { left: usize, rag: Vec<Candidate> },
+}
+
+struct AiCudaState {
+    phase: Phase,
+}
+
+impl MethodState for AiCudaState {
+    fn next(&mut self, session: &Session) -> Step {
+        if session.budget_left() == 0 {
+            return Step::Done;
+        }
+        loop {
+            // Phase transitions are decided from a read-only view and
+            // applied with no match borrow outstanding.
+            let transition = match &self.phase {
+                // The previous Convert attempt's outcome decides the
+                // transition (this is why Convert is unpredictable for
+                // `peek`).
+                Phase::Convert { attempts }
+                    if *attempts > 0
+                        && session.last().map(|c| c.compiled).unwrap_or(false) =>
+                {
+                    Some(Phase::Translate)
+                }
+                Phase::Optimize if session.budget_left() <= COMPOSE_TRIALS => {
+                    let ctx = session.ctx;
+                    let rag: Vec<Candidate> = ctx
+                        .archive
+                        .similar(&ctx.task.name, &ctx.task.family, 5)
+                        .into_iter()
+                        .map(|e| Candidate {
+                            src: e.src,
+                            spec: None,
+                            compiled: true,
+                            correct: true,
+                            speedup: e.speedup,
+                            pytorch_speedup: 0.0,
+                            true_speedup: e.speedup,
+                            true_pytorch_speedup: 0.0,
+                            insight: None,
+                            trial: 0,
+                        })
+                        .collect();
+                    Some(Phase::Compose { left: COMPOSE_TRIALS, rag })
+                }
+                _ => None,
+            };
+            if let Some(phase) = transition {
+                self.phase = phase;
+                continue;
+            }
+            match &mut self.phase {
+                Phase::Convert { attempts } => {
+                    if *attempts >= CONVERT_RETRIES {
+                        // Terminal conversion failure: op classified failed.
+                        return Step::Done;
+                    }
+                    *attempts += 1;
+                    return Step::Generate(GenerateStep::new(convert_cfg(), CONVERT));
+                }
+                Phase::Translate => {
+                    self.phase = Phase::Optimize;
+                    return Step::Generate(GenerateStep::new(convert_cfg(), TRANSLATE));
+                }
+                Phase::Optimize => {
+                    return Step::Generate(GenerateStep::new(GuidanceConfig::aicuda(), OPTIMIZE));
+                }
+                Phase::Compose { left, rag } => {
+                    if *left == 0 {
+                        return Step::Done;
+                    }
+                    *left -= 1;
+                    let history = if rag.is_empty() {
+                        None // empty archive: fall back to own elites
+                    } else {
+                        Some(rag.clone())
+                    };
+                    return Step::Generate(
+                        GenerateStep::new(GuidanceConfig::aicuda(), COMPOSE)
+                            .with_history(history),
+                    );
+                }
+            }
+        }
+    }
+
+    fn peek(&self, session: &Session, n: usize) -> Vec<GenerateStep> {
+        match &self.phase {
+            // Convert transitions on the pending outcome — unpredictable.
+            Phase::Convert { .. } => Vec::new(),
+            // After Translate yields, the phase is already Optimize, so
+            // this arm covers both the translate→optimize seam and the
+            // optimize steady state.
+            Phase::Translate | Phase::Optimize => (0..n)
+                .filter(|j| session.budget_left() > COMPOSE_TRIALS + 1 + j)
+                .map(|_| GenerateStep::new(GuidanceConfig::aicuda(), OPTIMIZE))
+                .collect(),
+            Phase::Compose { left, rag } => {
+                let history = if rag.is_empty() { None } else { Some(rag.clone()) };
+                (0..n.min(*left))
+                    .map(|_| {
+                        GenerateStep::new(GuidanceConfig::aicuda(), COMPOSE)
+                            .with_history(history.clone())
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
 impl Method for AiCudaEngineer {
     fn name(&self) -> String {
         "AI CUDA Engineer".into()
     }
 
-    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
-        let name = self.name();
-        let mut session = Session::new(ctx, &name);
-        let mut pop = Elite::new(5); // "providing five correct kernels"
-
-        // NOTE: unlike the evolutionary methods, AI CUDA Engineer does
-        // not start from the dataset's baseline kernel — Convert must
-        // produce it (that is the stage's purpose).
-        let convert_cfg = GuidanceConfig {
-            n_history: 0,
-            n_insights: 0,
-            profiling: false,
-            style: PromptStyle::Verbose,
-        };
-
-        // --- Stage 1: Convert ------------------------------------------
-        let mut converted = false;
-        for _ in 0..CONVERT_RETRIES {
-            match session.trial(&convert_cfg, &mut pop, CONVERT, None, None)? {
-                Some(cand) if cand.compiled => {
-                    converted = true;
-                    break;
-                }
-                Some(_) => continue,
-                None => break,
-            }
-        }
-        if !converted {
-            // Terminal conversion failure: the op is classified failed.
-            return Ok(session.finish(&name));
-        }
-
-        // --- Stage 2: Translate ------------------------------------------
-        // One pass; failure does not halt.
-        let _ = session.trial(&convert_cfg, &mut pop, TRANSLATE, None, None)?;
-
-        // --- Stage 3: Optimize ---------------------------------------------
-        let optimize_cfg = GuidanceConfig::aicuda();
-        while session.budget_left() > COMPOSE_TRIALS {
-            if session
-                .trial(&optimize_cfg, &mut pop, OPTIMIZE, None, None)?
-                .is_none()
-            {
-                break;
-            }
-        }
-
-        // --- Stage 4: Compose (RAG) ------------------------------------------
-        let rag = ctx.archive.similar(&ctx.task.name, &ctx.task.family, 5);
-        let rag_cands: Vec<crate::population::Candidate> = rag
-            .into_iter()
-            .map(|e| crate::population::Candidate {
-                src: e.src,
-                spec: None,
-                compiled: true,
-                correct: true,
-                speedup: e.speedup,
-                pytorch_speedup: 0.0,
-                true_speedup: e.speedup,
-                true_pytorch_speedup: 0.0,
-                insight: None,
-                trial: 0,
-            })
-            .collect();
-        for _ in 0..COMPOSE_TRIALS {
-            let history = if rag_cands.is_empty() {
-                None // empty archive: fall back to own elites
-            } else {
-                Some(rag_cands.clone())
-            };
-            if session
-                .trial(&optimize_cfg, &mut pop, COMPOSE, None, history)?
-                .is_none()
-            {
-                break;
-            }
-        }
-        Ok(session.finish(&name))
+    fn start(&self, _ctx: &RunCtx) -> (Box<dyn Population>, Box<dyn MethodState>) {
+        // "providing five correct kernels"
+        (Box::new(Elite::new(5)), Box::new(AiCudaState { phase: Phase::Convert { attempts: 0 } }))
     }
 }
 

@@ -1,24 +1,29 @@
-//! Shared per-run machinery: the trial executor every method drives.
+//! Shared per-run state: the [`Session`] every method's state machine
+//! is driven against, plus the run-level types ([`RunCtx`],
+//! [`KernelRunRecord`], [`Archive`], [`RepairPolicy`]).
 //!
 //! One `Session` = one (method, model, op, seed) optimization run with
-//! the paper's 45-trial budget. `Session::trial` performs the full
-//! closed loop: guidance assembly → prompt render → provider call
-//! (typed [`GenerationRequest`] through the [`Provider`] seam,
-//! DESIGN.md §12) → stage-0 validity guard (+ LLM repair loop, per
-//! [`RepairPolicy`]) → two-stage evaluation → population update →
-//! insight recording → token accounting.
+//! the paper's 45-trial budget. Since the trial-engine redesign
+//! (DESIGN.md §13) the Session no longer *sequences* trials — the
+//! generate → guard/repair → evaluate loop is owned by
+//! [`engine::drive`](super::engine::drive), which calls back into the
+//! Session for guidance assembly, insight recording, population
+//! updates and token accounting. The Session owns the method's
+//! [`Population`] and exposes the read view
+//! ([`Session::budget_left`], [`Session::last`], [`Session::pop`])
+//! that method state machines decide their next [`Step`] from.
+//!
+//! [`Step`]: super::engine::Step
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
-use crate::costmodel::price;
 use crate::dsl;
 use crate::evals::{EvalOutcome, Evaluator};
-use crate::llm::{GenerationRequest, ModelProfile, Provider};
+use crate::llm::{ModelProfile, Provider};
 use crate::population::{Candidate, Population};
 use crate::tasks::OpTask;
-use crate::traverse::prompt::{profiling_line, render};
-use crate::traverse::{Guidance, GuidanceConfig, InsightRecord};
+use crate::traverse::InsightRecord;
 use crate::util::json::Json;
 use crate::util::Rng;
 
@@ -310,34 +315,67 @@ impl KernelRunRecord {
     }
 }
 
-/// One live optimization session.
+/// One live optimization session. Created by
+/// [`engine::drive`](super::engine::drive); method state machines see
+/// it read-only, the engine mutates it as trials execute.
 pub struct Session<'a> {
     pub ctx: &'a RunCtx<'a>,
-    rng: Rng,
+    pub(super) method_name: String,
+    pub(super) rng: Rng,
     pub insights: Vec<InsightRecord>,
-    prompt_tokens: u64,
-    completion_tokens: u64,
-    trials_done: usize,
-    compiled: usize,
-    correct: usize,
-    guard_rejected: usize,
-    repaired: usize,
-    repair_attempts: usize,
-    best: Option<Candidate>,
-    best_pt: f64,
-    trajectory: Vec<f64>,
+    /// The method's population strategy (owned here so the engine's
+    /// speculative prefetch can snapshot it).
+    pub(super) pop: Box<dyn Population>,
+    /// The most recent trial's final candidate (what AI CUDA
+    /// Engineer's Convert stage inspects to decide its next step).
+    pub(super) last: Option<Candidate>,
+    pub(super) prompt_tokens: u64,
+    pub(super) completion_tokens: u64,
+    pub(super) trials_done: usize,
+    pub(super) compiled: usize,
+    pub(super) correct: usize,
+    pub(super) guard_rejected: usize,
+    pub(super) repaired: usize,
+    pub(super) repair_attempts: usize,
+    pub(super) best: Option<Candidate>,
+    pub(super) best_pt: f64,
+    pub(super) trajectory: Vec<f64>,
+}
+
+/// The op's starting kernel source (the dataset's "initial C++/CUDA
+/// implementation" — quality-tiered per op, see
+/// `costmodel::baseline_schedule`).
+pub fn baseline_src(ctx: &RunCtx) -> String {
+    dsl::print(&dsl::KernelSpec {
+        op: ctx.task.name.clone(),
+        semantics: "opt".into(),
+        schedule: crate::costmodel::baseline_schedule(ctx.task),
+    })
+}
+
+/// Top-k insights by recorded benefit (for the I3 prompt section).
+pub(super) fn top_insights(insights: &[InsightRecord], k: usize) -> Vec<&InsightRecord> {
+    let mut v: Vec<&InsightRecord> = insights.iter().collect();
+    v.sort_by(|a, b| b.delta.total_cmp(&a.delta));
+    v.truncate(k);
+    v
 }
 
 impl<'a> Session<'a> {
-    pub fn new(ctx: &'a RunCtx<'a>, method_name: &str) -> Self {
+    /// Start a session for one run; `pop` is the method's population
+    /// strategy (from [`Method::start`](super::Method::start)).
+    pub fn start(ctx: &'a RunCtx<'a>, method_name: &str, pop: Box<dyn Population>) -> Self {
         let rng = Rng::new(ctx.seed).derive(&format!(
             "{method_name}/{}/{}/{}",
             ctx.model.name, ctx.task.name, ctx.seed
         ));
         Session {
             ctx,
+            method_name: method_name.to_string(),
             rng,
             insights: Vec::new(),
+            pop,
+            last: None,
             prompt_tokens: 0,
             completion_tokens: 0,
             trials_done: 0,
@@ -356,31 +394,42 @@ impl<'a> Session<'a> {
         self.ctx.budget.saturating_sub(self.trials_done)
     }
 
-    pub fn rng(&mut self) -> &mut Rng {
-        &mut self.rng
+    /// Budget units consumed so far (generate + repair calls).
+    pub fn trials_done(&self) -> usize {
+        self.trials_done
     }
 
-    /// Evaluate the op's given starting kernel (the dataset's "initial
-    /// C++/CUDA implementation" — quality-tiered per op, see
-    /// costmodel::baseline_schedule) and seed the population with it.
-    /// Does not consume budget, and is exempt from the stage-0 guard:
-    /// the paper *provides* this kernel — it is dataset ground truth,
-    /// not an untrusted LLM emission.
-    pub fn bootstrap(&mut self, pop: &mut dyn Population) {
-        let spec = dsl::KernelSpec {
-            op: self.ctx.task.name.clone(),
-            semantics: "opt".into(),
-            schedule: crate::costmodel::baseline_schedule(self.ctx.task),
-        };
-        let src = dsl::print(&spec);
+    /// The most recent trial's final candidate.
+    pub fn last(&self) -> Option<&Candidate> {
+        self.last.as_ref()
+    }
+
+    /// Best valid candidate found so far (by measured speedup).
+    pub fn best(&self) -> Option<&Candidate> {
+        self.best.as_ref()
+    }
+
+    /// Read view of the method's population (state machines use this
+    /// to pin parents, e.g. EoH's M1/M2 operate on `pop().best()`).
+    pub fn pop(&self) -> &dyn Population {
+        self.pop.as_ref()
+    }
+
+    /// Evaluate a known kernel source and seed the population with it
+    /// (the engine's handler for [`Step::Evaluate`]). Does not consume
+    /// budget, and is exempt from the stage-0 guard: the baseline
+    /// kernel is dataset ground truth, not an untrusted LLM emission.
+    ///
+    /// [`Step::Evaluate`]: super::engine::Step::Evaluate
+    pub fn seed(&mut self, src: String) {
         let mut rng = self.rng.derive("bootstrap");
         let outcome =
             self.ctx.evaluator.evaluate_keyed(&src, self.ctx.task, self.ctx.model.name, &mut rng);
         let cand = self.candidate_from(src, outcome, 0, None);
-        pop.insert(cand);
+        self.pop.insert(cand);
     }
 
-    fn candidate_from(
+    pub(super) fn candidate_from(
         &mut self,
         src: String,
         outcome: EvalOutcome,
@@ -408,192 +457,24 @@ impl<'a> Session<'a> {
         }
     }
 
-    /// Top insights by recorded benefit (for the I3 prompt section).
-    fn top_insights(&self, k: usize) -> Vec<&InsightRecord> {
-        let mut v: Vec<&InsightRecord> = self.insights.iter().collect();
-        v.sort_by(|a, b| b.delta.total_cmp(&a.delta));
-        v.truncate(k);
-        v
-    }
-
-    /// Run one full trial. Returns `Ok(None)` when the budget is
-    /// spent; `Err` only when the generation backend fails (an HTTP
-    /// error after retries, a transcript miss under replay — the sim
-    /// backend is infallible for known models).
-    ///
-    /// `parent_override` pins the prompt's CURRENT KERNEL (EoH's M1/M2
-    /// operate on an explicit parent); `history_override` substitutes
-    /// the I2 section (the Compose stage's RAG kernels).
-    pub fn trial(
+    /// Run one full trial through the engine (assembly → provider →
+    /// guard/repair → evaluate → bookkeeping), with no event sinks and
+    /// no prefetch. Returns `Ok(None)` when the budget is spent; `Err`
+    /// only when the generation backend fails. This is the
+    /// single-trial entry point benches and tests drive directly; the
+    /// normal caller is [`engine::drive`](super::engine::drive).
+    pub fn run_trial(
         &mut self,
-        cfg: &GuidanceConfig,
-        pop: &mut dyn Population,
-        instruction: &str,
-        parent_override: Option<Candidate>,
-        history_override: Option<Vec<Candidate>>,
+        step: &super::engine::GenerateStep,
     ) -> crate::Result<Option<Candidate>> {
-        if self.budget_left() == 0 {
-            return Ok(None);
-        }
-        let trial_idx = self.trials_done;
-        let mut trial_rng = self.rng.derive(&format!("trial/{trial_idx}"));
-
-        // --- solution guiding layer: assemble the information --------
-        let parent = parent_override.or_else(|| pop.parent(&mut trial_rng));
-        let history: Vec<Candidate> = match history_override {
-            Some(h) => h,
-            None => pop.history(cfg.n_history),
-        };
-        let insights = self.top_insights(cfg.n_insights);
-        let profiling = if cfg.profiling {
-            parent.as_ref().and_then(|p| {
-                p.spec.as_ref().map(|spec| {
-                    let t = price(&spec.schedule, self.ctx.task, &self.ctx.evaluator.gpu);
-                    profiling_line(&t)
-                })
-            })
-        } else {
-            None
-        };
-        let baseline_us = self.ctx.evaluator.baseline_time(self.ctx.task) * 1e6;
-        let guidance = Guidance {
-            task: self.ctx.task,
-            baseline_us,
-            parent: parent.as_ref(),
-            history: history.iter().collect(),
-            insights,
-            profiling,
-            instruction: instruction.to_string(),
-        };
-
-        // --- prompt engineering layer + provider call -----------------
-        // The request seed is the exact word the old inline
-        // `self.rng.derive("llm/{trial_idx}")` expanded, so the sim
-        // backend reproduces the historical stream byte-for-byte.
-        let prompt = render(cfg, &guidance);
-        let llm_seed = self.rng.derive_seed(&format!("llm/{trial_idx}"));
-        let req = GenerationRequest::generate(self.ctx.model.name, &prompt, llm_seed);
-        let resp = self.ctx.provider.call(&req)?;
-        self.prompt_tokens += resp.usage.prompt_tokens;
-        self.completion_tokens += resp.usage.completion_tokens;
-        self.trials_done += 1;
-
-        // --- stage 0: static validity guard + LLM repair loop ---------
-        // (DESIGN.md §11.) Under `Repair`, each attempt is one more LLM
-        // call and consumes one budget unit, per the paper's 45-trial
-        // accounting; the loop stops early when the budget runs out.
-        let mut text = resp.text;
-        let mut was_repaired = false;
-        let guard_report = match self.ctx.repair {
-            RepairPolicy::Off => None,
-            RepairPolicy::Diagnose => {
-                Some(self.ctx.evaluator.guard_check(&text, self.ctx.task))
-            }
-            RepairPolicy::Repair { max_attempts } => {
-                let mut report = self.ctx.evaluator.guard_check(&text, self.ctx.task);
-                let initially_failed = !report.pass();
-                let mut attempt = 0;
-                while !report.pass() && attempt < max_attempts && self.budget_left() > 0 {
-                    let repair_seed =
-                        self.rng.derive_seed(&format!("repair/{trial_idx}/{attempt}"));
-                    let req = GenerationRequest::repair(
-                        self.ctx.model.name,
-                        &text,
-                        &report,
-                        repair_seed,
-                    );
-                    let fix = self.ctx.provider.call(&req)?;
-                    self.prompt_tokens += fix.usage.prompt_tokens;
-                    self.completion_tokens += fix.usage.completion_tokens;
-                    self.trials_done += 1;
-                    self.repair_attempts += 1;
-                    text = fix.text;
-                    report = self.ctx.evaluator.guard_check(&text, self.ctx.task);
-                    attempt += 1;
-                }
-                if initially_failed && report.pass() {
-                    was_repaired = true;
-                }
-                Some(report)
-            }
-        };
-
-        // --- two-stage evaluation (stage-0-gated, cache aware) --------
-        let mut eval_rng = self.rng.derive(&format!("eval/{trial_idx}"));
-        let outcome = match &guard_report {
-            Some(report) if !report.pass() => {
-                self.guard_rejected += 1;
-                self.ctx.evaluator.reject_stage0(
-                    &text,
-                    self.ctx.task,
-                    self.ctx.model.name,
-                    report,
-                )
-            }
-            _ => self.ctx.evaluator.evaluate_keyed(
-                &text,
-                self.ctx.task,
-                self.ctx.model.name,
-                &mut eval_rng,
-            ),
-        };
-        if was_repaired {
-            self.repaired += 1;
-        }
-        if outcome.compiled() {
-            self.compiled += 1;
-        }
-        if outcome.correct() {
-            self.correct += 1;
-        }
-
-        let cand = self.candidate_from(text, outcome, trial_idx, Some(resp.insight.clone()));
-
-        // --- insight recording (solution-insight pair with observed
-        // delta — what EvoEngineer "explicitly leverages", Table 2) ----
-        let delta = if cand.valid() {
-            let parent_speed = parent.as_ref().filter(|p| p.valid()).map(|p| p.speedup);
-            match parent_speed {
-                Some(ps) => cand.speedup - ps,
-                None => cand.speedup - 1.0,
-            }
-        } else {
-            -0.30 // invalid outcome: the idea is recorded as harmful
-        };
-        self.insights.push(InsightRecord { text: resp.insight, delta });
-        // Bounded store: keep the 64 most useful insights (perf: the
-        // per-trial top-k selection sorts this vec — see EXPERIMENTS.md
-        // §Perf — and long sessions must not grow it unboundedly).
-        if self.insights.len() > 128 {
-            self.insights.sort_by(|a, b| b.delta.total_cmp(&a.delta));
-            self.insights.truncate(64);
-        }
-
-        // --- bookkeeping -------------------------------------------------
-        // Selection is by *measured* speedup (the paper's noisy
-        // selection); the final record cites the chosen kernel's
-        // noise-free numbers (the paper's final re-timing).
-        if cand.valid()
-            && self
-                .best
-                .as_ref()
-                .map(|b| cand.speedup > b.speedup)
-                .unwrap_or(true)
-        {
-            self.best = Some(cand.clone());
-        }
-        if cand.valid() {
-            self.best_pt = self.best_pt.max(cand.true_pytorch_speedup);
-        }
-        self.trajectory
-            .push(self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0));
-
-        pop.insert(cand.clone());
-        Ok(Some(cand))
+        Ok(super::engine::run_trial(self, step, None, None)?.map(|_| {
+            self.last.clone().expect("a completed trial sets `last`")
+        }))
     }
 
     /// Close the session: publish to the archive, emit the record.
-    pub fn finish(self, method_name: &str) -> KernelRunRecord {
+    pub fn finish(self) -> KernelRunRecord {
+        let method_name = self.method_name.clone();
         if let Some(best) = &self.best {
             self.ctx.archive.record(ArchiveEntry {
                 op: self.ctx.task.name.clone(),

@@ -1,0 +1,913 @@
+//! The event-driven trial engine (DESIGN.md §13).
+//!
+//! Pre-redesign, `Method::run` was a blocking black box: 45 trials of
+//! generate → guard/repair → evaluate hidden behind one call, with no
+//! live progress, no per-trial telemetry, and nothing to resume below
+//! cell granularity. This module inverts that control flow:
+//!
+//! * Each method is a **resumable state machine** ([`MethodState`]):
+//!   `next(&mut self, &Session) -> Step` decides the next [`Step`] —
+//!   [`Step::Evaluate`] (seed a known kernel, no budget),
+//!   [`Step::Generate`] (one budget-consuming trial), or
+//!   [`Step::Done`].
+//! * [`drive`] owns the [`Session`] and the generate → guard/repair →
+//!   evaluate sequencing, and emits structured
+//!   [`TrialEvent`]s through every configured [`EventSink`]. Three
+//!   sinks ship: [`ProgressSink`] (stderr progress/ETA),
+//!   [`JournalSink`] (the append-only `events.jsonl`,
+//!   [`crate::store::events`]), and [`MetricsSink`] (an in-memory
+//!   [`EventStats`](crate::metrics::EventStats) accumulator).
+//! * Because the engine — not the method — owns the sequencing, it can
+//!   **pipeline generation against evaluation**: with
+//!   [`EngineOpts::prefetch`] > 0, a pool of worker threads runs
+//!   provider calls for *speculatively assembled* future trials while
+//!   the current candidate is being guarded/compiled/benchmarked, so
+//!   HTTP-provider latency no longer serializes with compile+bench.
+//!
+//! **Byte-identity contract.** Every RNG stream is label-derived
+//! (`trial/{i}`, `llm/{i}`, `repair/{i}/{a}`, `eval/{i}`) from the
+//! session seed, and the engine performs the derivations in exactly
+//! the order the pre-redesign `Session::trial` did, so records are
+//! byte-identical to the monolithic implementation for the same seeds
+//! (proven against a verbatim legacy reimplementation in
+//! `tests/trial_engine.rs`). Speculative prefetch preserves the
+//! contract by *validation*: the true request is always re-assembled
+//! from the real population state, and a speculative response is used
+//! only when its request hash matches — a mis-speculation costs a
+//! wasted provider call, never correctness. Token accounting counts
+//! only responses actually consumed.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::costmodel::price;
+use crate::evals::EvalOutcome;
+use crate::llm::{GenerationRequest, GenerationResponse};
+use crate::population::{Candidate, Population};
+use crate::store::events::{EventJournal, TrialEvent, TrialEventKind};
+use crate::store::sha256_hex;
+use crate::traverse::prompt::{profiling_line, render};
+use crate::traverse::{Guidance, GuidanceConfig, InsightRecord};
+use crate::util::Rng;
+use crate::Result;
+
+use super::common::{top_insights, KernelRunRecord, RepairPolicy, RunCtx, Session};
+
+// ---------------------------------------------------------------------
+// The stepwise method API
+
+/// One budget-consuming trial request, as decided by a method's state
+/// machine. The engine assembles the actual prompt from the session's
+/// live population/insight state at execution time.
+#[derive(Debug, Clone)]
+pub struct GenerateStep {
+    pub cfg: GuidanceConfig,
+    /// Operator-specific directive (EoH E1/E2/M1/M2, stage names…).
+    pub instruction: String,
+    /// Pin the prompt's CURRENT KERNEL (EoH's M1/M2 operate on an
+    /// explicit parent) instead of sampling one from the population.
+    pub parent_override: Option<Candidate>,
+    /// Substitute the I2 history section (the AI CUDA Engineer Compose
+    /// stage's RAG kernels).
+    pub history_override: Option<Vec<Candidate>>,
+}
+
+impl GenerateStep {
+    pub fn new(cfg: GuidanceConfig, instruction: &str) -> Self {
+        Self {
+            cfg,
+            instruction: instruction.to_string(),
+            parent_override: None,
+            history_override: None,
+        }
+    }
+
+    pub fn with_parent(mut self, parent: Option<Candidate>) -> Self {
+        self.parent_override = parent;
+        self
+    }
+
+    pub fn with_history(mut self, history: Option<Vec<Candidate>>) -> Self {
+        self.history_override = history;
+        self
+    }
+}
+
+/// What a method's state machine asks the engine to do next.
+// One Step per trial: the size skew vs `Done` is irrelevant next to a
+// provider call, and boxing would tax every state machine's ergonomics.
+#[allow(clippy::large_enum_variant)]
+#[derive(Debug)]
+pub enum Step {
+    /// Evaluate a known kernel source (no provider call, no budget) and
+    /// seed the population with it — the bootstrap of the evolutionary
+    /// methods.
+    Evaluate(String),
+    /// Run one full generate → guard/repair → evaluate trial.
+    Generate(GenerateStep),
+    /// The method's schedule is complete.
+    Done,
+}
+
+/// A method's resumable per-run state machine. `next` is called once
+/// per step with the read view of the session (budget left, last
+/// candidate, population); the engine executes the returned step and
+/// feeds the result back through the session before the next call.
+pub trait MethodState: Send {
+    fn next(&mut self, session: &Session) -> Step;
+
+    /// Best-effort prediction of the instructions/configs of the `n`
+    /// `Generate` steps *after* the one most recently yielded, assuming
+    /// the pending trial leaves the method's plan unchanged. Used only
+    /// by speculative prefetch — an empty or wrong prediction costs
+    /// throughput, never correctness.
+    fn peek(&self, session: &Session, n: usize) -> Vec<GenerateStep> {
+        let _ = (session, n);
+        Vec::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Events
+
+/// Receives every [`TrialEvent`] the engine emits. Implementations are
+/// shared across campaign workers, so they must serialize internally.
+pub trait EventSink: Send + Sync {
+    fn emit(&self, ev: &TrialEvent);
+}
+
+/// Appends every event to an [`EventJournal`] (`events.jsonl`).
+/// Advisory, like the eval cache: a failed write warns, never kills
+/// the run that produced the event.
+pub struct JournalSink {
+    journal: Arc<EventJournal>,
+}
+
+impl JournalSink {
+    pub fn new(journal: Arc<EventJournal>) -> Self {
+        Self { journal }
+    }
+}
+
+impl EventSink for JournalSink {
+    fn emit(&self, ev: &TrialEvent) {
+        if let Err(e) = self.journal.append(ev) {
+            eprintln!("warning: event journal append failed: {e:#}");
+        }
+    }
+}
+
+/// Accumulates events into [`crate::metrics::EventStats`] (the
+/// aggregate `report events` renders).
+#[derive(Default)]
+pub struct MetricsSink {
+    stats: Mutex<crate::metrics::EventStats>,
+}
+
+impl MetricsSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stats(&self) -> crate::metrics::EventStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl EventSink for MetricsSink {
+    fn emit(&self, ev: &TrialEvent) {
+        self.stats.lock().unwrap().fold(ev);
+    }
+}
+
+/// Live progress/ETA lines on stderr. Two modes: `per_trial` prints a
+/// line per evaluated trial group (single `optimize` runs);
+/// otherwise a campaign-wide summary line is printed at most every two
+/// seconds.
+pub struct ProgressSink {
+    per_trial: bool,
+    total_cells: usize,
+    state: Mutex<ProgressState>,
+}
+
+struct ProgressState {
+    started: Instant,
+    last_print: Option<Instant>,
+    /// Trial budget per cell (from the last `RunStarted`; uniform
+    /// across a campaign).
+    budget: usize,
+    /// Budget units spent (generate + repair calls).
+    units: usize,
+    /// Evaluated trial groups.
+    groups: usize,
+    cells: usize,
+    best: f64,
+}
+
+impl ProgressSink {
+    /// Per-trial mode for a single run.
+    pub fn single_run() -> Self {
+        Self::new(true, 1)
+    }
+
+    /// Interval mode for a campaign of `total_cells` runs.
+    pub fn campaign(total_cells: usize) -> Self {
+        Self::new(false, total_cells)
+    }
+
+    fn new(per_trial: bool, total_cells: usize) -> Self {
+        Self {
+            per_trial,
+            total_cells,
+            state: Mutex::new(ProgressState {
+                started: Instant::now(),
+                last_print: None,
+                budget: 0,
+                units: 0,
+                groups: 0,
+                cells: 0,
+                best: 1.0,
+            }),
+        }
+    }
+}
+
+impl EventSink for ProgressSink {
+    fn emit(&self, ev: &TrialEvent) {
+        let mut s = self.state.lock().unwrap();
+        match &ev.kind {
+            TrialEventKind::RunStarted { budget, .. } => s.budget = *budget,
+            TrialEventKind::RepairAttempt { .. } => s.units += 1,
+            TrialEventKind::NewBest { speedup, .. } => s.best = *speedup,
+            TrialEventKind::RunFinished { .. } => s.cells += 1,
+            TrialEventKind::EvalOutcome { trial, outcome, speedup, .. } => {
+                s.units += 1;
+                s.groups += 1;
+                // The NewBest event follows EvalOutcome, so fold the
+                // outcome's own speedup in first — otherwise the line
+                // that *sets* a new best would print the stale one.
+                if *speedup > s.best {
+                    s.best = *speedup;
+                }
+                if self.per_trial {
+                    let elapsed = s.started.elapsed().as_secs_f64();
+                    let left = s.budget.saturating_sub(s.units);
+                    let eta = elapsed / s.units.max(1) as f64 * left as f64;
+                    eprintln!(
+                        "  trial {:>3}: {:<15} best {:>5.2}x  [{} of {} budget units, \
+                         ETA {eta:>4.0}s]",
+                        trial, outcome, s.best, s.units, s.budget
+                    );
+                }
+            }
+            _ => {}
+        }
+        if !self.per_trial {
+            let due = s
+                .last_print
+                .map(|t| t.elapsed().as_secs_f64() >= 2.0)
+                .unwrap_or(s.groups > 0);
+            if due && s.groups > 0 {
+                let elapsed = s.started.elapsed().as_secs_f64();
+                let rate = s.units as f64 / elapsed.max(1e-9);
+                let total_units = self.total_cells * s.budget.max(1);
+                let eta = (total_units.saturating_sub(s.units)) as f64 / rate.max(1e-9);
+                eprintln!(
+                    "campaign: {}/{} cells, {} trial units, {rate:.1} units/s, ETA ~{eta:.0}s",
+                    s.cells, self.total_cells, s.units
+                );
+                s.last_print = Some(Instant::now());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kill switch (trial-granular --stop-after-trials test hook)
+
+/// Claim-based global trial counter shared across campaign workers: a
+/// simulated kill fires when `limit` trial groups have been *claimed*
+/// process-wide, which makes the interruption point deterministic
+/// (unlike a completion-count race).
+pub struct TrialGate {
+    limit: usize,
+    claimed: AtomicUsize,
+}
+
+impl TrialGate {
+    pub fn new(limit: usize) -> Self {
+        Self { limit, claimed: AtomicUsize::new(0) }
+    }
+
+    /// Claim the right to start one more trial group.
+    pub fn claim(&self) -> bool {
+        self.claimed.fetch_add(1, Ordering::SeqCst) < self.limit
+    }
+}
+
+/// Marker error for a [`TrialGate`]-induced simulated kill: the
+/// campaign recognizes it (`downcast_ref`) and treats the sweep as
+/// interrupted-but-healthy rather than failed.
+#[derive(Debug)]
+pub struct Interrupted;
+
+impl std::fmt::Display for Interrupted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("run interrupted by the trial gate (--stop-after-trials)")
+    }
+}
+
+impl std::error::Error for Interrupted {}
+
+// ---------------------------------------------------------------------
+// Engine options
+
+/// How [`drive`] should run a cell.
+#[derive(Clone, Default)]
+pub struct EngineOpts {
+    /// Event receivers (empty = silent, the pre-redesign behaviour).
+    pub sinks: Vec<Arc<dyn EventSink>>,
+    /// Speculative generation prefetch workers (0 = off). See the
+    /// module docs for the byte-identity argument.
+    pub prefetch: usize,
+    /// Simulated mid-cell kill, shared across a campaign's workers.
+    pub trial_gate: Option<Arc<TrialGate>>,
+    /// This cell is resuming a prior interrupted run whose events are
+    /// already journaled: suppress the duplicate `RunStarted` (and,
+    /// per `verify_replay`, the replayed trials' events).
+    pub resumed: bool,
+    /// `(trial, src_hash)` pairs journaled by a prior interrupted run
+    /// of this cell: replayed trials are verified against them and any
+    /// divergence is reported (journal drift would break the
+    /// bit-identical-resume contract).
+    pub verify_replay: Vec<(usize, String)>,
+}
+
+// ---------------------------------------------------------------------
+// The drive loop
+
+/// Drive a method's state machine to completion for one
+/// (method, model, op, seed) cell and produce its record.
+pub fn drive(
+    method: &dyn super::Method,
+    ctx: &RunCtx,
+    opts: &EngineOpts,
+) -> Result<KernelRunRecord> {
+    let (pop, state) = method.start(ctx);
+    drive_parts(&method.name(), pop, state, ctx, opts)
+}
+
+/// [`drive`] over pre-built parts (what the `Method::run` default
+/// implementation calls).
+pub fn drive_parts(
+    name: &str,
+    pop: Box<dyn Population>,
+    mut state: Box<dyn MethodState>,
+    ctx: &RunCtx,
+    opts: &EngineOpts,
+) -> Result<KernelRunRecord> {
+    let mut session = Session::start(ctx, name, pop);
+    let emit = |kind: TrialEventKind| {
+        if opts.sinks.is_empty() {
+            return;
+        }
+        let ev = TrialEvent {
+            method: name.to_string(),
+            model: ctx.model.name.to_string(),
+            op: ctx.task.name.clone(),
+            seed: ctx.seed,
+            kind,
+        };
+        for sink in &opts.sinks {
+            sink.emit(&ev);
+        }
+    };
+    // A resumed half-finished cell already has its RunStarted and its
+    // completed trials in the event journal; re-emitting them would
+    // double-count the cell in `report events`, so the journal reads
+    // as one continuous run across the kill.
+    if !opts.resumed {
+        emit(TrialEventKind::RunStarted {
+            budget: ctx.budget,
+            provider: ctx.provider.label().to_string(),
+        });
+    }
+
+    if opts.prefetch == 0 {
+        run_loop(&mut session, state.as_mut(), opts, None, &emit)?;
+    } else {
+        // The shared job receiver must outlive the scope (workers
+        // borrow it), so it lives out here; the sender/receiver pair
+        // the main loop owns moves into the pool inside the scope.
+        let (job_tx, job_rx) = mpsc::channel::<(String, GenerationRequest)>();
+        let job_rx = Mutex::new(job_rx);
+        let (res_tx, res_rx) = mpsc::channel();
+        std::thread::scope(|scope| -> Result<()> {
+            for _ in 0..opts.prefetch {
+                let res_tx = res_tx.clone();
+                let job_rx = &job_rx;
+                let provider = ctx.provider;
+                scope.spawn(move || loop {
+                    // Lock only for the blocking recv, never across the
+                    // provider call, so generations run concurrently.
+                    let job = { job_rx.lock().unwrap().recv() };
+                    match job {
+                        Ok((hash, req)) => {
+                            let resp = provider.call(&req);
+                            if res_tx.send((hash, resp)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break, // pool dropped: drain and exit
+                    }
+                });
+            }
+            drop(res_tx);
+            let mut pool = PrefetchPool {
+                workers: opts.prefetch,
+                job_tx,
+                res_rx,
+                inflight: HashSet::new(),
+                done: HashMap::new(),
+                submitted: 0,
+                served: 0,
+            };
+            let result = run_loop(&mut session, state.as_mut(), opts, Some(&mut pool), &emit);
+            // Honest accounting: a mis-speculated call's response is
+            // discarded, but on a live backend its token cost was real
+            // — say so rather than silently under-reporting spend.
+            let wasted = pool.submitted.saturating_sub(pool.served);
+            if wasted > 0 {
+                eprintln!(
+                    "note: prefetch: {wasted} mis-speculated generation call(s) discarded \
+                     for {}/{} seed {} — their provider-side token cost is not in the \
+                     run record",
+                    ctx.task.name, ctx.model.name, ctx.seed
+                );
+            }
+            result
+            // `pool` drops here, closing the job channel; the workers
+            // exit and the scope joins them before returning.
+        })?;
+    }
+
+    if session.budget_left() == 0 {
+        emit(TrialEventKind::BudgetExhausted { trials: session.trials_done() });
+    }
+    let rec = session.finish();
+    emit(TrialEventKind::RunFinished {
+        trials: rec.trials,
+        best_speedup: rec.best_speedup,
+        any_valid: rec.any_valid,
+    });
+    Ok(rec)
+}
+
+fn run_loop(
+    session: &mut Session,
+    state: &mut dyn MethodState,
+    opts: &EngineOpts,
+    mut pool: Option<&mut PrefetchPool>,
+    emit: &dyn Fn(TrialEventKind),
+) -> Result<()> {
+    loop {
+        match state.next(session) {
+            Step::Done => return Ok(()),
+            Step::Evaluate(src) => session.seed(src),
+            Step::Generate(gen) => {
+                if session.budget_left() == 0 {
+                    return Ok(());
+                }
+                if let Some(gate) = &opts.trial_gate {
+                    if !gate.claim() {
+                        return Err(anyhow::Error::new(Interrupted));
+                    }
+                }
+                // Trials a prior interrupted run already journaled are
+                // replayed (warm) but not re-emitted: the journal keeps
+                // one event stream per cell across kill+resume.
+                let replayed = opts
+                    .verify_replay
+                    .iter()
+                    .find(|(t, _)| *t == session.trials_done());
+                if replayed.is_none() {
+                    emit(TrialEventKind::TrialStarted { trial: session.trials_done() });
+                }
+                let report = run_trial(session, &gen, pool.as_deref_mut(), Some(&*state))?
+                    .expect("budget checked above");
+                if let Some((_, expect)) = replayed {
+                    if *expect != report.src_hash {
+                        eprintln!(
+                            "warning: resume verification: trial {} of {}/{}/{} seed {} \
+                             re-derived a different emission than the event journal \
+                             recorded — resumed records may not be bit-identical",
+                            report.trial,
+                            session.method_name,
+                            session.ctx.model.name,
+                            session.ctx.task.name,
+                            session.ctx.seed
+                        );
+                    }
+                    continue;
+                }
+                if let Some((pass, diagnostics)) = report.guard {
+                    emit(TrialEventKind::GuardVerdict { trial: report.trial, pass, diagnostics });
+                }
+                for &(attempt, mended) in &report.repairs {
+                    emit(TrialEventKind::RepairAttempt { trial: report.trial, attempt, mended });
+                }
+                emit(TrialEventKind::EvalOutcome {
+                    trial: report.trial,
+                    outcome: report.outcome.to_string(),
+                    speedup: report.speedup,
+                    prompt_tokens: report.prompt_tokens,
+                    completion_tokens: report.completion_tokens,
+                    src_hash: report.src_hash.clone(),
+                });
+                if report.new_best {
+                    emit(TrialEventKind::NewBest { trial: report.trial, speedup: report.speedup });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trial execution (the sequencing that used to live in Session::trial)
+
+/// Everything observable that happened in one trial group — the
+/// engine's event source, returned rather than emitted so the trial
+/// executor stays decoupled from the sinks.
+pub(super) struct TrialReport {
+    pub trial: usize,
+    /// Initial stage-0 verdict `(pass, diagnostics)`, if a guard ran.
+    pub guard: Option<(bool, usize)>,
+    /// `(attempt, mended_after)` per LLM repair call.
+    pub repairs: Vec<(usize, bool)>,
+    pub outcome: &'static str,
+    /// Noise-free speedup when valid, 0 otherwise.
+    pub speedup: f64,
+    /// Token usage of the whole group (generate + repairs).
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+    pub new_best: bool,
+    /// Truncated SHA-256 of the raw evaluated emission.
+    pub src_hash: String,
+}
+
+/// Run one full trial. Returns `Ok(None)` when the budget is spent;
+/// `Err` only when the generation backend fails (an HTTP error after
+/// retries, a transcript miss under replay — the sim backend is
+/// infallible for known models).
+pub(super) fn run_trial(
+    session: &mut Session,
+    step: &GenerateStep,
+    mut pool: Option<&mut PrefetchPool>,
+    state_for_peek: Option<&dyn MethodState>,
+) -> Result<Option<TrialReport>> {
+    if session.budget_left() == 0 {
+        return Ok(None);
+    }
+    let trial_idx = session.trials_done();
+
+    // --- solution guiding layer + prompt engineering layer ---------
+    // Assembled from the *real* population state (this is the one
+    // mutation point: stateful strategies advance here).
+    let assembled = assemble(
+        session.ctx,
+        &session.rng,
+        &session.insights,
+        session.pop.as_mut(),
+        trial_idx,
+        step,
+    );
+
+    // --- provider call (possibly overlapped) ------------------------
+    let resp = match pool.as_deref_mut() {
+        Some(pool) => {
+            let hash = assembled.req.hash();
+            // The true request always goes through the pool so a
+            // worker can run it while we speculate ahead.
+            pool.submit(assembled.req.clone());
+            if let Some(state) = state_for_peek {
+                speculate(session, state, pool);
+            }
+            match pool.take(&hash) {
+                Ok(resp) => resp,
+                // A pooled failure may be stale — a transient HTTP
+                // error cached when the call ran speculatively. One
+                // live retry keeps "speculation costs throughput,
+                // never correctness" honest; a deterministic failure
+                // (replay miss) just fails identically again.
+                Err(_) => session.ctx.provider.call(&assembled.req)?,
+            }
+        }
+        None => session.ctx.provider.call(&assembled.req)?,
+    };
+
+    finish_trial(session, trial_idx, assembled.parent, resp).map(Some)
+}
+
+/// Submit speculative provider calls for the predicted next trials,
+/// assembled on a population snapshot (never the real state).
+fn speculate(session: &Session, state: &dyn MethodState, pool: &mut PrefetchPool) {
+    let depth = pool.workers;
+    let steps = state.peek(session, depth);
+    if steps.is_empty() {
+        return;
+    }
+    let mut pop = session.pop().snapshot();
+    for (j, step) in steps.iter().take(depth).enumerate() {
+        // Future indices assume each pending trial consumes exactly one
+        // budget unit (a fired repair shifts the indices and the
+        // speculation simply misses).
+        let idx = session.trials_done() + 1 + j;
+        if idx >= session.ctx.budget {
+            break;
+        }
+        let a = assemble(
+            session.ctx,
+            &session.rng,
+            &session.insights,
+            pop.as_mut(),
+            idx,
+            step,
+        );
+        pool.submit(a.req);
+    }
+}
+
+struct Assembled {
+    req: GenerationRequest,
+    /// The parent candidate the prompt improved upon (insight-delta
+    /// attribution needs it after evaluation).
+    parent: Option<Candidate>,
+}
+
+/// Assemble the typed generation request for `trial_idx`: guidance
+/// (parent pick, history, insights, profiling) → rendered prompt →
+/// derived per-call seed. Pure except for `pop` (parent sampling may
+/// advance strategy state, e.g. the island cursor) — which is why the
+/// speculative path hands in a snapshot.
+fn assemble(
+    ctx: &RunCtx,
+    session_rng: &Rng,
+    insights: &[InsightRecord],
+    pop: &mut dyn Population,
+    trial_idx: usize,
+    step: &GenerateStep,
+) -> Assembled {
+    let mut trial_rng = session_rng.derive(&format!("trial/{trial_idx}"));
+    let parent = step
+        .parent_override
+        .clone()
+        .or_else(|| pop.parent(&mut trial_rng));
+    let history: Vec<Candidate> = match &step.history_override {
+        Some(h) => h.clone(),
+        None => pop.history(step.cfg.n_history),
+    };
+    let insights = top_insights(insights, step.cfg.n_insights);
+    let profiling = if step.cfg.profiling {
+        parent.as_ref().and_then(|p| {
+            p.spec.as_ref().map(|spec| {
+                let t = price(&spec.schedule, ctx.task, &ctx.evaluator.gpu);
+                profiling_line(&t)
+            })
+        })
+    } else {
+        None
+    };
+    let baseline_us = ctx.evaluator.baseline_time(ctx.task) * 1e6;
+    let guidance = Guidance {
+        task: ctx.task,
+        baseline_us,
+        parent: parent.as_ref(),
+        history: history.iter().collect(),
+        insights,
+        profiling,
+        instruction: step.instruction.clone(),
+    };
+    // The request seed is the exact word the pre-provider code's
+    // inline `rng.derive("llm/{trial_idx}")` expanded, so the sim
+    // backend reproduces the historical stream byte-for-byte.
+    let prompt = render(&step.cfg, &guidance);
+    let llm_seed = session_rng.derive_seed(&format!("llm/{trial_idx}"));
+    Assembled {
+        req: GenerationRequest::generate(ctx.model.name, &prompt, llm_seed),
+        parent,
+    }
+}
+
+fn outcome_label(outcome: &EvalOutcome) -> &'static str {
+    match outcome {
+        EvalOutcome::GuardReject { .. } => "guard_reject",
+        EvalOutcome::CompileFail { .. } => "compile_fail",
+        EvalOutcome::FunctionalFail { .. } => "functional_fail",
+        EvalOutcome::RuntimeFail { .. } => "runtime_fail",
+        EvalOutcome::Ok(_) => "ok",
+    }
+}
+
+/// Everything after the generate call: stage-0 guard + LLM repair loop,
+/// two-stage evaluation, insight recording, population/bookkeeping
+/// updates. The sequencing (and every RNG derivation label) is the
+/// pre-redesign `Session::trial` body, verbatim.
+fn finish_trial(
+    session: &mut Session,
+    trial_idx: usize,
+    parent: Option<Candidate>,
+    resp: GenerationResponse,
+) -> Result<TrialReport> {
+    let ctx = session.ctx;
+    let mut group_prompt = resp.usage.prompt_tokens;
+    let mut group_completion = resp.usage.completion_tokens;
+    session.prompt_tokens += resp.usage.prompt_tokens;
+    session.completion_tokens += resp.usage.completion_tokens;
+    session.trials_done += 1;
+
+    // --- stage 0: static validity guard + LLM repair loop ---------
+    // (DESIGN.md §11.) Under `Repair`, each attempt is one more LLM
+    // call and consumes one budget unit, per the paper's 45-trial
+    // accounting; the loop stops early when the budget runs out.
+    let mut text = resp.text;
+    let mut was_repaired = false;
+    let mut guard_seen: Option<(bool, usize)> = None;
+    let mut repairs: Vec<(usize, bool)> = Vec::new();
+    let guard_report = match ctx.repair {
+        RepairPolicy::Off => None,
+        RepairPolicy::Diagnose => {
+            let report = ctx.evaluator.guard_check(&text, ctx.task);
+            guard_seen = Some((report.pass(), report.diagnostics.len()));
+            Some(report)
+        }
+        RepairPolicy::Repair { max_attempts } => {
+            let mut report = ctx.evaluator.guard_check(&text, ctx.task);
+            guard_seen = Some((report.pass(), report.diagnostics.len()));
+            let initially_failed = !report.pass();
+            let mut attempt = 0;
+            while !report.pass() && attempt < max_attempts && session.budget_left() > 0 {
+                let repair_seed =
+                    session.rng.derive_seed(&format!("repair/{trial_idx}/{attempt}"));
+                let req = GenerationRequest::repair(ctx.model.name, &text, &report, repair_seed);
+                let fix = ctx.provider.call(&req)?;
+                group_prompt += fix.usage.prompt_tokens;
+                group_completion += fix.usage.completion_tokens;
+                session.prompt_tokens += fix.usage.prompt_tokens;
+                session.completion_tokens += fix.usage.completion_tokens;
+                session.trials_done += 1;
+                session.repair_attempts += 1;
+                text = fix.text;
+                report = ctx.evaluator.guard_check(&text, ctx.task);
+                repairs.push((attempt, report.pass()));
+                attempt += 1;
+            }
+            if initially_failed && report.pass() {
+                was_repaired = true;
+            }
+            Some(report)
+        }
+    };
+
+    // --- two-stage evaluation (stage-0-gated, cache aware) --------
+    let mut eval_rng = session.rng.derive(&format!("eval/{trial_idx}"));
+    let outcome = match &guard_report {
+        Some(report) if !report.pass() => {
+            session.guard_rejected += 1;
+            ctx.evaluator.reject_stage0(&text, ctx.task, ctx.model.name, report)
+        }
+        _ => ctx.evaluator.evaluate_keyed(&text, ctx.task, ctx.model.name, &mut eval_rng),
+    };
+    if was_repaired {
+        session.repaired += 1;
+    }
+    if outcome.compiled() {
+        session.compiled += 1;
+    }
+    if outcome.correct() {
+        session.correct += 1;
+    }
+
+    let label = outcome_label(&outcome);
+    let src_hash = sha256_hex(text.as_bytes())[..16].to_string();
+    let cand = session.candidate_from(text, outcome, trial_idx, Some(resp.insight.clone()));
+
+    // --- insight recording (solution-insight pair with observed
+    // delta — what EvoEngineer "explicitly leverages", Table 2) ----
+    let delta = if cand.valid() {
+        let parent_speed = parent.as_ref().filter(|p| p.valid()).map(|p| p.speedup);
+        match parent_speed {
+            Some(ps) => cand.speedup - ps,
+            None => cand.speedup - 1.0,
+        }
+    } else {
+        -0.30 // invalid outcome: the idea is recorded as harmful
+    };
+    session.insights.push(InsightRecord { text: resp.insight, delta });
+    // Bounded store: keep the 64 most useful insights (perf: the
+    // per-trial top-k selection sorts this vec — see EXPERIMENTS.md
+    // §Perf — and long sessions must not grow it unboundedly).
+    if session.insights.len() > 128 {
+        session.insights.sort_by(|a, b| b.delta.total_cmp(&a.delta));
+        session.insights.truncate(64);
+    }
+
+    // --- bookkeeping -------------------------------------------------
+    // Selection is by *measured* speedup (the paper's noisy
+    // selection); the final record cites the chosen kernel's
+    // noise-free numbers (the paper's final re-timing).
+    let new_best = cand.valid()
+        && session
+            .best
+            .as_ref()
+            .map(|b| cand.speedup > b.speedup)
+            .unwrap_or(true);
+    if new_best {
+        session.best = Some(cand.clone());
+    }
+    if cand.valid() {
+        session.best_pt = session.best_pt.max(cand.true_pytorch_speedup);
+    }
+    session
+        .trajectory
+        .push(session.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0));
+
+    let speedup = if cand.valid() { cand.true_speedup } else { 0.0 };
+    session.pop.insert(cand.clone());
+    session.last = Some(cand);
+    Ok(TrialReport {
+        trial: trial_idx,
+        guard: guard_seen,
+        repairs,
+        outcome: label,
+        speedup,
+        prompt_tokens: group_prompt,
+        completion_tokens: group_completion,
+        new_best,
+        src_hash,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Prefetch pool
+
+/// Hands provider calls to a scoped worker pool keyed by request hash.
+/// Results for requests never consumed (mis-speculations) are silently
+/// dropped — including errors, which matters under a replay provider
+/// where a mis-speculated request is a legitimate journal miss.
+pub(super) struct PrefetchPool {
+    pub(super) workers: usize,
+    job_tx: mpsc::Sender<(String, GenerationRequest)>,
+    res_rx: mpsc::Receiver<(String, Result<GenerationResponse>)>,
+    inflight: HashSet<String>,
+    done: HashMap<String, Result<GenerationResponse>>,
+    /// Distinct requests handed to workers / consumed by the engine —
+    /// the difference is the mis-speculation count the drive loop
+    /// reports for honest provider-side cost accounting.
+    submitted: usize,
+    served: usize,
+}
+
+impl PrefetchPool {
+    /// Queue a request unless an identical one is already in flight or
+    /// completed.
+    fn submit(&mut self, req: GenerationRequest) {
+        let hash = req.hash();
+        if self.inflight.contains(&hash) || self.done.contains_key(&hash) {
+            return;
+        }
+        if self.job_tx.send((hash.clone(), req)).is_ok() {
+            self.inflight.insert(hash);
+            self.submitted += 1;
+        }
+    }
+
+    fn drain(&mut self) {
+        while let Ok((hash, resp)) = self.res_rx.try_recv() {
+            self.inflight.remove(&hash);
+            self.done.insert(hash, resp);
+        }
+    }
+
+    /// Block until the response for `hash` is available and return it.
+    fn take(&mut self, hash: &str) -> Result<GenerationResponse> {
+        loop {
+            self.drain();
+            if let Some(resp) = self.done.remove(hash) {
+                self.served += 1;
+                return resp;
+            }
+            if !self.inflight.contains(hash) {
+                return Err(crate::eyre!("prefetch pool lost request {hash}"));
+            }
+            match self.res_rx.recv() {
+                Ok((h, resp)) => {
+                    self.inflight.remove(&h);
+                    self.done.insert(h, resp);
+                }
+                Err(_) => return Err(crate::eyre!("prefetch workers exited unexpectedly")),
+            }
+        }
+    }
+}

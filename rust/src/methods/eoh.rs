@@ -6,10 +6,11 @@
 //! does **not** feed insights back (Table 2: I3 marked "generate but
 //! don't leverage") — so `n_insights` is 0 here.
 
-use crate::population::{Elite, Population};
+use crate::population::{Candidate, Elite, Population};
 use crate::traverse::GuidanceConfig;
 
-use super::common::{KernelRunRecord, RunCtx, Session};
+use super::common::{baseline_src, RunCtx, Session};
+use super::engine::{GenerateStep, MethodState, Step};
 use super::Method;
 
 pub struct Eoh;
@@ -33,40 +34,73 @@ neighbouring design.";
 const M2: &str = "Tune the numeric parameters of the current kernel only (tile sizes, \
 unroll factor, block size, register budget); keep its structure fixed.";
 
+/// Schedule slot `s` (0-based over yielded `Generate` steps):
+/// 5 × E1 initialization, then 10 generations × (E1, E2, M1, M2);
+/// `None` past the 45-proposal schedule. The bool is whether the
+/// operator acts on the current best explicitly (M1/M2).
+fn slot(s: usize) -> Option<(&'static str, bool)> {
+    if s < 5 {
+        return Some((E1, false));
+    }
+    let g = s - 5;
+    if g >= 40 {
+        return None;
+    }
+    match g % 4 {
+        0 => Some((E1, false)),
+        1 => Some((E2, false)),
+        2 => Some((M1, true)),
+        _ => Some((M2, true)),
+    }
+}
+
+/// Bootstrap, then walk the E1/E2/M1/M2 schedule. The operator
+/// sequence is outcome-independent; M1/M2 pin the population's
+/// current best as the parent at yield time, exactly like the
+/// pre-redesign loop pinned `pop.best()` at trial time.
+struct EohState {
+    seeded: bool,
+    idx: usize,
+}
+
+impl EohState {
+    fn step_at(&self, session: &Session, s: usize) -> Option<GenerateStep> {
+        let (op, pin_best) = slot(s)?;
+        let parent: Option<Candidate> = if pin_best { session.pop().best() } else { None };
+        Some(GenerateStep::new(GuidanceConfig::eoh(), op).with_parent(parent))
+    }
+}
+
+impl MethodState for EohState {
+    fn next(&mut self, session: &Session) -> Step {
+        if !self.seeded {
+            self.seeded = true;
+            return Step::Evaluate(baseline_src(session.ctx));
+        }
+        if session.budget_left() == 0 {
+            return Step::Done;
+        }
+        match self.step_at(session, self.idx) {
+            Some(step) => {
+                self.idx += 1;
+                Step::Generate(step)
+            }
+            None => Step::Done,
+        }
+    }
+
+    fn peek(&self, session: &Session, n: usize) -> Vec<GenerateStep> {
+        (0..n).filter_map(|j| self.step_at(session, self.idx + j)).collect()
+    }
+}
+
 impl Method for Eoh {
     fn name(&self) -> String {
         "EvoEngineer-Solution (EoH)".into()
     }
 
-    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
-        let name = self.name();
-        let cfg = GuidanceConfig::eoh();
-        let mut session = Session::new(ctx, &name);
-        let mut pop = Elite::new(4);
-        session.bootstrap(&mut pop);
-
-        // Initialization: 5 trials (§A.4).
-        for _ in 0..5 {
-            if session.trial(&cfg, &mut pop, E1, None, None)?.is_none() {
-                return Ok(session.finish(&name));
-            }
-        }
-
-        // 10 generations × (E1, E2, M1, M2).
-        'gens: for _gen in 0..10 {
-            for op in [E1, E2, M1, M2] {
-                // M1/M2 act on the current best explicitly.
-                let parent = if std::ptr::eq(op, M1) || std::ptr::eq(op, M2) {
-                    pop.best()
-                } else {
-                    None
-                };
-                if session.trial(&cfg, &mut pop, op, parent, None)?.is_none() {
-                    break 'gens;
-                }
-            }
-        }
-        Ok(session.finish(&name))
+    fn start(&self, _ctx: &RunCtx) -> (Box<dyn Population>, Box<dyn MethodState>) {
+        (Box::new(Elite::new(4)), Box::new(EohState { seeded: false, idx: 0 }))
     }
 }
 

@@ -10,10 +10,11 @@
 //! EoH-style generational structure (5 init + 10 generations × 4
 //! offspring, §A.4).
 
-use crate::population::{Elite, SingleBest};
+use crate::population::{Elite, Population, SingleBest};
 use crate::traverse::GuidanceConfig;
 
-use super::common::{KernelRunRecord, RunCtx, Session};
+use super::common::{baseline_src, RunCtx, Session};
+use super::engine::{GenerateStep, MethodState, Step};
 use super::Method;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +47,64 @@ execution time while preserving exact output semantics.";
 const INIT: &str = "Design a new kernel from scratch for this operation, optimized for the \
 target device.";
 
+/// The state machine: bootstrap, then a flat improvement loop (Free /
+/// Insight) or the generational 5-init + 10×4-offspring schedule
+/// (Full, §A.4). The instruction sequence is outcome-independent, so
+/// `peek` predicts it exactly and speculative prefetch hits whenever
+/// the pending trial leaves the population/insight state unchanged.
+struct EvoState {
+    variant: EvoVariant,
+    cfg: GuidanceConfig,
+    seeded: bool,
+    /// `Generate` steps yielded so far (the Full schedule cursor).
+    steps: usize,
+}
+
+impl EvoState {
+    /// Instruction of schedule slot `s`, `None` when the schedule is
+    /// over (Full stops after 5 + 10×4 = 45 proposals).
+    fn instruction_at(&self, s: usize) -> Option<&'static str> {
+        match self.variant {
+            EvoVariant::Free | EvoVariant::Insight => Some(IMPROVE),
+            EvoVariant::Full => {
+                if s >= 45 {
+                    None
+                } else if s < 5 {
+                    Some(INIT)
+                } else {
+                    Some(IMPROVE)
+                }
+            }
+        }
+    }
+}
+
+impl MethodState for EvoState {
+    fn next(&mut self, session: &Session) -> Step {
+        if !self.seeded {
+            self.seeded = true;
+            return Step::Evaluate(baseline_src(session.ctx));
+        }
+        if session.budget_left() == 0 {
+            return Step::Done;
+        }
+        match self.instruction_at(self.steps) {
+            Some(instruction) => {
+                self.steps += 1;
+                Step::Generate(GenerateStep::new(self.cfg, instruction))
+            }
+            None => Step::Done,
+        }
+    }
+
+    fn peek(&self, _session: &Session, n: usize) -> Vec<GenerateStep> {
+        (0..n)
+            .filter_map(|j| self.instruction_at(self.steps + j))
+            .map(|instruction| GenerateStep::new(self.cfg, instruction))
+            .collect()
+    }
+}
+
 impl Method for EvoEngineer {
     fn name(&self) -> String {
         match self.variant {
@@ -55,37 +114,18 @@ impl Method for EvoEngineer {
         }
     }
 
-    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
-        let name = self.name();
-        let cfg = self.config();
-        let mut session = Session::new(ctx, &name);
-
-        match self.variant {
-            EvoVariant::Free | EvoVariant::Insight => {
-                let mut pop = SingleBest::new();
-                session.bootstrap(&mut pop);
-                while session.trial(&cfg, &mut pop, IMPROVE, None, None)?.is_some() {}
-            }
-            EvoVariant::Full => {
-                let mut pop = Elite::new(4);
-                session.bootstrap(&mut pop);
-                // Initialization: 5 from-scratch proposals (§A.4).
-                for _ in 0..5 {
-                    if session.trial(&cfg, &mut pop, INIT, None, None)?.is_none() {
-                        break;
-                    }
-                }
-                // 10 generations × 4 offspring = 40 trials.
-                'gens: for _gen in 0..10 {
-                    for _off in 0..4 {
-                        if session.trial(&cfg, &mut pop, IMPROVE, None, None)?.is_none() {
-                            break 'gens;
-                        }
-                    }
-                }
-            }
-        }
-        Ok(session.finish(&name))
+    fn start(&self, _ctx: &RunCtx) -> (Box<dyn Population>, Box<dyn MethodState>) {
+        let pop: Box<dyn Population> = match self.variant {
+            EvoVariant::Free | EvoVariant::Insight => Box::new(SingleBest::new()),
+            EvoVariant::Full => Box::new(Elite::new(4)),
+        };
+        let state = EvoState {
+            variant: self.variant,
+            cfg: self.config(),
+            seeded: false,
+            steps: 0,
+        };
+        (pop, Box::new(state))
     }
 }
 

@@ -5,10 +5,11 @@
 //! "best-shot" prompting style of the original system, which is also
 //! the core technique behind AlphaEvolve.
 
-use crate::population::Islands;
+use crate::population::{Islands, Population};
 use crate::traverse::GuidanceConfig;
 
-use super::common::{KernelRunRecord, RunCtx, Session};
+use super::common::{baseline_src, RunCtx, Session};
+use super::engine::{GenerateStep, MethodState, Step};
 use super::Method;
 
 pub struct FunSearch;
@@ -23,19 +24,40 @@ impl FunSearch {
 const IMPROVE: &str = "Here are prior kernel versions ordered by quality. Write an improved \
 next version of the kernel.";
 
+/// Bootstrap, then sample until the budget is exhausted. The constant
+/// instruction makes `peek` exact; prompts still change as islands
+/// fill, so speculative prefetch validates per-trial (module docs of
+/// [`super::engine`]).
+struct FunSearchState {
+    seeded: bool,
+}
+
+impl MethodState for FunSearchState {
+    fn next(&mut self, session: &Session) -> Step {
+        if !self.seeded {
+            self.seeded = true;
+            return Step::Evaluate(baseline_src(session.ctx));
+        }
+        if session.budget_left() == 0 {
+            return Step::Done;
+        }
+        Step::Generate(GenerateStep::new(GuidanceConfig::funsearch(), IMPROVE))
+    }
+
+    fn peek(&self, _session: &Session, n: usize) -> Vec<GenerateStep> {
+        (0..n)
+            .map(|_| GenerateStep::new(GuidanceConfig::funsearch(), IMPROVE))
+            .collect()
+    }
+}
+
 impl Method for FunSearch {
     fn name(&self) -> String {
         "FunSearch".into()
     }
 
-    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
-        let name = self.name();
-        let cfg = GuidanceConfig::funsearch();
-        let mut session = Session::new(ctx, &name);
-        let mut pop = Islands::funsearch();
-        session.bootstrap(&mut pop);
-        while session.trial(&cfg, &mut pop, IMPROVE, None, None)?.is_some() {}
-        Ok(session.finish(&name))
+    fn start(&self, _ctx: &RunCtx) -> (Box<dyn Population>, Box<dyn MethodState>) {
+        (Box::new(Islands::funsearch()), Box::new(FunSearchState { seeded: false }))
     }
 }
 

@@ -7,23 +7,44 @@
 
 pub mod aicuda;
 pub mod common;
+pub mod engine;
 pub mod eoh;
 pub mod evoengineer;
 pub mod funsearch;
 
 pub use aicuda::AiCudaEngineer;
-pub use common::{Archive, ArchiveEntry, KernelRunRecord, RepairPolicy, RunCtx, Session};
+pub use common::{baseline_src, Archive, ArchiveEntry, KernelRunRecord, RepairPolicy, RunCtx, Session};
+pub use engine::{
+    EngineOpts, EventSink, GenerateStep, Interrupted, JournalSink, MethodState, MetricsSink,
+    ProgressSink, Step, TrialGate,
+};
 pub use eoh::Eoh;
 pub use evoengineer::{EvoEngineer, EvoVariant};
 pub use funsearch::FunSearch;
 
-/// A kernel-optimization method: consumes a 45-trial budget on one op
-/// and reports the run record. `Err` only when the generation backend
-/// fails mid-run (HTTP failure after retries, transcript miss under
-/// replay); the sim backend never errors for known models.
+use crate::population::Population;
+
+/// A kernel-optimization method, as a resumable state machine: `start`
+/// produces the population strategy and the per-run [`MethodState`]
+/// that [`engine::drive`] steps through one trial at a time (DESIGN.md
+/// §13). The provided `run` drives the machine to completion with
+/// default engine options — the pre-redesign blocking behaviour.
+/// `Err` only when the generation backend fails mid-run (HTTP failure
+/// after retries, transcript miss under replay); the sim backend never
+/// errors for known models.
 pub trait Method: Send + Sync {
     fn name(&self) -> String;
-    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord>;
+
+    /// Population strategy + state machine for one
+    /// (method, model, op, seed) run.
+    fn start(&self, ctx: &RunCtx) -> (Box<dyn Population>, Box<dyn MethodState>);
+
+    /// Consume the trial budget on one op and report the run record
+    /// (no event sinks, no prefetch).
+    fn run(&self, ctx: &RunCtx) -> crate::Result<KernelRunRecord> {
+        let (pop, state) = self.start(ctx);
+        engine::drive_parts(&self.name(), pop, state, ctx, &EngineOpts::default())
+    }
 }
 
 /// All six methods in the paper's presentation order.

@@ -98,6 +98,108 @@ pub fn table4(records: &[KernelRunRecord]) -> BTreeMap<GroupKey, Vec<Table4Cell>
     out
 }
 
+/// Aggregate view of a trial-event stream (DESIGN.md §13): what the
+/// engine's `MetricsSink` accumulates live and `repro report events`
+/// re-derives from an `events.jsonl` journal. Everything here is
+/// fold-order-independent, so concurrent campaign workers interleaving
+/// their cells' events produce the same stats as a serial sweep.
+#[derive(Debug, Clone, Default)]
+pub struct EventStats {
+    pub runs_started: usize,
+    pub runs_finished: usize,
+    /// Evaluated trial groups.
+    pub groups: usize,
+    /// Terminal outcome counts by label ("ok", "compile_fail", …).
+    pub outcomes: BTreeMap<String, usize>,
+    /// Initial stage-0 verdicts that failed.
+    pub guard_failed: usize,
+    pub repair_attempts: usize,
+    /// Repair attempts whose mended text passed the guard.
+    pub repairs_mended: usize,
+    pub new_bests: usize,
+    pub budget_exhausted: usize,
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+    /// Best speedup any run reported at finish.
+    pub best_speedup: f64,
+    pub runs_with_valid: usize,
+}
+
+impl EventStats {
+    /// Fold one event into the aggregate.
+    pub fn fold(&mut self, ev: &crate::store::TrialEvent) {
+        use crate::store::TrialEventKind as K;
+        match &ev.kind {
+            K::RunStarted { .. } => self.runs_started += 1,
+            K::TrialStarted { .. } => {}
+            K::GuardVerdict { pass, .. } => {
+                if !pass {
+                    self.guard_failed += 1;
+                }
+            }
+            K::RepairAttempt { mended, .. } => {
+                self.repair_attempts += 1;
+                if *mended {
+                    self.repairs_mended += 1;
+                }
+            }
+            K::EvalOutcome { outcome, prompt_tokens, completion_tokens, .. } => {
+                self.groups += 1;
+                *self.outcomes.entry(outcome.clone()).or_insert(0) += 1;
+                self.prompt_tokens += prompt_tokens;
+                self.completion_tokens += completion_tokens;
+            }
+            K::NewBest { .. } => self.new_bests += 1,
+            K::BudgetExhausted { .. } => self.budget_exhausted += 1,
+            K::RunFinished { best_speedup, any_valid, .. } => {
+                self.runs_finished += 1;
+                if *any_valid {
+                    self.runs_with_valid += 1;
+                }
+                if *best_speedup > self.best_speedup {
+                    self.best_speedup = *best_speedup;
+                }
+            }
+        }
+    }
+
+    pub fn from_events(events: &[crate::store::TrialEvent]) -> Self {
+        let mut stats = Self::default();
+        for ev in events {
+            stats.fold(ev);
+        }
+        stats
+    }
+}
+
+/// Render an [`EventStats`] aggregate as the `report events` table.
+pub fn events_table(stats: &EventStats) -> String {
+    let mut out = String::new();
+    out.push_str("TRIAL-EVENT SUMMARY (DESIGN.md §13)\n");
+    out.push_str(&format!(
+        "runs: {} started, {} finished ({} with a valid kernel), {} exhausted their budget\n",
+        stats.runs_started, stats.runs_finished, stats.runs_with_valid, stats.budget_exhausted
+    ));
+    out.push_str(&format!(
+        "trial groups: {} evaluated, {} new bests, best speedup {:.2}x\n",
+        stats.groups, stats.new_bests, stats.best_speedup
+    ));
+    out.push_str(&format!(
+        "stage-0: {} initial guard failures, {} repair attempts ({} mended)\n",
+        stats.guard_failed, stats.repair_attempts, stats.repairs_mended
+    ));
+    out.push_str(&format!(
+        "tokens: {} prompt + {} completion\n",
+        stats.prompt_tokens, stats.completion_tokens
+    ));
+    out.push_str("outcomes:\n");
+    for (label, count) in &stats.outcomes {
+        let pct = 100.0 * *count as f64 / stats.groups.max(1) as f64;
+        out.push_str(&format!("  {label:<16} {count:>8}  ({pct:>5.1}%)\n"));
+    }
+    out
+}
+
 /// One cell of the stage-aware validity breakdown (DESIGN.md §11): the
 /// five-way split of trial outcomes, as percentages of the evaluated
 /// trial groups (`trials - repair_attempts` — each group ends in

@@ -6,7 +6,7 @@
 use super::{Candidate, Population};
 use crate::util::Rng;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Elite {
     capacity: usize,
     elites: Vec<Candidate>, // sorted best-first
@@ -67,6 +67,10 @@ impl Population for Elite {
 
     fn name(&self) -> &'static str {
         "elite"
+    }
+
+    fn snapshot(&self) -> Box<dyn Population> {
+        Box::new(self.clone())
     }
 }
 

@@ -9,7 +9,7 @@ use super::elite::Elite;
 use super::{Candidate, Population};
 use crate::util::Rng;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Islands {
     islands: Vec<Elite>,
     /// Which island receives the next insert / supplies the next parent.
@@ -102,6 +102,10 @@ impl Population for Islands {
 
     fn name(&self) -> &'static str {
         "islands"
+    }
+
+    fn snapshot(&self) -> Box<dyn Population> {
+        Box::new(self.clone())
     }
 }
 

@@ -79,6 +79,12 @@ pub trait Population: Send {
 
     /// Strategy label (for reports).
     fn name(&self) -> &'static str;
+
+    /// Deep copy of the current state. The trial engine's speculative
+    /// prefetch assembles *hypothetical* future prompts on a snapshot
+    /// so stateful strategies (the island cursor) are never mutated
+    /// off the real trial sequence.
+    fn snapshot(&self) -> Box<dyn Population>;
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@
 use super::{Candidate, Population};
 use crate::util::Rng;
 
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct SingleBest {
     best: Option<Candidate>,
     last: Option<Candidate>,
@@ -49,6 +49,10 @@ impl Population for SingleBest {
 
     fn name(&self) -> &'static str {
         "single-best"
+    }
+
+    fn snapshot(&self) -> Box<dyn Population> {
+        Box::new(self.clone())
     }
 }
 

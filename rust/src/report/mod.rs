@@ -17,6 +17,12 @@ fn hr(width: usize) -> String {
     "-".repeat(width)
 }
 
+/// `report events` — aggregate a trial-event journal (`events.jsonl`,
+/// DESIGN.md §13) into the engine's summary table.
+pub fn events(events: &[crate::store::TrialEvent]) -> String {
+    metrics::events_table(&metrics::EventStats::from_events(events))
+}
+
 /// Table 4 — overall results: speedup count, median speedup rate,
 /// compilation success and functional correctness per category.
 pub fn table4(records: &[KernelRunRecord]) -> String {

@@ -1,0 +1,466 @@
+//! Trial-event journal (DESIGN.md §13).
+//!
+//! The trial engine ([`crate::methods::engine`]) emits one structured
+//! [`TrialEvent`] per observable step of every optimization run: run
+//! started, trial started, stage-0 guard verdict, repair attempts, the
+//! evaluation outcome (with per-trial token usage and the raw-emission
+//! hash), new-best improvements, budget exhaustion, run finished. The
+//! `JournalSink` appends them here as one JSON object per line —
+//! by default `store/events.jsonl` next to the campaign output — so a
+//! sweep's complete per-trial history survives the process and can be:
+//!
+//! * tailed live (`tail -f`) or replayed by `repro report events`;
+//! * scanned on `campaign --resume` to find half-finished cells
+//!   ([`completed_trials`]) and to *verify* that the resumed leg's
+//!   replayed trials re-derive byte-identical emissions (the engine
+//!   warns on any `src_hash` divergence — journal drift would mean the
+//!   bit-identical-resume contract was violated);
+//! * uploaded as a CI artifact next to the report and cache stats.
+//!
+//! Durability matches the eval cache and transcript journal: one
+//! flushed line per event, a torn final line from a killed process is
+//! truncated on reopen, and corrupt interior lines are skipped with a
+//! warning. Format drift is guarded by a bundled fixture journal
+//! replayed in the test suite (`tests/trial_engine.rs`).
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{self, Json};
+use crate::{eyre, Result, WrapErr as _};
+
+/// Journal format version (the `v` field of every line).
+pub const EVENT_FORMAT: u64 = 1;
+
+/// A cell identity: the (method, model, op, seed) grid point the event
+/// belongs to.
+pub type CellKey = (String, String, String, u64);
+
+/// One structured engine event, tagged with its cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialEvent {
+    pub method: String,
+    pub model: String,
+    pub op: String,
+    pub seed: u64,
+    pub kind: TrialEventKind,
+}
+
+impl TrialEvent {
+    pub fn cell(&self) -> CellKey {
+        (self.method.clone(), self.model.clone(), self.op.clone(), self.seed)
+    }
+}
+
+/// The event taxonomy (DESIGN.md §13). Every variant is cheap, flat
+/// data — no candidate sources, only hashes — so journaling cost stays
+/// negligible next to a provider call or a PJRT execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrialEventKind {
+    /// A (method, model, op, seed) run began under `budget` trials.
+    RunStarted { budget: usize, provider: String },
+    /// Trial group `trial` began (the generate call is about to run).
+    TrialStarted { trial: usize },
+    /// Stage-0 guard verdict on the initial emission of `trial`.
+    GuardVerdict { trial: usize, pass: bool, diagnostics: usize },
+    /// One LLM repair attempt within `trial` (consumed a budget unit);
+    /// `mended` is the guard verdict on the repaired text.
+    RepairAttempt { trial: usize, attempt: usize, mended: bool },
+    /// Terminal evaluation outcome of trial group `trial`. `speedup`
+    /// is the noise-free speedup when valid, 0 otherwise; the token
+    /// counts cover the whole group (generate + repairs); `src_hash`
+    /// is a truncated SHA-256 of the raw evaluated emission (the
+    /// resume-verification identity).
+    EvalOutcome {
+        trial: usize,
+        outcome: String,
+        speedup: f64,
+        prompt_tokens: u64,
+        completion_tokens: u64,
+        src_hash: String,
+    },
+    /// The trial produced a new best valid candidate.
+    NewBest { trial: usize, speedup: f64 },
+    /// The trial budget hit zero.
+    BudgetExhausted { trials: usize },
+    /// The run completed and its record was produced.
+    RunFinished { trials: usize, best_speedup: f64, any_valid: bool },
+}
+
+impl TrialEventKind {
+    /// Stable journal label of the variant.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrialEventKind::RunStarted { .. } => "run_started",
+            TrialEventKind::TrialStarted { .. } => "trial_started",
+            TrialEventKind::GuardVerdict { .. } => "guard_verdict",
+            TrialEventKind::RepairAttempt { .. } => "repair_attempt",
+            TrialEventKind::EvalOutcome { .. } => "eval_outcome",
+            TrialEventKind::NewBest { .. } => "new_best",
+            TrialEventKind::BudgetExhausted { .. } => "budget_exhausted",
+            TrialEventKind::RunFinished { .. } => "run_finished",
+        }
+    }
+}
+
+/// Serialize one event to its journal line (flat JSON object).
+pub fn event_to_json(ev: &TrialEvent) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("type", Json::Str("event".into())),
+        ("v", Json::Num(EVENT_FORMAT as f64)),
+        ("method", Json::Str(ev.method.clone())),
+        ("model", Json::Str(ev.model.clone())),
+        ("op", Json::Str(ev.op.clone())),
+        ("seed", Json::Num(ev.seed as f64)),
+        ("kind", Json::Str(ev.kind.label().into())),
+    ];
+    match &ev.kind {
+        TrialEventKind::RunStarted { budget, provider } => {
+            pairs.push(("budget", Json::Num(*budget as f64)));
+            pairs.push(("provider", Json::Str(provider.clone())));
+        }
+        TrialEventKind::TrialStarted { trial } => {
+            pairs.push(("trial", Json::Num(*trial as f64)));
+        }
+        TrialEventKind::GuardVerdict { trial, pass, diagnostics } => {
+            pairs.push(("trial", Json::Num(*trial as f64)));
+            pairs.push(("pass", Json::Bool(*pass)));
+            pairs.push(("diagnostics", Json::Num(*diagnostics as f64)));
+        }
+        TrialEventKind::RepairAttempt { trial, attempt, mended } => {
+            pairs.push(("trial", Json::Num(*trial as f64)));
+            pairs.push(("attempt", Json::Num(*attempt as f64)));
+            pairs.push(("mended", Json::Bool(*mended)));
+        }
+        TrialEventKind::EvalOutcome {
+            trial,
+            outcome,
+            speedup,
+            prompt_tokens,
+            completion_tokens,
+            src_hash,
+        } => {
+            pairs.push(("trial", Json::Num(*trial as f64)));
+            pairs.push(("outcome", Json::Str(outcome.clone())));
+            pairs.push(("speedup", Json::Num(*speedup)));
+            pairs.push(("prompt_tokens", Json::Num(*prompt_tokens as f64)));
+            pairs.push(("completion_tokens", Json::Num(*completion_tokens as f64)));
+            pairs.push(("src_hash", Json::Str(src_hash.clone())));
+        }
+        TrialEventKind::NewBest { trial, speedup } => {
+            pairs.push(("trial", Json::Num(*trial as f64)));
+            pairs.push(("speedup", Json::Num(*speedup)));
+        }
+        TrialEventKind::BudgetExhausted { trials } => {
+            pairs.push(("trials", Json::Num(*trials as f64)));
+        }
+        TrialEventKind::RunFinished { trials, best_speedup, any_valid } => {
+            pairs.push(("trials", Json::Num(*trials as f64)));
+            pairs.push(("best_speedup", Json::Num(*best_speedup)));
+            pairs.push(("any_valid", Json::Bool(*any_valid)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(String::from)
+        .ok_or_else(|| eyre!("event missing string field `{key}`"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| eyre!("event missing numeric field `{key}`"))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(|x| x.as_u64())
+        .ok_or_else(|| eyre!("event missing numeric field `{key}`"))
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| eyre!("event missing numeric field `{key}`"))
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool> {
+    v.get(key)
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| eyre!("event missing bool field `{key}`"))
+}
+
+/// Parse one journal line back into a [`TrialEvent`].
+pub fn event_from_json(v: &Json) -> Result<TrialEvent> {
+    if v.get("type").and_then(|t| t.as_str()) != Some("event") {
+        return Err(eyre!("not an event line"));
+    }
+    let kind = match get_str(v, "kind")?.as_str() {
+        "run_started" => TrialEventKind::RunStarted {
+            budget: get_usize(v, "budget")?,
+            provider: get_str(v, "provider")?,
+        },
+        "trial_started" => TrialEventKind::TrialStarted { trial: get_usize(v, "trial")? },
+        "guard_verdict" => TrialEventKind::GuardVerdict {
+            trial: get_usize(v, "trial")?,
+            pass: get_bool(v, "pass")?,
+            diagnostics: get_usize(v, "diagnostics")?,
+        },
+        "repair_attempt" => TrialEventKind::RepairAttempt {
+            trial: get_usize(v, "trial")?,
+            attempt: get_usize(v, "attempt")?,
+            mended: get_bool(v, "mended")?,
+        },
+        "eval_outcome" => TrialEventKind::EvalOutcome {
+            trial: get_usize(v, "trial")?,
+            outcome: get_str(v, "outcome")?,
+            speedup: get_f64(v, "speedup")?,
+            prompt_tokens: get_u64(v, "prompt_tokens")?,
+            completion_tokens: get_u64(v, "completion_tokens")?,
+            src_hash: get_str(v, "src_hash")?,
+        },
+        "new_best" => TrialEventKind::NewBest {
+            trial: get_usize(v, "trial")?,
+            speedup: get_f64(v, "speedup")?,
+        },
+        "budget_exhausted" => {
+            TrialEventKind::BudgetExhausted { trials: get_usize(v, "trials")? }
+        }
+        "run_finished" => TrialEventKind::RunFinished {
+            trials: get_usize(v, "trials")?,
+            best_speedup: get_f64(v, "best_speedup")?,
+            any_valid: get_bool(v, "any_valid")?,
+        },
+        other => return Err(eyre!("unknown event kind `{other}`")),
+    };
+    Ok(TrialEvent {
+        method: get_str(v, "method")?,
+        model: get_str(v, "model")?,
+        op: get_str(v, "op")?,
+        seed: get_u64(v, "seed")?,
+        kind,
+    })
+}
+
+/// Append-only JSONL event journal, shared by every campaign worker.
+pub struct EventJournal {
+    path: PathBuf,
+    writer: Mutex<std::fs::File>,
+}
+
+impl EventJournal {
+    /// Open the journal for append, repairing a torn tail first.
+    pub fn open(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        Self::open_inner(path.as_ref(), false)
+    }
+
+    /// Start the journal over (a fresh, non-resumed campaign must not
+    /// accumulate events from an older sweep).
+    pub fn create(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        Self::open_inner(path.as_ref(), true)
+    }
+
+    fn open_inner(path: &Path, truncate: bool) -> Result<Arc<Self>> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).context("creating event-journal dir")?;
+            }
+        }
+        if truncate {
+            std::fs::File::create(path).context("truncating event journal")?;
+        } else {
+            let torn =
+                crate::util::truncate_torn_tail(path).context("repairing event-journal tail")?;
+            if torn > 0 {
+                eprintln!(
+                    "warning: event journal {}: truncated {torn} bytes of torn final line",
+                    path.display()
+                );
+            }
+        }
+        let writer = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .context("opening event journal for append")?;
+        Ok(Arc::new(Self { path: path.to_path_buf(), writer: Mutex::new(writer) }))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one event (one flushed line).
+    pub fn append(&self, ev: &TrialEvent) -> Result<()> {
+        let line = event_to_json(ev).to_string();
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(line.as_bytes())?;
+        w.write_all(b"\n")?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load every parseable event from a journal file; corrupt lines
+    /// are skipped with a warning (advisory data, never fatal).
+    pub fn load(path: impl AsRef<Path>) -> Result<Vec<TrialEvent>> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening event journal {}", path.display()))?;
+        let mut out = Vec::new();
+        for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = json::parse(&line)
+                .map_err(|e| eyre!("{e}"))
+                .and_then(|v| event_from_json(&v));
+            match parsed {
+                Ok(ev) => out.push(ev),
+                Err(e) => eprintln!(
+                    "warning: event journal {}: skipping bad line {}: {e}",
+                    path.display(),
+                    i + 1
+                ),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Per-cell replay index for trial-granular resume: every *unfinished*
+/// cell the journal has seen, mapped to its completed trial groups as
+/// `(trial, src_hash)` pairs in journal order. A cell killed before
+/// its first evaluation still gets an (empty) entry — the resumed leg
+/// must know its `RunStarted` is already journaled. Cells that reached
+/// `RunFinished` are omitted — the cell checkpoint journal already
+/// covers them, and their records are merged whole on resume.
+pub fn completed_trials(events: &[TrialEvent]) -> HashMap<CellKey, Vec<(usize, String)>> {
+    let mut map: HashMap<CellKey, Vec<(usize, String)>> = HashMap::new();
+    let mut finished: std::collections::HashSet<CellKey> = std::collections::HashSet::new();
+    for ev in events {
+        match &ev.kind {
+            TrialEventKind::RunStarted { .. } => {
+                map.entry(ev.cell()).or_default();
+            }
+            TrialEventKind::EvalOutcome { trial, src_hash, .. } => {
+                map.entry(ev.cell()).or_default().push((*trial, src_hash.clone()));
+            }
+            TrialEventKind::RunFinished { .. } => {
+                finished.insert(ev.cell());
+            }
+            _ => {}
+        }
+    }
+    map.retain(|cell, _| !finished.contains(cell));
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("evo_events_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join("events.jsonl")
+    }
+
+    fn ev(kind: TrialEventKind) -> TrialEvent {
+        TrialEvent {
+            method: "FunSearch".into(),
+            model: "GPT-4.1".into(),
+            op: "relu_64".into(),
+            seed: 1,
+            kind,
+        }
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        let kinds = vec![
+            TrialEventKind::RunStarted { budget: 45, provider: "sim".into() },
+            TrialEventKind::TrialStarted { trial: 3 },
+            TrialEventKind::GuardVerdict { trial: 3, pass: false, diagnostics: 2 },
+            TrialEventKind::RepairAttempt { trial: 3, attempt: 0, mended: true },
+            TrialEventKind::EvalOutcome {
+                trial: 3,
+                outcome: "ok".into(),
+                speedup: 1.75,
+                prompt_tokens: 120,
+                completion_tokens: 40,
+                src_hash: "deadbeefdeadbeef".into(),
+            },
+            TrialEventKind::NewBest { trial: 3, speedup: 1.75 },
+            TrialEventKind::BudgetExhausted { trials: 45 },
+            TrialEventKind::RunFinished { trials: 45, best_speedup: 1.75, any_valid: true },
+        ];
+        for kind in kinds {
+            let event = ev(kind);
+            let line = event_to_json(&event).to_string();
+            let back = event_from_json(&json::parse(&line).unwrap()).unwrap();
+            assert_eq!(event, back, "{line}");
+        }
+    }
+
+    #[test]
+    fn journal_roundtrip_and_torn_tail() {
+        let path = tmpfile("rt");
+        std::fs::remove_file(&path).ok();
+        {
+            let j = EventJournal::create(&path).unwrap();
+            j.append(&ev(TrialEventKind::TrialStarted { trial: 0 })).unwrap();
+            j.append(&ev(TrialEventKind::BudgetExhausted { trials: 4 })).unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"type\":\"event\",\"kind\":\"trial").unwrap();
+        }
+        // Reopen repairs the torn tail; load sees the two good events.
+        let _ = EventJournal::open(&path).unwrap();
+        let events = EventJournal::load(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, TrialEventKind::TrialStarted { trial: 0 });
+        // create() starts over.
+        let _ = EventJournal::create(&path).unwrap();
+        assert_eq!(EventJournal::load(&path).unwrap().len(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn completed_trials_omits_finished_cells() {
+        let eo = |trial: usize, op: &str| TrialEvent {
+            method: "FunSearch".into(),
+            model: "GPT-4.1".into(),
+            op: op.into(),
+            seed: 0,
+            kind: TrialEventKind::EvalOutcome {
+                trial,
+                outcome: "ok".into(),
+                speedup: 1.0,
+                prompt_tokens: 1,
+                completion_tokens: 1,
+                src_hash: format!("h{trial}"),
+            },
+        };
+        let fin = |op: &str| TrialEvent {
+            method: "FunSearch".into(),
+            model: "GPT-4.1".into(),
+            op: op.into(),
+            seed: 0,
+            kind: TrialEventKind::RunFinished { trials: 2, best_speedup: 1.0, any_valid: false },
+        };
+        let events = vec![eo(0, "a"), eo(1, "a"), fin("a"), eo(0, "b")];
+        let map = completed_trials(&events);
+        assert_eq!(map.len(), 1, "finished cell `a` must be omitted");
+        let key = ("FunSearch".into(), "GPT-4.1".into(), "b".into(), 0u64);
+        assert_eq!(map[&key], vec![(0usize, "h0".to_string())]);
+    }
+}

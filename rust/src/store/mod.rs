@@ -31,9 +31,11 @@
 //! skips (with a warning). `cache gc` compacts duplicate keys and
 //! folds the per-session `stats` trailer lines into one.
 
+pub mod events;
 pub mod hash;
 pub mod transcript;
 
+pub use events::{EventJournal, TrialEvent, TrialEventKind};
 pub use hash::{key_for_source, sha256_hex, EvalKey};
 pub use transcript::{TranscriptEntry, TranscriptStore};
 

@@ -268,6 +268,38 @@ fn record_then_replay_campaign_is_bit_identical_with_zero_live_generation() {
 }
 
 #[test]
+fn engine_sinks_and_prefetch_do_not_perturb_campaign_identity() {
+    // The trial engine (DESIGN.md §13) now drives every campaign cell.
+    // Attaching an event journal and enabling speculative prefetch are
+    // pure observers/accelerators: records must stay byte-identical to
+    // the plain sweep (the golden sim-identity above therefore extends
+    // through the engine unchanged).
+    let dir = tmpdir("engine");
+    let base = CampaignConfig {
+        methods: vec!["evoengineer-free".into(), "eoh".into()],
+        models: vec!["claude".into()],
+        seeds: vec![0],
+        op_filter: "softmax_64".into(),
+        budget: 6,
+        quiet: true,
+        ..CampaignConfig::default()
+    };
+    let plain = campaign::run(&base, evaluator()).unwrap();
+    let instrumented = CampaignConfig {
+        events: Some(dir.join("events.jsonl")),
+        prefetch: 3,
+        ..base.clone()
+    };
+    let observed = campaign::run(&instrumented, evaluator()).unwrap();
+    assert_eq!(plain.len(), observed.len());
+    for (a, b) in plain.iter().zip(&observed) {
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+    assert!(dir.join("events.jsonl").exists());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn records_carry_the_provider_label_through_json() {
     let cfg = CampaignConfig {
         methods: vec!["funsearch".into()],

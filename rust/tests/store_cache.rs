@@ -181,6 +181,9 @@ fn killed_campaign_resumes_to_identical_report() {
     assert_eq!(full.len(), 8);
 
     // Leg 1: same sweep, checkpointed + cached, killed after 3 cells.
+    // --stop-after is claim-gated, so exactly 3 cells complete — the
+    // old completion-count check raced with in-flight workers and
+    // could let extra cells slip through.
     let leg1_cfg = CampaignConfig {
         checkpoint: Some(checkpoint.clone()),
         stop_after: 3,
@@ -189,7 +192,7 @@ fn killed_campaign_resumes_to_identical_report() {
     };
     let ev1 = evaluator().with_store(EvalStore::open(&cache).unwrap());
     let partial = campaign::run(&leg1_cfg, ev1).unwrap();
-    assert!(partial.len() >= 3 && partial.len() < full.len(), "{}", partial.len());
+    assert_eq!(partial.len(), 3, "claim-gated stop_after must complete exactly 3 cells");
 
     // Harden the kill simulation: a real SIGKILL can tear the final
     // journal line mid-write. Resume must repair, not trip over it.

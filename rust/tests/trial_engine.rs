@@ -1,0 +1,924 @@
+//! Trial-engine conformance suite (DESIGN.md §13).
+//!
+//! Four contracts:
+//!
+//! 1. **Golden identity vs the pre-redesign monolith.** `mod legacy`
+//!    below is a verbatim reimplementation of the blocking
+//!    `Method::run` era — the old `Session::trial` body and all six
+//!    method loops, exactly as they shipped — built purely on public
+//!    APIs. Every method's engine-driven record must be byte-identical
+//!    to the legacy record for the same seeds (same RNG derivation
+//!    order, same emissions, same token accounting, same trajectory).
+//! 2. **Prefetch identity.** Speculative generation prefetch changes
+//!    wall-clock behaviour only: records with `prefetch: N` are
+//!    byte-identical to `prefetch: 0`, including when repairs shift
+//!    trial indices and force mis-speculation.
+//! 3. **Trial-granular resume.** A campaign killed *mid-cell* by the
+//!    `stop_after_trials` gate resumes (eval cache + transcript reuse)
+//!    to records and reports byte-identical to an uninterrupted run —
+//!    across both the sim and replay providers.
+//! 4. **Event-journal format.** Events round-trip through
+//!    `events.jsonl`, a live `MetricsSink` agrees with a journal
+//!    re-fold, and a bundled fixture journal guards the line format
+//!    against drift.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::evals::Evaluator;
+use evoengineer::llm::{ProviderSpec, SimProvider, MODELS};
+use evoengineer::methods::engine::{self, EngineOpts};
+use evoengineer::methods::{self, Archive, JournalSink, MetricsSink, RepairPolicy, RunCtx};
+use evoengineer::metrics::EventStats;
+use evoengineer::report;
+use evoengineer::runtime::Runtime;
+use evoengineer::store::events::{self, EventJournal};
+use evoengineer::store::EvalStore;
+use evoengineer::tasks::TaskRegistry;
+
+fn registry() -> Arc<TaskRegistry> {
+    Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    )
+}
+
+fn evaluator() -> Evaluator {
+    Evaluator::new(registry(), Runtime::new().unwrap())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "evo_engine_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .subsec_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A verbatim reimplementation of the pre-redesign blocking pipeline:
+/// the monolithic `Session` (guidance assembly → provider call →
+/// guard/repair → evaluation → bookkeeping in one method) and the six
+/// method loops that drove it. This is the golden reference the
+/// event-driven engine must match byte-for-byte.
+mod legacy {
+    use evoengineer::costmodel::{baseline_schedule, price};
+    use evoengineer::dsl;
+    use evoengineer::evals::EvalOutcome;
+    use evoengineer::llm::GenerationRequest;
+    use evoengineer::methods::{ArchiveEntry, KernelRunRecord, RepairPolicy, RunCtx};
+    use evoengineer::population::{Candidate, Elite, Islands, Population, SingleBest};
+    use evoengineer::traverse::prompt::{profiling_line, render};
+    use evoengineer::traverse::{Guidance, GuidanceConfig, InsightRecord, PromptStyle};
+    use evoengineer::util::Rng;
+
+    pub struct Session<'a> {
+        ctx: &'a RunCtx<'a>,
+        rng: Rng,
+        insights: Vec<InsightRecord>,
+        prompt_tokens: u64,
+        completion_tokens: u64,
+        trials_done: usize,
+        compiled: usize,
+        correct: usize,
+        guard_rejected: usize,
+        repaired: usize,
+        repair_attempts: usize,
+        best: Option<Candidate>,
+        best_pt: f64,
+        trajectory: Vec<f64>,
+    }
+
+    impl<'a> Session<'a> {
+        pub fn new(ctx: &'a RunCtx<'a>, method_name: &str) -> Self {
+            let rng = Rng::new(ctx.seed).derive(&format!(
+                "{method_name}/{}/{}/{}",
+                ctx.model.name, ctx.task.name, ctx.seed
+            ));
+            Session {
+                ctx,
+                rng,
+                insights: Vec::new(),
+                prompt_tokens: 0,
+                completion_tokens: 0,
+                trials_done: 0,
+                compiled: 0,
+                correct: 0,
+                guard_rejected: 0,
+                repaired: 0,
+                repair_attempts: 0,
+                best: None,
+                best_pt: 0.0,
+                trajectory: Vec::new(),
+            }
+        }
+
+        fn budget_left(&self) -> usize {
+            self.ctx.budget.saturating_sub(self.trials_done)
+        }
+
+        fn bootstrap(&mut self, pop: &mut dyn Population) {
+            let spec = dsl::KernelSpec {
+                op: self.ctx.task.name.clone(),
+                semantics: "opt".into(),
+                schedule: baseline_schedule(self.ctx.task),
+            };
+            let src = dsl::print(&spec);
+            let mut rng = self.rng.derive("bootstrap");
+            let outcome = self.ctx.evaluator.evaluate_keyed(
+                &src,
+                self.ctx.task,
+                self.ctx.model.name,
+                &mut rng,
+            );
+            let cand = self.candidate_from(src, outcome, 0, None);
+            pop.insert(cand);
+        }
+
+        fn candidate_from(
+            &mut self,
+            src: String,
+            outcome: EvalOutcome,
+            trial: usize,
+            insight: Option<String>,
+        ) -> Candidate {
+            let spec = dsl::parse(&src).ok();
+            let (speedup, pt, true_speedup, true_pt) = match &outcome {
+                EvalOutcome::Ok(s) => {
+                    (s.speedup, s.pytorch_speedup, s.true_speedup, s.true_pytorch_speedup)
+                }
+                _ => (1.0, 0.0, 1.0, 0.0),
+            };
+            Candidate {
+                src,
+                spec,
+                compiled: outcome.compiled(),
+                correct: outcome.correct(),
+                speedup,
+                pytorch_speedup: pt,
+                true_speedup,
+                true_pytorch_speedup: true_pt,
+                insight,
+                trial,
+            }
+        }
+
+        fn top_insights(&self, k: usize) -> Vec<&InsightRecord> {
+            let mut v: Vec<&InsightRecord> = self.insights.iter().collect();
+            v.sort_by(|a, b| b.delta.total_cmp(&a.delta));
+            v.truncate(k);
+            v
+        }
+
+        fn trial(
+            &mut self,
+            cfg: &GuidanceConfig,
+            pop: &mut dyn Population,
+            instruction: &str,
+            parent_override: Option<Candidate>,
+            history_override: Option<Vec<Candidate>>,
+        ) -> evoengineer::Result<Option<Candidate>> {
+            if self.budget_left() == 0 {
+                return Ok(None);
+            }
+            let trial_idx = self.trials_done;
+            let mut trial_rng = self.rng.derive(&format!("trial/{trial_idx}"));
+
+            let parent = parent_override.or_else(|| pop.parent(&mut trial_rng));
+            let history: Vec<Candidate> = match history_override {
+                Some(h) => h,
+                None => pop.history(cfg.n_history),
+            };
+            let insights = self.top_insights(cfg.n_insights);
+            let profiling = if cfg.profiling {
+                parent.as_ref().and_then(|p| {
+                    p.spec.as_ref().map(|spec| {
+                        let t = price(&spec.schedule, self.ctx.task, &self.ctx.evaluator.gpu);
+                        profiling_line(&t)
+                    })
+                })
+            } else {
+                None
+            };
+            let baseline_us = self.ctx.evaluator.baseline_time(self.ctx.task) * 1e6;
+            let guidance = Guidance {
+                task: self.ctx.task,
+                baseline_us,
+                parent: parent.as_ref(),
+                history: history.iter().collect(),
+                insights,
+                profiling,
+                instruction: instruction.to_string(),
+            };
+
+            let prompt = render(cfg, &guidance);
+            let llm_seed = self.rng.derive_seed(&format!("llm/{trial_idx}"));
+            let req = GenerationRequest::generate(self.ctx.model.name, &prompt, llm_seed);
+            let resp = self.ctx.provider.call(&req)?;
+            self.prompt_tokens += resp.usage.prompt_tokens;
+            self.completion_tokens += resp.usage.completion_tokens;
+            self.trials_done += 1;
+
+            let mut text = resp.text;
+            let mut was_repaired = false;
+            let guard_report = match self.ctx.repair {
+                RepairPolicy::Off => None,
+                RepairPolicy::Diagnose => {
+                    Some(self.ctx.evaluator.guard_check(&text, self.ctx.task))
+                }
+                RepairPolicy::Repair { max_attempts } => {
+                    let mut report = self.ctx.evaluator.guard_check(&text, self.ctx.task);
+                    let initially_failed = !report.pass();
+                    let mut attempt = 0;
+                    while !report.pass() && attempt < max_attempts && self.budget_left() > 0 {
+                        let repair_seed =
+                            self.rng.derive_seed(&format!("repair/{trial_idx}/{attempt}"));
+                        let req = GenerationRequest::repair(
+                            self.ctx.model.name,
+                            &text,
+                            &report,
+                            repair_seed,
+                        );
+                        let fix = self.ctx.provider.call(&req)?;
+                        self.prompt_tokens += fix.usage.prompt_tokens;
+                        self.completion_tokens += fix.usage.completion_tokens;
+                        self.trials_done += 1;
+                        self.repair_attempts += 1;
+                        text = fix.text;
+                        report = self.ctx.evaluator.guard_check(&text, self.ctx.task);
+                        attempt += 1;
+                    }
+                    if initially_failed && report.pass() {
+                        was_repaired = true;
+                    }
+                    Some(report)
+                }
+            };
+
+            let mut eval_rng = self.rng.derive(&format!("eval/{trial_idx}"));
+            let outcome = match &guard_report {
+                Some(report) if !report.pass() => {
+                    self.guard_rejected += 1;
+                    self.ctx.evaluator.reject_stage0(
+                        &text,
+                        self.ctx.task,
+                        self.ctx.model.name,
+                        report,
+                    )
+                }
+                _ => self.ctx.evaluator.evaluate_keyed(
+                    &text,
+                    self.ctx.task,
+                    self.ctx.model.name,
+                    &mut eval_rng,
+                ),
+            };
+            if was_repaired {
+                self.repaired += 1;
+            }
+            if outcome.compiled() {
+                self.compiled += 1;
+            }
+            if outcome.correct() {
+                self.correct += 1;
+            }
+
+            let cand = self.candidate_from(text, outcome, trial_idx, Some(resp.insight.clone()));
+
+            let delta = if cand.valid() {
+                let parent_speed = parent.as_ref().filter(|p| p.valid()).map(|p| p.speedup);
+                match parent_speed {
+                    Some(ps) => cand.speedup - ps,
+                    None => cand.speedup - 1.0,
+                }
+            } else {
+                -0.30
+            };
+            self.insights.push(InsightRecord { text: resp.insight, delta });
+            if self.insights.len() > 128 {
+                self.insights.sort_by(|a, b| b.delta.total_cmp(&a.delta));
+                self.insights.truncate(64);
+            }
+
+            if cand.valid()
+                && self
+                    .best
+                    .as_ref()
+                    .map(|b| cand.speedup > b.speedup)
+                    .unwrap_or(true)
+            {
+                self.best = Some(cand.clone());
+            }
+            if cand.valid() {
+                self.best_pt = self.best_pt.max(cand.true_pytorch_speedup);
+            }
+            self.trajectory
+                .push(self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0));
+
+            pop.insert(cand.clone());
+            Ok(Some(cand))
+        }
+
+        fn finish(self, method_name: &str) -> KernelRunRecord {
+            if let Some(best) = &self.best {
+                self.ctx.archive.record(ArchiveEntry {
+                    op: self.ctx.task.name.clone(),
+                    family: self.ctx.task.family.clone(),
+                    src: best.src.clone(),
+                    speedup: best.true_speedup,
+                });
+            }
+            KernelRunRecord {
+                method: method_name.to_string(),
+                model: self.ctx.model.name.to_string(),
+                op: self.ctx.task.name.clone(),
+                category: self.ctx.task.category,
+                seed: self.ctx.seed,
+                trials: self.trials_done,
+                budget: self.ctx.budget,
+                compiled_trials: self.compiled,
+                correct_trials: self.correct,
+                guard_rejected_trials: self.guard_rejected,
+                repaired_trials: self.repaired,
+                repair_attempts: self.repair_attempts,
+                repair_policy: self.ctx.repair.label(),
+                provider: self.ctx.provider.label().to_string(),
+                best_speedup: self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0),
+                best_pytorch_speedup: self.best_pt,
+                any_valid: self.best.is_some(),
+                prompt_tokens: self.prompt_tokens,
+                completion_tokens: self.completion_tokens,
+                trajectory: self.trajectory,
+                best_src: self.best.map(|b| b.src),
+            }
+        }
+    }
+
+    // The instruction constants, verbatim from the pre-redesign
+    // method modules.
+    const EVO_IMPROVE: &str = "Improve the current kernel: propose a modified schedule that \
+reduces execution time while preserving exact output semantics.";
+    const EVO_INIT: &str = "Design a new kernel from scratch for this operation, optimized \
+for the target device.";
+    const FS_IMPROVE: &str = "Here are prior kernel versions ordered by quality. Write an \
+improved next version of the kernel.";
+    const E1: &str = "Design a new kernel from scratch for this operation. You may draw \
+inspiration from the historical solutions, but produce a structurally different schedule.";
+    const E2: &str = "Combine the historical solutions: crossover their schedule decisions \
+into a single kernel that inherits the best choices of each.";
+    const M1: &str = "Mutate the current kernel: change part of its schedule to explore a \
+neighbouring design.";
+    const M2: &str = "Tune the numeric parameters of the current kernel only (tile sizes, \
+unroll factor, block size, register budget); keep its structure fixed.";
+    const CONVERT: &str = "Convert the high-level operation description into an initial CUDA \
+kernel implementation. Correctness first; a plain schedule is acceptable.";
+    const TRANSLATE: &str = "Translate the kernel into an alternative implementation style \
+while preserving semantics.";
+    const OPTIMIZE: &str = "Optimize the kernel aggressively. Use the profiling data and the \
+correct kernels above; consider the ensemble of optimization directions and commit to the \
+fastest.";
+    const COMPOSE: &str = "The kernels above come from related operations in the archive. \
+Compose their optimization strategies into this operation's kernel.";
+    const CONVERT_RETRIES: usize = 10;
+    const COMPOSE_TRIALS: usize = 5;
+
+    fn run_free_like(name: &str, cfg: GuidanceConfig, ctx: &RunCtx) -> KernelRunRecord {
+        let mut session = Session::new(ctx, name);
+        let mut pop = SingleBest::new();
+        session.bootstrap(&mut pop);
+        while session
+            .trial(&cfg, &mut pop, EVO_IMPROVE, None, None)
+            .unwrap()
+            .is_some()
+        {}
+        session.finish(name)
+    }
+
+    fn run_full(ctx: &RunCtx) -> KernelRunRecord {
+        let name = "EvoEngineer-Full";
+        let cfg = GuidanceConfig::full();
+        let mut session = Session::new(ctx, name);
+        let mut pop = Elite::new(4);
+        session.bootstrap(&mut pop);
+        for _ in 0..5 {
+            if session.trial(&cfg, &mut pop, EVO_INIT, None, None).unwrap().is_none() {
+                break;
+            }
+        }
+        'gens: for _gen in 0..10 {
+            for _off in 0..4 {
+                if session
+                    .trial(&cfg, &mut pop, EVO_IMPROVE, None, None)
+                    .unwrap()
+                    .is_none()
+                {
+                    break 'gens;
+                }
+            }
+        }
+        session.finish(name)
+    }
+
+    fn run_funsearch(ctx: &RunCtx) -> KernelRunRecord {
+        let name = "FunSearch";
+        let cfg = GuidanceConfig::funsearch();
+        let mut session = Session::new(ctx, name);
+        let mut pop = Islands::funsearch();
+        session.bootstrap(&mut pop);
+        while session
+            .trial(&cfg, &mut pop, FS_IMPROVE, None, None)
+            .unwrap()
+            .is_some()
+        {}
+        session.finish(name)
+    }
+
+    fn run_eoh(ctx: &RunCtx) -> KernelRunRecord {
+        let name = "EvoEngineer-Solution (EoH)";
+        let cfg = GuidanceConfig::eoh();
+        let mut session = Session::new(ctx, name);
+        let mut pop = Elite::new(4);
+        session.bootstrap(&mut pop);
+        for _ in 0..5 {
+            if session.trial(&cfg, &mut pop, E1, None, None).unwrap().is_none() {
+                return session.finish(name);
+            }
+        }
+        'gens: for _gen in 0..10 {
+            for op in [E1, E2, M1, M2] {
+                let parent = if std::ptr::eq(op, M1) || std::ptr::eq(op, M2) {
+                    pop.best()
+                } else {
+                    None
+                };
+                if session.trial(&cfg, &mut pop, op, parent, None).unwrap().is_none() {
+                    break 'gens;
+                }
+            }
+        }
+        session.finish(name)
+    }
+
+    fn run_aicuda(ctx: &RunCtx) -> KernelRunRecord {
+        let name = "AI CUDA Engineer";
+        let mut session = Session::new(ctx, name);
+        let mut pop = Elite::new(5);
+        let convert_cfg = GuidanceConfig {
+            n_history: 0,
+            n_insights: 0,
+            profiling: false,
+            style: PromptStyle::Verbose,
+        };
+        let mut converted = false;
+        for _ in 0..CONVERT_RETRIES {
+            match session.trial(&convert_cfg, &mut pop, CONVERT, None, None).unwrap() {
+                Some(cand) if cand.compiled => {
+                    converted = true;
+                    break;
+                }
+                Some(_) => continue,
+                None => break,
+            }
+        }
+        if !converted {
+            return session.finish(name);
+        }
+        let _ = session.trial(&convert_cfg, &mut pop, TRANSLATE, None, None).unwrap();
+        let optimize_cfg = GuidanceConfig::aicuda();
+        while session.budget_left() > COMPOSE_TRIALS {
+            if session
+                .trial(&optimize_cfg, &mut pop, OPTIMIZE, None, None)
+                .unwrap()
+                .is_none()
+            {
+                break;
+            }
+        }
+        let rag = ctx.archive.similar(&ctx.task.name, &ctx.task.family, 5);
+        let rag_cands: Vec<Candidate> = rag
+            .into_iter()
+            .map(|e| Candidate {
+                src: e.src,
+                spec: None,
+                compiled: true,
+                correct: true,
+                speedup: e.speedup,
+                pytorch_speedup: 0.0,
+                true_speedup: e.speedup,
+                true_pytorch_speedup: 0.0,
+                insight: None,
+                trial: 0,
+            })
+            .collect();
+        for _ in 0..COMPOSE_TRIALS {
+            let history = if rag_cands.is_empty() {
+                None
+            } else {
+                Some(rag_cands.clone())
+            };
+            if session
+                .trial(&optimize_cfg, &mut pop, COMPOSE, None, history)
+                .unwrap()
+                .is_none()
+            {
+                break;
+            }
+        }
+        session.finish(name)
+    }
+
+    /// Run a method's pre-redesign loop by name.
+    pub fn run(method: &str, ctx: &RunCtx) -> KernelRunRecord {
+        match method {
+            "EvoEngineer-Free" => run_free_like("EvoEngineer-Free", GuidanceConfig::free(), ctx),
+            "EvoEngineer-Insight" => {
+                run_free_like("EvoEngineer-Insight", GuidanceConfig::insight(), ctx)
+            }
+            "EvoEngineer-Full" => run_full(ctx),
+            "FunSearch" => run_funsearch(ctx),
+            "EvoEngineer-Solution (EoH)" => run_eoh(ctx),
+            "AI CUDA Engineer" => run_aicuda(ctx),
+            other => panic!("unknown method {other}"),
+        }
+    }
+}
+
+#[test]
+fn engine_is_byte_identical_to_the_legacy_monolith_for_all_six_methods() {
+    let evaluator = evaluator();
+    let task = evaluator.registry.get("matmul_64").unwrap().clone();
+    for method in methods::all_methods() {
+        let name = method.name();
+        // Independent archives: finish() publishes to the archive, and
+        // the AI CUDA Engineer's Compose stage reads it.
+        let a_new = Archive::new();
+        let p_new = SimProvider::new();
+        let ctx_new = RunCtx {
+            evaluator: &evaluator,
+            task: &task,
+            model: &MODELS[0],
+            seed: 3,
+            archive: &a_new,
+            provider: &p_new,
+            budget: 12,
+            repair: RepairPolicy::Off,
+        };
+        let rec_new = method.run(&ctx_new).unwrap();
+        let a_old = Archive::new();
+        let p_old = SimProvider::new();
+        let ctx_old = RunCtx {
+            evaluator: &evaluator,
+            task: &task,
+            model: &MODELS[0],
+            seed: 3,
+            archive: &a_old,
+            provider: &p_old,
+            budget: 12,
+            repair: RepairPolicy::Off,
+        };
+        let rec_old = legacy::run(&name, &ctx_old);
+        assert_eq!(
+            rec_new.to_json().to_string(),
+            rec_old.to_json().to_string(),
+            "engine diverged from the pre-redesign implementation for {name}"
+        );
+        assert_eq!(a_new.len(), a_old.len(), "{name}: archive publication diverged");
+    }
+}
+
+#[test]
+fn engine_matches_legacy_under_a_repair_policy() {
+    // Category-6 ops + GPT have the highest defect rates, so the guard
+    // and the budget-consuming repair loop both fire — the sequencing
+    // the engine must reproduce exactly (repairs shift trial indices).
+    let evaluator = evaluator();
+    let task = evaluator.registry.get("cumsum_rows_64").unwrap().clone();
+    let a_new = Archive::new();
+    let p_new = SimProvider::new();
+    let ctx_new = RunCtx {
+        evaluator: &evaluator,
+        task: &task,
+        model: &MODELS[0],
+        seed: 0,
+        archive: &a_new,
+        provider: &p_new,
+        budget: 14,
+        repair: RepairPolicy::Repair { max_attempts: 2 },
+    };
+    let rec_new = methods::by_name("evoengineer-free").unwrap().run(&ctx_new).unwrap();
+    let a_old = Archive::new();
+    let p_old = SimProvider::new();
+    let ctx_old = RunCtx {
+        evaluator: &evaluator,
+        task: &task,
+        model: &MODELS[0],
+        seed: 0,
+        archive: &a_old,
+        provider: &p_old,
+        budget: 14,
+        repair: RepairPolicy::Repair { max_attempts: 2 },
+    };
+    let rec_old = legacy::run("EvoEngineer-Free", &ctx_old);
+    assert!(rec_new.repair_attempts > 0, "repairs must fire for this test to bite");
+    assert_eq!(rec_new.to_json().to_string(), rec_old.to_json().to_string());
+}
+
+#[test]
+fn prefetch_is_byte_identical_to_serial_execution() {
+    let evaluator = evaluator();
+    // FunSearch stresses stateful speculation (island cursor snapshot);
+    // Full stresses insight-bearing prompts; the repair case stresses
+    // index-shifting mis-speculation.
+    let cases: [(&str, &str, RepairPolicy); 3] = [
+        ("funsearch", "softmax_64", RepairPolicy::Off),
+        ("evoengineer-full", "matmul_64", RepairPolicy::Off),
+        ("evoengineer-free", "cumsum_rows_64", RepairPolicy::Repair { max_attempts: 2 }),
+    ];
+    for (method, op, repair) in cases {
+        let task = evaluator.registry.get(op).unwrap().clone();
+        let run_with = |prefetch: usize| {
+            let archive = Archive::new();
+            let provider = SimProvider::new();
+            let ctx = RunCtx {
+                evaluator: &evaluator,
+                task: &task,
+                model: &MODELS[1],
+                seed: 7,
+                archive: &archive,
+                provider: &provider,
+                budget: 10,
+                repair,
+            };
+            let opts = EngineOpts { prefetch, ..EngineOpts::default() };
+            engine::drive(methods::by_name(method).unwrap().as_ref(), &ctx, &opts).unwrap()
+        };
+        let serial = run_with(0);
+        let pipelined = run_with(4);
+        assert_eq!(
+            serial.to_json().to_string(),
+            pipelined.to_json().to_string(),
+            "{method}/{op}: prefetch changed the record"
+        );
+    }
+}
+
+#[test]
+fn mid_cell_kill_resumes_to_byte_identical_records_across_providers() {
+    let dir = tmpdir("resume");
+    let checkpoint = dir.join("records.checkpoint.jsonl");
+    let cache = dir.join("eval_cache.jsonl");
+    let transcripts = dir.join("transcripts.jsonl");
+    let events_path = dir.join("events.jsonl");
+    let base = CampaignConfig {
+        methods: vec!["evoengineer-free".into(), "funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        op_filter: "relu_64".into(),
+        budget: 4,
+        quiet: true,
+        concurrency: 1,
+        ..CampaignConfig::default()
+    };
+
+    // Reference: one uninterrupted run, no persistence at all.
+    let full = campaign::run(&base, evaluator()).unwrap();
+    assert_eq!(full.len(), 2);
+
+    // Leg 1: checkpoint + cache + transcripts + events, killed after 6
+    // trial groups — cell 1 takes 4, so the kill lands mid-cell-2 with
+    // exactly 2 of its trials complete (claim-gated, deterministic).
+    let leg1 = CampaignConfig {
+        checkpoint: Some(checkpoint.clone()),
+        transcripts: Some(transcripts.clone()),
+        events: Some(events_path.clone()),
+        stop_after_trials: 6,
+        ..base.clone()
+    };
+    let partial = campaign::run(&leg1, evaluator().with_store(EvalStore::open(&cache).unwrap()))
+        .unwrap();
+    assert_eq!(partial.len(), 1, "the second cell was killed mid-run");
+
+    // The event journal pinpoints the half-finished cell and its
+    // completed trials.
+    let evs = EventJournal::load(&events_path).unwrap();
+    let half = events::completed_trials(&evs);
+    assert_eq!(half.len(), 1, "exactly one half-finished cell: {half:?}");
+    let (cell, trials) = half.iter().next().unwrap();
+    assert_eq!(cell.0, "FunSearch", "job order: Free completed, FunSearch was cut");
+    assert_eq!(
+        trials.iter().map(|(t, _)| *t).collect::<Vec<_>>(),
+        vec![0, 1],
+        "two trial groups completed before the kill"
+    );
+
+    // Leg 2: resume. Completed trials replay warm (eval cache +
+    // transcript reuse, verified against the event journal); the cell
+    // continues live from trial 2. Byte-identical to the reference.
+    let leg2 = CampaignConfig {
+        resume: true,
+        stop_after_trials: 0,
+        ..leg1.clone()
+    };
+    let resumed = campaign::run(&leg2, evaluator().with_store(EvalStore::open(&cache).unwrap()))
+        .unwrap();
+    assert_eq!(resumed.len(), full.len());
+    for (a, b) in full.iter().zip(&resumed) {
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "trial-granular resume diverged for {}/{}",
+            a.method,
+            a.op
+        );
+    }
+    assert_eq!(report::table4(&full), report::table4(&resumed));
+    assert_eq!(report::tokens(&full), report::tokens(&resumed));
+
+    // The resumed leg must not re-journal the replayed trials: across
+    // the kill the journal reads as one continuous event stream per
+    // cell, so `report events` never double-counts a cell.
+    let evs_after = EventJournal::load(&events_path).unwrap();
+    let stats_after = EventStats::from_events(&evs_after);
+    assert_eq!(stats_after.runs_started, 2, "one run_started per cell");
+    assert_eq!(stats_after.runs_finished, 2);
+    assert_eq!(stats_after.groups, 8, "2 cells x 4 trials, no duplicates");
+    let full_tokens: u64 = full.iter().map(|r| r.prompt_tokens).sum();
+    assert_eq!(stats_after.prompt_tokens, full_tokens, "journaled tokens counted once");
+    assert!(events::completed_trials(&evs_after).is_empty(), "both cells finished");
+
+    // The two legs together fully covered the transcript journal, so a
+    // replay-provider sweep of the same grid is byte-identical with
+    // zero live generation.
+    let replayed = campaign::run(
+        &CampaignConfig {
+            provider: ProviderSpec::Replay(transcripts.clone()),
+            transcripts: None,
+            ..base.clone()
+        },
+        evaluator(),
+    )
+    .unwrap();
+    for (a, b) in full.iter().zip(&replayed) {
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    // And the same mid-cell kill + resume works *under replay* too:
+    // trial-granular resume is provider-agnostic.
+    let r_dir = tmpdir("resume_replay");
+    let r_ckpt = r_dir.join("ckpt.jsonl");
+    let killed = CampaignConfig {
+        provider: ProviderSpec::Replay(transcripts.clone()),
+        transcripts: None,
+        checkpoint: Some(r_ckpt.clone()),
+        stop_after_trials: 6,
+        ..base.clone()
+    };
+    let partial_replay = campaign::run(&killed, evaluator()).unwrap();
+    assert_eq!(partial_replay.len(), 1);
+    let resumed_replay = campaign::run(
+        &CampaignConfig { resume: true, stop_after_trials: 0, ..killed.clone() },
+        evaluator(),
+    )
+    .unwrap();
+    for (a, b) in full.iter().zip(&resumed_replay) {
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_dir_all(r_dir).ok();
+}
+
+#[test]
+fn event_journal_agrees_with_the_run_record_and_the_live_sink() {
+    let dir = tmpdir("events");
+    let path = dir.join("events.jsonl");
+    let evaluator = evaluator();
+    let task = evaluator.registry.get("cumsum_rows_64").unwrap().clone();
+    let archive = Archive::new();
+    let provider = SimProvider::new();
+    let ctx = RunCtx {
+        evaluator: &evaluator,
+        task: &task,
+        model: &MODELS[0],
+        seed: 1,
+        archive: &archive,
+        provider: &provider,
+        budget: 10,
+        repair: RepairPolicy::Repair { max_attempts: 2 },
+    };
+    let metrics_sink = Arc::new(MetricsSink::new());
+    let journal_sink: Arc<dyn methods::EventSink> =
+        Arc::new(JournalSink::new(EventJournal::create(&path).unwrap()));
+    let metrics_dyn: Arc<dyn methods::EventSink> = metrics_sink.clone();
+    let opts = EngineOpts {
+        sinks: vec![journal_sink, metrics_dyn],
+        ..EngineOpts::default()
+    };
+    let rec = engine::drive(
+        methods::by_name("evoengineer-free").unwrap().as_ref(),
+        &ctx,
+        &opts,
+    )
+    .unwrap();
+
+    let evs = EventJournal::load(&path).unwrap();
+    let stats = EventStats::from_events(&evs);
+
+    // The journal's aggregate must agree with the record exactly…
+    assert_eq!(stats.runs_started, 1);
+    assert_eq!(stats.runs_finished, 1);
+    assert_eq!(stats.budget_exhausted, 1, "a 10-unit budget run exhausts its budget");
+    assert_eq!(stats.groups, rec.trials - rec.repair_attempts);
+    assert_eq!(stats.repair_attempts, rec.repair_attempts);
+    assert_eq!(stats.prompt_tokens, rec.prompt_tokens);
+    assert_eq!(stats.completion_tokens, rec.completion_tokens);
+    assert_eq!(stats.best_speedup, rec.best_speedup);
+    assert_eq!(
+        *stats.outcomes.get("guard_reject").unwrap_or(&0),
+        rec.guard_rejected_trials
+    );
+    // …and with the live metrics sink, fold for fold.
+    let live = metrics_sink.stats();
+    assert_eq!(live.groups, stats.groups);
+    assert_eq!(live.outcomes, stats.outcomes);
+    assert_eq!(live.prompt_tokens, stats.prompt_tokens);
+
+    // Every event belongs to the one cell, and kinds appear in a sane
+    // order: run_started first, run_finished last.
+    assert!(evs.iter().all(|e| e.op == "cumsum_rows_64" && e.seed == 1));
+    assert_eq!(evs.first().unwrap().kind.label(), "run_started");
+    assert_eq!(evs.last().unwrap().kind.label(), "run_finished");
+
+    // The rendered report mentions the headline numbers.
+    let rendered = report::events(&evs);
+    assert!(rendered.contains("1 started"), "{rendered}");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn bundled_event_journal_fixture_guards_the_format() {
+    // The fixture is a committed journal written by the current
+    // serializer. Parsing it AND re-serializing back to the identical
+    // bytes pins the line format: any drift (renamed field, reordered
+    // keys, changed kind label) fails here before it can strand
+    // already-journaled events in the wild.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/events.fixture.jsonl");
+    let raw = std::fs::read_to_string(&path).unwrap();
+    let evs = EventJournal::load(&path).unwrap();
+    assert_eq!(evs.len(), raw.lines().filter(|l| !l.trim().is_empty()).count());
+
+    let reserialized: String = evs
+        .iter()
+        .map(|e| events::event_to_json(e).to_string() + "\n")
+        .collect();
+    assert_eq!(raw, reserialized, "event journal format drifted from the fixture");
+
+    // The fixture exercises every kind exactly once…
+    let kinds: std::collections::BTreeSet<&'static str> =
+        evs.iter().map(|e| e.kind.label()).collect();
+    assert_eq!(kinds.len(), 8, "fixture must cover the full taxonomy: {kinds:?}");
+
+    // …and folds into the expected aggregate.
+    let stats = EventStats::from_events(&evs);
+    assert_eq!(stats.runs_started, 1);
+    assert_eq!(stats.runs_finished, 1);
+    assert_eq!(stats.groups, 1);
+    assert_eq!(stats.repair_attempts, 1);
+    assert_eq!(stats.repairs_mended, 1);
+    assert_eq!(stats.prompt_tokens, 321);
+    assert_eq!(stats.completion_tokens, 45);
+    assert_eq!(stats.new_bests, 1);
+
+    // The half-finished-cell scan sees a finished cell → empty map.
+    assert!(events::completed_trials(&evs).is_empty());
+}
+
+#[test]
+fn stop_after_trials_interrupts_exactly_at_the_claimed_trial() {
+    // claim semantics: with a limit of 1, the very first cell dies on
+    // its second trial group, so no record is ever produced.
+    let cfg = CampaignConfig {
+        methods: vec!["funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        op_filter: "relu_64".into(),
+        budget: 3,
+        quiet: true,
+        concurrency: 1,
+        stop_after_trials: 1,
+        ..CampaignConfig::default()
+    };
+    let records = campaign::run(&cfg, evaluator()).unwrap();
+    assert!(records.is_empty(), "{records:?}");
+
+    // A limit beyond the grid's total trial demand never fires.
+    let cfg = CampaignConfig { stop_after_trials: 100, ..cfg };
+    let records = campaign::run(&cfg, evaluator()).unwrap();
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].trials, 3);
+}
