@@ -21,6 +21,7 @@ use evoengineer::evals::{functional_case_batch, Evaluator};
 use evoengineer::llm::{
     self, GenerationRequest, GenerationResponse, Provider, SimProvider, TokenUsage, MODELS,
 };
+use evoengineer::guard;
 use evoengineer::methods::engine::{self, EngineOpts};
 use evoengineer::methods::{
     self, baseline_src, Archive, GenerateStep, RepairPolicy, RunCtx, Session,
@@ -30,7 +31,7 @@ use evoengineer::runtime::{Runtime, TensorValue};
 use evoengineer::tasks::{OpTask, TaskRegistry};
 use evoengineer::traverse::prompt::render;
 use evoengineer::traverse::{Guidance, GuidanceConfig};
-use evoengineer::util::bench::Bench;
+use evoengineer::util::bench::{self, Bench};
 use evoengineer::util::Rng;
 
 fn main() {
@@ -59,6 +60,37 @@ fn main() {
     b.bench("price", || price(&spec.schedule, &task, &gpu));
     b.bench("baseline_schedule", || baseline_schedule(&task));
     b.report();
+
+    // Stage-0 guard batching (DESIGN.md §14): check_batch over every
+    // baseline op plus a syntax-broken mutant of each — the candidate
+    // batch a campaign screens per generation. check_source is pure
+    // CPU with no shared state, so the scoped worker pool must hit
+    // >= 2x at 4 workers over the sequential path.
+    let guard_cases: Vec<(String, &OpTask)> = reg
+        .ops
+        .iter()
+        .flat_map(|op| {
+            let base = dsl::print(&KernelSpec {
+                op: op.name.clone(),
+                semantics: "opt".into(),
+                schedule: baseline_schedule(op),
+            });
+            let broken = base.replacen(';', " ", 1);
+            [(base, op), (broken, op)]
+        })
+        .collect();
+    let guard_items: Vec<(&str, &OpTask)> =
+        guard_cases.iter().map(|(s, op)| (s.as_str(), *op)).collect();
+    let mut b = Bench::new("guard");
+    let g1 = b.bench("check_batch_1_worker", || guard::check_batch(&guard_items, 1)).median;
+    let g4 = b.bench("check_batch_4_workers", || guard::check_batch(&guard_items, 4)).median;
+    b.report();
+    bench::emit_ratio(
+        "guard",
+        "batch_4_workers_speedup",
+        g1.as_secs_f64() / g4.as_secs_f64().max(1e-12),
+        2.0,
+    );
 
     // Prompt render + SimLLM generation (information-rich prompt).
     let parent = {

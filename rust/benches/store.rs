@@ -1,5 +1,11 @@
-//! Evaluation-cache benchmarks (DESIGN.md §8): the warm-cache hit path
-//! vs a cold pipeline evaluation, plus the keying overhead itself.
+//! Evaluation-cache benchmarks (DESIGN.md §8, §14): the warm-cache hit
+//! path vs a cold pipeline evaluation, the keying overhead itself, and
+//! the journal hot paths the §14 speed pass targets:
+//!
+//!   journal   — opening a ≥10k-record store via the sidecar offset
+//!               index vs a full JSONL rescan (target ≥5×)
+//!   append    — group-commit batched appends vs flush-per-record
+//!   intern    — warm interned keying vs re-canonicalizing every call
 //!
 //! The acceptance target for the persistent store is a ≥10× win for a
 //! warm hit over a cold evaluation. "Cold" here means the in-process
@@ -17,10 +23,22 @@ use evoengineer::costmodel::baseline_schedule;
 use evoengineer::dsl::{self, KernelSpec};
 use evoengineer::evals::Evaluator;
 use evoengineer::runtime::Runtime;
-use evoengineer::store::{key_for_source, EvalStore};
+use evoengineer::store::{
+    key_for_source, EvalKey, EvalStore, IndexMode, KeyInterner, Keyed, StoredEval, StoredOutcome,
+};
 use evoengineer::tasks::TaskRegistry;
-use evoengineer::util::bench::Bench;
+use evoengineer::util::bench::{self, Bench};
 use evoengineer::util::Rng;
+
+/// Cheap synthetic journal entry (compile failures carry the least
+/// payload; the open benchmarks measure record *count* scaling).
+fn synth_entry(i: u64) -> StoredEval {
+    StoredEval {
+        op: "matmul_64".into(),
+        model: "bench".into(),
+        outcome: StoredOutcome::CompileFail { error: format!("synthetic failure {i}") },
+    }
+}
 
 fn main() {
     let reg = Arc::new(
@@ -76,4 +94,113 @@ fn main() {
         if speedup >= 10.0 { "PASS" } else { "FAIL" }
     );
     std::fs::remove_file(&cache).ok();
+
+    // ---- journal: indexed open vs full rescan on a 12k-record store.
+    // The sidecar index (DESIGN.md §14) turns open from "parse every
+    // JSON body" into "read offset table + validate covered tail";
+    // the acceptance bar is >= 5x on >= 10k records.
+    const JOURNAL_RECORDS: u64 = 12_000;
+    let journal =
+        std::env::temp_dir().join(format!("evo_bench_journal_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&journal).ok();
+    evoengineer::store::index::delete_sidecar(&journal);
+    {
+        let store = EvalStore::open_with(&journal, IndexMode::Off).unwrap();
+        for i in 0..JOURNAL_RECORDS {
+            let key = EvalKey::from_canonical("matmul_64", &format!("synthetic {i}"));
+            store.record(&key, synth_entry(i)).unwrap();
+        }
+        store.flush().unwrap();
+    }
+    {
+        // Prime the sidecar: the first Auto open scans and persists it.
+        let store = EvalStore::open_with(&journal, IndexMode::Auto).unwrap();
+        assert_eq!(store.len(), JOURNAL_RECORDS as usize);
+    }
+    let mut b = Bench::new("journal");
+    let rescan = b
+        .bench("open_12k_full_rescan", || {
+            let s = EvalStore::open_with(&journal, IndexMode::Off).unwrap();
+            assert!(!s.opened_indexed());
+            s.len()
+        })
+        .median;
+    let indexed = b
+        .bench("open_12k_indexed", || {
+            let s = EvalStore::open_with(&journal, IndexMode::Auto).unwrap();
+            assert!(s.opened_indexed());
+            s.len()
+        })
+        .median;
+    b.report();
+    bench::emit_ratio(
+        "journal",
+        "indexed_open_speedup",
+        rescan.as_secs_f64() / indexed.as_secs_f64().max(1e-12),
+        5.0,
+    );
+    evoengineer::store::index::delete_sidecar(&journal);
+    std::fs::remove_file(&journal).ok();
+
+    // ---- append: flush-per-record vs group-commit batching. The
+    // grouped path stages records in the GroupWriter buffer and pays
+    // one write+flush per 64-record batch (the engine flushes at trial
+    // boundaries); the per-record path models the pre-§14 behaviour.
+    let each_path =
+        std::env::temp_dir().join(format!("evo_bench_append_each_{}.jsonl", std::process::id()));
+    let grouped_path =
+        std::env::temp_dir().join(format!("evo_bench_append_grp_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&each_path).ok();
+    std::fs::remove_file(&grouped_path).ok();
+    let each_store = EvalStore::open_with(&each_path, IndexMode::Off).unwrap();
+    let grouped_store = EvalStore::open_with(&grouped_path, IndexMode::Off).unwrap();
+    let mut b = Bench::new("append");
+    let mut n = 0u64;
+    let per_record = b
+        .bench("record_flush_each", || {
+            n += 1;
+            let key = EvalKey::from_canonical("matmul_64", &format!("each {n}"));
+            each_store.record(&key, synth_entry(n)).unwrap();
+            each_store.flush().unwrap();
+        })
+        .median;
+    let mut m = 0u64;
+    let grouped = b
+        .bench("record_group_commit", || {
+            m += 1;
+            let key = EvalKey::from_canonical("matmul_64", &format!("grp {m}"));
+            grouped_store.record(&key, synth_entry(m)).unwrap();
+            if m % 64 == 0 {
+                grouped_store.flush().unwrap();
+            }
+        })
+        .median;
+    b.report();
+    println!(
+        "{:<40} {:>10.2}x",
+        "append/group_commit_speedup",
+        per_record.as_secs_f64() / grouped.as_secs_f64().max(1e-12)
+    );
+    drop(each_store);
+    drop(grouped_store);
+    std::fs::remove_file(&each_path).ok();
+    std::fs::remove_file(&grouped_path).ok();
+
+    // ---- intern: the canonical-print -> SHA-256 keying path, cold
+    // (fresh interner, pays parse+print+hash every call) vs warm (the
+    // evaluator's shared interner serving the memoized key).
+    let mut b = Bench::new("intern");
+    b.bench("key_cold", || {
+        let interner = KeyInterner::new();
+        match interner.key_for(&task.name, &src) {
+            Keyed::Key(k) => k,
+            Keyed::Unparseable(e) => panic!("{e}"),
+        }
+    });
+    let warm_interner = KeyInterner::new();
+    b.bench("key_warm", || match warm_interner.key_for(&task.name, &src) {
+        Keyed::Key(k) => k,
+        Keyed::Unparseable(e) => panic!("{e}"),
+    });
+    b.report();
 }

@@ -323,7 +323,8 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     let mut verify_replay: HashMap<events::CellKey, Vec<(usize, String)>> = HashMap::new();
     if let Some(path) = &cfg.events {
         if cfg.resume && path.exists() {
-            verify_replay = events::completed_trials(&EventJournal::load(path)?);
+            verify_replay =
+                events::completed_trials_at(path, crate::store::IndexMode::from_env())?;
             if !cfg.quiet && !verify_replay.is_empty() {
                 eprintln!(
                     "campaign: event journal holds {} half-finished cell(s); their \

@@ -318,6 +318,52 @@ fn shadowed_bindings(src: &str) -> Vec<GuardDiagnostic> {
     out
 }
 
+/// [`check_source`] over a batch of candidates, fanned out across a
+/// scoped worker pool. Results come back in input order, and because
+/// `check_source` is a pure function of `(src, task)`, the reports are
+/// *identical* — verdicts, diagnostic ordering, messages, hints — at
+/// any worker count, including the sequential `workers <= 1` path
+/// (`tests/guard_parallel.rs` proves this over every baseline op).
+/// `workers == 0` sizes the pool from available parallelism.
+pub fn check_batch(items: &[(&str, &OpTask)], workers: usize) -> Vec<GuardReport> {
+    let workers = if workers == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get()).min(items.len().max(1))
+    } else {
+        workers.min(items.len().max(1))
+    };
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().map(|(src, task)| check_source(src, task)).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, GuardReport)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some((src, task)) = items.get(i) else { break };
+                // A dropped receiver can't happen while we hold slots,
+                // but a send error must not panic a worker.
+                if tx.send((i, check_source(src, task))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<GuardReport>> = vec![None; items.len()];
+        for (i, report) in rx {
+            slots[i] = Some(report);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every index claimed exactly once"))
+            .collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,6 +507,29 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(b, c);
         assert!(a.diagnostics.len() >= 4, "{}", a.summary());
+    }
+
+    #[test]
+    fn check_batch_is_order_preserving_and_worker_count_invariant() {
+        let t = task();
+        let sources: Vec<String> = vec![
+            print(&KernelSpec::baseline("matmul_64")),
+            "__global__ void k() {}".into(),
+            "kernel matmul_64 { semantics: turbo; schedule { tile_m: 8; tile_m: 16; } }".into(),
+            "kernel matmul_64 { semantics: opt; schedule { tile_k: 0; } }".into(),
+            print(&KernelSpec::baseline("softmax_64")),
+        ];
+        let items: Vec<(&str, &OpTask)> = sources.iter().map(|s| (s.as_str(), &t)).collect();
+        let sequential: Vec<GuardReport> =
+            items.iter().map(|(s, t)| check_source(s, t)).collect();
+        for workers in [0usize, 1, 2, 4, 8] {
+            assert_eq!(check_batch(&items, workers), sequential, "workers={workers}");
+        }
+        assert!(sequential[0].pass());
+        assert!(sequential[1].has(GuardCode::Syntax));
+        assert!(sequential[2].has(GuardCode::ShadowedBinding));
+        // Empty batch is fine at any worker count.
+        assert!(check_batch(&[], 4).is_empty());
     }
 
     #[test]

@@ -178,6 +178,12 @@ pub trait Provider: Send + Sync {
 
     /// Execute one typed call.
     fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse>;
+
+    /// Group-commit flush point (DESIGN.md §14): the engine calls this
+    /// at every trial boundary; backends that buffer journal appends
+    /// (the recording decorator) make them durable here. Default:
+    /// no-op.
+    fn flush(&self) {}
 }
 
 // ---------------------------------------------------------------------
@@ -309,6 +315,12 @@ impl Provider for RecordingProvider {
             eprintln!("warning: transcript append failed: {e:#}");
         }
         Ok(resp)
+    }
+
+    fn flush(&self) {
+        if let Err(e) = self.journal.flush() {
+            eprintln!("warning: transcript flush failed: {e:#}");
+        }
     }
 }
 

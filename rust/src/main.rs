@@ -399,8 +399,12 @@ fn guard_demo(
     println!("\nstage-0 guard ({}, provider {}):", repair.label(), llm_provider.label());
     let rng = evoengineer::util::Rng::new(0).derive("guard-demo");
     let model = profile::by_name("gpt").expect("gpt profile").name;
-    for (label, src) in &cases {
-        let report = evaluator.guard_check(src, &task);
+    // All verdicts up front through the parallel batch API — same
+    // reports in the same order as per-case `guard_check` calls.
+    let items: Vec<(&str, &evoengineer::tasks::OpTask)> =
+        cases.iter().map(|(_, src)| (src.as_str(), &task)).collect();
+    let reports = evoengineer::guard::check_batch(&items, 0);
+    for ((label, src), report) in cases.iter().zip(reports) {
         println!("  {label}: {} diagnostic(s)", report.diagnostics.len());
         for d in &report.diagnostics {
             println!("    {d}");

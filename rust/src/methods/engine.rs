@@ -136,6 +136,11 @@ pub trait MethodState: Send {
 /// shared across campaign workers, so they must serialize internally.
 pub trait EventSink: Send + Sync {
     fn emit(&self, ev: &TrialEvent);
+
+    /// Group-commit flush point (DESIGN.md §14): the engine calls this
+    /// at every trial boundary and at run end; sinks that buffer
+    /// appends make them durable here. Default: no-op.
+    fn flush(&self) {}
 }
 
 /// Appends every event to an [`EventJournal`] (`events.jsonl`).
@@ -155,6 +160,12 @@ impl EventSink for JournalSink {
     fn emit(&self, ev: &TrialEvent) {
         if let Err(e) = self.journal.append(ev) {
             eprintln!("warning: event journal append failed: {e:#}");
+        }
+    }
+
+    fn flush(&self) {
+        if let Err(e) = self.journal.flush() {
+            eprintln!("warning: event journal flush failed: {e:#}");
         }
     }
 }
@@ -462,7 +473,27 @@ pub fn drive_parts(
         best_speedup: rec.best_speedup,
         any_valid: rec.any_valid,
     });
+    flush_boundary(ctx, opts);
     Ok(rec)
+}
+
+/// Group-commit flush point (DESIGN.md §14): called at every trial
+/// boundary and at run end, this makes everything the trial staged —
+/// journal events, eval-cache records, transcript calls — durable
+/// together. A kill strictly between two flush points therefore loses
+/// whole trailing trials, never a torn slice of one, which is exactly
+/// the granularity the trial-granular resume contract (PR 5)
+/// re-derives.
+fn flush_boundary(ctx: &RunCtx, opts: &EngineOpts) {
+    for sink in &opts.sinks {
+        sink.flush();
+    }
+    if let Some(store) = ctx.evaluator.store() {
+        if let Err(e) = store.flush() {
+            eprintln!("warning: eval-cache flush failed: {e:#}");
+        }
+    }
+    ctx.provider.flush();
 }
 
 fn run_loop(
@@ -510,6 +541,7 @@ fn run_loop(
                             session.ctx.seed
                         );
                     }
+                    flush_boundary(session.ctx, opts);
                     continue;
                 }
                 if let Some((pass, diagnostics)) = report.guard {
@@ -529,6 +561,7 @@ fn run_loop(
                 if report.new_best {
                     emit(TrialEventKind::NewBest { trial: report.trial, speedup: report.speedup });
                 }
+                flush_boundary(session.ctx, opts);
             }
         }
     }

@@ -17,17 +17,23 @@
 //!   bit-identical-resume contract was violated);
 //! * uploaded as a CI artifact next to the report and cache stats.
 //!
-//! Durability matches the eval cache and transcript journal: one
-//! flushed line per event, a torn final line from a killed process is
-//! truncated on reopen, and corrupt interior lines are skipped with a
-//! warning. Format drift is guarded by a bundled fixture journal
-//! replayed in the test suite (`tests/trial_engine.rs`).
+//! Durability matches the eval cache and transcript journal
+//! (DESIGN.md §14): appends are staged in a
+//! [`GroupWriter`](super::GroupWriter) and committed at trial-boundary
+//! flush points, a torn final line from a killed process is truncated
+//! on reopen, and corrupt interior lines are skipped with a warning.
+//! Resume scans ([`completed_trials_at`]) are served by the sidecar
+//! offset index, reading only the event kinds resume cares about.
+//! Format drift is guarded by a bundled fixture journal replayed in
+//! the test suite (`tests/trial_engine.rs`).
 
 use std::collections::HashMap;
-use std::io::{BufRead, Write as _};
+use std::io::BufRead;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
+use super::index::{self, IndexMode};
+use super::GroupWriter;
 use crate::util::json::{self, Json};
 use crate::{eyre, Result, WrapErr as _};
 
@@ -251,7 +257,7 @@ pub fn event_from_json(v: &Json) -> Result<TrialEvent> {
 /// Append-only JSONL event journal, shared by every campaign worker.
 pub struct EventJournal {
     path: PathBuf,
-    writer: Mutex<std::fs::File>,
+    writer: Mutex<GroupWriter>,
 }
 
 impl EventJournal {
@@ -274,6 +280,8 @@ impl EventJournal {
         }
         if truncate {
             std::fs::File::create(path).context("truncating event journal")?;
+            // The sidecar indexed the old sweep's events.
+            index::delete_sidecar(path);
         } else {
             let torn =
                 crate::util::truncate_torn_tail(path).context("repairing event-journal tail")?;
@@ -289,21 +297,35 @@ impl EventJournal {
             .append(true)
             .open(path)
             .context("opening event journal for append")?;
-        Ok(Arc::new(Self { path: path.to_path_buf(), writer: Mutex::new(writer) }))
+        Ok(Arc::new(Self {
+            path: path.to_path_buf(),
+            writer: Mutex::new(GroupWriter::new(writer)),
+        }))
     }
 
     pub fn path(&self) -> &Path {
         &self.path
     }
 
-    /// Append one event (one flushed line).
+    /// Append one event. Staged in the group-commit buffer; durability
+    /// arrives at the next [`EventJournal::flush`] (the engine's
+    /// journal sink flushes at every trial boundary).
     pub fn append(&self, ev: &TrialEvent) -> Result<()> {
         let line = event_to_json(ev).to_string();
-        let mut w = self.writer.lock().unwrap();
-        w.write_all(line.as_bytes())?;
-        w.write_all(b"\n")?;
-        w.flush()?;
+        self.writer.lock().unwrap().append_line(line.as_bytes())?;
         Ok(())
+    }
+
+    /// Group-commit flush point: make every staged event durable.
+    pub fn flush(&self) -> Result<()> {
+        self.writer.lock().unwrap().flush()?;
+        Ok(())
+    }
+
+    /// Test hook: simulate a kill between append and flush.
+    #[doc(hidden)]
+    pub fn drop_unflushed(&self) {
+        self.writer.lock().unwrap().drop_unflushed();
     }
 
     /// Load every parseable event from a journal file; corrupt lines
@@ -360,6 +382,79 @@ pub fn completed_trials(events: &[TrialEvent]) -> HashMap<CellKey, Vec<(usize, S
     }
     map.retain(|cell, _| !finished.contains(cell));
     map
+}
+
+/// [`completed_trials`] straight from a journal file, served by the
+/// sidecar offset index: events are keyed by kind label, so a resume
+/// scan `pread`s only the `run_started` / `eval_outcome` /
+/// `run_finished` lines it folds — the (dominant) per-trial chatter
+/// (guard verdicts, repair attempts, new-bests) is never read on a
+/// warm resume. `IndexMode::Off` falls back to the full
+/// [`EventJournal::load`] scan; both paths produce identical maps. A
+/// missing journal yields an empty map.
+pub fn completed_trials_at(
+    path: impl AsRef<Path>,
+    mode: IndexMode,
+) -> Result<HashMap<CellKey, Vec<(usize, String)>>> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Ok(HashMap::new());
+    }
+    if mode == IndexMode::Off {
+        return Ok(completed_trials(&EventJournal::load(path)?));
+    }
+    let display = path.display().to_string();
+    let extract = |off: u64, line: &str| match json::parse(line) {
+        Ok(v) => v.get("kind").and_then(|k| k.as_str()).map(String::from),
+        Err(e) => {
+            eprintln!("warning: event journal {display}: skipping bad line at byte {off}: {e}");
+            None
+        }
+    };
+    let loaded = index::load(path, mode, &extract).context("indexing event journal")?;
+    let reader = std::fs::File::open(path).context("opening event journal")?;
+    use std::os::unix::fs::FileExt as _;
+    let mut map: HashMap<CellKey, Vec<(usize, String)>> = HashMap::new();
+    let mut finished: std::collections::HashSet<CellKey> = std::collections::HashSet::new();
+    for r in &loaded.records {
+        if !matches!(r.key.as_str(), "run_started" | "eval_outcome" | "run_finished") {
+            continue;
+        }
+        let mut buf = vec![0u8; r.len as usize];
+        let parsed = reader
+            .read_exact_at(&mut buf, r.offset)
+            .map_err(|e| eyre!("{e}"))
+            .and_then(|_| {
+                let text = std::str::from_utf8(&buf).map_err(|e| eyre!("{e}"))?;
+                json::parse(text.trim_end_matches('\n'))
+                    .map_err(|e| eyre!("{e}"))
+                    .and_then(|v| event_from_json(&v))
+            });
+        let ev = match parsed {
+            Ok(ev) => ev,
+            Err(e) => {
+                eprintln!(
+                    "warning: event journal {display}: skipping indexed record at byte {}: {e}",
+                    r.offset
+                );
+                continue;
+            }
+        };
+        match &ev.kind {
+            TrialEventKind::RunStarted { .. } => {
+                map.entry(ev.cell()).or_default();
+            }
+            TrialEventKind::EvalOutcome { trial, src_hash, .. } => {
+                map.entry(ev.cell()).or_default().push((*trial, src_hash.clone()));
+            }
+            TrialEventKind::RunFinished { .. } => {
+                finished.insert(ev.cell());
+            }
+            _ => {}
+        }
+    }
+    map.retain(|cell, _| !finished.contains(cell));
+    Ok(map)
 }
 
 #[cfg(test)]
@@ -462,5 +557,64 @@ mod tests {
         assert_eq!(map.len(), 1, "finished cell `a` must be omitted");
         let key = ("FunSearch".into(), "GPT-4.1".into(), "b".into(), 0u64);
         assert_eq!(map[&key], vec![(0usize, "h0".to_string())]);
+    }
+
+    #[test]
+    fn indexed_resume_scan_matches_full_scan() {
+        let path = tmpfile("resume_idx");
+        std::fs::remove_file(&path).ok();
+        index::delete_sidecar(&path);
+        {
+            let j = EventJournal::create(&path).unwrap();
+            j.append(&ev(TrialEventKind::RunStarted { budget: 4, provider: "sim".into() }))
+                .unwrap();
+            j.append(&ev(TrialEventKind::TrialStarted { trial: 0 })).unwrap();
+            j.append(&ev(TrialEventKind::EvalOutcome {
+                trial: 0,
+                outcome: "ok".into(),
+                speedup: 1.5,
+                prompt_tokens: 10,
+                completion_tokens: 5,
+                src_hash: "abcd1234".into(),
+            }))
+            .unwrap();
+            j.append(&ev(TrialEventKind::NewBest { trial: 0, speedup: 1.5 })).unwrap();
+            j.flush().unwrap();
+        }
+        let full = completed_trials(&EventJournal::load(&path).unwrap());
+        // First Auto call builds the sidecar, second is served by it;
+        // Off ignores it. All three agree with the in-memory fold.
+        for mode in [IndexMode::Auto, IndexMode::Auto, IndexMode::Off] {
+            let at = completed_trials_at(&path, mode).unwrap();
+            assert_eq!(at, full);
+        }
+        // Missing journal: empty map, not an error.
+        let missing = tmpfile("resume_missing");
+        std::fs::remove_file(&missing).ok();
+        assert!(completed_trials_at(&missing, IndexMode::Auto).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+        index::delete_sidecar(&path);
+    }
+
+    #[test]
+    fn group_commit_kill_loses_only_staged_events() {
+        let path = tmpfile("group");
+        std::fs::remove_file(&path).ok();
+        {
+            let j = EventJournal::create(&path).unwrap();
+            j.append(&ev(TrialEventKind::TrialStarted { trial: 0 })).unwrap();
+            j.flush().unwrap();
+            j.append(&ev(TrialEventKind::TrialStarted { trial: 1 })).unwrap();
+            assert_eq!(
+                EventJournal::load(&path).unwrap().len(),
+                1,
+                "staged event must not be on disk before the flush point"
+            );
+            j.drop_unflushed();
+        }
+        let events = EventJournal::load(&path).unwrap();
+        assert_eq!(events.len(), 1, "only the flushed event survives the kill");
+        assert_eq!(events[0].kind, TrialEventKind::TrialStarted { trial: 0 });
+        std::fs::remove_file(&path).ok();
     }
 }

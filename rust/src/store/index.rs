@@ -1,0 +1,604 @@
+//! Sidecar offset index for the append-only JSONL journals
+//! (DESIGN.md §14).
+//!
+//! Opening a journal used to re-read and re-parse every line — O(file)
+//! work on every process start, which dominates warm campaign runs once
+//! the eval cache holds tens of thousands of records. The sidecar
+//! (`<journal>.idx`) remembers, per record line, its byte offset,
+//! length and caller-assigned key, so a warm open becomes one small
+//! sidecar read plus positioned reads (`pread`) of only the records a
+//! lookup actually touches. The journal stays the single source of
+//! truth: the sidecar is a pure cache, validated against the journal's
+//! tail bytes on every open and rebuilt from a full scan on any
+//! mismatch — deleting it is always safe and never loses data.
+//!
+//! Format (text, line-oriented, space-separated):
+//!
+//! ```text
+//! evoidx 1
+//! r <offset> <len> <key>
+//! c <covered_len> <tail_off> <tail_len> <tail_hash16> <idx> <scan> <rebuilds>
+//! ```
+//!
+//! `r` lines *stage* records; a `c` (cover) line *commits* everything
+//! staged above it as valid for the first `covered_len` bytes of the
+//! journal. Staged records after the last cover are dropped on load
+//! (the tail rescan re-finds them), which makes the sidecar itself
+//! torn-tail safe: it is append-extended on indexed opens and fully
+//! rewritten (tmp + rename) after a rebuild. Validation preads the
+//! journal's last complete line (`tail_off..tail_off+tail_len`) and
+//! compares its truncated SHA-256 against `tail_hash16` — any append,
+//! truncation, compaction or corruption of the covered region's end
+//! invalidates the cover and forces a rebuild.
+//!
+//! Keys must be single tokens without whitespace (SHA-256 hex digests
+//! and event-kind labels in practice); a record whose key the caller
+//! declines to index (`extract_key` → `None`) is simply absent from
+//! the result, exactly as the old scan-and-skip loops treated it.
+
+use std::io::{BufRead, BufReader, Seek, SeekFrom, Write as _};
+use std::os::unix::fs::FileExt as _;
+use std::path::{Path, PathBuf};
+
+use super::hash::sha256_hex;
+
+/// Sidecar format version (the header line's second token).
+pub const INDEX_FORMAT: u32 = 1;
+
+/// Whether journal opens may consult/maintain the sidecar index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexMode {
+    /// Use the sidecar when valid, rebuild it when not (the default).
+    Auto,
+    /// Never touch the sidecar: every open is a full scan. The
+    /// torture suite runs both modes and asserts identical behaviour.
+    Off,
+}
+
+impl IndexMode {
+    /// Mode from the `EVO_JOURNAL_INDEX` environment variable:
+    /// `off`/`0`/`false` disable the index, anything else (including
+    /// unset) selects [`IndexMode::Auto`].
+    pub fn from_env() -> Self {
+        match std::env::var("EVO_JOURNAL_INDEX") {
+            Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "off" | "0" | "false" => IndexMode::Off,
+                _ => IndexMode::Auto,
+            },
+            Err(_) => IndexMode::Auto,
+        }
+    }
+}
+
+/// One indexed journal record: where its line lives and the key the
+/// caller filed it under.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecordRef {
+    /// Byte offset of the line's first byte.
+    pub offset: u64,
+    /// Line length in bytes, including the trailing `\n`.
+    pub len: u32,
+    pub key: String,
+}
+
+/// Lifetime counters carried in the cover line — what `cache stats`
+/// reports as index health.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IndexHealth {
+    /// Opens served from a valid sidecar (cheap path).
+    pub indexed_opens: u64,
+    /// Opens that fell back to a full journal scan.
+    pub scanned_opens: u64,
+    /// Scanned opens where a sidecar existed but failed validation.
+    pub rebuilds: u64,
+}
+
+/// Result of [`load`]: the journal's record map plus how it was built.
+#[derive(Debug)]
+pub struct LoadOutcome {
+    /// Every indexable record, in journal order (duplicate keys are
+    /// the caller's first-wins policy to apply).
+    pub records: Vec<RecordRef>,
+    /// True when a valid sidecar covered the open (only appended tail
+    /// lines were scanned).
+    pub indexed: bool,
+    /// Journal bytes actually read line-by-line this open.
+    pub scanned_bytes: u64,
+    pub health: IndexHealth,
+}
+
+impl LoadOutcome {
+    fn empty() -> Self {
+        LoadOutcome {
+            records: Vec::new(),
+            indexed: false,
+            scanned_bytes: 0,
+            health: IndexHealth::default(),
+        }
+    }
+}
+
+/// The sidecar path for a journal: `<journal>.idx`.
+pub fn sidecar_path(journal: &Path) -> PathBuf {
+    let mut os = journal.as_os_str().to_os_string();
+    os.push(".idx");
+    PathBuf::from(os)
+}
+
+/// Remove a journal's sidecar (compaction and `create()`-style
+/// truncation must not leave a stale index behind; the next open
+/// rebuilds it from the journal).
+pub fn delete_sidecar(journal: &Path) {
+    let _ = std::fs::remove_file(sidecar_path(journal));
+}
+
+/// Index health recorded in a journal's sidecar, if one exists and
+/// parses (purely informational — never validated against the journal).
+pub fn health(journal: &Path) -> Option<IndexHealth> {
+    let text = std::fs::read_to_string(sidecar_path(journal)).ok()?;
+    parse_sidecar(&text).map(|p| p.cover.health)
+}
+
+/// Build the record map for `journal`, consulting and maintaining the
+/// sidecar under [`IndexMode::Auto`]. `extract_key` is called once per
+/// *scanned* line with `(byte_offset, trimmed_line)` and returns the
+/// record's index key, or `None` for lines that should not be indexed
+/// (stats trailers, corrupt lines — the closure owns any warning).
+/// The caller must repair the journal's torn tail first
+/// ([`crate::util::truncate_torn_tail`]); a trailing partial line is
+/// skipped and left uncovered regardless. A missing journal yields an
+/// empty outcome and touches nothing.
+pub fn load(
+    journal: &Path,
+    mode: IndexMode,
+    extract_key: &dyn Fn(u64, &str) -> Option<String>,
+) -> std::io::Result<LoadOutcome> {
+    let file = match std::fs::File::open(journal) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(LoadOutcome::empty());
+        }
+        Err(e) => return Err(e),
+    };
+    let jlen = file.metadata()?.len();
+
+    if mode == IndexMode::Off {
+        let scan = scan_from(&file, 0, extract_key)?;
+        return Ok(LoadOutcome {
+            records: scan.records,
+            indexed: false,
+            scanned_bytes: scan.scanned_bytes,
+            health: IndexHealth::default(),
+        });
+    }
+
+    let sc_path = sidecar_path(journal);
+    let existing = std::fs::read_to_string(&sc_path).ok();
+    let had_sidecar = existing.is_some();
+    let parsed = existing.as_deref().and_then(parse_sidecar);
+    let (mut records, cover, clean) = match parsed {
+        Some(p) if cover_valid(&file, jlen, &p.cover) => (p.records, Some(p.cover), p.clean),
+        _ => (Vec::new(), None, false),
+    };
+    let indexed = cover.is_some();
+    let start = cover.as_ref().map_or(0, |c| c.covered_len);
+
+    // Scan only what the cover does not vouch for (everything, after
+    // a rebuild).
+    let scan = scan_from(&file, start, extract_key)?;
+
+    // The new cover's tail is the journal's last complete line —
+    // freshly scanned if any, otherwise inherited from the old cover.
+    let (tail_off, tail_len) = match scan.last_line {
+        Some(t) => t,
+        None => cover.as_ref().map_or((0, 0), |c| (c.tail_off, c.tail_len)),
+    };
+    let mut health = cover.as_ref().map_or_else(IndexHealth::default, |c| c.health);
+    if indexed {
+        health.indexed_opens += 1;
+    } else {
+        health.scanned_opens += 1;
+        if had_sidecar {
+            health.rebuilds += 1;
+        }
+    }
+
+    let tail_hash16 = tail_hash(&file, tail_off, tail_len)?;
+    let cover_line = format!(
+        "c {} {} {} {} {} {} {}\n",
+        tail_off + tail_len,
+        tail_off,
+        tail_len,
+        tail_hash16,
+        health.indexed_opens,
+        health.scanned_opens,
+        health.rebuilds
+    );
+    let persist = if indexed && clean {
+        // Cheap path: extend the existing sidecar with the freshly
+        // scanned records and a new cover committing them.
+        let mut out = String::with_capacity(scan.records.len() * 96 + cover_line.len());
+        for r in &scan.records {
+            push_record_line(&mut out, r);
+        }
+        out.push_str(&cover_line);
+        append_to(&sc_path, out.as_bytes())
+    } else {
+        // Rebuild (or first build, or torn sidecar): full rewrite via
+        // tmp + rename so a kill mid-write never leaves a half-index.
+        let mut out = String::with_capacity((records.len() + scan.records.len()) * 96 + 64);
+        out.push_str(&format!("evoidx {INDEX_FORMAT}\n"));
+        for r in records.iter().chain(&scan.records) {
+            push_record_line(&mut out, r);
+        }
+        out.push_str(&cover_line);
+        rewrite(&sc_path, out.as_bytes())
+    };
+    if let Err(e) = persist {
+        // Advisory, like every journal-adjacent write: a failed
+        // sidecar update costs the next open a rescan, nothing more.
+        eprintln!(
+            "warning: journal index {}: sidecar update failed: {e}",
+            sc_path.display()
+        );
+    }
+
+    records.extend(scan.records);
+    Ok(LoadOutcome { records, indexed, scanned_bytes: scan.scanned_bytes, health })
+}
+
+fn push_record_line(out: &mut String, r: &RecordRef) {
+    // Keys with whitespace would corrupt the line format; every real
+    // key is a hex digest or event-kind label, so just refuse to
+    // persist pathological ones (the record still loads this open; the
+    // next open's validation-triggered behaviour stays correct because
+    // the cover only vouches for byte extents, not record counts —
+    // worst case the record is re-found by a rescan after a rebuild).
+    if r.key.is_empty() || r.key.contains(char::is_whitespace) {
+        return;
+    }
+    out.push_str(&format!("r {} {} {}\n", r.offset, r.len, r.key));
+}
+
+fn append_to(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(bytes)?;
+    f.flush()
+}
+
+fn rewrite(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = PathBuf::from(os);
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
+struct ParsedSidecar {
+    records: Vec<RecordRef>,
+    cover: Cover,
+    /// False when trailing garbage (a torn sidecar tail) was dropped —
+    /// the persist step must rewrite rather than append onto it.
+    clean: bool,
+}
+
+struct Cover {
+    covered_len: u64,
+    tail_off: u64,
+    tail_len: u64,
+    tail_hash16: String,
+    health: IndexHealth,
+}
+
+fn parse_sidecar(text: &str) -> Option<ParsedSidecar> {
+    let mut lines = text.split('\n');
+    let header = lines.next()?;
+    let mut hp = header.split(' ');
+    if hp.next() != Some("evoidx") || hp.next()?.parse::<u32>().ok()? != INDEX_FORMAT {
+        return None;
+    }
+    let mut committed: Vec<RecordRef> = Vec::new();
+    let mut staged: Vec<RecordRef> = Vec::new();
+    let mut cover: Option<Cover> = None;
+    // A sidecar that does not end in `\n` cannot be append-extended
+    // (the next write would merge with its final line).
+    let mut clean = text.ends_with('\n');
+    for line in lines {
+        if line.is_empty() {
+            continue; // the final split fragment after a trailing \n
+        }
+        match parse_body_line(line) {
+            Some(BodyLine::Record(r)) => staged.push(r),
+            Some(BodyLine::Cover(c)) => {
+                committed.append(&mut staged);
+                cover = Some(c);
+            }
+            None => {
+                // Torn/garbled tail: keep what the last cover commits,
+                // drop the rest, and remember to rewrite.
+                clean = false;
+                break;
+            }
+        }
+    }
+    // Uncommitted staged records are dropped: the cover is the only
+    // durability statement, and the journal rescan re-finds their
+    // lines anyway.
+    if !staged.is_empty() {
+        clean = false;
+    }
+    cover.map(|cover| ParsedSidecar { records: committed, cover, clean })
+}
+
+enum BodyLine {
+    Record(RecordRef),
+    Cover(Cover),
+}
+
+fn parse_body_line(line: &str) -> Option<BodyLine> {
+    let mut parts = line.split(' ');
+    match parts.next()? {
+        "r" => {
+            let offset = parts.next()?.parse().ok()?;
+            let len = parts.next()?.parse().ok()?;
+            let key = parts.next()?.to_string();
+            if key.is_empty() || parts.next().is_some() {
+                return None;
+            }
+            Some(BodyLine::Record(RecordRef { offset, len, key }))
+        }
+        "c" => {
+            let covered_len = parts.next()?.parse().ok()?;
+            let tail_off = parts.next()?.parse().ok()?;
+            let tail_len = parts.next()?.parse().ok()?;
+            let tail_hash16 = parts.next()?.to_string();
+            let health = IndexHealth {
+                indexed_opens: parts.next()?.parse().ok()?,
+                scanned_opens: parts.next()?.parse().ok()?,
+                rebuilds: parts.next()?.parse().ok()?,
+            };
+            if parts.next().is_some() {
+                return None;
+            }
+            Some(BodyLine::Cover(Cover { covered_len, tail_off, tail_len, tail_hash16, health }))
+        }
+        _ => None,
+    }
+}
+
+/// A cover vouches for the journal's first `covered_len` bytes iff the
+/// journal still starts with them: length-compatible, and the last
+/// covered line's bytes hash to what the cover recorded.
+fn cover_valid(file: &std::fs::File, jlen: u64, c: &Cover) -> bool {
+    if c.covered_len > jlen {
+        return false;
+    }
+    if c.covered_len == 0 {
+        return c.tail_off == 0 && c.tail_len == 0;
+    }
+    if c.tail_len == 0
+        || c.tail_len > MAX_LINE_BYTES
+        || c.tail_off.checked_add(c.tail_len) != Some(c.covered_len)
+    {
+        return false;
+    }
+    let mut buf = vec![0u8; c.tail_len as usize];
+    if file.read_exact_at(&mut buf, c.tail_off).is_err() {
+        return false;
+    }
+    if buf.last() != Some(&b'\n') {
+        return false;
+    }
+    sha256_hex(&buf)[..16] == c.tail_hash16
+}
+
+/// Sanity ceiling on one journal line (a prompt transcript can be
+/// large, but nothing legitimate approaches 64 MiB per line).
+const MAX_LINE_BYTES: u64 = 64 << 20;
+
+fn tail_hash(file: &std::fs::File, tail_off: u64, tail_len: u64) -> std::io::Result<String> {
+    if tail_len == 0 {
+        return Ok("-".to_string());
+    }
+    let mut buf = vec![0u8; tail_len as usize];
+    file.read_exact_at(&mut buf, tail_off)?;
+    Ok(sha256_hex(&buf)[..16].to_string())
+}
+
+struct ScanOutcome {
+    records: Vec<RecordRef>,
+    /// `(offset, len)` of the last *complete* line seen.
+    last_line: Option<(u64, u64)>,
+    scanned_bytes: u64,
+}
+
+fn scan_from(
+    file: &std::fs::File,
+    start: u64,
+    extract_key: &dyn Fn(u64, &str) -> Option<String>,
+) -> std::io::Result<ScanOutcome> {
+    let mut records = Vec::new();
+    let mut last_line = None;
+    let mut reader = BufReader::new(file.try_clone()?);
+    reader.seek(SeekFrom::Start(start))?;
+    let mut offset = start;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            break;
+        }
+        if !line.ends_with('\n') {
+            // Torn tail (the caller repairs these before indexing; a
+            // racing writer could still produce one): not covered, not
+            // indexed.
+            break;
+        }
+        let len = n as u64;
+        let trimmed = line.trim();
+        if !trimmed.is_empty() {
+            if let Some(key) = extract_key(offset, trimmed) {
+                records.push(RecordRef { offset, len: len as u32, key });
+            }
+        }
+        last_line = Some((offset, len));
+        offset += len;
+    }
+    Ok(ScanOutcome { records, last_line, scanned_bytes: offset - start })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("evo_idx_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Key = first token of the line; `skip` lines are unindexed.
+    fn key_of(_off: u64, line: &str) -> Option<String> {
+        let first = line.split(' ').next().unwrap_or("");
+        if first == "skip" || first.is_empty() {
+            None
+        } else {
+            Some(first.to_string())
+        }
+    }
+
+    fn keys(out: &LoadOutcome) -> Vec<&str> {
+        out.records.iter().map(|r| r.key.as_str()).collect()
+    }
+
+    #[test]
+    fn builds_then_serves_indexed_opens() {
+        let dir = tmpdir("basic");
+        let j = dir.join("j.jsonl");
+        std::fs::write(&j, "k1 a\nk2 bb\nskip x\nk3 ccc\n").unwrap();
+
+        // First open: full scan, sidecar written.
+        let o1 = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(!o1.indexed);
+        assert_eq!(keys(&o1), ["k1", "k2", "k3"]);
+        assert_eq!(o1.health.scanned_opens, 1);
+        assert_eq!(o1.health.rebuilds, 0);
+        assert!(sidecar_path(&j).exists());
+
+        // Second open: served by the sidecar, zero journal scanning.
+        let o2 = load(&j, IndexMode::Auto, &|_, _| panic!("must not scan")).unwrap();
+        assert!(o2.indexed);
+        assert_eq!(keys(&o2), ["k1", "k2", "k3"]);
+        assert_eq!(o2.scanned_bytes, 0);
+        assert_eq!(o2.health.indexed_opens, 1);
+        assert_eq!(o2.health.scanned_opens, 1);
+
+        // Offsets must pread back to the original lines.
+        let f = std::fs::File::open(&j).unwrap();
+        for (r, want) in o2.records.iter().zip(["k1 a\n", "k2 bb\n", "k3 ccc\n"]) {
+            let mut buf = vec![0u8; r.len as usize];
+            f.read_exact_at(&mut buf, r.offset).unwrap();
+            assert_eq!(std::str::from_utf8(&buf).unwrap(), want);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn appended_tail_is_scanned_and_committed() {
+        let dir = tmpdir("tail");
+        let j = dir.join("j.jsonl");
+        std::fs::write(&j, "k1 a\n").unwrap();
+        load(&j, IndexMode::Auto, &key_of).unwrap();
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&j).unwrap();
+            write!(f, "k2 b\n").unwrap();
+        }
+        let o = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(o.indexed, "the covered prefix must still be served from the sidecar");
+        assert_eq!(keys(&o), ["k1", "k2"]);
+        assert_eq!(o.scanned_bytes, 5); // only "k2 b\n"
+        // And the extension is committed: the next open scans nothing.
+        let o = load(&j, IndexMode::Auto, &|_, _| panic!("must not scan")).unwrap();
+        assert_eq!(keys(&o), ["k1", "k2"]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn journal_mutation_forces_rebuild() {
+        let dir = tmpdir("rebuild");
+        let j = dir.join("j.jsonl");
+        std::fs::write(&j, "k1 a\nk2 b\n").unwrap();
+        load(&j, IndexMode::Auto, &key_of).unwrap();
+        // Compaction-style rewrite: same length is not enough to fool
+        // the tail hash.
+        std::fs::write(&j, "k9 a\nk8 b\n").unwrap();
+        let o = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(!o.indexed);
+        assert_eq!(keys(&o), ["k9", "k8"]);
+        assert_eq!(o.health.rebuilds, 1);
+        // Truncation below covered_len also invalidates.
+        std::fs::write(&j, "k9 a\n").unwrap();
+        let o = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(!o.indexed);
+        assert_eq!(keys(&o), ["k9"]);
+        assert_eq!(o.health.rebuilds, 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn torn_sidecar_tail_drops_uncommitted_records() {
+        let dir = tmpdir("tornidx");
+        let j = dir.join("j.jsonl");
+        std::fs::write(&j, "k1 a\nk2 b\n").unwrap();
+        load(&j, IndexMode::Auto, &key_of).unwrap();
+        // Simulate a kill mid-extend: staged record + garbage, no cover.
+        {
+            use std::io::Write as _;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(sidecar_path(&j)).unwrap();
+            write!(f, "r 999 5 kghost\nc 12 bad").unwrap();
+        }
+        let o = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(o.indexed, "the committed prefix must survive a torn sidecar tail");
+        assert_eq!(keys(&o), ["k1", "k2"], "ghost staged record must be dropped");
+        // The rewrite healed the sidecar.
+        let o = load(&j, IndexMode::Auto, &|_, _| panic!("must not scan")).unwrap();
+        assert_eq!(keys(&o), ["k1", "k2"]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn off_mode_is_pure_scan() {
+        let dir = tmpdir("off");
+        let j = dir.join("j.jsonl");
+        std::fs::write(&j, "k1 a\nk2 b\n").unwrap();
+        let o = load(&j, IndexMode::Off, &key_of).unwrap();
+        assert!(!o.indexed);
+        assert_eq!(keys(&o), ["k1", "k2"]);
+        assert!(!sidecar_path(&j).exists(), "Off mode must not create a sidecar");
+        // Off mode also ignores an existing sidecar entirely.
+        load(&j, IndexMode::Auto, &key_of).unwrap();
+        std::fs::write(&j, "k7 a\nk6 b\n").unwrap();
+        let o = load(&j, IndexMode::Off, &key_of).unwrap();
+        assert_eq!(keys(&o), ["k7", "k6"]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_and_empty_journals() {
+        let dir = tmpdir("empty");
+        let j = dir.join("j.jsonl");
+        let o = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(o.records.is_empty());
+        assert!(!sidecar_path(&j).exists(), "missing journal must not spawn a sidecar");
+        std::fs::write(&j, "").unwrap();
+        let o = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(o.records.is_empty());
+        let o = load(&j, IndexMode::Auto, &key_of).unwrap();
+        assert!(o.indexed, "an empty journal's cover is still a valid cover");
+        assert_eq!(health(&j).unwrap(), o.health);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,179 @@
+//! Interning for the canonical-print → SHA-256 keying path
+//! (DESIGN.md §14).
+//!
+//! Deriving a candidate's [`EvalKey`] costs a full parse, a canonical
+//! re-print and a SHA-256 over the result. Warm campaigns pay that
+//! price for the *same* texts over and over: every method bootstraps
+//! from the op baseline, populations revisit popular schedule points,
+//! and a resumed leg re-derives the key of every replayed trial. The
+//! [`KeyInterner`] memoizes the whole raw-text → key derivation —
+//! including the exact `CompileFail` error string an unparseable text
+//! produces — keyed by `(op, raw source)`, so re-keying an unchanged
+//! population is one hash-map probe instead of a parse+print+SHA.
+//!
+//! Byte-identity is free here: the derivation is a pure function of
+//! `(op, src)`, so a memoized answer is definitionally identical to a
+//! recomputed one. The map is bounded (epoch-cleared at capacity)
+//! because campaign-scale runs see an unbounded stream of novel
+//! candidate texts.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use super::hash::EvalKey;
+use crate::{dsl, ir};
+
+/// The memoized result of keying one raw candidate text for one op.
+#[derive(Debug, Clone)]
+pub enum Keyed {
+    /// The text parses; its content-addressed identity.
+    Key(EvalKey),
+    /// The text does not parse; the exact stage-1 syntax-rejection
+    /// error string (`CompileError::Syntax` rendering) the evaluator
+    /// reports, so replays of the rejection stay byte-identical.
+    Unparseable(String),
+}
+
+/// Bounded, shared memo for the raw-text → [`EvalKey`] derivation.
+/// Cheap to share: the [`Evaluator`](crate::evals::Evaluator) clones
+/// hold it in an `Arc`, so campaign workers dedupe across threads.
+pub struct KeyInterner {
+    map: RwLock<HashMap<String, Keyed>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl KeyInterner {
+    /// Default capacity: comfortably holds a campaign cell's working
+    /// set (budget × population revisits) without unbounded growth.
+    pub fn new() -> Self {
+        Self::with_capacity(4096)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            map: RwLock::new(HashMap::new()),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The key (or canonical syntax-rejection error) for `src` under
+    /// `op`, derived at most once per interner epoch.
+    pub fn key_for(&self, op: &str, src: &str) -> Keyed {
+        let mut memo = String::with_capacity(op.len() + 1 + src.len());
+        memo.push_str(op);
+        memo.push('\0');
+        memo.push_str(src);
+        if let Some(k) = self.map.read().unwrap().get(&memo) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return k.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let keyed = match dsl::parse(src) {
+            Ok(spec) => Keyed::Key(EvalKey::from_canonical(op, &dsl::print(&spec))),
+            Err(e) => Keyed::Unparseable(ir::CompileError::Syntax(e.to_string()).to_string()),
+        };
+        let mut map = self.map.write().unwrap();
+        if map.len() >= self.capacity {
+            // Epoch clear: dumb and O(1) amortized. An LRU would save
+            // re-derivations across epochs but put a linked-list walk
+            // on the hit path — the path this type exists to shorten.
+            map.clear();
+        }
+        map.entry(memo).or_insert_with(|| keyed.clone());
+        keyed
+    }
+
+    /// Memo probes served without a derivation (this process).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Derivations performed (this process).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Interned entries currently held.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for KeyInterner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::KernelSpec;
+
+    #[test]
+    fn interned_key_matches_direct_derivation() {
+        let interner = KeyInterner::new();
+        let spec = KernelSpec::baseline("matmul_64");
+        let src = dsl::print(&spec);
+        let direct = EvalKey::from_canonical("matmul_64", &dsl::print(&dsl::parse(&src).unwrap()));
+        for _ in 0..3 {
+            match interner.key_for("matmul_64", &src) {
+                Keyed::Key(k) => assert_eq!(k, direct),
+                Keyed::Unparseable(e) => panic!("unexpected parse failure: {e}"),
+            }
+        }
+        assert_eq!(interner.misses(), 1, "one derivation serves every probe");
+        assert_eq!(interner.hits(), 2);
+
+        // The op is part of the memo key.
+        match interner.key_for("softmax_64", &src) {
+            Keyed::Key(k) => assert_ne!(k, direct),
+            Keyed::Unparseable(e) => panic!("unexpected parse failure: {e}"),
+        }
+        assert_eq!(interner.misses(), 2);
+    }
+
+    #[test]
+    fn unparseable_error_string_is_memoized_exactly() {
+        let interner = KeyInterner::new();
+        let garbage = "__global__ void k() {}";
+        let expect = match dsl::parse(garbage) {
+            Err(e) => ir::CompileError::Syntax(e.to_string()).to_string(),
+            Ok(_) => panic!("garbage parsed"),
+        };
+        for _ in 0..2 {
+            match interner.key_for("matmul_64", garbage) {
+                Keyed::Unparseable(e) => assert_eq!(e, expect),
+                Keyed::Key(k) => panic!("garbage produced a key: {k:?}"),
+            }
+        }
+        assert_eq!(interner.misses(), 1);
+    }
+
+    #[test]
+    fn epoch_clear_bounds_the_map() {
+        let interner = KeyInterner::with_capacity(4);
+        for i in 0..20 {
+            let _ = interner.key_for("matmul_64", &format!("junk {i}"));
+        }
+        assert!(interner.len() <= 4, "map must stay bounded, saw {}", interner.len());
+        // Correctness is unaffected by clears.
+        let spec = KernelSpec::baseline("matmul_64");
+        let src = dsl::print(&spec);
+        match interner.key_for("matmul_64", &src) {
+            Keyed::Key(k) => {
+                assert_eq!(k, EvalKey::from_canonical("matmul_64", &dsl::print(&spec)))
+            }
+            Keyed::Unparseable(e) => panic!("{e}"),
+        }
+    }
+}

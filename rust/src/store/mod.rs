@@ -26,17 +26,28 @@
 //! * `RuntimeFail` outcomes — PJRT/infrastructure errors may be
 //!   transient and must not poison a persistent store.
 //!
-//! Durability model: one line per record, flushed on write; a process
-//! killed mid-write corrupts at most the final line, which the loader
-//! skips (with a warning). `cache gc` compacts duplicate keys and
-//! folds the per-session `stats` trailer lines into one.
+//! Durability model (DESIGN.md §14): appends are staged in a
+//! [`GroupWriter`] and committed as a group at explicit flush points
+//! (trial boundaries in the engine, or when the buffer fills); a
+//! process killed between flush points loses at most the records
+//! staged since the last trial boundary — exactly the work a resumed
+//! campaign re-derives anyway — and corrupts at most the final line,
+//! which the loader skips (with a warning). Opens are served by a
+//! validated sidecar offset index ([`index`]) instead of a full
+//! journal rescan; record bodies are `pread` + parsed lazily on first
+//! lookup. `cache gc` compacts duplicate keys and folds the
+//! per-session `stats` trailer lines into one.
 
 pub mod events;
 pub mod hash;
+pub mod index;
+pub mod intern;
 pub mod transcript;
 
 pub use events::{EventJournal, TrialEvent, TrialEventKind};
 pub use hash::{key_for_source, sha256_hex, EvalKey};
+pub use index::IndexMode;
+pub use intern::{KeyInterner, Keyed};
 pub use transcript::{TranscriptEntry, TranscriptStore};
 
 use std::collections::HashMap;
@@ -77,12 +88,85 @@ pub struct StoredEval {
     pub outcome: StoredOutcome,
 }
 
+/// Group-commit buffer in front of a journal's append handle
+/// (DESIGN.md §14). Records are staged in memory and written+flushed
+/// as one batch at explicit flush points — the engine's trial
+/// boundaries — or when the buffer reaches [`GROUP_COMMIT_MAX_BUF`].
+/// [`Drop`] flushes best-effort, so scope-exit keeps the old
+/// every-record-durable behaviour for short-lived handles;
+/// [`GroupWriter::drop_unflushed`] is the kill-simulation hook the
+/// crash-at-flush-boundary tests use to model a process dying with a
+/// dirty buffer.
+pub(crate) struct GroupWriter {
+    file: std::fs::File,
+    buf: Vec<u8>,
+}
+
+/// Auto-flush threshold: large enough that a burst of records inside
+/// one trial is one write syscall, small enough that a kill loses a
+/// bounded, quickly-re-derived amount of work.
+pub(crate) const GROUP_COMMIT_MAX_BUF: usize = 64 * 1024;
+
+impl GroupWriter {
+    pub(crate) fn new(file: std::fs::File) -> Self {
+        Self { file, buf: Vec::new() }
+    }
+
+    /// Stage one record line (without its terminator; the writer
+    /// appends the `\n`).
+    pub(crate) fn append_line(&mut self, line: &[u8]) -> std::io::Result<()> {
+        self.buf.extend_from_slice(line);
+        self.buf.push(b'\n');
+        if self.buf.len() >= GROUP_COMMIT_MAX_BUF {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Write and flush everything staged since the last flush point.
+    pub(crate) fn flush(&mut self) -> std::io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        use std::io::Write as _;
+        self.file.write_all(&self.buf)?;
+        self.buf.clear();
+        self.file.flush()
+    }
+
+    /// Discard staged-but-unflushed bytes — the kill simulation: a
+    /// SIGKILL between append and flush loses exactly these.
+    pub(crate) fn drop_unflushed(&mut self) {
+        self.buf.clear();
+    }
+}
+
+impl Drop for GroupWriter {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+/// One in-memory record slot: parsed, or a `(offset, len)` reference
+/// into the journal that is `pread` + parsed on first lookup. Indexed
+/// opens start with every slot on disk, so an open's cost no longer
+/// scales with record *bodies* — only with the record count.
+#[derive(Debug, Clone)]
+enum Slot {
+    Parsed(StoredEval),
+    OnDisk { offset: u64, len: u32 },
+}
+
 /// Append-only JSONL store with an in-memory index. Cheap to share:
 /// wrap in `Arc` and clone the handle.
 pub struct EvalStore {
     path: PathBuf,
-    map: RwLock<HashMap<String, StoredEval>>,
-    writer: Mutex<std::fs::File>,
+    map: RwLock<HashMap<String, Slot>>,
+    /// Positioned-read handle for lazy [`Slot::OnDisk`] hydration
+    /// (`pread` is `&self`-safe; no seek state to serialize).
+    reader: std::fs::File,
+    writer: Mutex<GroupWriter>,
+    indexed_open: bool,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -101,15 +185,26 @@ pub struct StoreStats {
     pub misses: u64,
     pub file_bytes: u64,
     pub journal_lines: usize,
+    /// Sidecar index health (`None` when no sidecar exists — the
+    /// journal was never opened with indexing on).
+    pub index: Option<index::IndexHealth>,
 }
 
 impl EvalStore {
-    /// Open (or create) the journal at `path` and index its entries.
-    /// The torn tail of a killed process is truncated before the
-    /// append handle opens (a fresh record must never concatenate onto
-    /// partial bytes); any other corrupt line is skipped with a
-    /// warning — the cache is advisory, never fatal.
+    /// Open (or create) the journal at `path` and index its entries,
+    /// honouring the `EVO_JOURNAL_INDEX` environment switch. The torn
+    /// tail of a killed process is truncated before the append handle
+    /// opens (a fresh record must never concatenate onto partial
+    /// bytes); any other corrupt line is skipped with a warning — the
+    /// cache is advisory, never fatal.
     pub fn open(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        Self::open_with(path, IndexMode::from_env())
+    }
+
+    /// [`EvalStore::open`] with an explicit index mode — `Off` forces
+    /// a full journal rescan with zero sidecar IO (the torture suite
+    /// exercises both paths and asserts they agree).
+    pub fn open_with(path: impl AsRef<Path>, mode: IndexMode) -> Result<Arc<Self>> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -123,38 +218,34 @@ impl EvalStore {
                 path.display()
             );
         }
-        let mut map = HashMap::new();
-        if path.exists() {
-            let f = std::fs::File::open(&path).context("opening eval cache")?;
-            for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match parse_line(&line) {
-                    Ok(Line::Eval { key, entry }) => {
-                        map.entry(key).or_insert(entry);
-                    }
-                    Ok(Line::Stats { .. }) => {}
-                    Err(e) => {
-                        eprintln!(
-                            "warning: eval cache {}: skipping bad line {}: {e}",
-                            path.display(),
-                            i + 1
-                        );
-                    }
-                }
-            }
-        }
+        // The append handle opens first so the journal exists (even
+        // empty) before the reader and the index look at it.
         let writer = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(&path)
             .context("opening eval cache for append")?;
+        let display = path.display().to_string();
+        let extract = |off: u64, line: &str| match parse_line(line) {
+            Ok(Line::Eval { key, .. }) => Some(key),
+            Ok(Line::Stats { .. }) => None,
+            Err(e) => {
+                eprintln!("warning: eval cache {display}: skipping bad line at byte {off}: {e}");
+                None
+            }
+        };
+        let loaded = index::load(&path, mode, &extract).context("indexing eval cache")?;
+        let mut map = HashMap::new();
+        for r in loaded.records {
+            map.entry(r.key).or_insert(Slot::OnDisk { offset: r.offset, len: r.len });
+        }
+        let reader = std::fs::File::open(&path).context("opening eval cache for read")?;
         Ok(Arc::new(Self {
             path,
             map: RwLock::new(map),
-            writer: Mutex::new(writer),
+            reader,
+            writer: Mutex::new(GroupWriter::new(writer)),
+            indexed_open: loaded.indexed,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }))
@@ -164,9 +255,62 @@ impl EvalStore {
         &self.path
     }
 
+    /// Whether this open was served by a valid sidecar index (vs a
+    /// full journal rescan).
+    pub fn opened_indexed(&self) -> bool {
+        self.indexed_open
+    }
+
+    /// The record behind `key`, hydrating an on-disk slot on first
+    /// touch. A slot whose bytes no longer parse to the expected key
+    /// (out-of-band journal mutation) is dropped with a warning so an
+    /// indexed open converges to the same misses a rescan would see.
+    fn fetch(&self, key: &str) -> Option<StoredEval> {
+        let extent = {
+            let g = self.map.read().unwrap();
+            match g.get(key)? {
+                Slot::Parsed(entry) => return Some(entry.clone()),
+                Slot::OnDisk { offset, len } => (*offset, *len),
+            }
+        };
+        use std::os::unix::fs::FileExt as _;
+        let (offset, len) = extent;
+        let mut buf = vec![0u8; len as usize];
+        let parsed = self
+            .reader
+            .read_exact_at(&mut buf, offset)
+            .map_err(|e| eyre!("{e}"))
+            .and_then(|_| {
+                let text = std::str::from_utf8(&buf).map_err(|e| eyre!("{e}"))?;
+                parse_line(text.trim_end_matches('\n'))
+            });
+        match parsed {
+            Ok(Line::Eval { key: line_key, entry }) if line_key == key => {
+                self.map
+                    .write()
+                    .unwrap()
+                    .insert(key.to_string(), Slot::Parsed(entry.clone()));
+                Some(entry)
+            }
+            other => {
+                let why = match other {
+                    Ok(Line::Eval { key: k, .. }) => format!("record at byte {offset} keyed `{k}`"),
+                    Ok(Line::Stats { .. }) => format!("record at byte {offset} is a stats line"),
+                    Err(e) => format!("record at byte {offset} unreadable: {e}"),
+                };
+                eprintln!(
+                    "warning: eval cache {}: dropping stale index slot for `{key}`: {why}",
+                    self.path.display()
+                );
+                self.map.write().unwrap().remove(key);
+                None
+            }
+        }
+    }
+
     /// Cached result for `key`, counting a hit or miss.
     pub fn lookup(&self, key: &EvalKey) -> Option<StoredEval> {
-        let found = self.map.read().unwrap().get(key.as_str()).cloned();
+        let found = self.fetch(key.as_str());
         match &found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -176,21 +320,33 @@ impl EvalStore {
 
     /// Insert + journal a fresh record. A key that is already present
     /// (e.g. two workers racing on the same candidate) is left as-is
-    /// and not re-journaled.
+    /// and not re-journaled. The append is staged in the group-commit
+    /// buffer; durability arrives at the next [`EvalStore::flush`]
+    /// (the engine calls it at every trial boundary).
     pub fn record(&self, key: &EvalKey, entry: StoredEval) -> Result<()> {
         {
             let mut g = self.map.write().unwrap();
             if g.contains_key(key.as_str()) {
                 return Ok(());
             }
-            g.insert(key.as_str().to_string(), entry.clone());
+            g.insert(key.as_str().to_string(), Slot::Parsed(entry.clone()));
         }
         let line = eval_line(key, &entry).to_string();
-        let mut w = self.writer.lock().unwrap();
-        w.write_all(line.as_bytes())?;
-        w.write_all(b"\n")?;
-        w.flush()?;
+        self.writer.lock().unwrap().append_line(line.as_bytes())?;
         Ok(())
+    }
+
+    /// Group-commit flush point: make every staged record durable.
+    pub fn flush(&self) -> Result<()> {
+        self.writer.lock().unwrap().flush()?;
+        Ok(())
+    }
+
+    /// Test hook: simulate a kill between append and flush by
+    /// discarding staged-but-unflushed bytes.
+    #[doc(hidden)]
+    pub fn drop_unflushed(&self) {
+        self.writer.lock().unwrap().drop_unflushed();
     }
 
     /// Unique cached evaluations.
@@ -214,22 +370,21 @@ impl EvalStore {
 
     /// Journal this session's hit/miss counters so `cache stats` can
     /// report cumulative savings across process lifetimes. Call once
-    /// at the end of a campaign/run; a no-op when nothing was looked
-    /// up.
+    /// at the end of a campaign/run. Always flushes the group-commit
+    /// buffer, even when no stats line is due — this is the session's
+    /// final flush point.
     pub fn flush_session_stats(&self) -> Result<()> {
         let (h, m) = (self.hits(), self.misses());
-        if h == 0 && m == 0 {
-            return Ok(());
-        }
-        let line = Json::obj(vec![
-            ("type", Json::Str("stats".into())),
-            ("hits", Json::Num(h as f64)),
-            ("misses", Json::Num(m as f64)),
-        ])
-        .to_string();
         let mut w = self.writer.lock().unwrap();
-        w.write_all(line.as_bytes())?;
-        w.write_all(b"\n")?;
+        if h != 0 || m != 0 {
+            let line = Json::obj(vec![
+                ("type", Json::Str("stats".into())),
+                ("hits", Json::Num(h as f64)),
+                ("misses", Json::Num(m as f64)),
+            ])
+            .to_string();
+            w.append_line(line.as_bytes())?;
+        }
         w.flush()?;
         Ok(())
     }
@@ -273,6 +428,7 @@ impl EvalStore {
             }
         }
         s.ops = ops.len();
+        s.index = index::health(path);
         Ok(s)
     }
 
@@ -330,6 +486,9 @@ impl EvalStore {
             w.flush()?;
         }
         std::fs::rename(&tmp, path).context("replacing eval cache")?;
+        // The sidecar indexed the pre-compaction journal; drop it so
+        // the next open rebuilds from the compacted bytes.
+        index::delete_sidecar(path);
         let after = std::fs::metadata(path)?.len();
         Ok((before, after))
     }
@@ -549,6 +708,15 @@ pub fn stats_report(path: impl AsRef<Path>, s: &StoreStats) -> String {
         s.hits, s.misses, s.hits
     )
     .unwrap();
+    match &s.index {
+        Some(h) => writeln!(
+            out,
+            "  index: {} indexed opens, {} scanned opens, {} rebuilds",
+            h.indexed_opens, h.scanned_opens, h.rebuilds
+        )
+        .unwrap(),
+        None => writeln!(out, "  index: no sidecar").unwrap(),
+    }
     out
 }
 
@@ -811,6 +979,132 @@ mod tests {
         // Journal still loads and serves the entry.
         let store = EvalStore::open(&path).unwrap();
         assert!(store.lookup(&k).is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    fn fail_entry(op: &str, error: &str) -> StoredEval {
+        StoredEval {
+            op: op.into(),
+            model: "-".into(),
+            outcome: StoredOutcome::CompileFail { error: error.into() },
+        }
+    }
+
+    #[test]
+    fn group_commit_buffers_until_flush_point() {
+        let dir = tmpdir("group");
+        let path = dir.join("cache.jsonl");
+        let store = EvalStore::open(&path).unwrap();
+        let k1 = EvalKey::from_canonical("matmul_64", "a");
+        let k2 = EvalKey::from_canonical("matmul_64", "b");
+        store.record(&k1, fail_entry("matmul_64", "x")).unwrap();
+        store.record(&k2, fail_entry("matmul_64", "y")).unwrap();
+        // Staged, not yet durable — but served from memory.
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        assert!(store.lookup(&k1).is_some());
+        store.flush().unwrap();
+        let after_flush = std::fs::metadata(&path).unwrap().len();
+        assert!(after_flush > 0);
+        // Byte-identical to what per-record flushing would have written.
+        let want = format!(
+            "{}\n{}\n",
+            eval_line(&k1, &fail_entry("matmul_64", "x")),
+            eval_line(&k2, &fail_entry("matmul_64", "y"))
+        );
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), want);
+        // Idempotent flush point.
+        store.flush().unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), after_flush);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn kill_between_append_and_flush_loses_only_staged_records() {
+        let dir = tmpdir("kill");
+        let path = dir.join("cache.jsonl");
+        let k_durable = EvalKey::from_canonical("matmul_64", "a");
+        let k_staged = EvalKey::from_canonical("matmul_64", "b");
+        {
+            let store = EvalStore::open(&path).unwrap();
+            store.record(&k_durable, fail_entry("matmul_64", "x")).unwrap();
+            store.flush().unwrap();
+            store.record(&k_staged, fail_entry("matmul_64", "y")).unwrap();
+            // Simulated SIGKILL with a dirty buffer.
+            store.drop_unflushed();
+        }
+        let store = EvalStore::open(&path).unwrap();
+        assert!(store.lookup(&k_durable).is_some(), "flushed record must survive");
+        assert!(store.lookup(&k_staged).is_none(), "staged record dies with the process");
+        // Re-deriving and re-recording the lost record works cleanly.
+        store.record(&k_staged, fail_entry("matmul_64", "y")).unwrap();
+        store.flush().unwrap();
+        let store = EvalStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn drop_without_explicit_flush_still_persists() {
+        // Scope-exit durability: GroupWriter's Drop flushes, so code
+        // that never reaches a trial boundary (one-shot CLI paths)
+        // keeps the old behaviour.
+        let dir = tmpdir("dropflush");
+        let path = dir.join("cache.jsonl");
+        let k = EvalKey::from_canonical("matmul_64", "a");
+        {
+            let store = EvalStore::open(&path).unwrap();
+            store.record(&k, fail_entry("matmul_64", "x")).unwrap();
+        }
+        let store = EvalStore::open(&path).unwrap();
+        assert!(store.lookup(&k).is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn indexed_reopen_serves_identical_records() {
+        let dir = tmpdir("idx");
+        let path = dir.join("cache.jsonl");
+        let k1 = EvalKey::from_canonical("matmul_64", "a");
+        let k2 = EvalKey::guarded("matmul_64", "raw b");
+        {
+            let store = EvalStore::open_with(&path, IndexMode::Auto).unwrap();
+            assert!(!store.opened_indexed(), "first open is a scan");
+            store
+                .record(
+                    &k1,
+                    StoredEval {
+                        op: "matmul_64".into(),
+                        model: "GPT-4.1".into(),
+                        outcome: StoredOutcome::Ok { timing: sample_timing() },
+                    },
+                )
+                .unwrap();
+            store.record(&k2, fail_entry("matmul_64", "guard")).unwrap();
+        }
+        // Second open after a (Drop-)flushed append rescans only the
+        // tail; third is fully indexed. All three serve the same data.
+        for round in 0..2 {
+            let store = EvalStore::open_with(&path, IndexMode::Auto).unwrap();
+            if round == 1 {
+                assert!(store.opened_indexed(), "warm open must be index-served");
+            }
+            assert_eq!(store.len(), 2);
+            match store.lookup(&k1).unwrap().outcome {
+                StoredOutcome::Ok { timing } => assert_eq!(timing.time, 1.25e-4),
+                other => panic!("{other:?}"),
+            }
+            assert!(store.lookup(&k2).is_some());
+        }
+        // Off-mode open of the same journal agrees.
+        let off = EvalStore::open_with(&path, IndexMode::Off).unwrap();
+        assert!(!off.opened_indexed());
+        assert_eq!(off.len(), 2);
+        assert!(off.lookup(&k1).is_some() && off.lookup(&k2).is_some());
+        // Health is visible through stats + report.
+        let s = EvalStore::stats(&path).unwrap();
+        let h = s.index.expect("sidecar exists after Auto opens");
+        assert!(h.indexed_opens >= 1);
+        assert!(stats_report(&path, &s).contains("indexed opens"));
         std::fs::remove_dir_all(dir).ok();
     }
 }

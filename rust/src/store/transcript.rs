@@ -21,19 +21,28 @@
 //!   `seed` is a decimal *string* (u64 seeds exceed the f64-exact
 //!   integer range our JSON numbers can carry).
 //!
-//! Durability matches the eval cache: one flushed line per record, a
-//! torn final line from a killed process is truncated on reopen, and
-//! duplicate keys keep their first (original) entry.
+//! Durability matches the eval cache (DESIGN.md §14): call appends are
+//! staged in a [`GroupWriter`](super::GroupWriter) and committed at
+//! trial-boundary flush points (the `meta` line flushes immediately —
+//! it is the journal's identity), a torn final line from a killed
+//! process is truncated on reopen, duplicate keys keep their first
+//! (original) entry, and opens are served by the sidecar offset index
+//! ([`super::index`]) with call bodies `pread` + parsed lazily.
 //!
 //! [`GenerationRequest`]: crate::llm::GenerationRequest
 
 use std::collections::HashMap;
-use std::io::{BufRead, Write as _};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
 
+use super::index::{self, IndexMode};
+use super::GroupWriter;
 use crate::util::json::{self, Json};
 use crate::{eyre, Result, WrapErr as _};
+
+/// Sidecar index key for the journal's `meta` line. Call keys are
+/// SHA-256 hex digests, so the `@` prefix cannot collide.
+const META_KEY: &str = "@meta";
 
 /// One journaled provider call: everything the caller got back, plus
 /// the request identity needed to audit it.
@@ -51,21 +60,37 @@ pub struct TranscriptEntry {
     pub completion_tokens: u64,
 }
 
+/// One in-memory call slot: parsed, or a journal byte extent hydrated
+/// on first lookup (see [`super::Slot`] on the eval cache — same
+/// scheme).
+#[derive(Debug, Clone)]
+enum Slot {
+    Parsed(TranscriptEntry),
+    OnDisk { offset: u64, len: u32 },
+}
+
 /// Append-only transcript journal with an in-memory index.
 pub struct TranscriptStore {
     path: PathBuf,
-    map: RwLock<HashMap<String, TranscriptEntry>>,
-    writer: Mutex<std::fs::File>,
+    map: RwLock<HashMap<String, Slot>>,
+    /// Positioned-read handle for lazy [`Slot::OnDisk`] hydration.
+    reader: std::fs::File,
+    writer: Mutex<GroupWriter>,
     /// Label of the backend that generated the journal's entries
     /// (from the `meta` line; set on first `record_source`).
     source: RwLock<Option<String>>,
 }
 
 impl TranscriptStore {
-    /// Open (or create) the journal at `path` and index its entries.
-    /// Torn final lines are truncated; other corrupt lines are skipped
-    /// with a warning.
+    /// Open (or create) the journal at `path` and index its entries,
+    /// honouring `EVO_JOURNAL_INDEX`. Torn final lines are truncated;
+    /// other corrupt lines are skipped with a warning.
     pub fn open(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        Self::open_with(path, IndexMode::from_env())
+    }
+
+    /// [`TranscriptStore::open`] with an explicit index mode.
+    pub fn open_with(path: impl AsRef<Path>, mode: IndexMode) -> Result<Arc<Self>> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -80,41 +105,41 @@ impl TranscriptStore {
                 path.display()
             );
         }
-        let mut map = HashMap::new();
-        let mut source = None;
-        if path.exists() {
-            let f = std::fs::File::open(&path).context("opening transcript journal")?;
-            for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match parse_line(&line) {
-                    Ok(Line::Meta { provider }) => {
-                        source.get_or_insert(provider);
-                    }
-                    Ok(Line::Call { key, entry }) => {
-                        map.entry(key).or_insert(entry);
-                    }
-                    Err(e) => {
-                        eprintln!(
-                            "warning: transcript {}: skipping bad line {}: {e}",
-                            path.display(),
-                            i + 1
-                        );
-                    }
-                }
-            }
-        }
         let writer = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(&path)
             .context("opening transcript journal for append")?;
+        let display = path.display().to_string();
+        let extract = |off: u64, line: &str| match parse_line(line) {
+            Ok(Line::Meta { .. }) => Some(META_KEY.to_string()),
+            Ok(Line::Call { key, .. }) => Some(key),
+            Err(e) => {
+                eprintln!("warning: transcript {display}: skipping bad line at byte {off}: {e}");
+                None
+            }
+        };
+        let loaded = index::load(&path, mode, &extract).context("indexing transcript")?;
+        let reader = std::fs::File::open(&path).context("opening transcript for read")?;
+        let mut map = HashMap::new();
+        let mut source = None;
+        for r in loaded.records {
+            if r.key == META_KEY {
+                // The journal's identity: hydrate eagerly (first wins).
+                if source.is_none() {
+                    if let Ok(Line::Meta { provider }) = read_record(&reader, r.offset, r.len) {
+                        source = Some(provider);
+                    }
+                }
+            } else {
+                map.entry(r.key).or_insert(Slot::OnDisk { offset: r.offset, len: r.len });
+            }
+        }
         Ok(Arc::new(Self {
             path,
             map: RwLock::new(map),
-            writer: Mutex::new(writer),
+            reader,
+            writer: Mutex::new(GroupWriter::new(writer)),
             source: RwLock::new(source),
         }))
     }
@@ -154,37 +179,81 @@ impl TranscriptStore {
                 ("provider", Json::Str(label.to_string())),
             ])
             .to_string();
+            // The meta line is the journal's identity — flush it
+            // through immediately rather than waiting for a trial
+            // boundary.
             let mut w = self.writer.lock().unwrap();
-            w.write_all(line.as_bytes())?;
-            w.write_all(b"\n")?;
+            w.append_line(line.as_bytes())?;
             w.flush()?;
             *g = Some(label.to_string());
         }
         Ok(())
     }
 
-    /// Journaled response for a request hash.
+    /// Journaled response for a request hash, hydrating an on-disk
+    /// slot on first touch. A slot whose bytes no longer parse to the
+    /// expected key is dropped with a warning (see the eval cache's
+    /// `fetch` — same contract).
     pub fn lookup(&self, key: &str) -> Option<TranscriptEntry> {
-        self.map.read().unwrap().get(key).cloned()
+        let extent = {
+            let g = self.map.read().unwrap();
+            match g.get(key)? {
+                Slot::Parsed(entry) => return Some(entry.clone()),
+                Slot::OnDisk { offset, len } => (*offset, *len),
+            }
+        };
+        let (offset, len) = extent;
+        match read_record(&self.reader, offset, len) {
+            Ok(Line::Call { key: line_key, entry }) if line_key == key => {
+                self.map
+                    .write()
+                    .unwrap()
+                    .insert(key.to_string(), Slot::Parsed(entry.clone()));
+                Some(entry)
+            }
+            other => {
+                let why = match other {
+                    Ok(Line::Call { key: k, .. }) => format!("record at byte {offset} keyed `{k}`"),
+                    Ok(Line::Meta { .. }) => format!("record at byte {offset} is a meta line"),
+                    Err(e) => format!("record at byte {offset} unreadable: {e}"),
+                };
+                eprintln!(
+                    "warning: transcript {}: dropping stale index slot for `{key}`: {why}",
+                    self.path.display()
+                );
+                self.map.write().unwrap().remove(key);
+                None
+            }
+        }
     }
 
     /// Append one call. A key already present (identical request seen
     /// twice — same prompt, seed and role) keeps its first entry and
-    /// is not re-journaled.
+    /// is not re-journaled. The append is staged in the group-commit
+    /// buffer; durability arrives at the next [`TranscriptStore::flush`].
     pub fn append(&self, key: &str, entry: TranscriptEntry) -> Result<()> {
         {
             let mut g = self.map.write().unwrap();
             if g.contains_key(key) {
                 return Ok(());
             }
-            g.insert(key.to_string(), entry.clone());
+            g.insert(key.to_string(), Slot::Parsed(entry.clone()));
         }
         let line = call_line(key, &entry).to_string();
-        let mut w = self.writer.lock().unwrap();
-        w.write_all(line.as_bytes())?;
-        w.write_all(b"\n")?;
-        w.flush()?;
+        self.writer.lock().unwrap().append_line(line.as_bytes())?;
         Ok(())
+    }
+
+    /// Group-commit flush point: make every staged call durable.
+    pub fn flush(&self) -> Result<()> {
+        self.writer.lock().unwrap().flush()?;
+        Ok(())
+    }
+
+    /// Test hook: simulate a kill between append and flush.
+    #[doc(hidden)]
+    pub fn drop_unflushed(&self) {
+        self.writer.lock().unwrap().drop_unflushed();
     }
 
     /// Unique journaled calls.
@@ -200,6 +269,15 @@ impl TranscriptStore {
 enum Line {
     Meta { provider: String },
     Call { key: String, entry: TranscriptEntry },
+}
+
+/// `pread` + parse one journal line by its indexed byte extent.
+fn read_record(reader: &std::fs::File, offset: u64, len: u32) -> Result<Line> {
+    use std::os::unix::fs::FileExt as _;
+    let mut buf = vec![0u8; len as usize];
+    reader.read_exact_at(&mut buf, offset).map_err(|e| eyre!("{e}"))?;
+    let text = std::str::from_utf8(&buf).map_err(|e| eyre!("{e}"))?;
+    parse_line(text.trim_end_matches('\n'))
 }
 
 fn call_line(key: &str, e: &TranscriptEntry) -> Json {

@@ -9,11 +9,53 @@
 //! Methodology: warmup, then adaptive batching until the measurement
 //! window is filled; reports median / p10 / p90 of per-iteration times
 //! across batches, criterion-style.
+//!
+//! Machine-readable trajectory: when `EVO_BENCH_JSON` names a file,
+//! every finished bench appends one JSONL summary line to it, and
+//! [`emit_ratio`] appends derived speedup ratios with their targets —
+//! `scripts/bench.sh` merges these into the committed `BENCH_<date>.json`
+//! artifact (schema in DESIGN.md §14).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
 use super::stats::percentile;
+
+/// Append one JSONL line to the `EVO_BENCH_JSON` file, if configured.
+/// Advisory: a failed write warns and never fails a bench run.
+fn emit_json_line(line: &str) {
+    let Ok(path) = std::env::var("EVO_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write as _;
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = res {
+        eprintln!("warning: bench: cannot append to EVO_BENCH_JSON={path}: {e}");
+    }
+}
+
+/// Record a derived speedup ratio (e.g. indexed-open vs full-rescan)
+/// in the bench JSON stream, with the acceptance target it is checked
+/// against by `scripts/bench_compare.py`.
+pub fn emit_ratio(group: &str, name: &str, value: f64, target: f64) {
+    println!(
+        "{:<40} {value:>10.2}x  (target >= {target}x): {}",
+        format!("{group}/{name}"),
+        if value >= target { "PASS" } else { "FAIL" }
+    );
+    emit_json_line(&format!(
+        "{{\"type\":\"ratio\",\"group\":{},\"name\":{},\"value\":{value},\"target\":{target}}}",
+        crate::util::json::Json::Str(group.to_string()),
+        crate::util::json::Json::Str(name.to_string()),
+    ));
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -106,6 +148,16 @@ impl Bench {
             BenchResult::fmt_dur(result.p90),
             result.iters
         );
+        emit_json_line(&format!(
+            "{{\"type\":\"bench\",\"group\":{},\"name\":{},\"median_ns\":{},\
+             \"p10_ns\":{},\"p90_ns\":{},\"iters\":{}}}",
+            crate::util::json::Json::Str(result.group.clone()),
+            crate::util::json::Json::Str(result.name.clone()),
+            result.median.as_nanos(),
+            result.p10.as_nanos(),
+            result.p90.as_nanos(),
+            result.iters
+        ));
         self.results.push(result);
         self.results.last().unwrap()
     }

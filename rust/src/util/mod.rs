@@ -16,19 +16,42 @@ pub use stats::{mean, median, pearson, percentile};
 /// concatenate a fresh record onto the torn tail and turn a
 /// recoverable loss into interior corruption. Returns the number of
 /// bytes trimmed; missing file is a no-op.
+///
+/// The scan runs *backwards* from the end in fixed-size `pread`
+/// chunks: an intact journal (the overwhelmingly common case) proves
+/// itself clean from its final byte alone, and even a torn one only
+/// reads back to the last newline — never the whole file, which used
+/// to make every open of a multi-megabyte store O(file) before any
+/// indexing could help (DESIGN.md §14).
 pub fn truncate_torn_tail(path: &std::path::Path) -> std::io::Result<u64> {
+    use std::os::unix::fs::FileExt as _;
+
     let Ok(meta) = std::fs::metadata(path) else {
         return Ok(0);
     };
-    if meta.len() == 0 {
+    let len = meta.len();
+    if len == 0 {
         return Ok(0);
     }
-    let bytes = std::fs::read(path)?;
-    let keep = match bytes.iter().rposition(|&b| b == b'\n') {
-        Some(pos) => (pos + 1) as u64,
-        None => 0,
-    };
-    let torn = meta.len().saturating_sub(keep);
+    const CHUNK: u64 = 8 * 1024;
+    let f = std::fs::File::open(path)?;
+    let mut buf = [0u8; CHUNK as usize];
+    // End (exclusive) of the last complete line: the byte after the
+    // final `\n`, or 0 when the file holds none.
+    let mut keep = 0u64;
+    let mut hi = len;
+    while hi > 0 {
+        let lo = hi.saturating_sub(CHUNK);
+        let chunk = &mut buf[..(hi - lo) as usize];
+        f.read_exact_at(chunk, lo)?;
+        if let Some(pos) = chunk.iter().rposition(|&b| b == b'\n') {
+            keep = lo + pos as u64 + 1;
+            break;
+        }
+        hi = lo;
+    }
+    drop(f);
+    let torn = len - keep;
     if torn > 0 {
         let f = std::fs::OpenOptions::new().write(true).open(path)?;
         f.set_len(keep)?;

@@ -1,0 +1,162 @@
+//! Group-commit crash tests (DESIGN.md §14): a SIGKILL landing BETWEEN
+//! a trial's buffered journal appends and the trial-boundary flush
+//! point loses exactly the staged suffix — whole lines that never
+//! reached the file descriptor, plus possibly one torn line that was
+//! mid-write. A campaign resumed from that state must re-derive
+//! byte-identical records and reports (the PR 5 trial-granular resume
+//! contract survives the PR 6 buffering).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::evals::Evaluator;
+use evoengineer::report;
+use evoengineer::runtime::Runtime;
+use evoengineer::store::{
+    EvalStore, EventJournal, IndexMode, TranscriptEntry, TranscriptStore,
+};
+use evoengineer::tasks::TaskRegistry;
+
+fn registry() -> Arc<TaskRegistry> {
+    Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    )
+}
+
+fn evaluator() -> Evaluator {
+    Evaluator::new(registry(), Runtime::new().unwrap())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("evo_groupcommit_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Drop the last `n` complete lines of a journal — the staged
+/// group-commit batch a kill discards before it reaches the fd.
+fn chop_lines(path: &Path, n: usize) {
+    let bytes = std::fs::read(path).unwrap();
+    let ends: Vec<usize> = bytes
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b == b'\n')
+        .map(|(i, _)| i + 1)
+        .collect();
+    assert!(ends.len() > n, "journal too short to chop {n} lines");
+    std::fs::write(path, &bytes[..ends[ends.len() - 1 - n]]).unwrap();
+}
+
+/// The full kill-at-flush-boundary simulation, end to end: interrupt a
+/// campaign mid-cell, then rewind its journals to the state a dirty
+/// group-commit buffer leaves behind — the staged burst gone, the
+/// mid-write line torn — and resume.
+#[test]
+fn kill_with_staged_group_commit_buffer_resumes_byte_identical() {
+    let dir = tmpdir("campaign");
+    let checkpoint = dir.join("records.checkpoint.jsonl");
+    let cache = dir.join("eval_cache.jsonl");
+    let events_path = dir.join("events.jsonl");
+    let base = CampaignConfig {
+        methods: vec!["evoengineer-free".into(), "funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        op_filter: "relu_64".into(),
+        budget: 4,
+        quiet: true,
+        concurrency: 1,
+        ..CampaignConfig::default()
+    };
+
+    // Reference: one uninterrupted run, no persistence at all.
+    let full = campaign::run(&base, evaluator()).unwrap();
+    assert_eq!(full.len(), 2);
+
+    // Leg 1: checkpoint + cache + events, killed after 6 trial groups
+    // (cell 1 takes 4, so the kill lands mid-cell-2).
+    let leg1 = CampaignConfig {
+        checkpoint: Some(checkpoint.clone()),
+        events: Some(events_path.clone()),
+        stop_after_trials: 6,
+        ..base.clone()
+    };
+    let partial = campaign::run(&leg1, evaluator().with_store(EvalStore::open(&cache).unwrap()))
+        .unwrap();
+    assert_eq!(partial.len(), 1, "the second cell was killed mid-run");
+
+    // campaign::run exits cleanly, so its journals are fully flushed.
+    // Rewind them to the crash state: the kill's dirty buffer loses
+    // the last trial's staged event burst as whole lines, and the line
+    // that was crossing the fd when the process died is torn mid-byte.
+    let flushed = EventJournal::load(&events_path).unwrap();
+    chop_lines(&events_path, 3);
+    chop_lines(&cache, 1);
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&events_path).unwrap();
+        write!(f, "{{\"type\":\"event\",\"kind\":\"trial").unwrap();
+    }
+    let crashed = EventJournal::load(&events_path).unwrap();
+    assert!(
+        crashed.len() <= flushed.len() - 3,
+        "crash must have lost the staged burst ({} -> {})",
+        flushed.len(),
+        crashed.len()
+    );
+
+    // Leg 2: resume from the crashed journals. Torn tails repair, the
+    // lost trials replay live (same RNG stream, warm cache for what
+    // survived), and the result is byte-identical to the reference.
+    let leg2 = CampaignConfig { resume: true, stop_after_trials: 0, ..leg1.clone() };
+    let resumed = campaign::run(&leg2, evaluator().with_store(EvalStore::open(&cache).unwrap()))
+        .unwrap();
+    assert_eq!(resumed.len(), full.len());
+    for (a, b) in full.iter().zip(&resumed) {
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "crash-at-flush-boundary resume diverged for {}/{}",
+            a.method,
+            a.op
+        );
+    }
+    assert_eq!(report::table4(&full), report::table4(&resumed));
+    assert_eq!(report::fig1(&full), report::fig1(&resumed));
+    assert_eq!(report::tokens(&full), report::tokens(&resumed));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Store-level contract behind the campaign test, for the transcript
+/// journal (the eval cache and event journal have unit-level twins in
+/// their own modules): a kill between append and flush loses exactly
+/// the staged calls, never flushed ones, and never the meta line.
+#[test]
+fn transcript_kill_loses_only_staged_calls() {
+    let dir = tmpdir("transcript");
+    let path = dir.join("transcripts.jsonl");
+    let entry = |seed: u64| TranscriptEntry {
+        role: "generate".into(),
+        model: "GPT-4.1".into(),
+        seed,
+        text: "kernel relu_64 { semantics: opt; }".into(),
+        insight: "baseline".into(),
+        prompt_tokens: 10,
+        completion_tokens: 5,
+    };
+    {
+        let t = TranscriptStore::open_with(&path, IndexMode::Off).unwrap();
+        t.record_source("sim").unwrap(); // identity line flushes through
+        t.append("k_durable", entry(1)).unwrap();
+        t.flush().unwrap();
+        t.append("k_staged", entry(2)).unwrap();
+        t.drop_unflushed(); // simulated SIGKILL with a dirty buffer
+    }
+    let t = TranscriptStore::open_with(&path, IndexMode::Off).unwrap();
+    assert_eq!(t.source().as_deref(), Some("sim"));
+    assert_eq!(t.lookup("k_durable"), Some(entry(1)));
+    assert_eq!(t.lookup("k_staged"), None, "staged call must die with the buffer");
+    assert_eq!(t.len(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,131 @@
+//! Parallel stage-0 guard determinism (DESIGN.md §14): screening a
+//! candidate batch with `guard::check_batch` must be a pure
+//! parallelization — identical verdicts, identical diagnostic
+//! ordering, and byte-identical journaled GuardReject records — at
+//! every worker count, over every baseline op in the manifest.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use evoengineer::costmodel::baseline_schedule;
+use evoengineer::dsl::{self, KernelSpec};
+use evoengineer::evals::{EvalOutcome, Evaluator};
+use evoengineer::guard::{self, GuardReport};
+use evoengineer::runtime::Runtime;
+use evoengineer::store::{EvalStore, IndexMode};
+use evoengineer::tasks::{OpTask, TaskRegistry};
+use evoengineer::util::Rng;
+
+fn registry() -> Arc<TaskRegistry> {
+    Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    )
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("evo_guardpar_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn baseline(op: &OpTask) -> String {
+    dsl::print(&KernelSpec {
+        op: op.name.clone(),
+        semantics: "opt".into(),
+        schedule: baseline_schedule(op),
+    })
+}
+
+/// Every baseline op (all 91), each with an invalid companion drawn
+/// from the candidate taxonomy, screened at worker counts 0 (auto),
+/// 1 (the sequential path), and 2/4/8 (the pool). The batch result
+/// must equal the one-by-one sequential reference exactly — same
+/// verdicts, same diagnostics, same order.
+#[test]
+fn check_batch_matches_sequential_over_all_baseline_ops() {
+    let reg = registry();
+    let mut sources: Vec<(String, &OpTask)> = Vec::new();
+    for (i, op) in reg.ops.iter().enumerate() {
+        let base = baseline(op);
+        sources.push((base.clone(), op));
+        match i % 3 {
+            // Syntax: not a program.
+            0 => sources.push((base.replacen(';', " ", 1), op)),
+            // Undefined ref: another op's baseline against this task.
+            1 => {
+                let other = &reg.ops[(i + 7) % reg.ops.len()];
+                sources.push((baseline(other), op));
+            }
+            // Undefined ref: hallucinated semantics variant.
+            _ => {
+                let spec = KernelSpec {
+                    op: op.name.clone(),
+                    semantics: "turbo_v9".into(),
+                    schedule: baseline_schedule(op),
+                };
+                sources.push((dsl::print(&spec), op));
+            }
+        }
+    }
+    let items: Vec<(&str, &OpTask)> = sources.iter().map(|(s, op)| (s.as_str(), *op)).collect();
+    let reference: Vec<GuardReport> =
+        items.iter().map(|(src, op)| guard::check_source(src, op)).collect();
+    assert!(reference.iter().any(|r| r.pass()), "batch must contain passing candidates");
+    assert!(reference.iter().any(|r| !r.pass()), "batch must contain rejected candidates");
+
+    for workers in [0usize, 1, 2, 4, 8] {
+        let got = guard::check_batch(&items, workers);
+        assert_eq!(
+            got, reference,
+            "worker count {workers} changed a verdict, a diagnostic, or the ordering"
+        );
+    }
+    assert!(guard::check_batch(&[], 4).is_empty(), "empty batch");
+}
+
+/// Journal identity: screen a guard-rejected batch in parallel, then
+/// journal the rejections (sequentially, in batch order — exactly what
+/// the engine does at trial boundaries). Two independent runs must
+/// produce byte-identical journal files: parallel screening must not
+/// perturb the journaled GuardReject keys, record contents, or order.
+#[test]
+fn parallel_screening_journals_byte_identical_rejections() {
+    let reg = registry();
+    let dir = tmpdir("journal");
+    let cands: Vec<(String, OpTask)> = ["matmul_64", "relu_64", "softmax_256", "layernorm_64",
+        "tanh_64"]
+        .iter()
+        .map(|&name| {
+            let op = reg.get(name).expect(name).clone();
+            let mut spec = KernelSpec {
+                op: op.name.clone(),
+                semantics: "opt".into(),
+                schedule: baseline_schedule(&op),
+            };
+            spec.schedule.tile_k = 0; // compile-legal, guard-rejected
+            (dsl::print(&spec), op)
+        })
+        .collect();
+
+    let run = |path: &Path| {
+        let ev = Evaluator::new(reg.clone(), Runtime::new().unwrap())
+            .with_store(EvalStore::open_with(path, IndexMode::Auto).unwrap());
+        let items: Vec<(&str, &OpTask)> = cands.iter().map(|(s, op)| (s.as_str(), op)).collect();
+        let reports = guard::check_batch(&items, 4);
+        for ((src, op), report) in cands.iter().zip(&reports) {
+            assert!(!report.pass(), "{}: mutant unexpectedly passed the guard", op.name);
+            let mut rng = Rng::new(9);
+            let out = ev.evaluate_guarded(src, op, "-", &mut rng);
+            assert!(matches!(out, EvalOutcome::GuardReject { .. }), "{}: {out:?}", op.name);
+        }
+        assert_eq!(ev.runtime_stats().unwrap().executions, 0, "rejects must never hit PJRT");
+        ev.store().unwrap().flush().unwrap();
+        std::fs::read(path).unwrap()
+    };
+    let a = run(&dir.join("a.jsonl"));
+    let b = run(&dir.join("b.jsonl"));
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "journaled GuardReject records diverged across identical runs");
+    std::fs::remove_dir_all(&dir).ok();
+}

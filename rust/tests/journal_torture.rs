@@ -1,0 +1,529 @@
+//! Journal torture tests (DESIGN.md §14): randomized truncation and
+//! interior corruption against all three append-only JSONL stores —
+//! the eval cache, the transcript journal, and the trial-event journal
+//! — with the sidecar offset index on (`IndexMode::Auto`) and off
+//! (`IndexMode::Off`).
+//!
+//! The contract under torture:
+//!
+//! * a journal truncated at ANY byte offset (a SIGKILL mid-write)
+//!   reopens cleanly: the torn final line is repaired away, and every
+//!   record that was fully flushed before the tear survives with
+//!   byte-identical content;
+//! * an interior line corrupted in place is skipped (scan) or dropped
+//!   as a stale slot on first lookup (indexed) — either way the store
+//!   serves identical lookup results in both modes;
+//! * a sidecar gone stale (journal truncated or extended behind its
+//!   back) is detected and rebuilt/extended, never trusted blindly;
+//! * a repaired journal accepts fresh appends and round-trips them.
+//!
+//! Artifact-free: everything here runs without the compiled-op
+//! registry, so the suite torture-tests the persistence layer on any
+//! machine. Corruption bytes are ASCII-printable on purpose — the
+//! JSONL readers treat invalid UTF-8 as an IO error, which is a
+//! different failure mode than the per-line skip exercised here.
+
+use std::path::{Path, PathBuf};
+
+use evoengineer::costmodel::{BoundKind, Timing};
+use evoengineer::guard::{GuardCode, GuardDiagnostic};
+use evoengineer::store::events::{
+    completed_trials, completed_trials_at, EventJournal, TrialEvent, TrialEventKind,
+};
+use evoengineer::store::index;
+use evoengineer::store::{
+    EvalKey, EvalStore, IndexMode, StoredEval, StoredOutcome, TranscriptEntry, TranscriptStore,
+};
+use evoengineer::util::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("evo_torture_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Write journal `bytes` to `dst`, dropping any sidecar at `dst`.
+fn fresh_copy(dst: &Path, bytes: &[u8]) {
+    index::delete_sidecar(dst);
+    std::fs::write(dst, bytes).unwrap();
+}
+
+/// Number of complete `\n`-terminated lines in `bytes[..cut]` — the
+/// records that must survive a reopen after truncating at `cut`.
+fn whole_lines(bytes: &[u8], cut: usize) -> usize {
+    bytes[..cut].iter().filter(|&&b| b == b'\n').count()
+}
+
+/// Byte offset where each line starts.
+fn line_starts(bytes: &[u8]) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' && i + 1 < bytes.len() {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+// ---------------------------------------------------------------- eval
+
+/// Deterministic eval-cache fixture covering every outcome variant
+/// (so torture exercises every serializer path), in insertion order.
+fn eval_fixture(n: usize) -> Vec<(EvalKey, StoredEval)> {
+    let ops = ["matmul_64", "relu_64", "softmax_256", "layernorm_64"];
+    let mut out = Vec::new();
+    for i in 0..n {
+        let op = ops[i % ops.len()];
+        let (key, outcome) = match i % 4 {
+            0 => (
+                EvalKey::from_canonical(op, &format!("canon {i}")),
+                StoredOutcome::CompileFail { error: format!("line {i}: unexpected token `}}`") },
+            ),
+            1 => (
+                EvalKey::from_canonical(op, &format!("canon {i}")),
+                StoredOutcome::FunctionalFail { max_abs_diff: 0.125 + i as f64 * 0.001953125 },
+            ),
+            2 => (
+                EvalKey::from_canonical(op, &format!("canon {i}")),
+                StoredOutcome::Ok {
+                    timing: Timing {
+                        time: 1.5e-5 + i as f64 * 1e-7,
+                        t_compute: 1.0e-5,
+                        t_mem: 5.0e-6,
+                        t_overhead: 5.0e-7,
+                        traffic: 65536.0 + i as f64,
+                        occupancy: 0.75,
+                        eff_compute: 0.5,
+                        eff_bw: 0.25,
+                        launches: 1 + (i % 3) as u32,
+                        bound: if i % 2 == 0 { BoundKind::Memory } else { BoundKind::Compute },
+                    },
+                },
+            ),
+            _ => (
+                EvalKey::guarded(op, &format!("raw emission {i}")),
+                StoredOutcome::GuardReject {
+                    diagnostics: vec![GuardDiagnostic {
+                        code: GuardCode::ShadowedBinding,
+                        field: "vector_width".into(),
+                        message: format!("assigned twice (case {i})"),
+                        hint: Some(("vector_width".into(), "8".into())),
+                    }],
+                },
+            ),
+        };
+        out.push((key, StoredEval { op: op.into(), model: "GPT-4.1".into(), outcome }));
+    }
+    out
+}
+
+/// Write the fixture to `path` (index off: pure journal bytes, no
+/// sidecar side effects) and return the untorn reference bytes.
+fn write_eval_journal(path: &Path, fixture: &[(EvalKey, StoredEval)]) -> Vec<u8> {
+    std::fs::remove_file(path).ok();
+    index::delete_sidecar(path);
+    {
+        let store = EvalStore::open_with(path, IndexMode::Off).unwrap();
+        for (key, entry) in fixture {
+            store.record(key, entry.clone()).unwrap();
+        }
+        store.flush().unwrap();
+    }
+    std::fs::read(path).unwrap()
+}
+
+/// Assert `store` holds exactly the first `n` fixture records, each
+/// lookup-identical to the reference entry (Debug carries every field;
+/// the serializers round-trip f64 exactly, so Debug equality is
+/// content equality).
+fn assert_eval_prefix(store: &EvalStore, fixture: &[(EvalKey, StoredEval)], n: usize) {
+    assert_eq!(store.len(), n);
+    for (i, (key, entry)) in fixture.iter().enumerate() {
+        match store.lookup(key) {
+            Some(got) if i < n => {
+                assert_eq!(format!("{got:?}"), format!("{entry:?}"), "record {i} diverged")
+            }
+            None if i >= n => {}
+            Some(_) => panic!("record {i} lies after the tear but was served"),
+            None => panic!("record {i} lies before the tear but was lost"),
+        }
+    }
+}
+
+#[test]
+fn eval_store_truncation_recovery_at_randomized_offsets() {
+    let dir = tmpdir("eval_trunc");
+    let master = dir.join("master.jsonl");
+    let fixture = eval_fixture(120);
+    let bytes = write_eval_journal(&master, &fixture);
+    assert_eq!(whole_lines(&bytes, bytes.len()), fixture.len());
+
+    let mut rng = Rng::new(0xE7);
+    for t in 0..10u32 {
+        let cut = 1 + rng.below(bytes.len() - 1);
+        let survivors = whole_lines(&bytes, cut);
+        let torn = &bytes[..cut];
+
+        // Off: pure scan of the torn file.
+        let off_path = dir.join(format!("off_{t}.jsonl"));
+        fresh_copy(&off_path, torn);
+        let store = EvalStore::open_with(&off_path, IndexMode::Off).unwrap();
+        assert_eval_prefix(&store, &fixture, survivors);
+
+        // Auto, no sidecar: first open scans, builds one, repairs.
+        let auto_path = dir.join(format!("auto_{t}.jsonl"));
+        fresh_copy(&auto_path, torn);
+        let store = EvalStore::open_with(&auto_path, IndexMode::Auto).unwrap();
+        assert_eval_prefix(&store, &fixture, survivors);
+        drop(store);
+
+        // Auto, STALE sidecar: prime an index on the untorn bytes,
+        // then truncate the journal behind its back. The cover check
+        // must reject it and fall back to a rebuild scan.
+        let stale_path = dir.join(format!("stale_{t}.jsonl"));
+        fresh_copy(&stale_path, &bytes);
+        drop(EvalStore::open_with(&stale_path, IndexMode::Auto).unwrap());
+        std::fs::write(&stale_path, torn).unwrap();
+        let store = EvalStore::open_with(&stale_path, IndexMode::Auto).unwrap();
+        assert_eval_prefix(&store, &fixture, survivors);
+
+        // The repair must have truncated the file to whole lines.
+        let repaired = std::fs::read(&off_path).unwrap();
+        let keep = torn.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+        assert_eq!(repaired, &torn[..keep], "repair must cut exactly the torn tail");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_store_interior_corruption_agrees_across_modes() {
+    let dir = tmpdir("eval_corrupt");
+    let master = dir.join("master.jsonl");
+    let fixture = eval_fixture(80);
+    let bytes = write_eval_journal(&master, &fixture);
+    let starts = line_starts(&bytes);
+    assert_eq!(starts.len(), fixture.len());
+
+    let mut rng = Rng::new(0x5EED);
+    for t in 0..6u32 {
+        // Smash the opening `{` of an interior (non-final) line with an
+        // ASCII byte: the line is length-preserved but no longer JSON.
+        let victim = rng.below(fixture.len() - 1);
+        let mut corrupt = bytes.clone();
+        corrupt[starts[victim]] = b'#';
+
+        // Off: the scan skips the bad line; every other record served.
+        let off_path = dir.join(format!("off_{t}.jsonl"));
+        fresh_copy(&off_path, &corrupt);
+        let off_store = EvalStore::open_with(&off_path, IndexMode::Off).unwrap();
+        assert_eq!(off_store.len(), fixture.len() - 1);
+
+        // Auto with a PRE-CORRUPTION sidecar: the cover tail (final
+        // line) is intact, so the index validates and the open is
+        // served by it — the corrupted record still has a slot. The
+        // lookup must detect the stale slot and drop it, aligning the
+        // observable behaviour with the scan path.
+        let auto_path = dir.join(format!("auto_{t}.jsonl"));
+        fresh_copy(&auto_path, &bytes);
+        drop(EvalStore::open_with(&auto_path, IndexMode::Auto).unwrap());
+        std::fs::write(&auto_path, &corrupt).unwrap();
+        let auto_store = EvalStore::open_with(&auto_path, IndexMode::Auto).unwrap();
+        assert!(auto_store.opened_indexed(), "intact cover tail must serve an indexed open");
+
+        for (i, (key, entry)) in fixture.iter().enumerate() {
+            let want = if i == victim { None } else { Some(format!("{entry:?}")) };
+            let off_got = off_store.lookup(key).map(|e| format!("{e:?}"));
+            let auto_got = auto_store.lookup(key).map(|e| format!("{e:?}"));
+            assert_eq!(off_got, want, "scan lookup {i} (victim {victim})");
+            assert_eq!(auto_got, want, "indexed lookup {i} (victim {victim})");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_store_sidecar_extends_after_foreign_appends() {
+    let dir = tmpdir("eval_extend");
+    let path = dir.join("cache.jsonl");
+    let fixture = eval_fixture(40);
+    let (first, rest) = fixture.split_at(25);
+    write_eval_journal(&path, first);
+
+    // Prime a sidecar covering the first 25 records.
+    drop(EvalStore::open_with(&path, IndexMode::Auto).unwrap());
+    assert!(index::health(&path).is_some(), "priming open must persist a sidecar");
+
+    // Append the rest with indexing off — the sidecar goes stale but
+    // its covered prefix stays valid.
+    {
+        let store = EvalStore::open_with(&path, IndexMode::Off).unwrap();
+        for (key, entry) in rest {
+            store.record(key, entry.clone()).unwrap();
+        }
+        store.flush().unwrap();
+    }
+
+    // Auto reopen: covered prefix validated, tail scanned, index
+    // extended. Everything served; the NEXT open is indexed again.
+    let store = EvalStore::open_with(&path, IndexMode::Auto).unwrap();
+    assert_eval_prefix(&store, &fixture, fixture.len());
+    drop(store);
+    let store = EvalStore::open_with(&path, IndexMode::Auto).unwrap();
+    assert!(store.opened_indexed(), "extended sidecar must serve the next open");
+    assert_eval_prefix(&store, &fixture, fixture.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_store_accepts_appends_after_repair() {
+    let dir = tmpdir("eval_append");
+    let path = dir.join("cache.jsonl");
+    let fixture = eval_fixture(30);
+    let bytes = write_eval_journal(&path, &fixture);
+
+    // Tear mid-way through the final record.
+    std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+    let survivors = fixture.len() - 1;
+
+    for mode in [IndexMode::Auto, IndexMode::Off] {
+        let fresh = eval_fixture(32); // 30..32 are new keys
+        let (key, entry) = &fresh[31];
+        {
+            let store = EvalStore::open_with(&path, mode).unwrap();
+            store.record(key, entry.clone()).unwrap();
+            store.flush().unwrap();
+        }
+        let store = EvalStore::open_with(&path, mode).unwrap();
+        assert_eq!(store.len(), survivors + 1);
+        assert_eq!(
+            store.lookup(key).map(|e| format!("{e:?}")),
+            Some(format!("{entry:?}")),
+            "post-repair append must round-trip (mode {mode:?})"
+        );
+        // Reset for the other mode: restore the torn journal.
+        fresh_copy(&path, &bytes[..bytes.len() - 7]);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------- transcript
+
+fn transcript_fixture(n: usize) -> Vec<(String, TranscriptEntry)> {
+    (0..n)
+        .map(|i| {
+            (
+                format!("{:064x}", 0xABCDu64 + i as u64), // sha256-hex-shaped keys
+                TranscriptEntry {
+                    role: if i % 3 == 0 { "repair" } else { "generate" }.into(),
+                    model: "GPT-4.1".into(),
+                    seed: u64::MAX - i as u64, // beyond f64-exact range
+                    text: format!("kernel matmul_64 {{ semantics: opt; /* v{i} */ }}"),
+                    insight: format!("widened loads (attempt {i})"),
+                    prompt_tokens: 100 + i as u64,
+                    completion_tokens: 40 + i as u64,
+                },
+            )
+        })
+        .collect()
+}
+
+fn write_transcript_journal(path: &Path, fixture: &[(String, TranscriptEntry)]) -> Vec<u8> {
+    std::fs::remove_file(path).ok();
+    index::delete_sidecar(path);
+    {
+        let t = TranscriptStore::open_with(path, IndexMode::Off).unwrap();
+        t.record_source("sim").unwrap();
+        for (key, entry) in fixture {
+            t.append(key, entry.clone()).unwrap();
+        }
+        t.flush().unwrap();
+    }
+    std::fs::read(path).unwrap()
+}
+
+#[test]
+fn transcript_truncation_recovery_at_randomized_offsets() {
+    let dir = tmpdir("transcript_trunc");
+    let master = dir.join("master.jsonl");
+    let fixture = transcript_fixture(60);
+    let bytes = write_transcript_journal(&master, &fixture);
+    // Line 0 is the meta line; calls follow in order.
+    assert_eq!(whole_lines(&bytes, bytes.len()), fixture.len() + 1);
+
+    let mut rng = Rng::new(0x7A11);
+    for t in 0..10u32 {
+        let cut = 1 + rng.below(bytes.len() - 1);
+        let lines = whole_lines(&bytes, cut);
+        let calls = lines.saturating_sub(1);
+        let torn = &bytes[..cut];
+
+        for (mode, tag) in [(IndexMode::Off, "off"), (IndexMode::Auto, "auto")] {
+            let path = dir.join(format!("{tag}_{t}.jsonl"));
+            fresh_copy(&path, torn);
+            if mode == IndexMode::Auto {
+                // Prime a sidecar on the UNTORN bytes, then tear: the
+                // stale cover must be rejected and rebuilt.
+                std::fs::write(&path, &bytes).unwrap();
+                drop(TranscriptStore::open_with(&path, IndexMode::Auto).unwrap());
+                std::fs::write(&path, torn).unwrap();
+            }
+            let store = TranscriptStore::open_with(&path, mode).unwrap();
+            assert_eq!(store.len(), calls, "{tag} cut at {cut}");
+            assert_eq!(
+                store.source().as_deref(),
+                if lines >= 1 { Some("sim") } else { None },
+                "{tag}: meta line survives iff the first line survives"
+            );
+            for (i, (key, entry)) in fixture.iter().enumerate() {
+                match store.lookup(key) {
+                    Some(got) if i < calls => assert_eq!(&got, entry, "{tag} call {i}"),
+                    None if i >= calls => {}
+                    Some(_) => panic!("{tag}: call {i} after the tear was served"),
+                    None => panic!("{tag}: call {i} before the tear was lost"),
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------------------- events
+
+/// A three-cell event stream: cell "a" runs to RunFinished, cell "b"
+/// is interrupted after two eval outcomes, cell "c" started only.
+fn event_fixture() -> Vec<TrialEvent> {
+    let mk = |op: &str, kind: TrialEventKind| TrialEvent {
+        method: "EvoEngineer-Free (ours)".into(),
+        model: "GPT-4.1".into(),
+        op: op.into(),
+        seed: 3,
+        kind,
+    };
+    let eval = |op: &str, trial: usize| {
+        mk(
+            op,
+            TrialEventKind::EvalOutcome {
+                trial,
+                outcome: "ok".into(),
+                speedup: 1.0 + trial as f64 * 0.25,
+                prompt_tokens: 120,
+                completion_tokens: 40,
+                src_hash: format!("{op}-hash-{trial}"),
+            },
+        )
+    };
+    let mut evs = Vec::new();
+    evs.push(mk("matmul_64", TrialEventKind::RunStarted { budget: 4, provider: "sim".into() }));
+    for trial in 0..3usize {
+        evs.push(mk("matmul_64", TrialEventKind::TrialStarted { trial }));
+        evs.push(mk(
+            "matmul_64",
+            TrialEventKind::GuardVerdict { trial, pass: true, diagnostics: 0 },
+        ));
+        evs.push(eval("matmul_64", trial));
+        evs.push(mk("matmul_64", TrialEventKind::NewBest { trial, speedup: 1.5 }));
+    }
+    evs.push(mk(
+        "matmul_64",
+        TrialEventKind::RunFinished { trials: 3, best_speedup: 1.5, any_valid: true },
+    ));
+    evs.push(mk("relu_64", TrialEventKind::RunStarted { budget: 4, provider: "sim".into() }));
+    evs.push(mk("relu_64", TrialEventKind::TrialStarted { trial: 0 }));
+    evs.push(eval("relu_64", 0));
+    evs.push(mk("relu_64", TrialEventKind::TrialStarted { trial: 1 }));
+    evs.push(eval("relu_64", 1));
+    evs.push(mk("softmax_256", TrialEventKind::RunStarted { budget: 4, provider: "sim".into() }));
+    evs
+}
+
+#[test]
+fn event_journal_truncation_recovery_and_resume_agreement() {
+    let dir = tmpdir("events_trunc");
+    let master = dir.join("master.jsonl");
+    let fixture = event_fixture();
+    std::fs::remove_file(&master).ok();
+    index::delete_sidecar(&master);
+    {
+        let j = EventJournal::create(&master).unwrap();
+        for ev in &fixture {
+            j.append(ev).unwrap();
+        }
+        j.flush().unwrap();
+    }
+    let bytes = std::fs::read(&master).unwrap();
+    assert_eq!(whole_lines(&bytes, bytes.len()), fixture.len());
+
+    let mut rng = Rng::new(0xCAFE);
+    let path = dir.join("torn.jsonl");
+    for _ in 0..10u32 {
+        let cut = 1 + rng.below(bytes.len() - 1);
+        let survivors = whole_lines(&bytes, cut);
+        let expect = &fixture[..survivors];
+
+        // Prime a sidecar on the untorn journal (a previous resume
+        // scan), then tear: the stale sidecar must be rebuilt.
+        fresh_copy(&path, &bytes);
+        let _ = completed_trials_at(&path, IndexMode::Auto).unwrap();
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+
+        // Reopen repairs the torn tail; the full scan must read
+        // exactly the surviving prefix.
+        drop(EventJournal::open(&path).unwrap());
+        let loaded = EventJournal::load(&path).unwrap();
+        assert_eq!(loaded, expect, "cut at {cut}");
+
+        // Trial-granular resume: indexed and scan paths fold the torn
+        // journal to the same per-cell replay map as the in-memory
+        // reference fold.
+        let want = completed_trials(expect);
+        let auto = completed_trials_at(&path, IndexMode::Auto).unwrap();
+        let off = completed_trials_at(&path, IndexMode::Off).unwrap();
+        assert_eq!(auto, want, "indexed resume scan, cut at {cut}");
+        assert_eq!(off, want, "full resume scan, cut at {cut}");
+        // And again, served by the now-rebuilt sidecar.
+        let warm = completed_trials_at(&path, IndexMode::Auto).unwrap();
+        assert_eq!(warm, want, "warm indexed resume scan, cut at {cut}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn event_journal_interior_corruption_agrees_across_modes() {
+    let dir = tmpdir("events_corrupt");
+    let path = dir.join("events.jsonl");
+    let fixture = event_fixture();
+    std::fs::remove_file(&path).ok();
+    index::delete_sidecar(&path);
+    {
+        let j = EventJournal::create(&path).unwrap();
+        for ev in &fixture {
+            j.append(ev).unwrap();
+        }
+        j.flush().unwrap();
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    let starts = line_starts(&bytes);
+
+    // Corrupt the relu_64 trial-1 EvalOutcome line (index 18 in the
+    // fixture): the resume fold must lose exactly that pair, in both
+    // modes, whether the sidecar predates the corruption or not.
+    let victim = 18usize;
+    assert!(matches!(fixture[victim].kind, TrialEventKind::EvalOutcome { trial: 1, .. }));
+    let _ = completed_trials_at(&path, IndexMode::Auto).unwrap(); // prime sidecar
+    let mut corrupt = bytes.clone();
+    corrupt[starts[victim]] = b'#';
+    std::fs::write(&path, &corrupt).unwrap();
+
+    let mut surviving: Vec<TrialEvent> = fixture.clone();
+    surviving.remove(victim);
+    let want = completed_trials(&surviving);
+    for mode in [IndexMode::Auto, IndexMode::Off, IndexMode::Auto] {
+        let got = completed_trials_at(&path, mode).unwrap();
+        assert_eq!(got, want, "mode {mode:?}");
+    }
+    let relu = ("EvoEngineer-Free (ours)".to_string(), "GPT-4.1".to_string(),
+        "relu_64".to_string(), 3u64);
+    assert_eq!(want[&relu], vec![(0usize, "relu_64-hash-0".to_string())]);
+    std::fs::remove_dir_all(&dir).ok();
+}

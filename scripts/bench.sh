@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Hot-path bench run -> committed trajectory artifact (DESIGN.md §14).
+#
+# Runs the two hot-path bench targets with EVO_BENCH_JSON capture and
+# merges the JSONL stream into BENCH_<date>.json at the repo root —
+# the artifact a bench-trajectory commit checks in, and the baseline
+# scripts/bench_compare.py measures regressions against.
+#
+# Usage: scripts/bench.sh [--check]
+#   --check   after emitting the artifact, compare it against the
+#             latest committed BENCH_*.json (>20% median regression or
+#             a ratio below target fails).
+#
+# Env:
+#   BENCH_DATE   override the artifact date (YYYY-MM-DD, default: UTC
+#                today) — CI uses this to pin names across job steps.
+#   BENCH_OUT    override the artifact path entirely.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+DATE="${BENCH_DATE:-$(date -u +%F)}"
+OUT="${BENCH_OUT:-BENCH_${DATE}.json}"
+RAW="$(mktemp -t evo_bench_raw.XXXXXX.jsonl)"
+trap 'rm -f "$RAW"' EXIT
+
+echo "== bench: store + hot_paths (raw stream: $RAW)"
+EVO_BENCH_JSON="$RAW" cargo bench --bench store --bench hot_paths
+
+echo "== merge: $OUT"
+python3 scripts/bench_merge.py --raw "$RAW" --date "$DATE" --out "$OUT"
+
+if [[ "${1:-}" == "--check" ]]; then
+  echo "== compare against the latest committed baseline"
+  python3 scripts/bench_compare.py --current "$OUT"
+fi

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Gate a fresh bench artifact against the committed trajectory.
+
+Compares a just-produced BENCH_<date>.json (see scripts/bench.sh and
+DESIGN.md §14) against the newest committed BENCH_*.json baseline:
+
+  * every benchmark present in both must not regress its median by
+    more than --tolerance (default 20%);
+  * every ratio in the current artifact must meet its own recorded
+    target (e.g. journal/indexed_open_speedup >= 5x);
+  * benches that appear or disappear are reported but never fail the
+    gate (renames and new coverage are part of a normal speed pass).
+
+Baselines whose provenance is not "measured" (the bootstrap sentinel
+committed before a Rust toolchain could run the suite) are skipped
+with a warning: comparing against fabricated or null numbers would be
+meaningless. If no measured baseline exists at all, only the ratio
+targets are enforced.
+"""
+
+import argparse
+import glob
+import json
+import sys
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def find_baseline(current_path):
+    """Newest committed measured BENCH_*.json other than the current."""
+    candidates = sorted(glob.glob("BENCH_*.json"), reverse=True)
+    for path in candidates:
+        if path == current_path:
+            continue
+        try:
+            art = load(path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: baseline {path} unreadable, skipped ({e})",
+                  file=sys.stderr)
+            continue
+        if art.get("provenance") != "measured":
+            print(f"warning: baseline {path} has provenance "
+                  f"{art.get('provenance')!r}, skipped (not measured)",
+                  file=sys.stderr)
+            continue
+        return path, art
+    return None, None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="fresh BENCH_<date>.json")
+    ap.add_argument("--baseline", help="explicit baseline (default: newest "
+                    "committed measured BENCH_*.json)")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional median regression (default 0.20)")
+    args = ap.parse_args()
+
+    current = load(args.current)
+    failures = []
+
+    # Ratio targets are self-contained: enforce them unconditionally.
+    for r in current.get("ratios", []):
+        label = f"{r['group']}/{r['name']}"
+        if r["value"] is None:
+            failures.append(f"ratio {label}: no measured value")
+        elif r["value"] < r["target"]:
+            failures.append(f"ratio {label}: {r['value']:.2f}x is below the "
+                            f"{r['target']}x target")
+        else:
+            print(f"ok: ratio {label}: {r['value']:.2f}x >= {r['target']}x")
+
+    if args.baseline:
+        base_path, baseline = args.baseline, load(args.baseline)
+        if baseline.get("provenance") != "measured":
+            sys.exit(f"error: explicit baseline {base_path} is not measured")
+    else:
+        base_path, baseline = find_baseline(args.current)
+
+    if baseline is None:
+        print("warning: no measured committed baseline — median regression "
+              "check skipped (first measured artifact bootstraps the "
+              "trajectory)", file=sys.stderr)
+    else:
+        print(f"baseline: {base_path} ({baseline.get('date')}, "
+              f"git {baseline.get('git')})")
+        base_by_key = {(b["group"], b["name"]): b
+                       for b in baseline.get("benches", [])}
+        cur_keys = set()
+        for b in current.get("benches", []):
+            key = (b["group"], b["name"])
+            cur_keys.add(key)
+            old = base_by_key.get(key)
+            label = f"{key[0]}/{key[1]}"
+            if old is None:
+                print(f"note: new bench {label} (no baseline)")
+                continue
+            if not old.get("median_ns") or not b.get("median_ns"):
+                print(f"note: {label}: missing median, not compared")
+                continue
+            ratio = b["median_ns"] / old["median_ns"]
+            if ratio > 1.0 + args.tolerance:
+                failures.append(
+                    f"bench {label}: median regressed {ratio:.2f}x "
+                    f"({old['median_ns']} -> {b['median_ns']} ns, "
+                    f"tolerance {args.tolerance:.0%})")
+            else:
+                print(f"ok: bench {label}: {ratio:.2f}x of baseline median")
+        for key in sorted(set(base_by_key) - cur_keys):
+            print(f"note: bench {key[0]}/{key[1]} vanished from the suite")
+
+    if failures:
+        print(f"\nFAIL ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nbench gate PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Merge an EVO_BENCH_JSON raw stream into a BENCH_<date>.json artifact.
+
+The bench harness (rust/src/util/bench.rs) appends one JSONL line per
+finished benchmark ({"type":"bench",...}) and per derived ratio
+({"type":"ratio",...}). This script folds that stream into the single
+committed artifact described in DESIGN.md §14:
+
+    {
+      "schema": 1,
+      "date": "YYYY-MM-DD",
+      "git": "<short sha or null>",
+      "provenance": "measured",
+      "benches": [{"group","name","median_ns","p10_ns","p90_ns","iters"}],
+      "ratios":  [{"group","name","value","target"}]
+    }
+
+Duplicate (group, name) pairs keep the LAST occurrence — a re-run in
+the same process supersedes earlier samples.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+
+SCHEMA = 1
+
+
+def git_short_sha():
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, check=True,
+        )
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--raw", required=True, help="EVO_BENCH_JSON stream (JSONL)")
+    ap.add_argument("--date", required=True, help="artifact date (YYYY-MM-DD)")
+    ap.add_argument("--out", required=True, help="merged artifact path")
+    args = ap.parse_args()
+
+    benches, ratios = {}, {}
+    with open(args.raw, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                print(f"warning: {args.raw}:{lineno}: unparseable line skipped ({e})",
+                      file=sys.stderr)
+                continue
+            key = (rec.get("group"), rec.get("name"))
+            if None in key:
+                print(f"warning: {args.raw}:{lineno}: missing group/name, skipped",
+                      file=sys.stderr)
+                continue
+            if rec.get("type") == "bench":
+                benches[key] = {
+                    "group": rec["group"], "name": rec["name"],
+                    "median_ns": rec["median_ns"],
+                    "p10_ns": rec["p10_ns"], "p90_ns": rec["p90_ns"],
+                    "iters": rec["iters"],
+                }
+            elif rec.get("type") == "ratio":
+                ratios[key] = {
+                    "group": rec["group"], "name": rec["name"],
+                    "value": rec["value"], "target": rec["target"],
+                }
+
+    if not benches:
+        sys.exit(f"error: no bench records in {args.raw} — did the bench run "
+                 "export EVO_BENCH_JSON?")
+
+    artifact = {
+        "schema": SCHEMA,
+        "date": args.date,
+        "git": git_short_sha(),
+        "provenance": "measured",
+        "benches": sorted(benches.values(), key=lambda b: (b["group"], b["name"])),
+        "ratios": sorted(ratios.values(), key=lambda r: (r["group"], r["name"])),
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}: {len(benches)} benches, {len(ratios)} ratios")
+
+
+if __name__ == "__main__":
+    main()
