@@ -1,0 +1,619 @@
+//! `campaign serve`: the coordinator side of the wire-backed work
+//! plane (DESIGN.md §15).
+//!
+//! The coordinator owns everything a distributed sweep must agree on:
+//! the resolved [`GridPlan`] (cell identity = grid index), the
+//! checkpoint journal, the per-cell trial-event buffers, and the
+//! merged eval-cache / transcript journals. Workers (`campaign work`)
+//! own everything that is per-process: the evaluator stack, the
+//! provider, and the engine threads.
+//!
+//! Protocol (hand-rolled HTTP/1.1 + JSON over
+//! [`crate::util::httpwire`]):
+//!
+//! | endpoint         | body → reply                                       |
+//! |------------------|----------------------------------------------------|
+//! | `GET /config`    | → sweep knobs the worker must mirror               |
+//! | `POST /claim`    | `{worker}` → next cell / `idle` / `done` / `failed`|
+//! | `POST /events`   | `{idx, epoch, events:[…]}` → buffered (epoch-gated)|
+//! | `POST /upload`   | `{kind, lines:[…]}` → dedup-merged into the stores |
+//! | `POST /complete` | `{idx, epoch, record}` → checkpointed, cell done   |
+//! | `POST /release`  | `{idx, epoch}` → cell re-offered at epoch+1        |
+//! | `POST /fail`     | `{idx, epoch, error}` → sweep aborts               |
+//! | `GET /warm`      | → merged transcript-journal lines (resume warm-up) |
+//! | `GET /status`    | → live [`PlaneStats`] counters                     |
+//!
+//! **Determinism contract.** Cells are offered in grid order; every
+//! completed cell's record is deterministic per (method, model, op,
+//! seed) (the AI CUDA Engineer's cross-op archive excepted, exactly as
+//! for in-process sweeps). Event uploads are buffered per cell and the
+//! finalized journal is rewritten in grid order at shutdown, so a
+//! coordinator + N workers sweep produces the same `records.jsonl` and
+//! `events.jsonl` bytes as an uninterrupted `--concurrency 1` run —
+//! including across a worker death: the interrupted cell's buffer
+//! keeps the partial stream, the next claimant resumes at trial
+//! granularity (replayed trials suppressed, verified by `src_hash`),
+//! and the buffer ends up holding exactly the uninterrupted stream.
+//!
+//! **Epochs.** Each re-offer bumps the cell's epoch; event batches and
+//! completions carrying a stale epoch are rejected (409), never
+//! merged — accepting them would interleave a presumed-dead claimant's
+//! duplicate events into the new claimant's continuation. A worker
+//! that dies without releasing (SIGKILL, not the simulated trial-gate
+//! kill) leaves its cell claimed; restart the sweep with `--resume` to
+//! finish it, exactly as for an in-process kill.
+
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::metrics::PlaneStats;
+use crate::methods::KernelRunRecord;
+use crate::store::events::{self, EventJournal, TrialEvent};
+use crate::store::{EvalStore, TranscriptStore};
+use crate::tasks::TaskRegistry;
+use crate::util::httpwire::{Request, Server};
+use crate::util::json::{self, Json};
+use crate::{eyre, Result};
+
+use super::plane::lock_tolerant;
+use super::{cell_of, job_key, plan_grid, results, CampaignConfig, GridPlan, Job};
+
+/// One grid cell as the coordinator tracks it.
+struct CellState {
+    job: Job,
+    /// Claim generation; bumped on every re-offer.
+    epoch: u64,
+    status: CellStatus,
+    /// Buffered journal events: the prior leg's partial stream on
+    /// resume, plus every batch uploaded by current-epoch claimants.
+    /// Replayed to the finalized journal in grid order at shutdown.
+    events: Vec<TrialEvent>,
+    /// `Some(pairs)` when a partial prior run exists: the next
+    /// claimant resumes, replaying these (trial, src_hash) pairs warm.
+    verify: Option<Vec<(usize, String)>>,
+    record: Option<KernelRunRecord>,
+}
+
+enum CellStatus {
+    Available,
+    Claimed,
+    Done,
+}
+
+struct Inner {
+    cells: Vec<CellState>,
+    done: usize,
+    failed: Option<String>,
+    stats: PlaneStats,
+    appender: Option<results::Appender>,
+    evals: Option<Arc<EvalStore>>,
+    transcripts: Option<Arc<TranscriptStore>>,
+}
+
+struct State {
+    inner: Mutex<Inner>,
+    cvar: Condvar,
+    // Sweep knobs the workers mirror (GET /config).
+    budget: usize,
+    repair: String,
+    provider: String,
+    prefetch: usize,
+}
+
+/// A running `campaign serve` daemon. [`Coordinator::wait`] blocks
+/// until the grid drains (or a worker reports a fatal error), then
+/// finalizes the journals and returns the merged records.
+pub struct Coordinator {
+    server: Server,
+    state: Arc<State>,
+    events_path: Option<std::path::PathBuf>,
+}
+
+impl Coordinator {
+    /// Resolve the grid and start serving it on `bind`
+    /// (`host:port`, e.g. `127.0.0.1:7717`).
+    ///
+    /// `cache` is the merged eval-cache journal workers' uploads land
+    /// in (independent of any cache the workers use locally).
+    pub fn start(
+        cfg: &CampaignConfig,
+        registry: &TaskRegistry,
+        bind: &str,
+        cache: Option<&Path>,
+    ) -> Result<Self> {
+        let GridPlan { jobs, prior, .. } = plan_grid(cfg, registry)?;
+
+        let mut cells: Vec<CellState> = jobs
+            .into_iter()
+            .map(|job| CellState {
+                job,
+                epoch: 0,
+                status: CellStatus::Available,
+                events: Vec::new(),
+                verify: None,
+                record: None,
+            })
+            .collect();
+
+        // Resume: prior records pre-fill their cells (Done from the
+        // start, nothing re-appended to the checkpoint), and the prior
+        // event journal seeds the buffers — full streams for finished
+        // cells, partial stream + warm verify list for interrupted
+        // ones. The finalized journal rewrite then preserves prior
+        // cells' events in grid order.
+        let mut resumed = 0usize;
+        if !prior.is_empty() {
+            for r in &prior {
+                let key = cell_of(r);
+                if let Some(cell) = cells.iter_mut().find(|c| job_key(&c.job) == key) {
+                    cell.status = CellStatus::Done;
+                    cell.record = Some(r.clone());
+                    resumed += 1;
+                }
+            }
+        }
+        if let Some(path) = &cfg.events {
+            if cfg.resume && path.exists() {
+                let loaded = EventJournal::load(path)?;
+                let mut partial = events::completed_trials(&loaded);
+                for cell in cells.iter_mut() {
+                    let key = job_key(&cell.job);
+                    cell.events = loaded.iter().filter(|e| e.cell() == key).cloned().collect();
+                    cell.verify = partial.remove(&key);
+                }
+            }
+        }
+
+        // Same checkpoint lifecycle as the in-process plane: resumed
+        // sweeps append, fresh sweeps start the journal over.
+        let appender = match &cfg.checkpoint {
+            Some(path) if cfg.resume => Some(results::Appender::open(path)?),
+            Some(path) => Some(results::Appender::create(path)?),
+            None => None,
+        };
+        let transcripts = match &cfg.provider {
+            crate::llm::ProviderSpec::Replay(_) => None, // replay records nothing
+            _ => match &cfg.transcripts {
+                Some(path) => Some(TranscriptStore::open(path)?),
+                None => None,
+            },
+        };
+        let evals = match cache {
+            Some(path) => Some(EvalStore::open(path)?),
+            None => None,
+        };
+
+        let done = cells.iter().filter(|c| matches!(c.status, CellStatus::Done)).count();
+        let stats = PlaneStats { grid: cells.len(), resumed, ..PlaneStats::default() };
+        let state = Arc::new(State {
+            inner: Mutex::new(Inner {
+                cells,
+                done,
+                failed: None,
+                stats,
+                appender,
+                evals,
+                transcripts,
+            }),
+            cvar: Condvar::new(),
+            budget: cfg.budget,
+            repair: cfg.repair.label(),
+            provider: cfg.provider.label(),
+            prefetch: cfg.prefetch,
+        });
+
+        let handler = {
+            let state = state.clone();
+            Arc::new(move |req: &Request| handle(&state, req))
+        };
+        let server = Server::bind(bind, handler)?;
+        Ok(Self { server, state, events_path: cfg.events.clone() })
+    }
+
+    /// The coordinator's base URL (`http://host:port`).
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+
+    /// Block until the grid drains or a worker reports a fatal error,
+    /// then shut the server down, finalize the journals, and return
+    /// the merged, sorted records plus the plane counters.
+    pub fn wait(mut self) -> Result<(Vec<KernelRunRecord>, PlaneStats)> {
+        {
+            let mut g = lock_tolerant(&self.state.inner);
+            while g.failed.is_none() && g.done < g.cells.len() {
+                g = self
+                    .state
+                    .cvar
+                    .wait(g)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+            }
+        }
+        // Stop accepting connections before touching the journals;
+        // stragglers see a connection error and treat the plane as
+        // drained.
+        self.server.shutdown();
+
+        let mut g = lock_tolerant(&self.state.inner);
+        if let Some(msg) = g.failed.take() {
+            return Err(eyre!("{msg}"));
+        }
+
+        // Finalized event journal: every cell's buffered stream, in
+        // grid order — byte-identical to an uninterrupted
+        // `--concurrency 1` sweep's journal.
+        if let Some(path) = &self.events_path {
+            let journal = EventJournal::create(path)?;
+            for cell in &g.cells {
+                for ev in &cell.events {
+                    journal.append(ev)?;
+                }
+            }
+            journal.flush()?;
+        }
+        if let Some(store) = &g.evals {
+            store.flush()?;
+        }
+        if let Some(store) = &g.transcripts {
+            store.flush()?;
+        }
+
+        let mut records: Vec<KernelRunRecord> =
+            g.cells.iter_mut().filter_map(|c| c.record.take()).collect();
+        records.sort_by(|a, b| {
+            (&a.method, &a.model, &a.op, a.seed).cmp(&(&b.method, &b.model, &b.op, b.seed))
+        });
+        let stats = g.stats.clone();
+        Ok((records, stats))
+    }
+}
+
+/// Run a coordinator to completion: start, announce, wait.
+pub fn serve(
+    cfg: &CampaignConfig,
+    registry: &TaskRegistry,
+    bind: &str,
+    cache: Option<&Path>,
+) -> Result<(Vec<KernelRunRecord>, PlaneStats)> {
+    let coord = Coordinator::start(cfg, registry, bind, cache)?;
+    if !cfg.quiet {
+        let (grid, resumed) = {
+            let g = lock_tolerant(&coord.state.inner);
+            (g.stats.grid, g.stats.resumed)
+        };
+        eprintln!(
+            "campaign coordinator: serving {grid} cells on {}{} \
+             (budget {}, repair {}, provider {})",
+            coord.url(),
+            if resumed > 0 {
+                format!(", {resumed} resumed from checkpoint")
+            } else {
+                String::new()
+            },
+            coord.state.budget,
+            coord.state.repair,
+            coord.state.provider,
+        );
+    }
+    coord.wait()
+}
+
+// ---------------------------------------------------------------------
+// Protocol handlers
+
+fn err_json(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.into()))])
+}
+
+fn ok_json() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true))])
+}
+
+fn handle(state: &State, req: &Request) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/config") => (
+            200,
+            Json::obj(vec![
+                ("budget", Json::Num(state.budget as f64)),
+                ("repair", Json::Str(state.repair.clone())),
+                ("provider", Json::Str(state.provider.clone())),
+                ("prefetch", Json::Num(state.prefetch as f64)),
+            ]),
+        ),
+        ("POST", "/claim") => claim(state),
+        ("POST", "/events") => with_body(state, req, ingest_events),
+        ("POST", "/upload") => with_body(state, req, ingest_upload),
+        ("POST", "/complete") => with_body(state, req, complete),
+        ("POST", "/release") => with_body(state, req, release),
+        ("POST", "/fail") => with_body(state, req, fail),
+        ("GET", "/warm") => warm(state),
+        ("GET", "/status") => status(state),
+        _ => (404, err_json(format!("no such endpoint: {} {}", req.method, req.path))),
+    }
+}
+
+fn with_body(
+    state: &State,
+    req: &Request,
+    f: fn(&State, &Json) -> (u16, Json),
+) -> (u16, Json) {
+    match json::parse(&req.body) {
+        Ok(v) => f(state, &v),
+        Err(e) => (400, err_json(format!("bad request body: {e}"))),
+    }
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| eyre!("missing numeric field `{key}`"))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(|x| x.as_u64())
+        .ok_or_else(|| eyre!("missing numeric field `{key}`"))
+}
+
+/// Look up the addressed cell and check its epoch. Borrow-splitting
+/// helper: returns the index, callers re-borrow.
+fn check_cell(inner: &Inner, v: &Json) -> std::result::Result<usize, (u16, Json)> {
+    let idx = get_usize(v, "idx").map_err(|e| (400, err_json(e.to_string())))?;
+    let epoch = get_u64(v, "epoch").map_err(|e| (400, err_json(e.to_string())))?;
+    let cell = inner
+        .cells
+        .get(idx)
+        .ok_or_else(|| (400, err_json(format!("cell index {idx} out of range"))))?;
+    if cell.epoch != epoch {
+        return Err((
+            409,
+            err_json(format!(
+                "stale epoch {epoch} for cell {idx} (current {})",
+                cell.epoch
+            )),
+        ));
+    }
+    Ok(idx)
+}
+
+fn claim(state: &State) -> (u16, Json) {
+    let mut g = lock_tolerant(&state.inner);
+    if let Some(msg) = &g.failed {
+        return (
+            200,
+            Json::obj(vec![
+                ("status", Json::Str("failed".into())),
+                ("error", Json::Str(msg.clone())),
+            ]),
+        );
+    }
+    let next = g
+        .cells
+        .iter()
+        .position(|c| matches!(c.status, CellStatus::Available));
+    match next {
+        Some(idx) => {
+            g.cells[idx].status = CellStatus::Claimed;
+            g.stats.claims += 1;
+            let cell = &g.cells[idx];
+            let verify: Vec<Json> = cell
+                .verify
+                .iter()
+                .flatten()
+                .map(|(t, h)| {
+                    Json::Arr(vec![Json::Num(*t as f64), Json::Str(h.clone())])
+                })
+                .collect();
+            (
+                200,
+                Json::obj(vec![
+                    ("status", Json::Str("cell".into())),
+                    ("idx", Json::Num(idx as f64)),
+                    ("epoch", Json::Num(cell.epoch as f64)),
+                    ("method", Json::Str(cell.job.method.name())),
+                    ("model", Json::Str(cell.job.model.name.to_string())),
+                    ("op", Json::Str(cell.job.op.name.clone())),
+                    // Decimal string: u64 seeds must not round-trip
+                    // through f64.
+                    ("seed", Json::Str(cell.job.seed.to_string())),
+                    ("resumed", Json::Bool(cell.verify.is_some())),
+                    ("verify", Json::Arr(verify)),
+                ]),
+            )
+        }
+        None if g.done == g.cells.len() => {
+            (200, Json::obj(vec![("status", Json::Str("done".into()))]))
+        }
+        // Cells are in flight on other claimants: poll again shortly.
+        None => (200, Json::obj(vec![("status", Json::Str("idle".into()))])),
+    }
+}
+
+fn ingest_events(state: &State, v: &Json) -> (u16, Json) {
+    let mut g = lock_tolerant(&state.inner);
+    let idx = match check_cell(&g, v) {
+        Ok(idx) => idx,
+        Err(reject) => {
+            g.stats.stale_event_batches += 1;
+            return reject;
+        }
+    };
+    if g.cells[idx].record.is_some() {
+        g.stats.stale_event_batches += 1;
+        return (409, err_json(format!("cell {idx} is already complete")));
+    }
+    let Some(items) = v.get("events").and_then(|e| e.as_arr()) else {
+        return (400, err_json("missing `events` array"));
+    };
+    let mut parsed = Vec::with_capacity(items.len());
+    for item in items {
+        match events::event_from_json(item) {
+            Ok(ev) => parsed.push(ev),
+            Err(e) => return (400, err_json(format!("bad event: {e:#}"))),
+        }
+    }
+    g.stats.event_batches += 1;
+    g.stats.events += parsed.len() as u64;
+    g.cells[idx].events.extend(parsed);
+    (200, ok_json())
+}
+
+fn ingest_upload(state: &State, v: &Json) -> (u16, Json) {
+    let Some(kind) = v.get("kind").and_then(|k| k.as_str()) else {
+        return (400, err_json("missing `kind`"));
+    };
+    let Some(lines) = v.get("lines").and_then(|l| l.as_arr()) else {
+        return (400, err_json("missing `lines` array"));
+    };
+    let mut g = lock_tolerant(&state.inner);
+    let mut merged = 0u64;
+    for line in lines {
+        let Some(text) = line.as_str() else {
+            return (400, err_json("`lines` must hold strings"));
+        };
+        let result = match kind {
+            "eval" => g.evals.as_ref().map(|s| s.ingest_line(text)),
+            "transcript" => g.transcripts.as_ref().map(|s| s.ingest_line(text)),
+            other => return (400, err_json(format!("unknown upload kind `{other}`"))),
+        };
+        match result {
+            Some(Ok(true)) => merged += 1,
+            Some(Ok(false)) | None => {} // duplicate, or no store configured
+            Some(Err(e)) => return (500, err_json(format!("ingest failed: {e:#}"))),
+        }
+    }
+    match kind {
+        "eval" => g.stats.eval_lines_merged += merged,
+        _ => g.stats.transcript_lines_merged += merged,
+    }
+    (200, Json::obj(vec![("merged", Json::Num(merged as f64))]))
+}
+
+fn complete(state: &State, v: &Json) -> (u16, Json) {
+    let mut g = lock_tolerant(&state.inner);
+    let idx = match check_cell(&g, v) {
+        Ok(idx) => idx,
+        Err(reject) => {
+            g.stats.duplicate_completions += 1;
+            return reject;
+        }
+    };
+    if matches!(g.cells[idx].status, CellStatus::Done) {
+        g.stats.duplicate_completions += 1;
+        return (409, err_json(format!("cell {idx} is already complete")));
+    }
+    let record = match v.get("record").ok_or_else(|| eyre!("missing `record`")) {
+        Ok(r) => match KernelRunRecord::from_json(r) {
+            Ok(rec) => rec,
+            Err(e) => return (400, err_json(format!("bad record: {e:#}"))),
+        },
+        Err(e) => return (400, err_json(e.to_string())),
+    };
+    if let Some(appender) = &mut g.appender {
+        if let Err(e) = appender.append(&record) {
+            eprintln!("warning: checkpoint append failed: {e:#}");
+        }
+    }
+    g.cells[idx].record = Some(record);
+    g.cells[idx].status = CellStatus::Done;
+    g.done += 1;
+    g.stats.completions += 1;
+    state.cvar.notify_all();
+    (200, ok_json())
+}
+
+fn release(state: &State, v: &Json) -> (u16, Json) {
+    let mut g = lock_tolerant(&state.inner);
+    let idx = match check_cell(&g, v) {
+        Ok(idx) => idx,
+        Err(reject) => return reject,
+    };
+    if !matches!(g.cells[idx].status, CellStatus::Claimed) {
+        return (409, err_json(format!("cell {idx} is not claimed")));
+    }
+    // Re-offer at the next epoch with a warm verify list folded from
+    // the buffered partial stream — the next claimant resumes exactly
+    // as a single-process `--resume` leg would.
+    let key = job_key(&g.cells[idx].job);
+    let fold = events::completed_trials(&g.cells[idx].events);
+    let cell = &mut g.cells[idx];
+    cell.verify = match fold.into_iter().find(|(k, _)| *k == key) {
+        Some((_, pairs)) => Some(pairs),
+        // Never started: offer fresh.
+        None if cell.events.is_empty() => None,
+        // The stream reached RunFinished but the record never arrived
+        // (claimant died in the gap): drop the buffer and redo the
+        // cell from scratch so the journal holds the stream exactly
+        // once.
+        None => {
+            cell.events.clear();
+            None
+        }
+    };
+    cell.epoch += 1;
+    cell.status = CellStatus::Available;
+    g.stats.reclaims += 1;
+    state.cvar.notify_all();
+    (200, ok_json())
+}
+
+fn fail(state: &State, v: &Json) -> (u16, Json) {
+    let msg = v
+        .get("error")
+        .and_then(|e| e.as_str())
+        .unwrap_or("worker reported an unspecified error")
+        .to_string();
+    let mut g = lock_tolerant(&state.inner);
+    if g.failed.is_none() {
+        g.failed = Some(msg);
+    }
+    state.cvar.notify_all();
+    (200, ok_json())
+}
+
+/// Ship the merged transcript journal so a re-claiming worker can
+/// seed its local journal and replay a dead claimant's completed
+/// trials from recorded provider calls instead of re-generating live.
+fn warm(state: &State) -> (u16, Json) {
+    let g = lock_tolerant(&state.inner);
+    let lines: Vec<Json> = match &g.transcripts {
+        Some(store) => {
+            if let Err(e) = store.flush() {
+                return (500, err_json(format!("transcript flush failed: {e:#}")));
+            }
+            match std::fs::read_to_string(store.path()) {
+                Ok(text) => text
+                    .lines()
+                    .filter(|l| !l.trim().is_empty())
+                    .map(|l| Json::Str(l.to_string()))
+                    .collect(),
+                Err(_) => Vec::new(), // journal not created yet
+            }
+        }
+        None => Vec::new(),
+    };
+    (200, Json::obj(vec![("lines", Json::Arr(lines))]))
+}
+
+fn status(state: &State) -> (u16, Json) {
+    let g = lock_tolerant(&state.inner);
+    let s = &g.stats;
+    (
+        200,
+        Json::obj(vec![
+            ("grid", Json::Num(s.grid as f64)),
+            ("resumed", Json::Num(s.resumed as f64)),
+            ("done", Json::Num(g.done as f64)),
+            ("claims", Json::Num(s.claims as f64)),
+            ("reclaims", Json::Num(s.reclaims as f64)),
+            ("completions", Json::Num(s.completions as f64)),
+            ("duplicate_completions", Json::Num(s.duplicate_completions as f64)),
+            ("event_batches", Json::Num(s.event_batches as f64)),
+            ("stale_event_batches", Json::Num(s.stale_event_batches as f64)),
+            ("events", Json::Num(s.events as f64)),
+            ("eval_lines_merged", Json::Num(s.eval_lines_merged as f64)),
+            ("transcript_lines_merged", Json::Num(s.transcript_lines_merged as f64)),
+            ("failed", Json::Bool(g.failed.is_some())),
+        ]),
+    )
+}

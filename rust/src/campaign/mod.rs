@@ -25,22 +25,30 @@
 //! re-seeded from the journaled cells' best kernels so it sees what an
 //! uninterrupted run would have published by that point.
 
+//!
+//! Execution is factored through the [`plane::WorkPlane`] seam
+//! (DESIGN.md §15): [`run`] drives the in-process [`plane::LocalPlane`];
+//! `campaign serve` ([`coordinator`]) owns the same grid behind an
+//! HTTP/JSON claim API, and `campaign work` ([`wire`]) runs the
+//! identical engine stack against it from separate processes.
+
+pub mod coordinator;
+pub mod plane;
 pub mod results;
+pub mod wire;
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::evals::Evaluator;
 use crate::llm::{profile, provider, ModelProfile, ProviderSpec};
-use crate::methods::engine::{self, EngineOpts, EventSink, Interrupted, TrialGate};
+use crate::methods::engine::{EventSink, TrialGate};
 use crate::methods::{
     self, Archive, ArchiveEntry, JournalSink, KernelRunRecord, Method, ProgressSink, RepairPolicy,
-    RunCtx,
 };
 use crate::store::events::{self, EventJournal};
-use crate::tasks::OpTask;
+use crate::tasks::{OpTask, TaskRegistry};
 use crate::{eyre, Result};
 
 /// Campaign sweep description.
@@ -150,42 +158,53 @@ fn resolve_methods(names: &[String]) -> Result<Vec<Arc<dyn Method>>> {
 
 /// One grid point.
 #[derive(Clone)]
-struct Job {
-    method: Arc<dyn Method>,
-    model: &'static ModelProfile,
-    op: OpTask,
-    seed: u64,
+pub(crate) struct Job {
+    pub(crate) method: Arc<dyn Method>,
+    pub(crate) model: &'static ModelProfile,
+    pub(crate) op: OpTask,
+    pub(crate) seed: u64,
 }
 
 /// A record's grid-cell identity (checkpoint key).
-fn cell_of(r: &KernelRunRecord) -> (String, String, String, u64) {
+pub(crate) fn cell_of(r: &KernelRunRecord) -> events::CellKey {
     (r.method.clone(), r.model.clone(), r.op.clone(), r.seed)
 }
 
-/// Run the sweep; returns records sorted by (method, model, op, seed)
-/// for deterministic output regardless of scheduling.
-///
-/// With `cfg.checkpoint` set, completed cells are journaled as they
-/// finish; with `cfg.resume`, journaled cells inside the requested
-/// grid are skipped and their saved records merged into the result
-/// (journaled cells *outside* the grid are ignored, so a narrower
-/// re-run still reports exactly the requested sweep).
-pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRecord>> {
+/// A job's grid-cell identity (same key space as [`cell_of`]).
+pub(crate) fn job_key(j: &Job) -> events::CellKey {
+    (
+        j.method.name(),
+        j.model.name.to_string(),
+        j.op.name.clone(),
+        j.seed,
+    )
+}
+
+/// The resolved sweep: the full job grid plus any prior records loaded
+/// from the checkpoint on resume. Shared by the in-process plane
+/// ([`run`]) and the `campaign serve` coordinator
+/// ([`coordinator::serve`]), which must agree on grid order
+/// cell-for-cell for resumed and distributed sweeps to line up.
+pub(crate) struct GridPlan {
+    /// The FULL grid in deterministic (method, model, op, seed) loop
+    /// order; resume does not remove cells here, so a grid index is a
+    /// stable cell identity across legs and claimants.
+    pub(crate) jobs: Vec<Job>,
+    /// Checkpointed records merged on resume: in-grid, budget-matched,
+    /// deduped. Empty when not resuming.
+    pub(crate) prior: Vec<KernelRunRecord>,
+    pub(crate) n_methods: usize,
+    pub(crate) n_models: usize,
+    pub(crate) n_ops: usize,
+}
+
+/// Resolve the sweep grid (methods × models × ops × seeds, after
+/// filters and the stratified op cut) and, on resume, load the prior
+/// checkpoint records that fall inside it.
+pub(crate) fn plan_grid(cfg: &CampaignConfig, registry: &TaskRegistry) -> Result<GridPlan> {
     let models = resolve_models(&cfg.models)?;
     let method_impls = resolve_methods(&cfg.methods)?;
-    let method_names: Vec<String> = method_impls.iter().map(|m| m.name()).collect();
-    // One provider shared by every worker (they are Sync); recording
-    // wraps it transparently when a transcript journal is configured.
-    // On resume, already-journaled calls are served from the journal
-    // (trial-granular resume: an interrupted cell's completed trials
-    // replay with zero live generation).
-    let transcripts = match &cfg.provider {
-        ProviderSpec::Replay(_) => None, // a replayed run records nothing
-        _ => cfg.transcripts.as_deref(),
-    };
-    let llm_provider = provider::build(&cfg.provider, transcripts, cfg.resume)?;
-    let mut ops: Vec<OpTask> = evaluator
-        .registry
+    let mut ops: Vec<OpTask> = registry
         .ops
         .iter()
         .filter(|o| cfg.op_filter.is_empty() || o.name.contains(&cfg.op_filter))
@@ -212,20 +231,14 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
             }
         }
     }
-    let grid_total = jobs.len();
 
-    // Resume: pull previously-completed cells out of the job list.
-    let archive = Archive::new();
     let mut prior: Vec<KernelRunRecord> = Vec::new();
     if cfg.resume {
         let path = cfg
             .checkpoint
             .as_ref()
             .ok_or_else(|| eyre!("--resume requires a checkpoint journal"))?;
-        let grid: HashSet<(String, String, String, u64)> = jobs
-            .iter()
-            .map(|j| (j.method.name(), j.model.name.to_string(), j.op.name.clone(), j.seed))
-            .collect();
+        let grid: HashSet<events::CellKey> = jobs.iter().map(job_key).collect();
         let loaded = results::load_lenient(path)?;
         let mut budget_mismatch = 0usize;
         prior = loaded
@@ -254,17 +267,54 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         // legs racing); records are deterministic per cell, keep one.
         let mut seen = HashSet::new();
         prior.retain(|r| seen.insert(cell_of(r)));
-        jobs.retain(|j| {
-            !seen.contains(&(
-                j.method.name(),
-                j.model.name.to_string(),
-                j.op.name.clone(),
-                j.seed,
-            ))
-        });
-        // Re-publish prior cells' best kernels so archive-reading
-        // methods (the AI CUDA Engineer's Compose RAG) see what an
-        // uninterrupted run would have published by this point.
+    }
+
+    Ok(GridPlan {
+        jobs,
+        prior,
+        n_methods: method_impls.len(),
+        n_models: models.len(),
+        n_ops: ops.len(),
+    })
+}
+
+/// Run the sweep; returns records sorted by (method, model, op, seed)
+/// for deterministic output regardless of scheduling.
+///
+/// With `cfg.checkpoint` set, completed cells are journaled as they
+/// finish; with `cfg.resume`, journaled cells inside the requested
+/// grid are skipped and their saved records merged into the result
+/// (journaled cells *outside* the grid are ignored, so a narrower
+/// re-run still reports exactly the requested sweep).
+pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRecord>> {
+    // One provider shared by every worker (they are Sync); recording
+    // wraps it transparently when a transcript journal is configured.
+    // On resume, already-journaled calls are served from the journal
+    // (trial-granular resume: an interrupted cell's completed trials
+    // replay with zero live generation).
+    let transcripts = match &cfg.provider {
+        ProviderSpec::Replay(_) => None, // a replayed run records nothing
+        _ => cfg.transcripts.as_deref(),
+    };
+    let llm_provider = provider::build(&cfg.provider, transcripts, cfg.resume)?;
+
+    let GridPlan {
+        mut jobs,
+        prior,
+        n_methods,
+        n_models,
+        n_ops,
+    } = plan_grid(cfg, &evaluator.registry)?;
+    let grid_total = jobs.len();
+
+    // Resume: pull previously-completed cells out of the job list and
+    // re-publish their best kernels so archive-reading methods (the AI
+    // CUDA Engineer's Compose RAG) see what an uninterrupted run would
+    // have published by this point.
+    let archive = Archive::new();
+    if !prior.is_empty() {
+        let seen: HashSet<events::CellKey> = prior.iter().map(cell_of).collect();
+        jobs.retain(|j| !seen.contains(&job_key(j)));
         for r in &prior {
             if let (true, Some(src)) = (r.any_valid, &r.best_src) {
                 if let Some(task) = evaluator.registry.get(&r.op) {
@@ -290,9 +340,9 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         eprintln!(
             "campaign: {} methods x {} models x {} ops x {} seeds = {} runs \
              ({} workers, {} runtime shards, provider {}{})",
-            method_names.len(),
-            models.len(),
-            ops.len(),
+            n_methods,
+            n_models,
+            n_ops,
             cfg.seeds.len(),
             grid_total,
             concurrency,
@@ -346,116 +396,41 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     let trial_gate = (cfg.stop_after_trials > 0)
         .then(|| Arc::new(TrialGate::new(cfg.stop_after_trials)));
 
-    let budget = cfg.budget;
-    let repair = cfg.repair;
-    let quiet = cfg.quiet;
-    let stop_after = cfg.stop_after;
-    let jobs = Arc::new(jobs);
-    let next = Arc::new(AtomicUsize::new(0));
-    let done = Arc::new(AtomicUsize::new(0));
-    let out: Arc<Mutex<Vec<Option<KernelRunRecord>>>> =
-        Arc::new(Mutex::new(vec![None; total]));
     // First provider failure (transcript miss, HTTP outage) aborts the
-    // sweep: the flag stops workers claiming new cells, the error is
-    // surfaced to the caller. Already-journaled cells stay resumable.
-    // A TrialGate interruption sets only `interrupted` — a simulated
-    // kill is a healthy partial sweep, not a failure.
-    let failed = Arc::new(AtomicBool::new(false));
-    let interrupted = Arc::new(AtomicBool::new(false));
-    let first_error: Arc<Mutex<Option<anyhow::Error>>> = Arc::new(Mutex::new(None));
-
+    // sweep: the plane stops issuing cells, the error is surfaced to
+    // the caller. Already-journaled cells stay resumable. A TrialGate
+    // interruption is latched separately — a simulated kill is a
+    // healthy partial sweep, not a failure.
+    let local = plane::LocalPlane::new(
+        &jobs,
+        &verify_replay,
+        sinks,
+        cfg.stop_after,
+        cfg.quiet,
+        appender,
+    );
+    let env = plane::WorkerEnv {
+        evaluator: &evaluator,
+        archive: &archive,
+        provider: llm_provider,
+        budget: cfg.budget,
+        repair: cfg.repair,
+        prefetch: cfg.prefetch,
+        trial_gate,
+    };
     std::thread::scope(|scope| {
         for _ in 0..concurrency {
-            let jobs = jobs.clone();
-            let next = next.clone();
-            let done = done.clone();
-            let out = out.clone();
-            let evaluator = evaluator.clone();
-            let archive = archive.clone();
-            let appender = &appender;
-            let llm_provider = llm_provider.clone();
-            let failed = failed.clone();
-            let interrupted = interrupted.clone();
-            let first_error = first_error.clone();
-            let sinks = sinks.clone();
-            let trial_gate = trial_gate.clone();
-            let verify_replay = &verify_replay;
-            scope.spawn(move || loop {
-                if failed.load(Ordering::Relaxed) || interrupted.load(Ordering::Relaxed) {
-                    break; // another worker hit a failure / simulated kill
-                }
-                let idx = next.fetch_add(1, Ordering::Relaxed);
-                if idx >= jobs.len() {
-                    break;
-                }
-                if stop_after > 0 && idx >= stop_after {
-                    // Simulated cell-boundary kill: the claim gate makes
-                    // the completed-cell count exactly min(stop_after,
-                    // grid), with no completion-count race.
-                    break;
-                }
-                let job = &jobs[idx];
-                let ctx = RunCtx {
-                    evaluator: &evaluator,
-                    task: &job.op,
-                    model: job.model,
-                    seed: job.seed,
-                    archive: &archive,
-                    budget,
-                    repair,
-                    provider: llm_provider.as_ref(),
-                };
-                let journaled = verify_replay.get(&(
-                    job.method.name(),
-                    job.model.name.to_string(),
-                    job.op.name.clone(),
-                    job.seed,
-                ));
-                let opts = EngineOpts {
-                    sinks: sinks.clone(),
-                    prefetch: cfg.prefetch,
-                    trial_gate: trial_gate.clone(),
-                    resumed: journaled.is_some(),
-                    verify_replay: journaled.cloned().unwrap_or_default(),
-                };
-                let rec = match engine::drive(job.method.as_ref(), &ctx, &opts) {
-                    Ok(rec) => rec,
-                    Err(e) if e.downcast_ref::<Interrupted>().is_some() => {
-                        // Mid-cell simulated kill: the cell is not
-                        // checkpointed; --resume finishes it.
-                        interrupted.store(true, Ordering::Relaxed);
-                        break;
-                    }
-                    Err(e) => {
-                        failed.store(true, Ordering::Relaxed);
-                        let mut g = first_error.lock().unwrap();
-                        if g.is_none() {
-                            *g = Some(e.context(format!(
-                                "cell {} / {} / {} / seed {}",
-                                job.method.name(),
-                                job.model.name,
-                                job.op.name,
-                                job.seed
-                            )));
-                        }
-                        break;
-                    }
-                };
-                if let Some(appender) = appender {
-                    if let Err(e) = appender.lock().unwrap().append(&rec) {
-                        eprintln!("warning: checkpoint append failed: {e:#}");
-                    }
-                }
-                out.lock().unwrap()[idx] = Some(rec);
-                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
-                if !quiet && (d % 200 == 0 || d == jobs.len()) {
-                    eprintln!("  {d}/{} runs complete", jobs.len());
+            let local = &local;
+            let env = &env;
+            scope.spawn(move || {
+                if let Err(e) = plane::worker_loop(local, env) {
+                    local.transport_error(e);
                 }
             });
         }
     });
 
-    if let Some(e) = first_error.lock().unwrap().take() {
+    if let Some(e) = local.take_error() {
         return Err(e);
     }
 
@@ -466,14 +441,8 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         }
     }
 
-    let completed: Vec<KernelRunRecord> = Arc::try_unwrap(out)
-        .map_err(|_| eyre!("worker leak"))?
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .flatten()
-        .collect();
-    let was_interrupted = interrupted.load(Ordering::Relaxed);
+    let was_interrupted = local.was_interrupted();
+    let completed = local.into_completed();
     if was_interrupted && !cfg.quiet {
         eprintln!(
             "campaign: interrupted after {} trial groups (--stop-after-trials); \

@@ -1,0 +1,304 @@
+//! The `WorkPlane` seam (DESIGN.md §15): where campaign workers get
+//! cells from and where they put results.
+//!
+//! `campaign::run`'s thread-scope used to own cell claiming, record
+//! collection and failure propagation inline; extracting them behind
+//! [`WorkPlane`] lets the same [`worker_loop`] drive two transports:
+//!
+//! * [`LocalPlane`] — the in-process queue (an atomic claim index over
+//!   a shared job slice), byte-identical in behaviour to the inlined
+//!   loop it replaced;
+//! * `WirePlane` ([`super::wire`]) — cells claimed from a `campaign
+//!   serve` coordinator over HTTP/JSON, events and record uploads
+//!   streamed back.
+//!
+//! Locking is poison-tolerant throughout ([`lock_tolerant`]): a worker
+//! that panics mid-cell must surface the sweep's typed first error,
+//! not cascade `PoisonError` panics across the whole thread scope.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::evals::Evaluator;
+use crate::llm::{ModelProfile, Provider};
+use crate::methods::engine::{self, EngineOpts, EventSink, Interrupted, TrialGate};
+use crate::methods::{Archive, KernelRunRecord, Method, RepairPolicy, RunCtx};
+use crate::store::events;
+use crate::tasks::OpTask;
+use crate::Result;
+
+use super::{results, Job};
+
+/// Lock a mutex, recovering the data from a poisoned lock instead of
+/// panicking: the shared campaign state (first error, checkpoint
+/// appender, output slots) stays readable after a worker panic, so the
+/// sweep reports its typed first error instead of a poison cascade.
+pub(crate) fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// One claimed grid cell, fully resolved and ready to drive: the
+/// method/model/op/seed identity plus the per-claim engine plumbing
+/// (event sinks, warm-resume verification state).
+pub struct ClaimedCell {
+    /// Grid index of the cell on the plane that issued it.
+    pub idx: usize,
+    /// Claim generation: a re-offered cell (prior claimant presumed
+    /// dead) gets a higher epoch, and the coordinator drops event
+    /// uploads from stale epochs.
+    pub epoch: u64,
+    pub method: Arc<dyn Method>,
+    pub model: &'static ModelProfile,
+    pub op: OpTask,
+    pub seed: u64,
+    /// This cell resumes a half-finished prior run whose events are
+    /// already journaled (suppress the duplicate `RunStarted` and the
+    /// replayed trials' events — DESIGN.md §13).
+    pub resumed: bool,
+    /// `(trial, src_hash)` pairs from the prior run, verified against
+    /// the replayed trials' emissions.
+    pub verify_replay: Vec<(usize, String)>,
+    /// Event receivers for this cell (shared journal/progress sinks on
+    /// the local plane; a per-cell wire sink on the remote one).
+    pub sinks: Vec<Arc<dyn EventSink>>,
+}
+
+impl ClaimedCell {
+    /// The cell's grid identity (checkpoint / event-journal key).
+    pub fn key(&self) -> events::CellKey {
+        (
+            self.method.name(),
+            self.model.name.to_string(),
+            self.op.name.clone(),
+            self.seed,
+        )
+    }
+
+    /// Human-readable cell label for error context.
+    pub fn describe(&self) -> String {
+        format!(
+            "cell {} / {} / {} / seed {}",
+            self.method.name(),
+            self.model.name,
+            self.op.name,
+            self.seed
+        )
+    }
+}
+
+/// Where workers get cells and put results. Implementations are shared
+/// across worker threads and must serialize internally.
+pub trait WorkPlane: Send + Sync {
+    /// Claim the next cell, `None` when the plane is drained (or has
+    /// stopped issuing work after a failure/interruption).
+    fn claim(&self) -> Result<Option<ClaimedCell>>;
+
+    /// Deliver a completed cell's record.
+    fn complete(&self, cell: &ClaimedCell, rec: KernelRunRecord) -> Result<()>;
+
+    /// The trial gate interrupted this cell mid-run (simulated worker
+    /// death): the cell is left incomplete for a later resume/re-claim.
+    fn interrupt(&self, cell: &ClaimedCell);
+
+    /// The cell failed with a real error; the sweep should abort.
+    fn fail(&self, cell: &ClaimedCell, err: anyhow::Error);
+}
+
+/// Everything a worker needs besides the plane: the evaluator stack
+/// and the per-sweep engine knobs. Shared by reference across the
+/// worker threads of one process.
+pub struct WorkerEnv<'a> {
+    pub evaluator: &'a Evaluator,
+    pub archive: &'a Archive,
+    pub provider: Arc<dyn Provider>,
+    pub budget: usize,
+    pub repair: RepairPolicy,
+    pub prefetch: usize,
+    pub trial_gate: Option<Arc<TrialGate>>,
+}
+
+/// The worker loop both transports share: claim a cell, drive it
+/// through the engine, report the outcome, repeat until the plane
+/// stops issuing work. Returns the first claim/delivery transport
+/// error (local planes never produce one).
+pub fn worker_loop(plane: &dyn WorkPlane, env: &WorkerEnv) -> Result<()> {
+    loop {
+        let Some(cell) = plane.claim()? else {
+            return Ok(());
+        };
+        let ctx = RunCtx {
+            evaluator: env.evaluator,
+            task: &cell.op,
+            model: cell.model,
+            seed: cell.seed,
+            archive: env.archive,
+            budget: env.budget,
+            repair: env.repair,
+            provider: env.provider.as_ref(),
+        };
+        let opts = EngineOpts {
+            sinks: cell.sinks.clone(),
+            prefetch: env.prefetch,
+            trial_gate: env.trial_gate.clone(),
+            resumed: cell.resumed,
+            verify_replay: cell.verify_replay.clone(),
+        };
+        match engine::drive(cell.method.as_ref(), &ctx, &opts) {
+            Ok(rec) => plane.complete(&cell, rec)?,
+            Err(e) if e.downcast_ref::<Interrupted>().is_some() => {
+                // Mid-cell simulated kill: the cell is not completed;
+                // a resume (or a re-claim on the wire plane) finishes
+                // it at trial granularity.
+                plane.interrupt(&cell);
+                return Ok(());
+            }
+            Err(e) => {
+                plane.fail(&cell, e);
+                return Ok(());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LocalPlane: the in-process queue
+
+/// The in-process plane: an atomic claim index over the job slice,
+/// records collected into index-addressed slots, first failure /
+/// interruption latched in shared flags. Exactly the state the
+/// pre-refactor `campaign::run` thread-scope owned inline.
+pub(crate) struct LocalPlane<'a> {
+    jobs: &'a [Job],
+    verify_replay: &'a HashMap<events::CellKey, Vec<(usize, String)>>,
+    sinks: Vec<Arc<dyn EventSink>>,
+    /// Claim at most this many cells (0 = no cap): the simulated
+    /// cell-boundary kill ([`super::CampaignConfig::stop_after`]).
+    stop_after: usize,
+    quiet: bool,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    out: Mutex<Vec<Option<KernelRunRecord>>>,
+    appender: Option<Mutex<results::Appender>>,
+    failed: AtomicBool,
+    interrupted: AtomicBool,
+    first_error: Mutex<Option<anyhow::Error>>,
+}
+
+impl<'a> LocalPlane<'a> {
+    pub(crate) fn new(
+        jobs: &'a [Job],
+        verify_replay: &'a HashMap<events::CellKey, Vec<(usize, String)>>,
+        sinks: Vec<Arc<dyn EventSink>>,
+        stop_after: usize,
+        quiet: bool,
+        appender: Option<Mutex<results::Appender>>,
+    ) -> Self {
+        Self {
+            jobs,
+            verify_replay,
+            sinks,
+            stop_after,
+            quiet,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            out: Mutex::new(vec![None; jobs.len()]),
+            appender,
+            failed: AtomicBool::new(false),
+            interrupted: AtomicBool::new(false),
+            first_error: Mutex::new(None),
+        }
+    }
+
+    /// The sweep's first real error, if any (taken once).
+    pub(crate) fn take_error(&self) -> Option<anyhow::Error> {
+        lock_tolerant(&self.first_error).take()
+    }
+
+    /// Record a transport-level worker error. Unreachable for the
+    /// in-process plane (claim/complete are infallible); kept for
+    /// defensive parity with the wire plane's worker loop.
+    pub(crate) fn transport_error(&self, err: anyhow::Error) {
+        self.failed.store(true, Ordering::Relaxed);
+        let mut g = lock_tolerant(&self.first_error);
+        if g.is_none() {
+            *g = Some(err);
+        }
+    }
+
+    pub(crate) fn was_interrupted(&self) -> bool {
+        self.interrupted.load(Ordering::Relaxed)
+    }
+
+    /// Consume the plane and collect the completed records.
+    pub(crate) fn into_completed(self) -> Vec<KernelRunRecord> {
+        self.out
+            .into_inner()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+}
+
+impl WorkPlane for LocalPlane<'_> {
+    fn claim(&self) -> Result<Option<ClaimedCell>> {
+        if self.failed.load(Ordering::Relaxed) || self.interrupted.load(Ordering::Relaxed) {
+            return Ok(None); // another worker hit a failure / simulated kill
+        }
+        let idx = self.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= self.jobs.len() {
+            return Ok(None);
+        }
+        if self.stop_after > 0 && idx >= self.stop_after {
+            // Simulated cell-boundary kill: the claim gate makes the
+            // completed-cell count exactly min(stop_after, grid), with
+            // no completion-count race.
+            return Ok(None);
+        }
+        let job = &self.jobs[idx];
+        let journaled = self.verify_replay.get(&(
+            job.method.name(),
+            job.model.name.to_string(),
+            job.op.name.clone(),
+            job.seed,
+        ));
+        Ok(Some(ClaimedCell {
+            idx,
+            epoch: 0,
+            method: job.method.clone(),
+            model: job.model,
+            op: job.op.clone(),
+            seed: job.seed,
+            resumed: journaled.is_some(),
+            verify_replay: journaled.cloned().unwrap_or_default(),
+            sinks: self.sinks.clone(),
+        }))
+    }
+
+    fn complete(&self, cell: &ClaimedCell, rec: KernelRunRecord) -> Result<()> {
+        if let Some(appender) = &self.appender {
+            if let Err(e) = lock_tolerant(appender).append(&rec) {
+                eprintln!("warning: checkpoint append failed: {e:#}");
+            }
+        }
+        lock_tolerant(&self.out)[cell.idx] = Some(rec);
+        let d = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.quiet && (d % 200 == 0 || d == self.jobs.len()) {
+            eprintln!("  {d}/{} runs complete", self.jobs.len());
+        }
+        Ok(())
+    }
+
+    fn interrupt(&self, _cell: &ClaimedCell) {
+        self.interrupted.store(true, Ordering::Relaxed);
+    }
+
+    fn fail(&self, cell: &ClaimedCell, err: anyhow::Error) {
+        self.failed.store(true, Ordering::Relaxed);
+        let mut g = lock_tolerant(&self.first_error);
+        if g.is_none() {
+            *g = Some(err.context(cell.describe()));
+        }
+    }
+}

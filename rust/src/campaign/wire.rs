@@ -1,0 +1,726 @@
+//! `campaign work`: the worker side of the wire-backed work plane
+//! (DESIGN.md §15).
+//!
+//! A worker owns the whole per-process engine stack — evaluator,
+//! provider, worker threads — and gets *only* its cells from the
+//! coordinator: it mirrors the sweep knobs from `GET /config`, claims
+//! cells one at a time, streams each cell's trial events back at every
+//! flush boundary, uploads the new lines its local eval-cache /
+//! transcript journals accrue, and posts the finished record. The
+//! shared [`worker_loop`] drives cells exactly as the in-process plane
+//! does — [`WirePlane`] only swaps the transport.
+//!
+//! **Failure stance.** Event/record delivery is what the coordinator's
+//! byte-identity contract rests on, so a sink whose uploads ultimately
+//! fail poisons the cell: `complete` turns into `release` (the cell is
+//! re-offered) and the worker stops with an error instead of letting a
+//! gap into the journal. A coordinator that stops answering after the
+//! sweep has been reachable is the normal end-of-sweep race — another
+//! worker finished the last cell and the coordinator exited — so the
+//! worker drains quietly instead of failing.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::evals::Evaluator;
+use crate::llm::{profile, provider, Provider, ProviderSpec, RecordingProvider};
+use crate::methods::engine::{EventSink, TrialGate};
+use crate::methods::{self, Archive, KernelRunRecord, RepairPolicy};
+use crate::store::events::{self, TrialEvent};
+use crate::store::{EvalStore, TranscriptStore};
+use crate::tasks::TaskRegistry;
+use crate::util::httpwire::{request_json, split_url, Url};
+use crate::util::json::{self, Json};
+use crate::{eyre, Result, WrapErr as _};
+
+use super::plane::{lock_tolerant, worker_loop, ClaimedCell, WorkPlane, WorkerEnv};
+
+/// How a `campaign work` process is parameterized (everything else is
+/// mirrored from the coordinator's `/config`).
+#[derive(Debug, Clone, Default)]
+pub struct WorkOpts {
+    /// Local transcript journal: records this worker's live provider
+    /// calls, serves warm replays, and is delta-uploaded to the
+    /// coordinator for merging.
+    pub transcripts: Option<PathBuf>,
+    /// The local eval-cache journal backing the caller's evaluator
+    /// (delta-uploaded for merging); `None` = no cache, no uploads.
+    pub cache: Option<PathBuf>,
+    /// Worker threads (0 = number of CPUs).
+    pub concurrency: usize,
+    pub quiet: bool,
+    /// Simulated mid-cell kill (test hook, same semantics as the
+    /// in-process `--stop-after-trials`): the gate trips, claimed
+    /// cells are released back to the coordinator, the process exits.
+    pub stop_after_trials: usize,
+}
+
+/// What a drained worker did.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkSummary {
+    pub cells_completed: usize,
+    /// The trial gate tripped (simulated kill); released cells await
+    /// the next claimant.
+    pub interrupted: bool,
+}
+
+// ---------------------------------------------------------------------
+// Wire client
+
+const CLAIM_IDLE_POLL: Duration = Duration::from_millis(200);
+const RPC_TIMEOUT: Duration = Duration::from_secs(30);
+const RPC_ATTEMPTS: u32 = 3;
+
+/// Thin JSON-RPC-ish client over [`crate::util::httpwire`].
+struct WireClient {
+    base: Url,
+}
+
+impl WireClient {
+    fn new(url: &str) -> Result<Self> {
+        Ok(Self { base: split_url(url)? })
+    }
+
+    fn rpc(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let body = body.map(|b| b.to_string()).unwrap_or_default();
+        let (status, text) = request_json(&self.base, method, path, &body, RPC_TIMEOUT)?;
+        let v = json::parse(&text)
+            .map_err(|e| eyre!("coordinator sent unparseable JSON for {path}: {e}"))?;
+        Ok((status, v))
+    }
+
+    /// [`WireClient::rpc`] with retries on *transport* errors (the
+    /// serial coordinator briefly saturating); HTTP error statuses are
+    /// returned to the caller, they are protocol answers.
+    fn rpc_retry(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let mut delay = Duration::from_millis(100);
+        let mut last = None;
+        for attempt in 0..RPC_ATTEMPTS {
+            match self.rpc(method, path, body) {
+                Ok(reply) => return Ok(reply),
+                Err(e) => {
+                    last = Some(e);
+                    if attempt + 1 < RPC_ATTEMPTS {
+                        std::thread::sleep(delay);
+                        delay *= 2;
+                    }
+                }
+            }
+        }
+        Err(last.expect("at least one attempt"))
+    }
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(String::from)
+        .ok_or_else(|| eyre!("coordinator reply missing string field `{key}`"))
+}
+
+fn get_num(v: &Json, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(|x| x.as_u64())
+        .ok_or_else(|| eyre!("coordinator reply missing numeric field `{key}`"))
+}
+
+// ---------------------------------------------------------------------
+// Store delta uploads
+
+/// One local journal being delta-uploaded: everything past `offset`
+/// that ends in a newline is new, complete lines to ship. The offset
+/// advances only after the coordinator accepts the batch, so a failed
+/// upload is retried at the next boundary (the coordinator dedups).
+struct UploadChannel<S> {
+    store: Arc<S>,
+    path: PathBuf,
+    offset: Mutex<u64>,
+}
+
+impl<S> UploadChannel<S> {
+    fn new(store: Arc<S>, path: PathBuf) -> Self {
+        let offset = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        Self { store, path, offset: Mutex::new(offset) }
+    }
+}
+
+/// Read the complete lines between `offset` and the last newline.
+/// Returns the lines and the offset they advance to.
+fn read_delta(path: &Path, offset: u64) -> Result<(Vec<String>, u64)> {
+    use std::os::unix::fs::FileExt as _;
+    let Ok(meta) = std::fs::metadata(path) else {
+        return Ok((Vec::new(), offset));
+    };
+    if meta.len() <= offset {
+        return Ok((Vec::new(), offset));
+    }
+    let f = std::fs::File::open(path).context("opening journal for delta upload")?;
+    let mut buf = vec![0u8; (meta.len() - offset) as usize];
+    f.read_exact_at(&mut buf, offset)
+        .context("reading journal delta")?;
+    let Some(last_nl) = buf.iter().rposition(|&b| b == b'\n') else {
+        return Ok((Vec::new(), offset)); // only a torn tail so far
+    };
+    let text = std::str::from_utf8(&buf[..last_nl + 1])
+        .context("journal delta is not UTF-8")?;
+    let lines = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(String::from)
+        .collect();
+    Ok((lines, offset + last_nl as u64 + 1))
+}
+
+/// Ships new local-journal lines to the coordinator at every flush
+/// boundary. Shared by all of one worker's cells.
+struct Uploader {
+    client: Arc<WireClient>,
+    evals: Option<UploadChannel<EvalStore>>,
+    transcripts: Option<UploadChannel<TranscriptStore>>,
+}
+
+impl Uploader {
+    /// Flush the local stores (group-commit durability first — the
+    /// engine's own store flush runs *after* the sinks), then upload
+    /// whatever new complete lines appeared.
+    fn upload_new(&self) -> Result<()> {
+        if let Some(ch) = &self.evals {
+            ch.store.flush()?;
+            Self::ship(&self.client, "eval", &ch.path, &ch.offset)?;
+        }
+        if let Some(ch) = &self.transcripts {
+            ch.store.flush()?;
+            Self::ship(&self.client, "transcript", &ch.path, &ch.offset)?;
+        }
+        Ok(())
+    }
+
+    fn ship(
+        client: &WireClient,
+        kind: &str,
+        path: &Path,
+        offset: &Mutex<u64>,
+    ) -> Result<()> {
+        let mut off = lock_tolerant(offset);
+        let (lines, new_off) = read_delta(path, *off)?;
+        if lines.is_empty() {
+            return Ok(());
+        }
+        let body = Json::obj(vec![
+            ("kind", Json::Str(kind.into())),
+            ("lines", Json::Arr(lines.into_iter().map(Json::Str).collect())),
+        ]);
+        let (status, reply) = client.rpc_retry("POST", "/upload", Some(&body))?;
+        if status != 200 {
+            return Err(eyre!("coordinator rejected {kind} upload: HTTP {status} {reply}"));
+        }
+        *off = new_off;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The per-cell event sink
+
+/// Buffers a claimed cell's trial events and posts them (with the
+/// store deltas) at every engine flush boundary. The sink API is
+/// infallible by contract, so delivery failures latch [`broken`]
+/// instead — [`WirePlane::complete`] refuses to complete a cell whose
+/// event stream has a gap and releases it for a re-run.
+struct WireCellSink {
+    client: Arc<WireClient>,
+    uploader: Arc<Uploader>,
+    idx: usize,
+    epoch: u64,
+    buf: Mutex<Vec<TrialEvent>>,
+    broken: AtomicBool,
+}
+
+impl WireCellSink {
+    fn new(client: Arc<WireClient>, uploader: Arc<Uploader>, idx: usize, epoch: u64) -> Self {
+        Self {
+            client,
+            uploader,
+            idx,
+            epoch,
+            buf: Mutex::new(Vec::new()),
+            broken: AtomicBool::new(false),
+        }
+    }
+
+    fn try_flush(&self) -> Result<()> {
+        self.uploader.upload_new()?;
+        let staged: Vec<TrialEvent> = {
+            let mut g = lock_tolerant(&self.buf);
+            std::mem::take(&mut *g)
+        };
+        if staged.is_empty() {
+            return Ok(());
+        }
+        let body = Json::obj(vec![
+            ("idx", Json::Num(self.idx as f64)),
+            ("epoch", Json::Num(self.epoch as f64)),
+            (
+                "events",
+                Json::Arr(staged.iter().map(events::event_to_json).collect()),
+            ),
+        ]);
+        match self.client.rpc_retry("POST", "/events", Some(&body)) {
+            Ok((200, _)) => Ok(()),
+            Ok((status, reply)) => {
+                // Put the batch back so a later flush retries it —
+                // unless the epoch is stale, in which case the cell is
+                // no longer ours to journal.
+                if status != 409 {
+                    lock_tolerant(&self.buf).splice(0..0, staged);
+                }
+                Err(eyre!("coordinator rejected event batch: HTTP {status} {reply}"))
+            }
+            Err(e) => {
+                lock_tolerant(&self.buf).splice(0..0, staged);
+                Err(e)
+            }
+        }
+    }
+}
+
+impl EventSink for WireCellSink {
+    fn emit(&self, ev: &TrialEvent) {
+        lock_tolerant(&self.buf).push(ev.clone());
+    }
+
+    fn flush(&self) {
+        if let Err(e) = self.try_flush() {
+            self.broken.store(true, Ordering::Relaxed);
+            eprintln!("warning: event/store upload failed: {e:#}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The wire plane
+
+/// [`WorkPlane`] over HTTP/JSON: cells come from `POST /claim`,
+/// results go back via `/events`, `/upload`, `/complete`, `/release`,
+/// `/fail`.
+struct WirePlane {
+    client: Arc<WireClient>,
+    uploader: Arc<Uploader>,
+    registry: Arc<TaskRegistry>,
+    local_transcripts: Option<Arc<TranscriptStore>>,
+    quiet: bool,
+    /// Coordinator became unreachable after the sweep had been healthy:
+    /// the end-of-sweep drain, not an error.
+    gone: AtomicBool,
+    failed: AtomicBool,
+    interrupted: AtomicBool,
+    warmed: AtomicBool,
+    completed: AtomicUsize,
+    first_error: Mutex<Option<anyhow::Error>>,
+    /// Sinks of currently-claimed cells, by grid index.
+    active: Mutex<HashMap<usize, Arc<WireCellSink>>>,
+}
+
+impl WirePlane {
+    fn drained(&self, why: &str) -> Option<ClaimedCell> {
+        if !self.gone.swap(true, Ordering::Relaxed) && !self.quiet {
+            eprintln!("work: coordinator unreachable ({why}); treating sweep as drained");
+        }
+        None
+    }
+
+    /// Pull the coordinator's merged transcript journal into the local
+    /// store, so a re-claimed cell's completed trials replay from the
+    /// dead claimant's recorded calls instead of re-generating live.
+    fn warm_from_coordinator(&self) -> Result<()> {
+        let Some(store) = &self.local_transcripts else {
+            return Ok(()); // deterministic provider: replay regenerates
+        };
+        if self.warmed.swap(true, Ordering::Relaxed) {
+            return Ok(());
+        }
+        let (status, v) = self.client.rpc_retry("GET", "/warm", None)?;
+        if status != 200 {
+            return Err(eyre!("warm-state fetch failed: HTTP {status}"));
+        }
+        let Some(lines) = v.get("lines").and_then(|l| l.as_arr()) else {
+            return Err(eyre!("warm-state reply missing `lines`"));
+        };
+        let mut merged = 0usize;
+        for line in lines {
+            if let Some(text) = line.as_str() {
+                if store.ingest_line(text)? {
+                    merged += 1;
+                }
+            }
+        }
+        if merged > 0 && !self.quiet {
+            eprintln!("work: warmed {merged} transcript line(s) from the coordinator");
+        }
+        Ok(())
+    }
+
+    fn post_cell(&self, path: &str, cell: &ClaimedCell, extra: Vec<(&str, Json)>) -> Result<()> {
+        let mut pairs = vec![
+            ("idx", Json::Num(cell.idx as f64)),
+            ("epoch", Json::Num(cell.epoch as f64)),
+        ];
+        pairs.extend(extra);
+        let (status, reply) = self.client.rpc_retry("POST", path, Some(&Json::obj(pairs)))?;
+        if status != 200 {
+            return Err(eyre!("coordinator rejected {path}: HTTP {status} {reply}"));
+        }
+        Ok(())
+    }
+
+    fn transport_error(&self, err: anyhow::Error) {
+        self.failed.store(true, Ordering::Relaxed);
+        let mut g = lock_tolerant(&self.first_error);
+        if g.is_none() {
+            *g = Some(err);
+        }
+    }
+}
+
+impl WorkPlane for WirePlane {
+    fn claim(&self) -> Result<Option<ClaimedCell>> {
+        loop {
+            if self.gone.load(Ordering::Relaxed)
+                || self.failed.load(Ordering::Relaxed)
+                || self.interrupted.load(Ordering::Relaxed)
+            {
+                return Ok(None);
+            }
+            let reply = self.client.rpc_retry("POST", "/claim", Some(&Json::obj(vec![])));
+            let (status, v) = match reply {
+                Ok(r) => r,
+                // /config succeeded earlier, so unreachable now is the
+                // end-of-sweep shutdown race.
+                Err(_) => return Ok(self.drained("claim")),
+            };
+            if status != 200 {
+                return Err(eyre!("claim failed: HTTP {status} {v}"));
+            }
+            match get_str(&v, "status")?.as_str() {
+                "idle" => {
+                    std::thread::sleep(CLAIM_IDLE_POLL);
+                    continue;
+                }
+                "done" => return Ok(None),
+                "failed" => {
+                    return Err(eyre!(
+                        "coordinator reported sweep failure: {}",
+                        get_str(&v, "error").unwrap_or_else(|_| "unknown".into())
+                    ));
+                }
+                "cell" => {}
+                other => return Err(eyre!("unknown claim status `{other}`")),
+            }
+
+            let idx = get_num(&v, "idx")? as usize;
+            let epoch = get_num(&v, "epoch")?;
+            let method_name = get_str(&v, "method")?;
+            let model_name = get_str(&v, "model")?;
+            let op_name = get_str(&v, "op")?;
+            let seed: u64 = get_str(&v, "seed")?
+                .parse()
+                .map_err(|e| eyre!("bad seed in claim: {e}"))?;
+            let resumed = v.get("resumed").and_then(|b| b.as_bool()).unwrap_or(false);
+            let mut verify = Vec::new();
+            if let Some(pairs) = v.get("verify").and_then(|p| p.as_arr()) {
+                for pair in pairs {
+                    let items = pair
+                        .as_arr()
+                        .ok_or_else(|| eyre!("bad verify pair in claim"))?;
+                    match items {
+                        [t, h] => verify.push((
+                            t.as_usize().ok_or_else(|| eyre!("bad verify trial"))?,
+                            h.as_str().ok_or_else(|| eyre!("bad verify hash"))?.to_string(),
+                        )),
+                        _ => return Err(eyre!("bad verify pair in claim")),
+                    }
+                }
+            }
+
+            let method = methods::by_name(&method_name).map(Arc::from)?;
+            let model = profile::by_name(&model_name)
+                .ok_or_else(|| eyre!("coordinator offered unknown model `{model_name}`"))?;
+            let op = self
+                .registry
+                .get(&op_name)
+                .ok_or_else(|| {
+                    eyre!("coordinator offered op `{op_name}` missing from local artifacts")
+                })?
+                .clone();
+            if resumed {
+                self.warm_from_coordinator()?;
+            }
+            let sink = Arc::new(WireCellSink::new(
+                self.client.clone(),
+                self.uploader.clone(),
+                idx,
+                epoch,
+            ));
+            lock_tolerant(&self.active).insert(idx, sink.clone());
+            if !self.quiet {
+                eprintln!(
+                    "work: claimed cell {idx} (epoch {epoch}): {method_name} / \
+                     {model_name} / {op_name} / seed {seed}{}",
+                    if resumed { " [resumed]" } else { "" }
+                );
+            }
+            return Ok(Some(ClaimedCell {
+                idx,
+                epoch,
+                method,
+                model,
+                op,
+                seed,
+                resumed,
+                verify_replay: verify,
+                sinks: vec![sink],
+            }));
+        }
+    }
+
+    fn complete(&self, cell: &ClaimedCell, rec: KernelRunRecord) -> Result<()> {
+        let sink = lock_tolerant(&self.active).remove(&cell.idx);
+        if let Some(sink) = &sink {
+            // Catch anything staged since the engine's final boundary.
+            sink.flush();
+            if sink.broken.load(Ordering::Relaxed) {
+                // The event stream has a gap: completing would
+                // finalize a journal missing events. Hand the cell
+                // back instead.
+                if let Err(e) = self.post_cell("/release", cell, vec![]) {
+                    eprintln!("warning: releasing broken cell failed: {e:#}");
+                }
+                return Err(eyre!(
+                    "{}: event uploads failed; cell released for re-run",
+                    cell.describe()
+                ));
+            }
+        }
+        match self.post_cell("/complete", cell, vec![("record", rec.to_json())]) {
+            Ok(()) => {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                if self.gone.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                // Transport death at the very end of the sweep is the
+                // shutdown race; a protocol rejection (stale epoch,
+                // duplicate) means another claimant finished the cell.
+                // Neither is this worker's failure.
+                if !self.quiet {
+                    eprintln!("work: completion of cell {} not accepted: {e:#}", cell.idx);
+                }
+                self.drained("complete");
+                Ok(())
+            }
+        }
+    }
+
+    fn interrupt(&self, cell: &ClaimedCell) {
+        self.interrupted.store(true, Ordering::Relaxed);
+        if let Some(sink) = lock_tolerant(&self.active).remove(&cell.idx) {
+            sink.flush(); // ship the completed trials' events first
+        }
+        if let Err(e) = self.post_cell("/release", cell, vec![]) {
+            eprintln!("warning: releasing interrupted cell failed: {e:#}");
+        } else if !self.quiet {
+            eprintln!(
+                "work: released cell {} after simulated kill; next claimant resumes it",
+                cell.idx
+            );
+        }
+    }
+
+    fn fail(&self, cell: &ClaimedCell, err: anyhow::Error) {
+        self.failed.store(true, Ordering::Relaxed);
+        lock_tolerant(&self.active).remove(&cell.idx);
+        let msg = format!("{}: {:#}", cell.describe(), err);
+        if let Err(e) = self.post_cell("/fail", cell, vec![("error", Json::Str(msg.clone()))]) {
+            eprintln!("warning: reporting failure to coordinator failed: {e:#}");
+        }
+        let mut g = lock_tolerant(&self.first_error);
+        if g.is_none() {
+            *g = Some(err.context(cell.describe()));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry point
+
+/// Run a worker against a coordinator at `url` until the sweep drains.
+///
+/// The caller supplies the evaluator (with any local cache already
+/// attached — pass the same path in [`WorkOpts::cache`] so its new
+/// lines are uploaded); everything sweep-defining (budget, repair
+/// policy, provider, prefetch) is mirrored from the coordinator.
+pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSummary> {
+    let client = Arc::new(WireClient::new(url)?);
+
+    // The coordinator may still be binding (CI starts both at once):
+    // patiently retry the initial config fetch.
+    let mut config = None;
+    for _ in 0..50 {
+        match client.rpc("GET", "/config", None) {
+            Ok((200, v)) => {
+                config = Some(v);
+                break;
+            }
+            Ok((status, v)) => return Err(eyre!("config fetch failed: HTTP {status} {v}")),
+            Err(_) => std::thread::sleep(CLAIM_IDLE_POLL),
+        }
+    }
+    let config = config.ok_or_else(|| eyre!("coordinator at {url} is not answering"))?;
+    let budget = get_num(&config, "budget")? as usize;
+    let prefetch = get_num(&config, "prefetch")? as usize;
+    let repair = RepairPolicy::parse(&get_str(&config, "repair")?)?;
+    let spec = ProviderSpec::parse(&get_str(&config, "provider")?)?;
+
+    // The provider stack mirrors the in-process campaign's: base
+    // backend, wrapped in a recording provider over the local
+    // transcript journal with reuse on — a re-claimed cell's completed
+    // trials replay from journaled calls (warmed from the coordinator)
+    // with zero live generation.
+    let mut local_transcripts = None;
+    let llm_provider: Arc<dyn Provider> = match (&spec, &opts.transcripts) {
+        (ProviderSpec::Replay(_), _) | (_, None) => provider::build(&spec, None, false)?,
+        (_, Some(path)) => {
+            let base = provider::build(&spec, None, false)?;
+            let store = TranscriptStore::open(path)?;
+            local_transcripts = Some(store.clone());
+            Arc::new(RecordingProvider::new(base, store)?.with_reuse(true))
+        }
+    };
+
+    let uploader = Arc::new(Uploader {
+        client: client.clone(),
+        evals: match (&opts.cache, evaluator.store()) {
+            (Some(path), Some(store)) => {
+                Some(UploadChannel::new(store.clone(), path.clone()))
+            }
+            _ => None,
+        },
+        transcripts: local_transcripts
+            .as_ref()
+            .zip(opts.transcripts.as_ref())
+            .map(|(store, path)| UploadChannel::new(store.clone(), path.clone())),
+    });
+
+    let concurrency = if opts.concurrency == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        opts.concurrency
+    };
+    if !opts.quiet {
+        eprintln!(
+            "work: joined {url} ({concurrency} workers, budget {budget}, repair {}, \
+             provider {})",
+            repair.label(),
+            spec.label()
+        );
+    }
+
+    let plane = WirePlane {
+        client,
+        uploader,
+        registry: evaluator.registry.clone(),
+        local_transcripts,
+        quiet: opts.quiet,
+        gone: AtomicBool::new(false),
+        failed: AtomicBool::new(false),
+        interrupted: AtomicBool::new(false),
+        warmed: AtomicBool::new(false),
+        completed: AtomicUsize::new(0),
+        first_error: Mutex::new(None),
+        active: Mutex::new(HashMap::new()),
+    };
+    let archive = Archive::new();
+    let trial_gate =
+        (opts.stop_after_trials > 0).then(|| Arc::new(TrialGate::new(opts.stop_after_trials)));
+    let env = WorkerEnv {
+        evaluator: &evaluator,
+        archive: &archive,
+        provider: llm_provider,
+        budget,
+        repair,
+        prefetch,
+        trial_gate,
+    };
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency {
+            let plane = &plane;
+            let env = &env;
+            scope.spawn(move || {
+                if let Err(e) = worker_loop(plane, env) {
+                    plane.transport_error(e);
+                }
+            });
+        }
+    });
+
+    if let Some(e) = lock_tolerant(&plane.first_error).take() {
+        return Err(e);
+    }
+
+    // Persist this process's cache hit/miss counters for `cache stats`.
+    if let Some(store) = evaluator.store() {
+        if let Err(e) = store.flush_session_stats() {
+            eprintln!("warning: eval-cache stats flush failed: {e:#}");
+        }
+    }
+
+    let summary = WorkSummary {
+        cells_completed: plane.completed.load(Ordering::Relaxed),
+        interrupted: plane.interrupted.load(Ordering::Relaxed),
+    };
+    if !opts.quiet {
+        eprintln!(
+            "work: drained after {} cell(s){}",
+            summary.cells_completed,
+            if summary.interrupted { " (interrupted by the trial gate)" } else { "" }
+        );
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_delta_ships_only_complete_new_lines() {
+        let dir = std::env::temp_dir().join(format!("evo_delta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("j.jsonl");
+
+        // Missing file: nothing to ship, offset unchanged.
+        let (lines, off) = read_delta(&p, 0).unwrap();
+        assert!(lines.is_empty());
+        assert_eq!(off, 0);
+
+        std::fs::write(&p, "{\"a\":1}\n{\"b\":2}\n{\"c\":").unwrap();
+        let (lines, off) = read_delta(&p, 0).unwrap();
+        assert_eq!(lines, vec!["{\"a\":1}".to_string(), "{\"b\":2}".to_string()]);
+        assert_eq!(off as usize, "{\"a\":1}\n{\"b\":2}\n".len(), "torn tail must not advance");
+
+        // Nothing new past the offset until the torn line completes.
+        let (lines, off2) = read_delta(&p, off).unwrap();
+        assert!(lines.is_empty());
+        assert_eq!(off2, off);
+        std::fs::write(&p, "{\"a\":1}\n{\"b\":2}\n{\"c\":3}\n").unwrap();
+        let (lines, off3) = read_delta(&p, off).unwrap();
+        assert_eq!(lines, vec!["{\"c\":3}".to_string()]);
+        assert_eq!(off3 as usize, std::fs::metadata(&p).unwrap().len() as usize);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

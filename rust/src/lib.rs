@@ -26,8 +26,11 @@
 //! * [`population`] — population management strategies (paper §4.1.2).
 //! * [`methods`] — EvoEngineer-{Free,Insight,Full}, EoH, FunSearch,
 //!   AI CUDA Engineer (paper §4.2, Appendix A.8).
-//! * [`campaign`] — std::thread worker pool over method × model × op ×
-//!   seed, with checkpoint/resume journaling (DESIGN.md §8).
+//! * [`campaign`] — the method × model × op × seed sweep behind the
+//!   transport-abstracted `WorkPlane` seam (DESIGN.md §15): an
+//!   in-process std::thread pool, or a `campaign serve` HTTP/JSON
+//!   coordinator feeding `campaign work` processes, both with
+//!   checkpoint/resume journaling (DESIGN.md §8).
 //! * [`store`] — persistent content-addressed evaluation cache and
 //!   the provider-call transcript journal.
 //! * [`metrics`] / [`report`] — every table & figure of the paper.

@@ -8,7 +8,10 @@
 //! (front a TLS endpoint with a local gateway), `Connection: close`
 //! per request, Content-Length and chunked response bodies. That is
 //! exactly enough for a local vLLM / llama.cpp / LiteLLM-style
-//! gateway, and for the stub-server tests below.
+//! gateway, and for the stub-server tests below. Response parsing
+//! lives in the shared, feature-independent wire layer
+//! ([`crate::util::httpwire`]) alongside the campaign plane's
+//! client/server half (DESIGN.md §15).
 //!
 //! Configuration comes from the environment (all optional except the
 //! endpoint when the defaults don't fit):
@@ -42,6 +45,7 @@ use std::net::{TcpStream, ToSocketAddrs as _};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::util::httpwire::parse_http_response;
 use crate::util::json::{self, Json};
 use crate::{eyre, Result, WrapErr as _};
 
@@ -328,68 +332,6 @@ fn snippet(text: &str) -> String {
     }
 }
 
-/// Split a raw HTTP/1.1 response into (status, body text). Handles
-/// Content-Length and chunked bodies (Connection: close means EOF
-/// bounds everything else).
-fn parse_http_response(raw: &[u8]) -> Result<(u16, String)> {
-    let sep = find_subslice(raw, b"\r\n\r\n")
-        .ok_or_else(|| eyre!("malformed HTTP response: no header/body separator"))?;
-    let head = String::from_utf8_lossy(&raw[..sep]);
-    let mut lines = head.split("\r\n");
-    let status_line = lines.next().unwrap_or("");
-    let status: u16 = status_line
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| eyre!("malformed HTTP status line: `{status_line}`"))?;
-    let mut chunked = false;
-    let mut content_length: Option<usize> = None;
-    for line in lines {
-        let lower = line.to_ascii_lowercase();
-        if let Some(v) = lower.strip_prefix("transfer-encoding:") {
-            chunked = v.trim().contains("chunked");
-        } else if let Some(v) = lower.strip_prefix("content-length:") {
-            content_length = v.trim().parse().ok();
-        }
-    }
-    let body = &raw[sep + 4..];
-    let body = if chunked {
-        dechunk(body)?
-    } else if let Some(len) = content_length {
-        body.get(..len.min(body.len())).unwrap_or(body).to_vec()
-    } else {
-        body.to_vec()
-    };
-    Ok((status, String::from_utf8_lossy(&body).into_owned()))
-}
-
-fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
-    haystack.windows(needle.len()).position(|w| w == needle)
-}
-
-fn dechunk(mut body: &[u8]) -> Result<Vec<u8>> {
-    let mut out = Vec::new();
-    loop {
-        let pos = find_subslice(body, b"\r\n")
-            .ok_or_else(|| eyre!("malformed chunked body: no size line"))?;
-        let size_str = std::str::from_utf8(&body[..pos]).unwrap_or("");
-        let size = usize::from_str_radix(
-            size_str.split(';').next().unwrap_or("").trim(),
-            16,
-        )
-        .map_err(|_| eyre!("malformed chunk size `{size_str}`"))?;
-        body = &body[pos + 2..];
-        if size == 0 {
-            return Ok(out);
-        }
-        if body.len() < size + 2 {
-            return Err(eyre!("truncated chunked body"));
-        }
-        out.extend_from_slice(&body[..size]);
-        body = &body[size + 2..];
-    }
-}
-
 /// Pull (program text, insight) out of the assistant message: code
 /// fences are stripped, the trailing `INSIGHT:` line becomes the
 /// solution insight (the solution-insight pair every method requests).
@@ -604,21 +546,6 @@ mod tests {
         let err = provider.call(&req).unwrap_err().to_string();
         assert!(err.contains("token budget exhausted"), "{err}");
         assert_eq!(handle.join().unwrap().len(), 1, "no request after cutoff");
-    }
-
-    #[test]
-    fn chunked_responses_are_decoded() {
-        let body = chat_body("kernel c { }\nINSIGHT: chunky", 2, 3);
-        let (a, b) = body.split_at(body.len() / 2);
-        let raw = format!(
-            "HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n\
-             {:x}\r\n{a}\r\n{:x}\r\n{b}\r\n0\r\n\r\n",
-            a.len(),
-            b.len()
-        );
-        let (status, text) = parse_http_response(raw.as_bytes()).unwrap();
-        assert_eq!(status, 200);
-        assert_eq!(text, body);
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! repro optimize matmul_64 --method evoengineer-full --model claude
 //! repro campaign --seeds 3 --out results/records.jsonl
 //! repro campaign --resume              # continue an interrupted sweep
+//! repro campaign serve --bind 127.0.0.1:7717   # coordinator daemon
+//! repro campaign work http://127.0.0.1:7717    # claim cells from it
 //! repro report table4 --records results/records.jsonl
 //! repro cache stats                    # persistent eval-cache health
 //! ```
@@ -16,11 +18,13 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use evoengineer::campaign::{results, CampaignConfig};
+use evoengineer::campaign::{coordinator, results, wire, CampaignConfig};
 use evoengineer::evals::Evaluator;
 use evoengineer::llm::{profile, provider, GenerationRequest, Provider, ProviderSpec};
 use evoengineer::methods::engine::{self, EngineOpts, EventSink};
-use evoengineer::methods::{self, Archive, JournalSink, ProgressSink, RepairPolicy, RunCtx};
+use evoengineer::methods::{
+    self, Archive, JournalSink, KernelRunRecord, ProgressSink, RepairPolicy, RunCtx,
+};
 use evoengineer::runtime::Runtime;
 use evoengineer::store::events::EventJournal;
 use evoengineer::store::EvalStore;
@@ -92,6 +96,22 @@ COMMANDS:
       --quiet                suppress progress lines
       --cache PATH|off       persistent eval cache
                              (default <artifacts>/eval_cache.jsonl)
+  campaign serve             coordinate the sweep over HTTP for
+                             `campaign work` processes; takes the same
+                             sweep flags as `campaign` (--cache is the
+                             merged store worker uploads land in), plus:
+      --bind HOST:PORT       listen address (default 127.0.0.1:7717)
+  campaign work URL          claim cells from a coordinator until the
+                             sweep drains (engine knobs mirror /config)
+      --transcripts PATH|off worker-local provider journal, uploaded to
+                             the coordinator (default off; never point
+                             it at the coordinator's own file)
+      --cache PATH|off       worker-local eval cache, uploaded
+                             (default off; same sharing caveat)
+      --concurrency N        worker threads (default 1)
+      --stop-after-trials N  simulated mid-cell worker death (testing):
+                             release claimed cells and exit
+      --quiet                suppress progress lines
   report <which>             regenerate a table/figure from records
       which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|
              validity|tokens|convergence|methods|events|all
@@ -224,6 +244,39 @@ fn run() -> Result<()> {
             )
         }
         "campaign" => {
+            // `campaign work` is a pure worker: everything
+            // sweep-defining is mirrored from the coordinator, so it
+            // skips the config build entirely.
+            if args.positional.get(1).map(String::as_str) == Some("work") {
+                let url = args
+                    .positional
+                    .get(2)
+                    .ok_or_else(|| eyre!("campaign work needs the coordinator URL"))?;
+                // Worker-local journals are opt-in: their default
+                // locations would collide with a same-directory
+                // coordinator's merged stores.
+                let cache = match args.get("cache", "off").as_str() {
+                    "off" | "" => None,
+                    p => Some(PathBuf::from(p)),
+                };
+                let opts = wire::WorkOpts {
+                    transcripts: match args.get("transcripts", "off").as_str() {
+                        "off" | "" => None,
+                        p => Some(PathBuf::from(p)),
+                    },
+                    cache: cache.clone(),
+                    concurrency: args.get_num("concurrency", 1usize)?,
+                    quiet: args.has("quiet"),
+                    stop_after_trials: args.get_num("stop-after-trials", 0usize)?,
+                };
+                return campaign_work(&artifacts, url, opts, cache.as_deref(), runtime_shards);
+            }
+            let sub = match args.positional.get(1).map(String::as_str) {
+                None | Some("serve") => args.positional.get(1).cloned(),
+                Some(other) => {
+                    return Err(eyre!("unknown campaign subcommand `{other}` (serve|work)"))
+                }
+            };
             let out = PathBuf::from(args.get("out", "results/records.jsonl"));
             let checkpoint = PathBuf::from(args.get(
                 "checkpoint",
@@ -263,7 +316,12 @@ fn run() -> Result<()> {
                 prefetch: args.get_num("prefetch", 0usize)?,
             };
             let cache = cache_path(&args.get("cache", ""), &artifacts);
-            campaign(&artifacts, cfg, cache.as_deref(), &out, runtime_shards)
+            if sub.as_deref() == Some("serve") {
+                let bind = args.get("bind", "127.0.0.1:7717");
+                campaign_serve(&artifacts, cfg, cache.as_deref(), &out, &bind)
+            } else {
+                campaign(&artifacts, cfg, cache.as_deref(), &out, runtime_shards)
+            }
         }
         "cache" => {
             let action = args
@@ -528,17 +586,9 @@ fn optimize(
     Ok(())
 }
 
-fn campaign(
-    artifacts: &PathBuf,
-    cfg: CampaignConfig,
-    cache: Option<&std::path::Path>,
-    out: &PathBuf,
-    runtime_shards: usize,
-) -> Result<()> {
-    let evaluator = make_evaluator(artifacts, cache, runtime_shards)?;
-    let store = evaluator.store().cloned();
-    let records = evoengineer::campaign::run(&cfg, evaluator)?;
-    results::save(out, &records)?;
+/// The saved-records line plus the journal pointers every finished
+/// sweep prints, shared by `campaign` and `campaign serve`.
+fn campaign_notes(cfg: &CampaignConfig, out: &PathBuf, records: &[KernelRunRecord]) {
     println!("saved {} records to {}", records.len(), out.display());
     match (&cfg.provider, &cfg.transcripts) {
         (ProviderSpec::Replay(path), _) => {
@@ -559,6 +609,29 @@ fn campaign(
             path.display()
         );
     }
+}
+
+/// The headline tables every finished sweep renders.
+fn campaign_reports(records: &[KernelRunRecord]) {
+    println!("\n{}", report::table4(records));
+    if records.iter().any(|r| r.repair_policy != "off") {
+        println!("\n{}", report::validity(records));
+    }
+    println!("\n{}", report::tokens(records));
+}
+
+fn campaign(
+    artifacts: &PathBuf,
+    cfg: CampaignConfig,
+    cache: Option<&std::path::Path>,
+    out: &PathBuf,
+    runtime_shards: usize,
+) -> Result<()> {
+    let evaluator = make_evaluator(artifacts, cache, runtime_shards)?;
+    let store = evaluator.store().cloned();
+    let records = evoengineer::campaign::run(&cfg, evaluator)?;
+    results::save(out, &records)?;
+    campaign_notes(&cfg, out, &records);
     if let Some(store) = store {
         println!(
             "eval cache: {} hits, {} misses this run ({} entries in {})",
@@ -568,11 +641,45 @@ fn campaign(
             store.path().display()
         );
     }
-    println!("\n{}", report::table4(&records));
-    if records.iter().any(|r| r.repair_policy != "off") {
-        println!("\n{}", report::validity(&records));
-    }
-    println!("\n{}", report::tokens(&records));
+    campaign_reports(&records);
+    Ok(())
+}
+
+/// `campaign serve`: coordinate the sweep for `campaign work`
+/// processes. No evaluator/runtime here — workers own the engine
+/// stacks; the coordinator owns the grid and the merged journals.
+fn campaign_serve(
+    artifacts: &PathBuf,
+    cfg: CampaignConfig,
+    cache: Option<&std::path::Path>,
+    out: &PathBuf,
+    bind: &str,
+) -> Result<()> {
+    let registry = TaskRegistry::load(artifacts)?;
+    let (records, stats) = coordinator::serve(&cfg, &registry, bind, cache)?;
+    results::save(out, &records)?;
+    campaign_notes(&cfg, out, &records);
+    println!("\n{}", report::plane(&stats));
+    campaign_reports(&records);
+    Ok(())
+}
+
+/// `campaign work <url>`: run one worker process against a coordinator
+/// until the sweep drains.
+fn campaign_work(
+    artifacts: &PathBuf,
+    url: &str,
+    opts: wire::WorkOpts,
+    cache: Option<&std::path::Path>,
+    runtime_shards: usize,
+) -> Result<()> {
+    let evaluator = make_evaluator(artifacts, cache, runtime_shards)?;
+    let summary = wire::work(url, evaluator, &opts)?;
+    println!(
+        "worker drained: {} cell(s) completed{}",
+        summary.cells_completed,
+        if summary.interrupted { " (interrupted by --stop-after-trials)" } else { "" }
+    );
     Ok(())
 }
 

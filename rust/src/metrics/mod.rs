@@ -524,6 +524,36 @@ pub fn replication_pairs(
     (xs, ys)
 }
 
+/// Counters of one distributed sweep's work plane (`campaign serve`,
+/// DESIGN.md §15): how the grid was claimed, streamed, and merged.
+/// Rendered by [`crate::report::plane`] and served live by the
+/// coordinator's `GET /status`.
+#[derive(Debug, Clone, Default)]
+pub struct PlaneStats {
+    /// Grid cells the coordinator offered (after op/seed filters).
+    pub grid: usize,
+    /// Cells pre-filled from a prior checkpoint on `--resume`.
+    pub resumed: usize,
+    /// Successful cell claims handed to workers (re-claims included).
+    pub claims: u64,
+    /// Cells released mid-run and re-offered at a higher epoch.
+    pub reclaims: u64,
+    /// Records accepted (each cell completes exactly once).
+    pub completions: u64,
+    /// Completions rejected as duplicate or stale-epoch.
+    pub duplicate_completions: u64,
+    /// Event batches accepted into per-cell buffers.
+    pub event_batches: u64,
+    /// Event batches rejected for a stale epoch or a finished cell.
+    pub stale_event_batches: u64,
+    /// Trial events accepted across all batches.
+    pub events: u64,
+    /// Eval-cache journal lines merged from worker uploads (dedup'd).
+    pub eval_lines_merged: u64,
+    /// Transcript journal lines merged from worker uploads (dedup'd).
+    pub transcript_lines_merged: u64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -491,6 +491,31 @@ pub fn methods_table() -> String {
     out
 }
 
+/// Work-plane summary for a distributed sweep (`campaign serve`,
+/// DESIGN.md §15): how the grid was claimed, streamed and merged.
+pub fn plane(stats: &metrics::PlaneStats) -> String {
+    let mut out = String::new();
+    writeln!(out, "WORK-PLANE SUMMARY").unwrap();
+    writeln!(out, "{}", hr(44)).unwrap();
+    let rows: [(&str, u64); 11] = [
+        ("grid cells offered", stats.grid as u64),
+        ("resumed from checkpoint", stats.resumed as u64),
+        ("claims handed out", stats.claims),
+        ("cells released + re-offered", stats.reclaims),
+        ("completions accepted", stats.completions),
+        ("duplicate/stale completions", stats.duplicate_completions),
+        ("event batches accepted", stats.event_batches),
+        ("event batches rejected stale", stats.stale_event_batches),
+        ("trial events journaled", stats.events),
+        ("eval-cache lines merged", stats.eval_lines_merged),
+        ("transcript lines merged", stats.transcript_lines_merged),
+    ];
+    for (label, n) in rows {
+        writeln!(out, "{label:<32} {n:>10}").unwrap();
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

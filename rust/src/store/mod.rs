@@ -336,6 +336,30 @@ impl EvalStore {
         Ok(())
     }
 
+    /// Merge one journal line uploaded by another process (the
+    /// campaign coordinator's record-upload path, DESIGN.md §15).
+    /// A fresh `eval` line is inserted and re-journaled; keys already
+    /// present and `stats` lines are skipped. Returns whether the line
+    /// was ingested. Staged like [`EvalStore::record`]; durability
+    /// arrives at the next flush.
+    pub fn ingest_line(&self, line: &str) -> Result<bool> {
+        match parse_line(line).context("ingesting uploaded eval line")? {
+            Line::Stats { .. } => Ok(false),
+            Line::Eval { key, entry } => {
+                {
+                    let mut g = self.map.write().unwrap();
+                    if g.contains_key(&key) {
+                        return Ok(false);
+                    }
+                    g.insert(key.clone(), Slot::Parsed(entry.clone()));
+                }
+                let line = eval_line(&EvalKey(key), &entry).to_string();
+                self.writer.lock().unwrap().append_line(line.as_bytes())?;
+                Ok(true)
+            }
+        }
+    }
+
     /// Group-commit flush point: make every staged record durable.
     pub fn flush(&self) -> Result<()> {
         self.writer.lock().unwrap().flush()?;
@@ -743,6 +767,46 @@ mod tests {
             launches: 2,
             bound: BoundKind::Memory,
         }
+    }
+
+    #[test]
+    fn ingest_line_merges_and_dedups() {
+        let dir = tmpdir("ingest");
+        let src = dir.join("src_cache.jsonl");
+        let dst = dir.join("dst_cache.jsonl");
+        let key = EvalKey::from_canonical("matmul_64", "kernel ingest");
+        {
+            let store = EvalStore::open(&src).unwrap();
+            store
+                .record(
+                    &key,
+                    StoredEval {
+                        op: "matmul_64".into(),
+                        model: "GPT-4.1".into(),
+                        outcome: StoredOutcome::Ok { timing: sample_timing() },
+                    },
+                )
+                .unwrap();
+            store.flush().unwrap();
+        }
+        let line = std::fs::read_to_string(&src)
+            .unwrap()
+            .lines()
+            .next()
+            .unwrap()
+            .to_string();
+        let dst_store = EvalStore::open(&dst).unwrap();
+        assert!(dst_store.ingest_line(&line).unwrap(), "fresh line ingests");
+        assert!(!dst_store.ingest_line(&line).unwrap(), "duplicate skipped");
+        // Stats lines are ignored, not an error.
+        assert!(!dst_store
+            .ingest_line(r#"{"type":"stats","hits":3,"misses":1}"#)
+            .unwrap());
+        dst_store.flush().unwrap();
+        // The merged entry is a first-class record: visible after reopen.
+        let reopened = EvalStore::open(&dst).unwrap();
+        assert_eq!(reopened.len(), 1);
+        assert!(reopened.lookup(&key).is_some());
     }
 
     #[test]

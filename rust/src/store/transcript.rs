@@ -244,6 +244,28 @@ impl TranscriptStore {
         Ok(())
     }
 
+    /// Merge one journal line uploaded by another process (the
+    /// campaign coordinator's transcript-merge path, DESIGN.md §15).
+    /// A fresh `call` line is appended through the normal dedup path;
+    /// keys already present and `meta` lines are skipped (the
+    /// single-source contract is enforced by [`record_source`], which
+    /// the owner calls with the provider's label before any merge).
+    /// Returns whether the line was ingested.
+    ///
+    /// [`record_source`]: TranscriptStore::record_source
+    pub fn ingest_line(&self, line: &str) -> Result<bool> {
+        match parse_line(line).map_err(|e| eyre!("ingesting uploaded transcript line: {e:#}"))? {
+            Line::Meta { .. } => Ok(false),
+            Line::Call { key, entry } => {
+                if self.lookup(&key).is_some() {
+                    return Ok(false);
+                }
+                self.append(&key, entry)?;
+                Ok(true)
+            }
+        }
+    }
+
     /// Group-commit flush point: make every staged call durable.
     pub fn flush(&self) -> Result<()> {
         self.writer.lock().unwrap().flush()?;
@@ -381,6 +403,44 @@ mod tests {
         assert_eq!(t.lookup("k2").unwrap().role, "repair");
         assert!(t.lookup("k3").is_none());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ingest_line_merges_and_dedups() {
+        let src = tmpfile("ingest_src");
+        let dst = tmpfile("ingest_dst");
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+        {
+            let t = TranscriptStore::open(&src).unwrap();
+            t.record_source("sim").unwrap();
+            t.append("k1", sample(9)).unwrap();
+            t.flush().unwrap();
+        }
+        let lines: Vec<String> = std::fs::read_to_string(&src)
+            .unwrap()
+            .lines()
+            .map(String::from)
+            .collect();
+        let t = TranscriptStore::open(&dst).unwrap();
+        t.record_source("sim").unwrap();
+        let mut merged = 0;
+        for line in &lines {
+            if t.ingest_line(line).unwrap() {
+                merged += 1;
+            }
+        }
+        // The meta line is skipped, the call line merges once.
+        assert_eq!(merged, 1);
+        for line in &lines {
+            assert!(!t.ingest_line(line).unwrap(), "second pass is all dups");
+        }
+        t.flush().unwrap();
+        let back = TranscriptStore::open(&dst).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.lookup("k1").unwrap(), sample(9));
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
     }
 
     #[test]

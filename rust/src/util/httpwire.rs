@@ -1,0 +1,411 @@
+//! Hand-rolled HTTP/1.1 wire layer shared by the `http-provider`
+//! client ([`crate::llm::http`]) and the distributed campaign plane
+//! (`campaign serve` / `campaign work`, DESIGN.md §15).
+//!
+//! The build environment is offline — no HTTP crates in the pre-seeded
+//! cache — so both halves live on `std::net`:
+//!
+//! * **response parsing** ([`parse_http_response`]): status line,
+//!   Content-Length and chunked bodies, `Connection: close` semantics
+//!   (EOF bounds everything else). Extracted verbatim from the
+//!   provider client so the coordinator/worker plane and the LLM
+//!   backend share one implementation;
+//! * **client helper** ([`request_json`] over a [`Url`]): one request
+//!   per TCP connection, JSON in / JSON out — exactly what a
+//!   control-plane RPC needs and nothing more;
+//! * **server** ([`Server`]): a single accept-loop thread answering
+//!   `Content-Length`-framed requests serially. Serial is a feature:
+//!   the campaign coordinator's handler mutates one shared grid state
+//!   behind a mutex anyway, so per-connection threads would only add
+//!   interleavings without adding throughput at control-plane rates
+//!   (a few requests per trial boundary).
+//!
+//! Plain `http://` only; front a TLS endpoint with a local gateway.
+
+use std::io::{BufRead as _, BufReader, Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs as _};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::{eyre, Result, WrapErr as _};
+
+// ---------------------------------------------------------------------
+// Response parsing (shared with the http-provider client)
+
+/// Split a raw HTTP/1.1 response into (status, body text). Handles
+/// Content-Length and chunked bodies (Connection: close means EOF
+/// bounds everything else).
+pub fn parse_http_response(raw: &[u8]) -> Result<(u16, String)> {
+    let sep = find_subslice(raw, b"\r\n\r\n")
+        .ok_or_else(|| eyre!("malformed HTTP response: no header/body separator"))?;
+    let head = String::from_utf8_lossy(&raw[..sep]);
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| eyre!("malformed HTTP status line: `{status_line}`"))?;
+    let mut chunked = false;
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        let lower = line.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("transfer-encoding:") {
+            chunked = v.trim().contains("chunked");
+        } else if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v.trim().parse().ok();
+        }
+    }
+    let body = &raw[sep + 4..];
+    let body = if chunked {
+        dechunk(body)?
+    } else if let Some(len) = content_length {
+        body.get(..len.min(body.len())).unwrap_or(body).to_vec()
+    } else {
+        body.to_vec()
+    };
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn dechunk(mut body: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let pos = find_subslice(body, b"\r\n")
+            .ok_or_else(|| eyre!("malformed chunked body: no size line"))?;
+        let size_str = std::str::from_utf8(&body[..pos]).unwrap_or("");
+        let size = usize::from_str_radix(
+            size_str.split(';').next().unwrap_or("").trim(),
+            16,
+        )
+        .map_err(|_| eyre!("malformed chunk size `{size_str}`"))?;
+        body = &body[pos + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        if body.len() < size + 2 {
+            return Err(eyre!("truncated chunked body"));
+        }
+        out.extend_from_slice(&body[..size]);
+        body = &body[size + 2..];
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client
+
+/// A split `http://host[:port]/path` base URL (the same shape the
+/// provider client parses for `EVO_HTTP_BASE_URL`).
+#[derive(Debug, Clone)]
+pub struct Url {
+    /// Host header value (host or host:port as written in the URL).
+    pub host: String,
+    /// `host:port` used for the TCP connect.
+    pub authority: String,
+    /// URL path prefix (e.g. `/v1`), no trailing slash.
+    pub path: String,
+}
+
+/// Parse a plain-http base URL into its connect/Host/path parts.
+pub fn split_url(url: &str) -> Result<Url> {
+    let rest = url.strip_prefix("http://").ok_or_else(|| {
+        eyre!("URL must be plain http:// (the offline client has no TLS): `{url}`")
+    })?;
+    let (hostport, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], rest[i..].trim_end_matches('/')),
+        None => (rest, ""),
+    };
+    if hostport.is_empty() {
+        return Err(eyre!("URL has no host: `{url}`"));
+    }
+    let authority = if hostport.contains(':') {
+        hostport.to_string()
+    } else {
+        format!("{hostport}:80")
+    };
+    Ok(Url {
+        host: hostport.to_string(),
+        authority,
+        path: path.to_string(),
+    })
+}
+
+/// One JSON-over-HTTP exchange: connect, send `method` to
+/// `base.path + path` with `body`, read to EOF (`Connection: close`),
+/// return (status, body text). Each call is its own TCP connection —
+/// the simplest framing that cannot desynchronize.
+pub fn request_json(
+    base: &Url,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> Result<(u16, String)> {
+    let addr = base
+        .authority
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {}", base.authority))?
+        .next()
+        .ok_or_else(|| eyre!("no address for {}", base.authority))?;
+    let mut stream = TcpStream::connect_timeout(&addr, timeout)
+        .with_context(|| format!("connecting to {}", base.authority))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let head = format!(
+        "{method} {}{path} HTTP/1.1\r\nHost: {}\r\n\
+         Content-Type: application/json\r\nAccept: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        base.path,
+        base.host,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream
+        .read_to_end(&mut raw)
+        .with_context(|| format!("reading {method} {path} response"))?;
+    parse_http_response(&raw)
+}
+
+// ---------------------------------------------------------------------
+// Server
+
+/// One parsed inbound request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Request handler: returns (status code, JSON body).
+pub type Handler = dyn Fn(&Request) -> (u16, Json) + Send + Sync;
+
+/// Minimal `std::net` HTTP/1.1 server: a single accept-loop thread
+/// serving `Content-Length`-framed JSON requests one connection at a
+/// time, `Connection: close` per exchange. A panicking handler answers
+/// 500 instead of killing the accept loop.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start serving `handler` on a background thread.
+    pub fn bind(addr: &str, handler: Arc<Handler>) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match conn {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                if let Err(e) = serve_conn(stream, handler.as_ref()) {
+                    eprintln!("warning: httpwire: dropped connection: {e:#}");
+                }
+            }
+        });
+        Ok(Self {
+            addr: local,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound socket address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `http://host:port` base URL for [`request_json`] clients.
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop accepting and join the accept thread. Idempotent; also
+    /// runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.thread.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept() the loop is parked in.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        _ => "Status",
+    }
+}
+
+fn serve_conn(stream: TcpStream, handler: &Handler) -> Result<()> {
+    let timeout = Some(Duration::from_secs(30));
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(eyre!("malformed request line: `{}`", request_line.trim_end()));
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if line == "\r\n" || line == "\n" || line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v
+                .trim()
+                .parse()
+                .map_err(|_| eyre!("bad Content-Length `{}`", v.trim()))?;
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading request body")?;
+    let req = Request {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    };
+    let (code, json) = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        handler(&req)
+    })) {
+        Ok(resp) => resp,
+        Err(_) => (
+            500,
+            Json::obj(vec![("error", Json::Str("handler panicked".into()))]),
+        ),
+    };
+    let body = json.to_string();
+    let mut stream = stream;
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(code),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunked_responses_are_decoded() {
+        let body = r#"{"choices":[{"message":{"content":"kernel c { }"}}]}"#;
+        let (a, b) = body.split_at(body.len() / 2);
+        let raw = format!(
+            "HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n\
+             {:x}\r\n{a}\r\n{:x}\r\n{b}\r\n0\r\n\r\n",
+            a.len(),
+            b.len()
+        );
+        let (status, text) = parse_http_response(raw.as_bytes()).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(text, body);
+    }
+
+    #[test]
+    fn split_url_parses_ports_and_paths() {
+        let u = split_url("http://127.0.0.1:8000/v1").unwrap();
+        assert_eq!(u.authority, "127.0.0.1:8000");
+        assert_eq!(u.host, "127.0.0.1:8000");
+        assert_eq!(u.path, "/v1");
+        let u = split_url("http://example.com").unwrap();
+        assert_eq!(u.authority, "example.com:80");
+        assert_eq!(u.path, "");
+        assert!(split_url("https://x/v1").is_err());
+        assert!(split_url("http:///v1").is_err());
+    }
+
+    #[test]
+    fn server_roundtrip_and_routing() {
+        let handler: Arc<Handler> = Arc::new(|req: &Request| {
+            if req.path == "/v1/echo" && req.method == "POST" {
+                (
+                    200,
+                    Json::obj(vec![("got", Json::Str(req.body.clone()))]),
+                )
+            } else {
+                (404, Json::obj(vec![("error", Json::Str("no route".into()))]))
+            }
+        });
+        let mut server = Server::bind("127.0.0.1:0", handler).unwrap();
+        let base = split_url(&server.url()).unwrap();
+        let timeout = Duration::from_secs(5);
+        let (code, text) =
+            request_json(&base, "POST", "/v1/echo", "hello wire", timeout).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(text, "{\"got\":\"hello wire\"}");
+        let (code, _) = request_json(&base, "GET", "/nope", "", timeout).unwrap();
+        assert_eq!(code, 404);
+        // Serial but multi-request: a second exchange still works.
+        let (code, _) =
+            request_json(&base, "POST", "/v1/echo", "second", timeout).unwrap();
+        assert_eq!(code, 200);
+        server.shutdown();
+        // Shutdown is effective: new connections are refused or hang up.
+        assert!(request_json(&base, "POST", "/v1/echo", "x", timeout).is_err());
+    }
+
+    #[test]
+    fn handler_panic_answers_500() {
+        let handler: Arc<Handler> = Arc::new(|req: &Request| {
+            if req.path == "/boom" {
+                panic!("kaboom");
+            }
+            (200, Json::obj(vec![("ok", Json::Bool(true))]))
+        });
+        let mut server = Server::bind("127.0.0.1:0", handler).unwrap();
+        let base = split_url(&server.url()).unwrap();
+        let timeout = Duration::from_secs(5);
+        let (code, text) = request_json(&base, "POST", "/boom", "", timeout).unwrap();
+        assert_eq!(code, 500);
+        assert!(text.contains("panicked"), "{text}");
+        // The accept loop survived the panic.
+        let (code, _) = request_json(&base, "GET", "/fine", "", timeout).unwrap();
+        assert_eq!(code, 200);
+        server.shutdown();
+    }
+}

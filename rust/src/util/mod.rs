@@ -1,7 +1,9 @@
 //! Small shared utilities: deterministic RNG, statistics, a serde-free
-//! JSON reader/writer, and the offline criterion-style bench harness.
+//! JSON reader/writer, the shared hand-rolled HTTP/1.1 wire layer, and
+//! the offline criterion-style bench harness.
 
 pub mod bench;
+pub mod httpwire;
 pub mod json;
 pub mod rng;
 pub mod stats;

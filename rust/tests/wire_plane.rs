@@ -1,0 +1,218 @@
+//! Distributed work-plane conformance (DESIGN.md §15).
+//!
+//! The coordinator/worker contract under test: a `campaign serve`
+//! coordinator plus N `campaign work` workers produces **byte-identical**
+//! records, reports, and event journals to an uninterrupted in-process
+//! `--concurrency 1` sweep — for N ∈ {1, 2}, and across a worker that
+//! dies mid-cell (trial-gate kill), releases its cell, and has a second
+//! worker re-claim and finish it at trial granularity.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use evoengineer::campaign::coordinator::Coordinator;
+use evoengineer::campaign::wire::{self, WorkOpts};
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::evals::Evaluator;
+use evoengineer::methods::KernelRunRecord;
+use evoengineer::report;
+use evoengineer::runtime::Runtime;
+use evoengineer::store::EvalStore;
+use evoengineer::tasks::TaskRegistry;
+
+fn registry() -> Arc<TaskRegistry> {
+    Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    )
+}
+
+fn evaluator() -> Evaluator {
+    Evaluator::new(registry(), Runtime::new().unwrap())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "evo_wire_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .subsec_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Two cells (2 methods × 1 model × 1 op × 1 seed), 4 trials each —
+/// the cheapest grid that exercises claim ordering, a mid-cell kill
+/// (the gate at 6 trips inside cell 2), and cross-cell merge.
+fn base_cfg() -> CampaignConfig {
+    CampaignConfig {
+        methods: vec!["evoengineer-free".into(), "funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        op_filter: "relu_64".into(),
+        budget: 4,
+        quiet: true,
+        concurrency: 1,
+        ..CampaignConfig::default()
+    }
+}
+
+/// The golden reference: an uninterrupted in-process `--concurrency 1`
+/// sweep, with its event-journal bytes.
+fn reference(dir: &Path) -> (Vec<KernelRunRecord>, Vec<u8>) {
+    let events = dir.join("ref_events.jsonl");
+    let cfg = CampaignConfig { events: Some(events.clone()), ..base_cfg() };
+    let records = campaign::run(&cfg, evaluator()).unwrap();
+    assert_eq!(records.len(), 2);
+    (records, std::fs::read(&events).unwrap())
+}
+
+fn assert_records_identical(reference: &[KernelRunRecord], got: &[KernelRunRecord]) {
+    assert_eq!(reference.len(), got.len());
+    for (a, b) in reference.iter().zip(got) {
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "distributed record diverged for {}/{}",
+            a.method,
+            a.op
+        );
+    }
+}
+
+#[test]
+fn coordinator_plus_n_workers_matches_the_inprocess_sweep() {
+    let dir = tmpdir("n_workers");
+    let (full, ref_events) = reference(&dir);
+
+    for n_workers in [1usize, 2] {
+        let events = dir.join(format!("events_{n_workers}.jsonl"));
+        let cfg = CampaignConfig {
+            events: Some(events.clone()),
+            checkpoint: Some(dir.join(format!("ckpt_{n_workers}.jsonl"))),
+            ..base_cfg()
+        };
+        let merged_cache = dir.join(format!("merged_cache_{n_workers}.jsonl"));
+        let coord =
+            Coordinator::start(&cfg, &registry(), "127.0.0.1:0", Some(&merged_cache)).unwrap();
+        let url = coord.url();
+
+        let summaries: Vec<wire::WorkSummary> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_workers)
+                .map(|_| {
+                    let url = url.clone();
+                    scope.spawn(move || {
+                        let opts = WorkOpts { concurrency: 1, quiet: true, ..WorkOpts::default() };
+                        wire::work(&url, evaluator(), &opts).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let (records, stats) = coord.wait().unwrap();
+
+        assert_records_identical(&full, &records);
+        assert_eq!(
+            std::fs::read(&events).unwrap(),
+            ref_events,
+            "{n_workers}-worker event journal is not byte-identical to the reference"
+        );
+        assert_eq!(report::table4(&full), report::table4(&records));
+        assert_eq!(report::tokens(&full), report::tokens(&records));
+
+        let completed: usize = summaries.iter().map(|s| s.cells_completed).sum();
+        assert_eq!(completed, 2, "every cell completed by exactly one worker");
+        assert!(summaries.iter().all(|s| !s.interrupted));
+        assert_eq!(stats.grid, 2);
+        assert_eq!(stats.claims, 2);
+        assert_eq!(stats.completions, 2);
+        assert_eq!(stats.reclaims, 0);
+        assert_eq!(stats.duplicate_completions, 0);
+        assert!(stats.events > 0, "trial events were streamed, not lost");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn worker_death_mid_cell_reclaims_to_byte_identical_results() {
+    let dir = tmpdir("kill");
+    let (full, ref_events) = reference(&dir);
+
+    let events = dir.join("events.jsonl");
+    let cfg = CampaignConfig {
+        events: Some(events.clone()),
+        checkpoint: Some(dir.join("ckpt.jsonl")),
+        // The coordinator's merged transcript journal: worker 1's
+        // uploaded provider calls warm worker 2's replay of the
+        // re-claimed cell.
+        transcripts: Some(dir.join("merged_transcripts.jsonl")),
+        ..base_cfg()
+    };
+    let merged_cache = dir.join("merged_cache.jsonl");
+    let coord =
+        Coordinator::start(&cfg, &registry(), "127.0.0.1:0", Some(&merged_cache)).unwrap();
+    let url = coord.url();
+
+    // Worker 1 dies mid-cell: the gate trips after 6 trial groups —
+    // cell 1 takes 4, so cell 2 is released with exactly 2 trials
+    // complete and streamed to the coordinator.
+    let w1 = WorkOpts {
+        concurrency: 1,
+        quiet: true,
+        stop_after_trials: 6,
+        transcripts: Some(dir.join("w1_transcripts.jsonl")),
+        cache: Some(dir.join("w1_cache.jsonl")),
+        ..WorkOpts::default()
+    };
+    let s1 = wire::work(
+        &url,
+        evaluator().with_store(EvalStore::open(dir.join("w1_cache.jsonl")).unwrap()),
+        &w1,
+    )
+    .unwrap();
+    assert!(s1.interrupted, "the trial gate tripped");
+    assert_eq!(s1.cells_completed, 1, "cell 2 was killed mid-run");
+
+    // Worker 2 (a fresh process-equivalent: its own evaluator, cache,
+    // transcript journal) re-claims the released cell at epoch 1,
+    // replays the dead worker's 2 completed trials warm from the
+    // coordinator-merged transcripts, and finishes live.
+    let w2 = WorkOpts {
+        concurrency: 1,
+        quiet: true,
+        transcripts: Some(dir.join("w2_transcripts.jsonl")),
+        cache: Some(dir.join("w2_cache.jsonl")),
+        ..WorkOpts::default()
+    };
+    let s2 = wire::work(
+        &url,
+        evaluator().with_store(EvalStore::open(dir.join("w2_cache.jsonl")).unwrap()),
+        &w2,
+    )
+    .unwrap();
+    assert!(!s2.interrupted);
+    assert_eq!(s2.cells_completed, 1, "exactly the re-claimed cell");
+
+    let (records, stats) = coord.wait().unwrap();
+    assert_records_identical(&full, &records);
+    assert_eq!(
+        std::fs::read(&events).unwrap(),
+        ref_events,
+        "event journal across the kill is not byte-identical to the reference"
+    );
+    assert_eq!(report::table4(&full), report::table4(&records));
+
+    assert_eq!(stats.reclaims, 1, "the killed cell was re-offered once");
+    assert_eq!(stats.claims, 3, "2 cells + 1 re-claim");
+    assert_eq!(stats.completions, 2);
+    assert!(stats.transcript_lines_merged > 0, "worker uploads reached the merged journal");
+    assert!(stats.eval_lines_merged > 0);
+
+    // The merged stores are valid journals, not interleaved garbage.
+    let merged = EvalStore::open(&merged_cache).unwrap();
+    assert!(merged.len() > 0);
+
+    std::fs::remove_dir_all(dir).ok();
+}
