@@ -42,7 +42,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::evals::Evaluator;
-use crate::llm::{profile, provider, ModelProfile, ProviderSpec};
+use crate::llm::{profile, provider, ModelProfile, ProviderConfig, ProviderSpec, ReusePolicy};
 use crate::methods::engine::{EventSink, TrialGate};
 use crate::methods::{
     self, Archive, ArchiveEntry, JournalSink, KernelRunRecord, Method, ProgressSink, RepairPolicy,
@@ -107,6 +107,27 @@ pub struct CampaignConfig {
     /// 0 = off): provider calls for predicted future trials overlap
     /// with compile+bench of the current one (DESIGN.md §13).
     pub prefetch: usize,
+}
+
+impl CampaignConfig {
+    /// The typed provider build input this campaign implies
+    /// (DESIGN.md §12/§16): transcripts are dropped under replay (the
+    /// journal already *is* the record), and a resumed campaign reuses
+    /// journaled calls instead of refusing to append to an existing
+    /// transcript file.
+    pub fn provider_config(&self) -> ProviderConfig {
+        let transcripts = match &self.provider {
+            ProviderSpec::Replay(_) => None,
+            _ => self.transcripts.clone(),
+        };
+        ProviderConfig::new(self.provider.clone()).transcripts(transcripts).reuse(
+            if self.resume {
+                ReusePolicy::Resume
+            } else {
+                ReusePolicy::Fresh
+            },
+        )
+    }
 }
 
 impl Default for CampaignConfig {
@@ -292,11 +313,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     // On resume, already-journaled calls are served from the journal
     // (trial-granular resume: an interrupted cell's completed trials
     // replay with zero live generation).
-    let transcripts = match &cfg.provider {
-        ProviderSpec::Replay(_) => None, // a replayed run records nothing
-        _ => cfg.transcripts.as_deref(),
-    };
-    let llm_provider = provider::build(&cfg.provider, transcripts, cfg.resume)?;
+    let llm_provider = provider::build(&cfg.provider_config())?;
 
     let GridPlan {
         mut jobs,

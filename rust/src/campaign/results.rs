@@ -162,6 +162,7 @@ mod tests {
             prompt_tokens: 1000,
             completion_tokens: 500,
             trajectory: vec![1.0, 2.0, 2.5],
+            arms: vec![],
             best_src: Some("kernel x {\n  semantics: opt;\n}".into()),
         }
     }

@@ -26,7 +26,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::evals::Evaluator;
-use crate::llm::{profile, provider, Provider, ProviderSpec, RecordingProvider};
+use crate::llm::{profile, provider, ProviderConfig, ProviderSpec, ReusePolicy};
 use crate::methods::engine::{EventSink, TrialGate};
 use crate::methods::{self, Archive, KernelRunRecord, RepairPolicy};
 use crate::store::events::{self, TrialEvent};
@@ -42,6 +42,13 @@ use super::plane::{lock_tolerant, worker_loop, ClaimedCell, WorkPlane, WorkerEnv
 /// mirrored from the coordinator's `/config`).
 #[derive(Debug, Clone, Default)]
 pub struct WorkOpts {
+    /// Optional startup assertion: the raw `--provider` string the
+    /// worker was launched with, if any. The worker *always* runs the
+    /// coordinator-resolved spec from `/config`; a locally-passed spec
+    /// that parses to anything different is a startup error (silently
+    /// running a different backend than the operator asked for would
+    /// poison the sweep's byte-identity).
+    pub provider: Option<String>,
     /// Local transcript journal: records this worker's live provider
     /// calls, serves warm replays, and is delta-uploaded to the
     /// coordinator for merging.
@@ -584,23 +591,34 @@ pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSumm
     let budget = get_num(&config, "budget")? as usize;
     let prefetch = get_num(&config, "prefetch")? as usize;
     let repair = RepairPolicy::parse(&get_str(&config, "repair")?)?;
+    // The coordinator-resolved spec is authoritative (it already
+    // resolved any `ensemble:@file.json` form, so workers need no local
+    // config file). A locally-passed `--provider` is only an assertion.
     let spec = ProviderSpec::parse(&get_str(&config, "provider")?)?;
-
-    // The provider stack mirrors the in-process campaign's: base
-    // backend, wrapped in a recording provider over the local
-    // transcript journal with reuse on — a re-claimed cell's completed
-    // trials replay from journaled calls (warmed from the coordinator)
-    // with zero live generation.
-    let mut local_transcripts = None;
-    let llm_provider: Arc<dyn Provider> = match (&spec, &opts.transcripts) {
-        (ProviderSpec::Replay(_), _) | (_, None) => provider::build(&spec, None, false)?,
-        (_, Some(path)) => {
-            let base = provider::build(&spec, None, false)?;
-            let store = TranscriptStore::open(path)?;
-            local_transcripts = Some(store.clone());
-            Arc::new(RecordingProvider::new(base, store)?.with_reuse(true))
+    if let Some(local) = &opts.provider {
+        let local_spec = ProviderSpec::parse(local)
+            .context("parsing this worker's --provider assertion")?;
+        if local_spec != spec {
+            return Err(eyre!(
+                "provider mismatch: this worker was launched with --provider {} but the \
+                 coordinator's sweep runs {} — drop the flag (the coordinator's /config is \
+                 authoritative) or point the worker at the right coordinator",
+                local_spec.label(),
+                spec.label()
+            ));
         }
-    };
+    }
+
+    // The provider stack mirrors the in-process campaign's, built by
+    // the same typed builder: base backend, wrapped in a recording
+    // provider over the local transcript journal with reuse on — a
+    // re-claimed cell's completed trials replay from journaled calls
+    // (warmed from the coordinator) with zero live generation.
+    let (llm_provider, local_transcripts) = provider::build_with_journal(
+        &ProviderConfig::new(spec.clone())
+            .transcripts(opts.transcripts.clone())
+            .reuse(ReusePolicy::Resume),
+    )?;
 
     let uploader = Arc::new(Uploader {
         client: client.clone(),

@@ -1,0 +1,321 @@
+//! Seed-deterministic multi-armed bandit over
+//! (ensemble member × operator × op-category) arms (DESIGN.md §16).
+//!
+//! The engine owns one [`Bandit`] per campaign cell (it lives in the
+//! method `Session`, never in the shared provider), selects an arm at
+//! request-assembly time, and feeds eval/guard outcomes back after
+//! each trial completes. That placement is the whole determinism
+//! story:
+//!
+//! * **selection is pure** — [`Bandit::select`] is a function of the
+//!   arm statistics, the configured prior weights, the exploration
+//!   ratio, and the request's already-derived llm seed (mixed, never
+//!   drawn from an [`Rng`] — no new derivation points, DESIGN.md §13);
+//! * **updates are sequential** — only [`finish_trial`] mutates arms,
+//!   and trials finish in order within a cell, so the arm state a
+//!   trial observes is independent of `--prefetch`. A speculative
+//!   request assembled against stale arm state simply hash-misses the
+//!   prefetch pool and is re-issued live: mis-speculation costs
+//!   throughput, never correctness.
+//!
+//! Rewards follow the validity-first framing the paper centers:
+//! a correct kernel earns 1.0 plus a capped speedup bonus, functional/
+//! runtime failures earn a sliver (the arm produced something
+//! compilable), compile failures nearly nothing, and stage-0 guard
+//! rejections zero. Repair arms are scored by whether the repaired
+//! emission passed the guard.
+//!
+//! [`Rng`]: crate::util::Rng
+//! [`finish_trial`]: crate::methods::engine
+
+use std::collections::BTreeMap;
+
+use super::ensemble::RoutingSpec;
+
+/// Exported learned state of one arm — attached to run records and
+/// surfaced by `report tokens`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArmWeight {
+    pub member: String,
+    pub operator: String,
+    pub category: String,
+    pub pulls: u64,
+    /// Mean observed reward (the "learned weight").
+    pub mean_reward: f64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct ArmStat {
+    pulls: u64,
+    reward_sum: f64,
+}
+
+/// UCB-style bandit with weighted-prior exploration. See the module
+/// docs for where it lives and why.
+#[derive(Debug, Clone)]
+pub struct Bandit {
+    /// `(alias, prior weight)` in spec order — the deterministic
+    /// tie-break order.
+    members: Vec<(String, f64)>,
+    exploration_ratio: f64,
+    arms: BTreeMap<(String, String, String), ArmStat>,
+}
+
+impl Bandit {
+    pub fn new(spec: &RoutingSpec) -> Self {
+        Self {
+            members: spec.members.clone(),
+            exploration_ratio: spec.exploration_ratio,
+            arms: BTreeMap::new(),
+        }
+    }
+
+    fn stat(&self, member: &str, operator: &str, category: &str) -> ArmStat {
+        self.arms
+            .get(&(member.to_string(), operator.to_string(), category.to_string()))
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Pick the member to route a `(operator, category)` call to.
+    /// Pure: same statistics + same `seed` → same member, regardless
+    /// of prefetch, threading, or how often it is called.
+    ///
+    /// With probability `exploration_ratio` (decided by a mix of
+    /// `seed`), or while the context is entirely unexplored, the pick
+    /// is weighted by the configured priors; otherwise the
+    /// highest-UCB arm wins, unpulled arms first, ties broken by spec
+    /// order.
+    pub fn select(&self, operator: &str, category: &str, seed: u64) -> String {
+        debug_assert!(!self.members.is_empty());
+        let total_pulls: u64 = self
+            .members
+            .iter()
+            .map(|(alias, _)| self.stat(alias, operator, category).pulls)
+            .sum();
+        let explore = unit(mix(seed, 0x9E37_79B9_7F4A_7C15));
+        if total_pulls == 0 || explore < self.exploration_ratio {
+            return self.weighted_pick(unit(mix(seed, 0xD1B5_4A32_D192_ED03)));
+        }
+        let ln_total = (total_pulls as f64).ln();
+        let mut best: Option<(usize, f64)> = None;
+        for (i, (alias, _)) in self.members.iter().enumerate() {
+            let s = self.stat(alias, operator, category);
+            let score = if s.pulls == 0 {
+                // Force a first pull before trusting any mean.
+                f64::INFINITY
+            } else {
+                s.reward_sum / s.pulls as f64
+                    + self.exploration_ratio * (2.0 * ln_total / s.pulls as f64).sqrt()
+            };
+            // Strictly-greater keeps the first (spec-order) arm on
+            // ties — including INFINITY vs INFINITY.
+            if best.map_or(true, |(_, b)| score > b) {
+                best = Some((i, score));
+            }
+        }
+        self.members[best.expect("non-empty members").0].0.clone()
+    }
+
+    fn weighted_pick(&self, u: f64) -> String {
+        let total: f64 = self.members.iter().map(|(_, w)| w).sum();
+        let target = u * total;
+        let mut acc = 0.0;
+        for (alias, w) in &self.members {
+            acc += w;
+            if target < acc {
+                return alias.clone();
+            }
+        }
+        self.members.last().expect("non-empty members").0.clone()
+    }
+
+    /// Record one observed reward for an arm. Called only from the
+    /// engine's sequential trial-completion path.
+    pub fn update(&mut self, member: &str, operator: &str, category: &str, reward: f64) {
+        let e = self
+            .arms
+            .entry((member.to_string(), operator.to_string(), category.to_string()))
+            .or_default();
+        e.pulls += 1;
+        e.reward_sum += reward;
+    }
+
+    /// Learned arm state, sorted by (member, operator, category).
+    pub fn arms(&self) -> Vec<ArmWeight> {
+        self.arms
+            .iter()
+            .map(|((member, operator, category), s)| ArmWeight {
+                member: member.clone(),
+                operator: operator.clone(),
+                category: category.clone(),
+                pulls: s.pulls,
+                mean_reward: if s.pulls == 0 { 0.0 } else { s.reward_sum / s.pulls as f64 },
+            })
+            .collect()
+    }
+}
+
+/// Reward for a generate arm, from the trial's outcome label (the
+/// engine's `outcome_label`) and the measured speedup of a correct
+/// kernel. Correctness dominates; the speedup bonus is capped at 4×
+/// so one lucky kernel cannot lock the bandit in.
+pub fn trial_reward(outcome: &str, speedup: Option<f64>) -> f64 {
+    match outcome {
+        "ok" => {
+            let s = speedup.unwrap_or(1.0).clamp(1.0, 4.0);
+            1.0 + (s - 1.0) / 3.0
+        }
+        "functional_fail" | "runtime_fail" => 0.2,
+        "compile_fail" => 0.05,
+        _ => 0.0, // guard_reject and anything unrecognised
+    }
+}
+
+/// Reward for a repair arm: did the repaired emission pass stage 0?
+pub fn repair_reward(guard_pass: bool) -> f64 {
+    if guard_pass {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Structured operator tag from a method's free-form generation
+/// instruction: first word, ascii-lowercased, truncated. Stable
+/// against prompt-template wording changes *after* the first word,
+/// which is all the arm key needs.
+pub fn operator_tag(instruction: &str) -> String {
+    let word = instruction.split_whitespace().next().unwrap_or("");
+    let mut tag: String = word
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .take(24)
+        .collect();
+    if tag.is_empty() {
+        tag = "generate".into();
+    }
+    tag
+}
+
+/// SplitMix64 finalizer over a salted seed — the bandit's only source
+/// of randomness, derived from the request's llm seed.
+fn mix(seed: u64, salt: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(salt)
+        .wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform in [0, 1) from a mixed word.
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn routing(ratio: f64) -> RoutingSpec {
+        RoutingSpec {
+            members: vec![("a".into(), 1.0), ("b".into(), 1.0)],
+            exploration_ratio: ratio,
+        }
+    }
+
+    #[test]
+    fn selection_is_pure_and_seed_deterministic() {
+        let b = Bandit::new(&routing(0.25));
+        for seed in 0..64u64 {
+            let first = b.select("mutation", "matmul", seed);
+            assert_eq!(first, b.select("mutation", "matmul", seed));
+        }
+        // Identically-built bandits agree pick-for-pick.
+        let c = Bandit::new(&routing(0.25));
+        let picks_b: Vec<String> = (0..64).map(|s| b.select("m", "c", s)).collect();
+        let picks_c: Vec<String> = (0..64).map(|s| c.select("m", "c", s)).collect();
+        assert_eq!(picks_b, picks_c);
+    }
+
+    #[test]
+    fn rewards_steer_exploitation() {
+        let mut b = Bandit::new(&routing(0.0));
+        // Zero exploration after both arms have one pull: the better
+        // mean must win every seed.
+        b.update("a", "mutation", "matmul", 1.0);
+        b.update("b", "mutation", "matmul", 0.05);
+        for seed in 0..32u64 {
+            assert_eq!(b.select("mutation", "matmul", seed), "a");
+        }
+        // Arms are per-(operator, category): an unexplored context
+        // falls back to the weighted prior, not a's record.
+        let pulls: Vec<String> = (0..32).map(|s| b.select("crossover", "scan", s)).collect();
+        assert!(pulls.contains(&"a".to_string()) && pulls.contains(&"b".to_string()));
+    }
+
+    #[test]
+    fn priors_weight_the_exploration_pick() {
+        let spec = RoutingSpec {
+            members: vec![("heavy".into(), 99.0), ("light".into(), 1.0)],
+            exploration_ratio: 1.0, // always explore
+        };
+        let b = Bandit::new(&spec);
+        let heavy = (0..200u64)
+            .filter(|s| b.select("m", "c", *s) == "heavy")
+            .count();
+        assert!(heavy > 180, "prior-weighted pick chose heavy {heavy}/200");
+    }
+
+    #[test]
+    fn unpulled_arm_is_forced_before_means_are_trusted() {
+        let mut b = Bandit::new(&routing(0.0));
+        b.update("a", "m", "c", 2.0);
+        // `b` never pulled in this context → infinite UCB → selected
+        // despite a's perfect mean (exploration_ratio 0 disables the
+        // random explore branch entirely).
+        for seed in 0..8u64 {
+            assert_eq!(b.select("m", "c", seed), "b");
+        }
+    }
+
+    #[test]
+    fn arm_export_is_sorted_with_means() {
+        let mut b = Bandit::new(&routing(0.25));
+        b.update("b", "mutation", "matmul", 1.0);
+        b.update("a", "repair", "scan", 0.0);
+        b.update("a", "repair", "scan", 1.0);
+        let arms = b.arms();
+        assert_eq!(arms.len(), 2);
+        assert_eq!(
+            (arms[0].member.as_str(), arms[0].pulls, arms[0].mean_reward),
+            ("a", 2, 0.5)
+        );
+        assert_eq!(arms[1].member.as_str(), "b");
+        assert_eq!(arms[1].mean_reward, 1.0);
+    }
+
+    #[test]
+    fn reward_mapping_orders_outcomes() {
+        let ok_fast = trial_reward("ok", Some(8.0));
+        let ok = trial_reward("ok", Some(1.0));
+        assert_eq!(ok_fast, 2.0, "speedup bonus caps at 4x");
+        assert!(ok_fast > ok);
+        assert!(ok > trial_reward("functional_fail", None));
+        assert!(trial_reward("functional_fail", None) > trial_reward("compile_fail", None));
+        assert!(trial_reward("compile_fail", None) > trial_reward("guard_reject", None));
+        assert_eq!(trial_reward("guard_reject", None), 0.0);
+        assert_eq!(repair_reward(true), 1.0);
+        assert_eq!(repair_reward(false), 0.0);
+    }
+
+    #[test]
+    fn operator_tags_are_first_word_lowercase() {
+        assert_eq!(operator_tag("Mutate the incumbent kernel"), "mutate");
+        assert_eq!(operator_tag("  CROSSOVER: combine two parents"), "crossover");
+        assert_eq!(operator_tag(""), "generate");
+        assert_eq!(operator_tag("---"), "generate");
+    }
+}

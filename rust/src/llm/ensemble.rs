@@ -1,0 +1,516 @@
+//! Weighted multi-backend ensembles behind the provider seam
+//! (DESIGN.md §16).
+//!
+//! The paper's cost/quality results (Table 6) come from running
+//! *different* models through the same evolution framework; an
+//! [`EnsembleProvider`] makes that a single run: each
+//! [`GenerationRequest`] is dispatched to one of N configured member
+//! backends. Which member handles a call is **not** decided here — the
+//! engine's seed-deterministic bandit ([`super::bandit`]) picks a
+//! member at request-assembly time and stamps the decision into the
+//! request's `route` field, so the decision is part of the request
+//! hash, journaled with the call, and exactly re-derived on replay.
+//! This provider only honours the stamp.
+//!
+//! Determinism contract:
+//!
+//! * a **single-member** ensemble never routes: requests pass through
+//!   untouched, the label is the member's own, and every byte of
+//!   records, transcripts and reports matches the bare backend;
+//! * a **multi-member** ensemble exposes a [`RoutingSpec`] via
+//!   [`Provider::routing`]; the engine does the rest.
+//!
+//! [`GenerationRequest`]: super::GenerationRequest
+//! [`Provider::routing`]: super::Provider::routing
+
+use std::sync::Arc;
+
+use crate::util::json;
+use crate::{eyre, Result};
+
+use super::provider::{
+    GenerationRequest, GenerationResponse, Provider, PROVIDER_GRAMMAR,
+};
+
+/// Bandit exploration ratio when the spec does not set `x=<ratio>`
+/// (the OpenEvolve-style default).
+pub const DEFAULT_EXPLORATION_RATIO: f64 = 0.25;
+
+/// Which live backend an ensemble member instantiates. `replay:` and
+/// nested ensembles are grammar errors — replay already impersonates
+/// whatever recorded the journal, ensemble included.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberBackend {
+    Sim,
+    Http,
+}
+
+impl MemberBackend {
+    pub fn label(self) -> &'static str {
+        match self {
+            MemberBackend::Sim => "sim",
+            MemberBackend::Http => "http",
+        }
+    }
+}
+
+/// One configured ensemble member: a backend, a unique alias (the
+/// bandit's arm identity and the `route` value stamped into requests),
+/// and a prior routing weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnsembleMember {
+    pub backend: MemberBackend,
+    pub alias: String,
+    pub weight: f64,
+}
+
+/// Parsed form of `ensemble:[...]` / `ensemble:@<file.json>` — always
+/// fully resolved: config-file forms are read at parse time, so the
+/// spec (and the label it round-trips to) never depends on the file
+/// afterwards. That is what lets the campaign coordinator hand the
+/// resolved label to wire workers that have no such file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnsembleSpec {
+    pub members: Vec<EnsembleMember>,
+    pub exploration_ratio: f64,
+}
+
+impl EnsembleSpec {
+    /// Parse the part after `ensemble:` — either `[m,m,...]` or
+    /// `@<file.json>`.
+    pub fn parse(body: &str) -> Result<Self> {
+        if let Some(path) = body.strip_prefix('@') {
+            if path.is_empty() {
+                return Err(eyre!(
+                    "`ensemble:@` is missing its config-file path\n{PROVIDER_GRAMMAR}"
+                ));
+            }
+            return Self::parse_file(path);
+        }
+        let inner = body
+            .strip_prefix('[')
+            .and_then(|b| b.strip_suffix(']'))
+            .ok_or_else(|| {
+                eyre!(
+                    "ensemble members must be bracketed, like \
+                     ensemble:[sim@0.5,sim#alt@0.5] — got `ensemble:{body}`\n{PROVIDER_GRAMMAR}"
+                )
+            })?;
+        let mut members = Vec::new();
+        let mut ratio = None;
+        for token in inner.split(',') {
+            let token = token.trim();
+            if token.is_empty() {
+                return Err(eyre!(
+                    "empty member token in `ensemble:{body}`\n{PROVIDER_GRAMMAR}"
+                ));
+            }
+            if let Some(r) = token.strip_prefix("x=") {
+                if ratio.replace(parse_ratio(r, token)?).is_some() {
+                    return Err(eyre!(
+                        "duplicate exploration-ratio token `{token}` in \
+                         `ensemble:{body}`\n{PROVIDER_GRAMMAR}"
+                    ));
+                }
+                continue;
+            }
+            members.push(parse_member(token)?);
+        }
+        Self::assemble(members, ratio.unwrap_or(DEFAULT_EXPLORATION_RATIO))
+    }
+
+    /// Load members from a JSON config file:
+    /// `{"members":[{"backend":"sim","alias":"a","weight":0.5},...],
+    ///   "exploration_ratio":0.25}`
+    /// (`alias` defaults to the backend name, `weight` to 1).
+    fn parse_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| eyre!("reading ensemble config `{path}`: {e}\n{PROVIDER_GRAMMAR}"))?;
+        let v = json::parse(&text)
+            .map_err(|e| eyre!("ensemble config `{path}` is not valid JSON: {e}\n{PROVIDER_GRAMMAR}"))?;
+        let arr = v.get("members").and_then(|m| m.as_arr()).ok_or_else(|| {
+            eyre!("ensemble config `{path}` needs a `members` array\n{PROVIDER_GRAMMAR}")
+        })?;
+        let mut members = Vec::new();
+        for (i, m) in arr.iter().enumerate() {
+            let backend_tok = m.get("backend").and_then(|b| b.as_str()).ok_or_else(|| {
+                eyre!(
+                    "ensemble config `{path}`: member {i} is missing its string \
+                     `backend` field\n{PROVIDER_GRAMMAR}"
+                )
+            })?;
+            let backend = parse_backend(backend_tok, backend_tok)?;
+            let alias = m
+                .get("alias")
+                .and_then(|a| a.as_str())
+                .unwrap_or(backend_tok)
+                .to_string();
+            check_alias(&alias, backend_tok)?;
+            let weight = match m.get("weight") {
+                None => 1.0,
+                Some(w) => {
+                    let w = w.as_f64().ok_or_else(|| {
+                        eyre!(
+                            "ensemble config `{path}`: member {i} `weight` must be a \
+                             number\n{PROVIDER_GRAMMAR}"
+                        )
+                    })?;
+                    check_weight(w, &alias)?;
+                    w
+                }
+            };
+            members.push(EnsembleMember { backend, alias, weight });
+        }
+        let ratio = match v.get("exploration_ratio") {
+            None => DEFAULT_EXPLORATION_RATIO,
+            Some(r) => {
+                let r = r.as_f64().ok_or_else(|| {
+                    eyre!(
+                        "ensemble config `{path}`: `exploration_ratio` must be a \
+                         number\n{PROVIDER_GRAMMAR}"
+                    )
+                })?;
+                check_ratio(r, "exploration_ratio")?
+            }
+        };
+        Self::assemble(members, ratio)
+    }
+
+    fn assemble(members: Vec<EnsembleMember>, exploration_ratio: f64) -> Result<Self> {
+        if members.is_empty() {
+            return Err(eyre!(
+                "ensemble has no members — at least one of sim|http is \
+                 required\n{PROVIDER_GRAMMAR}"
+            ));
+        }
+        for (i, m) in members.iter().enumerate() {
+            if members[..i].iter().any(|p| p.alias == m.alias) {
+                return Err(eyre!(
+                    "duplicate ensemble member alias `{}` — disambiguate with \
+                     #<alias>\n{PROVIDER_GRAMMAR}",
+                    m.alias
+                ));
+            }
+        }
+        Ok(EnsembleSpec { members, exploration_ratio })
+    }
+
+    /// Canonical inline form, always including weights and the
+    /// exploration ratio: `ensemble:[sim@0.5,sim#alt@0.5,x=0.25]`.
+    /// `ProviderSpec::parse` of this string reproduces the spec.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = self
+            .members
+            .iter()
+            .map(|m| {
+                let backend = m.backend.label();
+                if m.alias == backend {
+                    format!("{backend}@{}", m.weight)
+                } else {
+                    format!("{backend}#{}@{}", m.alias, m.weight)
+                }
+            })
+            .collect();
+        parts.push(format!("x={}", self.exploration_ratio));
+        format!("ensemble:[{}]", parts.join(","))
+    }
+
+    /// Routing facts for the engine's bandit — `None` for a degenerate
+    /// single-member spec (no routing, byte-identical to the bare
+    /// member backend).
+    pub fn routing(&self) -> Option<RoutingSpec> {
+        if self.members.len() < 2 {
+            return None;
+        }
+        Some(RoutingSpec {
+            members: self
+                .members
+                .iter()
+                .map(|m| (m.alias.clone(), m.weight))
+                .collect(),
+            exploration_ratio: self.exploration_ratio,
+        })
+    }
+}
+
+fn parse_backend(tok: &str, member: &str) -> Result<MemberBackend> {
+    if tok == "sim" {
+        Ok(MemberBackend::Sim)
+    } else if tok == "http" {
+        Ok(MemberBackend::Http)
+    } else if tok.starts_with("replay") || tok.starts_with("ensemble") {
+        Err(eyre!(
+            "`{tok}` cannot be an ensemble member — members are live backends \
+             (sim | http); ensembles do not nest and replay already impersonates \
+             whatever recorded the journal\n{PROVIDER_GRAMMAR}"
+        ))
+    } else {
+        Err(eyre!(
+            "unknown ensemble member backend `{tok}` in `{member}`\n{PROVIDER_GRAMMAR}"
+        ))
+    }
+}
+
+fn check_alias(alias: &str, member: &str) -> Result<()> {
+    let ok = !alias.is_empty()
+        && alias
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-');
+    if ok {
+        Ok(())
+    } else {
+        Err(eyre!(
+            "bad ensemble member alias `{alias}` in `{member}` — aliases are \
+             non-empty [A-Za-z0-9_-]\n{PROVIDER_GRAMMAR}"
+        ))
+    }
+}
+
+fn check_weight(w: f64, member: &str) -> Result<()> {
+    if w.is_finite() && w > 0.0 {
+        Ok(())
+    } else {
+        Err(eyre!(
+            "ensemble member weight `{w}` in `{member}` must be a finite number \
+             > 0\n{PROVIDER_GRAMMAR}"
+        ))
+    }
+}
+
+fn parse_ratio(text: &str, token: &str) -> Result<f64> {
+    let r: f64 = text.parse().map_err(|_| {
+        eyre!(
+            "bad exploration ratio `{text}` in `{token}` (expected a \
+             number)\n{PROVIDER_GRAMMAR}"
+        )
+    })?;
+    check_ratio(r, token)
+}
+
+fn check_ratio(r: f64, token: &str) -> Result<f64> {
+    if (0.0..=1.0).contains(&r) {
+        Ok(r)
+    } else {
+        Err(eyre!(
+            "exploration ratio `{r}` in `{token}` must be within \
+             [0, 1]\n{PROVIDER_GRAMMAR}"
+        ))
+    }
+}
+
+/// One member token: `(sim|http)[#alias][@weight]`.
+fn parse_member(token: &str) -> Result<EnsembleMember> {
+    let (head, weight) = match token.rsplit_once('@') {
+        Some((head, w)) => {
+            let weight: f64 = w.parse().map_err(|_| {
+                eyre!(
+                    "bad ensemble member weight `{w}` in `{token}` (expected a \
+                     number)\n{PROVIDER_GRAMMAR}"
+                )
+            })?;
+            check_weight(weight, token)?;
+            (head, weight)
+        }
+        None => (token, 1.0),
+    };
+    let (backend_tok, alias) = match head.split_once('#') {
+        Some((b, a)) => (b, a.to_string()),
+        None => (head, head.to_string()),
+    };
+    let backend = parse_backend(backend_tok, token)?;
+    check_alias(&alias, token)?;
+    Ok(EnsembleMember { backend, alias, weight })
+}
+
+/// What the engine's bandit needs from a multi-member ensemble: the
+/// member aliases with their prior weights, and the exploration ratio.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingSpec {
+    /// `(alias, prior weight)` in configured order — selection
+    /// tie-breaks by this order, so it is part of the determinism
+    /// contract.
+    pub members: Vec<(String, f64)>,
+    pub exploration_ratio: f64,
+}
+
+/// The ensemble behind the provider seam: dispatches each call to the
+/// member the request's `route` stamp names. See the module docs for
+/// the split of responsibilities with the engine-side bandit.
+pub struct EnsembleProvider {
+    members: Vec<(String, Arc<dyn Provider>)>,
+    /// Single member: that member's own label (byte-identity with the
+    /// bare backend). Multi-member: the spec's canonical inline label,
+    /// which replay parses back into a [`RoutingSpec`].
+    label: String,
+    routing: Option<RoutingSpec>,
+}
+
+impl EnsembleProvider {
+    /// Wrap instantiated member backends. `members` pairs each alias
+    /// with its backend, in spec order; `spec` supplies the label and
+    /// routing facts.
+    pub fn new(members: Vec<(String, Arc<dyn Provider>)>, spec: &EnsembleSpec) -> Self {
+        assert!(!members.is_empty(), "ensemble needs at least one member");
+        let label = if members.len() == 1 {
+            members[0].1.label().to_string()
+        } else {
+            spec.label()
+        };
+        Self { members, label, routing: spec.routing() }
+    }
+}
+
+impl Provider for EnsembleProvider {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn call(&self, req: &GenerationRequest) -> Result<GenerationResponse> {
+        if self.members.len() == 1 {
+            return self.members[0].1.call(req);
+        }
+        let route = req.route.as_deref().ok_or_else(|| {
+            eyre!(
+                "ensemble `{}` received an unrouted request (role {}, seed {}) — \
+                 the engine must stamp a member route before calling a \
+                 multi-member ensemble",
+                self.label,
+                req.role,
+                req.seed
+            )
+        })?;
+        let member = self
+            .members
+            .iter()
+            .find(|(alias, _)| alias == route)
+            .ok_or_else(|| {
+                eyre!(
+                    "ensemble `{}` has no member aliased `{route}` (members: {})",
+                    self.label,
+                    self.members
+                        .iter()
+                        .map(|(a, _)| a.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+        member.1.call(req)
+    }
+
+    fn flush(&self) {
+        for (_, m) in &self.members {
+            m.flush();
+        }
+    }
+
+    fn routing(&self) -> Option<RoutingSpec> {
+        self.routing.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::{ProviderSpec, SimProvider};
+
+    fn spec(s: &str) -> EnsembleSpec {
+        match ProviderSpec::parse(s).unwrap() {
+            ProviderSpec::Ensemble(spec) => spec,
+            other => panic!("expected ensemble, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn inline_grammar_parses() {
+        let e = spec("ensemble:[sim@0.5,sim#alt@0.5]");
+        assert_eq!(e.members.len(), 2);
+        assert_eq!(e.members[0].alias, "sim");
+        assert_eq!(e.members[0].weight, 0.5);
+        assert_eq!(e.members[1].alias, "alt");
+        assert_eq!(e.members[1].backend, MemberBackend::Sim);
+        assert_eq!(e.exploration_ratio, DEFAULT_EXPLORATION_RATIO);
+
+        let e = spec("ensemble:[sim,http#remote@2,x=0.1]");
+        assert_eq!(e.members[0].weight, 1.0);
+        assert_eq!(e.members[1].backend, MemberBackend::Http);
+        assert_eq!(e.members[1].alias, "remote");
+        assert_eq!(e.exploration_ratio, 0.1);
+    }
+
+    #[test]
+    fn label_round_trips_through_parse() {
+        for s in [
+            "ensemble:[sim@0.5,sim#alt@0.5]",
+            "ensemble:[sim,http#remote@2,x=0.1]",
+            "ensemble:[sim]",
+        ] {
+            let e = spec(s);
+            let back = spec(&e.label());
+            assert_eq!(e, back, "label {} must round-trip", e.label());
+        }
+    }
+
+    #[test]
+    fn config_file_form_resolves_eagerly() {
+        let dir = std::env::temp_dir()
+            .join(format!("evo_ensemble_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ensemble.json");
+        std::fs::write(
+            &path,
+            r#"{"members":[{"backend":"sim","alias":"a","weight":0.75},
+                           {"backend":"sim","alias":"b"}],
+                "exploration_ratio":0.5}"#,
+        )
+        .unwrap();
+        let e = spec(&format!("ensemble:@{}", path.display()));
+        assert_eq!(e.members.len(), 2);
+        assert_eq!(e.members[0].weight, 0.75);
+        assert_eq!(e.members[1].weight, 1.0);
+        assert_eq!(e.exploration_ratio, 0.5);
+        // Eager resolution: the label is the inline form and survives
+        // the file disappearing (the coordinator→worker contract).
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(spec(&e.label()), e);
+        assert!(!e.label().contains('@') || !e.label().contains(".json"));
+    }
+
+    #[test]
+    fn routing_only_for_multi_member() {
+        assert!(spec("ensemble:[sim]").routing().is_none());
+        let r = spec("ensemble:[sim@3,sim#alt@1,x=0.2]").routing().unwrap();
+        assert_eq!(r.members, vec![("sim".into(), 3.0), ("alt".into(), 1.0)]);
+        assert_eq!(r.exploration_ratio, 0.2);
+    }
+
+    #[test]
+    fn unrouted_call_to_multi_member_is_an_error() {
+        let e = spec("ensemble:[sim,sim#alt]");
+        let p = EnsembleProvider::new(
+            vec![
+                ("sim".into(), Arc::new(SimProvider::new()) as Arc<dyn Provider>),
+                ("alt".into(), Arc::new(SimProvider::new()) as Arc<dyn Provider>),
+            ],
+            &e,
+        );
+        let req = crate::llm::GenerationRequest::generate("GPT-4.1", "p", 7);
+        let err = p.call(&req).unwrap_err();
+        assert!(err.to_string().contains("unrouted"), "{err}");
+        let ok = req.clone().with_routing("mutation", "matmul", "alt");
+        assert!(p.call(&ok).is_ok());
+        let bad = req.with_routing("mutation", "matmul", "ghost");
+        assert!(p.call(&bad).unwrap_err().to_string().contains("ghost"));
+    }
+
+    #[test]
+    fn single_member_passthrough_keeps_bare_identity() {
+        let e = spec("ensemble:[sim]");
+        let inner = Arc::new(SimProvider::new());
+        let p = EnsembleProvider::new(vec![("sim".into(), inner as _)], &e);
+        assert_eq!(p.label(), "sim");
+        assert!(p.routing().is_none());
+        let req = crate::llm::GenerationRequest::generate("GPT-4.1", "p", 7);
+        let bare = SimProvider::new().call(&req).unwrap();
+        assert_eq!(p.call(&req).unwrap(), bare);
+    }
+}

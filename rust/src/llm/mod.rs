@@ -25,6 +25,8 @@
 //! call sites derived — the free functions below remain the sim
 //! backend's implementation (and its conformance oracle).
 
+pub mod bandit;
+pub mod ensemble;
 pub mod mutate;
 pub mod parse;
 pub mod profile;
@@ -33,10 +35,12 @@ pub mod provider;
 #[cfg(feature = "http-provider")]
 pub mod http;
 
+pub use bandit::{ArmWeight, Bandit};
+pub use ensemble::{EnsembleProvider, EnsembleSpec, MemberBackend, RoutingSpec};
 pub use profile::{ModelProfile, MODELS};
 pub use provider::{
-    GenerationRequest, GenerationResponse, GenerationRole, Provider, ProviderSpec,
-    RecordingProvider, ReplayProvider, SimProvider, TokenUsage,
+    GenerationRequest, GenerationResponse, GenerationRole, Provider, ProviderConfig,
+    ProviderSpec, RecordingProvider, ReplayProvider, ReusePolicy, SimProvider, TokenUsage,
 };
 
 use crate::dsl::{self, KernelSpec};

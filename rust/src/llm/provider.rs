@@ -41,6 +41,7 @@ use crate::store::{sha256_hex, TranscriptEntry, TranscriptStore};
 use crate::util::Rng;
 use crate::{eyre, Result};
 
+use super::ensemble::{EnsembleProvider, EnsembleSpec, MemberBackend, RoutingSpec};
 use super::profile;
 
 /// What the caller is asking the model to do.
@@ -87,6 +88,19 @@ pub struct GenerationRequest {
     /// where the pre-provider code derived its per-call RNG — the sim
     /// backend expands it to the identical stream.
     pub seed: u64,
+    /// Structured operator tag (mutation / crossover / compose / …)
+    /// the engine attaches when ensemble routing is active. `None` for
+    /// single-backend runs — unset fields are *not* hashed, so every
+    /// pre-ensemble request hash is unchanged.
+    pub operator: Option<String>,
+    /// Kernel-op category (the bandit's workload axis); set together
+    /// with `operator`.
+    pub op_category: Option<String>,
+    /// Ensemble member alias the bandit routed this call to. Part of
+    /// the request hash when set: a routing decision is part of the
+    /// request's identity, which is what keeps record-then-replay of
+    /// ensemble campaigns byte-identical.
+    pub route: Option<String>,
 }
 
 impl GenerationRequest {
@@ -98,6 +112,9 @@ impl GenerationRequest {
             prompt: prompt.to_string(),
             diagnostics: Vec::new(),
             seed,
+            operator: None,
+            op_category: None,
+            route: None,
         }
     }
 
@@ -109,7 +126,20 @@ impl GenerationRequest {
             prompt: src.to_string(),
             diagnostics: report.diagnostics.clone(),
             seed,
+            operator: None,
+            op_category: None,
+            route: None,
         }
+    }
+
+    /// Attach the bandit's routing decision (ensemble runs only): the
+    /// operator tag, the op category, and the member alias the call is
+    /// routed to. All three become part of the request hash.
+    pub fn with_routing(mut self, operator: &str, category: &str, member: &str) -> Self {
+        self.operator = Some(operator.to_string());
+        self.op_category = Some(category.to_string());
+        self.route = Some(member.to_string());
+        self
     }
 
     /// Content hash of the request — the transcript journal key. The
@@ -140,6 +170,21 @@ impl GenerationRequest {
                 buf.extend_from_slice(hv.as_bytes());
             }
             buf.push(0);
+        }
+        // Routing fields are hashed only when set, behind explicit
+        // tags: every request a pre-ensemble binary could build keeps
+        // its exact historical hash (journal compatibility), while a
+        // routed request's identity includes where it was routed.
+        for (tag, field) in [
+            (&b"\0operator\0"[..], &self.operator),
+            (&b"\0op_category\0"[..], &self.op_category),
+            (&b"\0route\0"[..], &self.route),
+        ] {
+            if let Some(value) = field {
+                buf.extend_from_slice(tag);
+                buf.extend_from_slice(&(value.len() as u64).to_be_bytes());
+                buf.extend_from_slice(value.as_bytes());
+            }
         }
         sha256_hex(&buf)
     }
@@ -184,6 +229,16 @@ pub trait Provider: Send + Sync {
     /// (the recording decorator) make them durable here. Default:
     /// no-op.
     fn flush(&self) {}
+
+    /// Routing facts for the engine's bandit (DESIGN.md §16): `Some`
+    /// only for a multi-member [`EnsembleProvider`] (decorators
+    /// delegate; replay reconstructs it from the impersonated label).
+    /// `None` means the engine attaches no routing fields to requests,
+    /// which is what makes a single-backend run — and a degenerate
+    /// one-member ensemble — byte-identical to the historical path.
+    fn routing(&self) -> Option<RoutingSpec> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -309,10 +364,20 @@ impl Provider for RecordingProvider {
             prompt_tokens: resp.usage.prompt_tokens,
             completion_tokens: resp.usage.completion_tokens,
         };
-        if let Err(e) = self.journal.append(&req.hash(), entry) {
+        let key = req.hash();
+        if let Err(e) = self.journal.append(&key, entry) {
             // Advisory, like the eval cache: a failed journal write
             // must not kill the run that produced the response.
             eprintln!("warning: transcript append failed: {e:#}");
+        }
+        // Journal the routing decision next to the call it routed
+        // (ensemble runs only) — the transcript is then a complete
+        // audit record of *where* every call went, not just what it
+        // returned.
+        if let Some(member) = &req.route {
+            if let Err(e) = self.journal.append_route(&key, member) {
+                eprintln!("warning: transcript route append failed: {e:#}");
+            }
         }
         Ok(resp)
     }
@@ -321,6 +386,10 @@ impl Provider for RecordingProvider {
         if let Err(e) = self.journal.flush() {
             eprintln!("warning: transcript flush failed: {e:#}");
         }
+    }
+
+    fn routing(&self) -> Option<RoutingSpec> {
+        self.inner.routing()
     }
 }
 
@@ -335,6 +404,12 @@ pub struct ReplayProvider {
     journal: Arc<TranscriptStore>,
     /// Impersonated label (the journal's recorded source backend).
     label: String,
+    /// Routing facts reconstructed from the impersonated label when
+    /// the journal was recorded by a multi-member ensemble: the replay
+    /// engine re-runs the same bandit over the same spec, so every
+    /// request re-acquires the recorded route — and hash — with zero
+    /// live generation.
+    routing: Option<RoutingSpec>,
 }
 
 impl ReplayProvider {
@@ -350,7 +425,15 @@ impl ReplayProvider {
         }
         let journal = TranscriptStore::open(path)?;
         let label = journal.source().unwrap_or_else(|| "replay".to_string());
-        Ok(Self { journal, label })
+        // An ensemble label round-trips through the spec grammar
+        // (members are resolved inline at record time, never behind a
+        // config file), so the recorded routing setup is recoverable
+        // from the label alone.
+        let routing = match ProviderSpec::parse(&label) {
+            Ok(ProviderSpec::Ensemble(spec)) => spec.routing(),
+            _ => None,
+        };
+        Ok(Self { journal, label, routing })
     }
 
     pub fn len(&self) -> usize {
@@ -389,52 +472,148 @@ impl Provider for ReplayProvider {
             },
         })
     }
+
+    fn routing(&self) -> Option<RoutingSpec> {
+        self.routing.clone()
+    }
 }
 
 // ---------------------------------------------------------------------
 // ProviderSpec: CLI / config surface
 
-/// Which backend to run — the parsed form of the `--provider` flag
-/// (`sim` | `replay:<path>` | `http`).
-#[derive(Debug, Clone, PartialEq, Eq, Default)]
+/// The full `--provider` grammar, quoted verbatim by every parse
+/// error so a malformed spec never strands the user without the
+/// accepted forms.
+pub const PROVIDER_GRAMMAR: &str = "\
+accepted --provider forms:
+  sim                    simulated LLM (default)
+  replay:<path>          play back a recorded transcript journal
+  http                   OpenAI-compatible endpoint (`http-provider` feature)
+  ensemble:[m,m,...]     weighted multi-backend ensemble; each member is
+                         (sim|http)[#alias][@weight] and an optional
+                         x=<ratio> member sets the bandit exploration ratio
+  ensemble:@<file.json>  ensemble members loaded from a JSON config file";
+
+/// Which backend to run — the parsed form of the `--provider` flag.
+/// See [`PROVIDER_GRAMMAR`] for the accepted surface syntax.
+///
+/// `Eq` is deliberately absent: ensemble member weights are `f64`
+/// priors. `PartialEq` is all every call site needs (spec matching and
+/// the coordinator/worker mismatch check).
+#[derive(Debug, Clone, PartialEq, Default)]
 pub enum ProviderSpec {
     #[default]
     Sim,
     Replay(PathBuf),
     Http,
+    /// A weighted multi-backend ensemble (DESIGN.md §16). `@file.json`
+    /// forms are resolved eagerly at parse time, so a spec in hand —
+    /// and the label it round-trips to — never depends on a config
+    /// file still existing (the coordinator serves the resolved label
+    /// to workers that have no such file).
+    Ensemble(EnsembleSpec),
 }
 
 impl ProviderSpec {
-    /// Parse a `--provider` value.
+    /// Parse a `--provider` value. Errors name the offending token and
+    /// quote [`PROVIDER_GRAMMAR`].
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "" | "sim" => Ok(ProviderSpec::Sim),
             "http" => Ok(ProviderSpec::Http),
             "replay" => Err(eyre!(
-                "`--provider replay` needs a journal: replay:<transcripts.jsonl>"
+                "`--provider replay` needs a journal: replay:<transcripts.jsonl>\n{PROVIDER_GRAMMAR}"
+            )),
+            "ensemble" => Err(eyre!(
+                "`--provider ensemble` needs members: ensemble:[sim@0.5,sim#alt@0.5] \
+                 or ensemble:@<file.json>\n{PROVIDER_GRAMMAR}"
             )),
             other => {
                 if let Some(path) = other.strip_prefix("replay:") {
                     if path.is_empty() {
-                        return Err(eyre!("empty replay journal path"));
+                        return Err(eyre!(
+                            "`replay:` is missing its journal path\n{PROVIDER_GRAMMAR}"
+                        ));
                     }
                     Ok(ProviderSpec::Replay(PathBuf::from(path)))
+                } else if let Some(body) = other.strip_prefix("ensemble:") {
+                    Ok(ProviderSpec::Ensemble(EnsembleSpec::parse(body)?))
                 } else {
                     Err(eyre!(
-                        "unknown --provider `{other}` (sim | replay:<path> | http)"
+                        "unknown --provider token `{other}`\n{PROVIDER_GRAMMAR}"
                     ))
                 }
             }
         }
     }
 
-    /// The flag syntax this spec round-trips to.
+    /// The flag syntax this spec round-trips to:
+    /// `ProviderSpec::parse(spec.label())` reproduces `spec` exactly
+    /// (ensembles render their eagerly-resolved inline form).
     pub fn label(&self) -> String {
         match self {
             ProviderSpec::Sim => "sim".into(),
             ProviderSpec::Replay(p) => format!("replay:{}", p.display()),
             ProviderSpec::Http => "http".into(),
+            ProviderSpec::Ensemble(spec) => spec.label(),
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ProviderConfig: the one typed way to build a provider stack
+
+/// What a recording provider does with requests its journal already
+/// covers — the typed replacement for the old `reuse: bool` argument
+/// of [`build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReusePolicy {
+    /// Every request goes to the backend; the journal only records.
+    #[default]
+    Fresh,
+    /// Requests the journal covers are served from it without touching
+    /// the backend — the trial-granular resume mechanism (DESIGN.md
+    /// §13): a resumed leg replays completed trials with zero live
+    /// generation and goes live from the first unrecorded call.
+    Resume,
+}
+
+impl ReusePolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            ReusePolicy::Fresh => "fresh",
+            ReusePolicy::Resume => "resume",
+        }
+    }
+}
+
+/// Everything needed to build a provider stack, in one typed value —
+/// the builder that replaces the `(spec, transcripts, reuse)` triple
+/// previously re-matched at every call site.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ProviderConfig {
+    pub spec: ProviderSpec,
+    /// Journal for recording live calls. Ignored for `replay:` specs —
+    /// a replayed run records nothing, its journal already is the
+    /// record (the builder owns that rule so call sites don't).
+    pub transcripts: Option<PathBuf>,
+    pub reuse: ReusePolicy,
+}
+
+impl ProviderConfig {
+    pub fn new(spec: ProviderSpec) -> Self {
+        ProviderConfig { spec, transcripts: None, reuse: ReusePolicy::Fresh }
+    }
+
+    /// Record live calls to `path` (`None` disables recording).
+    pub fn transcripts(mut self, path: Option<PathBuf>) -> Self {
+        self.transcripts = path;
+        self
+    }
+
+    pub fn reuse(mut self, policy: ReusePolicy) -> Self {
+        self.reuse = policy;
+        self
     }
 }
 
@@ -451,28 +630,48 @@ fn http_backend() -> Result<Arc<dyn Provider>> {
     ))
 }
 
-/// Build a provider from a spec, optionally recording every live call
-/// to `transcripts` (ignored for replay — a replayed run records
-/// nothing, its journal already is the record). With `reuse`, a
-/// recording provider serves requests the journal already covers from
-/// the journal (a resumed campaign leg replays completed trials with
-/// zero live generation — DESIGN.md §13).
-pub fn build(
-    spec: &ProviderSpec,
-    transcripts: Option<&Path>,
-    reuse: bool,
-) -> Result<Arc<dyn Provider>> {
-    let base: Arc<dyn Provider> = match spec {
+/// One ensemble member's backend instance.
+fn member_backend(backend: MemberBackend) -> Result<Arc<dyn Provider>> {
+    match backend {
+        MemberBackend::Sim => Ok(Arc::new(SimProvider::new())),
+        MemberBackend::Http => http_backend(),
+    }
+}
+
+/// Build the provider stack a [`ProviderConfig`] describes.
+pub fn build(cfg: &ProviderConfig) -> Result<Arc<dyn Provider>> {
+    Ok(build_with_journal(cfg)?.0)
+}
+
+/// [`build`], also handing back the transcript journal the stack
+/// records to (if any) — the campaign wire workers upload journal
+/// deltas and need the handle the recording decorator writes through.
+pub fn build_with_journal(
+    cfg: &ProviderConfig,
+) -> Result<(Arc<dyn Provider>, Option<Arc<TranscriptStore>>)> {
+    let base: Arc<dyn Provider> = match &cfg.spec {
         ProviderSpec::Sim => Arc::new(SimProvider::new()),
-        ProviderSpec::Replay(path) => return Ok(Arc::new(ReplayProvider::open(path)?)),
+        ProviderSpec::Replay(path) => {
+            return Ok((Arc::new(ReplayProvider::open(path)?), None));
+        }
         ProviderSpec::Http => http_backend()?,
+        ProviderSpec::Ensemble(spec) => {
+            let mut members = Vec::with_capacity(spec.members.len());
+            for m in &spec.members {
+                members.push((m.alias.clone(), member_backend(m.backend)?));
+            }
+            Arc::new(EnsembleProvider::new(members, spec))
+        }
     };
-    match transcripts {
+    match &cfg.transcripts {
         Some(path) => {
             let journal = TranscriptStore::open(path)?;
-            Ok(Arc::new(RecordingProvider::new(base, journal)?.with_reuse(reuse)))
+            let reuse = cfg.reuse == ReusePolicy::Resume;
+            let provider =
+                Arc::new(RecordingProvider::new(base, journal.clone())?.with_reuse(reuse));
+            Ok((provider, Some(journal)))
         }
-        None => Ok(base),
+        None => Ok((base, None)),
     }
 }
 
@@ -532,5 +731,97 @@ mod tests {
         let req = GenerationRequest::generate("llama", "x", 0);
         assert!(p.call(&req).is_err());
         assert_eq!(p.calls(), 0);
+    }
+
+    #[test]
+    fn parse_errors_name_the_token_and_quote_the_grammar() {
+        // Every error arm must (a) point at the offending token and
+        // (b) quote the full accepted grammar, ensemble forms included.
+        for (input, named) in [
+            ("martian", "martian"),
+            ("replay", "replay"),
+            ("replay:", "replay:"),
+            ("ensemble", "ensemble"),
+            ("ensemble:", "ensemble"),
+            ("ensemble:[sim@0.5", "["),
+            ("ensemble:[]", "["),
+            ("ensemble:[sim@nope]", "nope"),
+            ("ensemble:[sim@0.0]", "sim@0.0"),
+            ("ensemble:[fpga@1.0]", "fpga"),
+            ("ensemble:[sim@0.5,sim@0.5]", "sim"),
+            ("ensemble:[sim@1.0,x=zero]", "zero"),
+        ] {
+            let err = format!("{:#}", ProviderSpec::parse(input).unwrap_err());
+            assert!(err.contains(named), "error for `{input}` must name `{named}`: {err}");
+            assert!(
+                err.contains("accepted --provider forms"),
+                "error for `{input}` must quote PROVIDER_GRAMMAR: {err}"
+            );
+            assert!(err.contains("ensemble:@<file.json>"), "{err}");
+        }
+    }
+
+    #[test]
+    fn ensemble_specs_parse_and_labels_roundtrip() {
+        for s in [
+            "ensemble:[sim@1.0]",
+            "ensemble:[sim@0.5,sim#alt@0.5]",
+            "ensemble:[sim@0.7,sim#alt@0.3,x=0.1]",
+        ] {
+            let spec = ProviderSpec::parse(s).unwrap();
+            assert!(matches!(spec, ProviderSpec::Ensemble(_)), "{s}");
+            let relabeled = ProviderSpec::parse(&spec.label()).unwrap();
+            assert_eq!(spec, relabeled, "label must round-trip for {s}");
+        }
+    }
+
+    #[test]
+    fn routing_fields_extend_the_hash_without_perturbing_legacy_requests() {
+        let bare = GenerationRequest::generate("GPT-4.1", "prompt body", 42);
+        // No routing: hash is the pre-ensemble legacy hash (fields are
+        // appended only when present, so old journals stay valid).
+        assert_eq!(bare.operator, None);
+        assert_eq!(bare.op_category, None);
+        assert_eq!(bare.route, None);
+        let routed = bare.clone().with_routing("mutate", "matmul", "alt");
+        assert_ne!(bare.hash(), routed.hash(), "route must be part of the hash");
+        let other_member = bare.clone().with_routing("mutate", "matmul", "sim");
+        assert_ne!(routed.hash(), other_member.hash());
+        let other_op = bare.clone().with_routing("crossover", "matmul", "alt");
+        assert_ne!(routed.hash(), other_op.hash());
+        // Deterministic across re-hashing.
+        assert_eq!(routed.hash(), routed.hash());
+    }
+
+    #[test]
+    fn provider_config_builder_defaults_and_build() {
+        let cfg = ProviderConfig::new(ProviderSpec::Sim);
+        assert_eq!(cfg.reuse, ReusePolicy::Fresh);
+        assert!(cfg.transcripts.is_none());
+        let p = build(&cfg).unwrap();
+        assert_eq!(p.label(), "sim");
+        assert!(p.routing().is_none(), "bare sim has no routing table");
+
+        // Single-member ensemble builds straight through to the inner
+        // backend: same label, no routing, so the whole pipeline is
+        // byte-identical to `--provider sim` (DESIGN.md §16).
+        let single =
+            ProviderConfig::new(ProviderSpec::parse("ensemble:[sim@1.0]").unwrap());
+        let p = build(&single).unwrap();
+        assert_eq!(p.label(), "sim");
+        assert!(p.routing().is_none());
+
+        // Multi-member: canonical ensemble label plus a routing table
+        // carrying both members and the exploration ratio.
+        let multi = ProviderConfig::new(
+            ProviderSpec::parse("ensemble:[sim@0.75,sim#alt@0.25,x=0.5]").unwrap(),
+        );
+        let p = build(&multi).unwrap();
+        assert_eq!(p.label(), "ensemble:[sim@0.75,sim#alt@0.25,x=0.5]");
+        let routing = p.routing().expect("multi-member ensembles must expose routing");
+        assert_eq!(routing.members.len(), 2);
+        assert_eq!(routing.members[0].0, "sim");
+        assert_eq!(routing.members[1].0, "alt");
+        assert_eq!(routing.exploration_ratio, 0.5);
     }
 }

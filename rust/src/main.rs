@@ -20,7 +20,9 @@ use std::sync::Arc;
 
 use evoengineer::campaign::{coordinator, results, wire, CampaignConfig};
 use evoengineer::evals::Evaluator;
-use evoengineer::llm::{profile, provider, GenerationRequest, Provider, ProviderSpec};
+use evoengineer::llm::{
+    profile, provider, GenerationRequest, Provider, ProviderConfig, ProviderSpec,
+};
 use evoengineer::methods::engine::{self, EngineOpts, EventSink};
 use evoengineer::methods::{
     self, Archive, JournalSink, KernelRunRecord, ProgressSink, RepairPolicy, RunCtx,
@@ -43,7 +45,8 @@ COMMANDS:
       --repair MODE          also demo the stage-0 guard: off|diagnose|
                              repair|repair:K (default off)
       --provider P           generation backend for the guard demo:
-                             sim|replay:<path>|http (default sim)
+                             sim|replay:<path>|http|ensemble:[...]
+                             (default sim)
   optimize <op>              one optimization run, verbose
       --method NAME          (default evoengineer-full)
       --model NAME           (default gpt)
@@ -51,9 +54,13 @@ COMMANDS:
       --budget N             (default 45)
       --repair MODE          stage-0 guard policy: off|diagnose|repair|
                              repair:K (default off; repair = repair:2)
-      --provider P           generation backend: sim|replay:<path>|http
-                             (default sim; http needs the http-provider
-                             build feature + EVO_HTTP_* env)
+      --provider P           generation backend: sim|replay:<path>|http|
+                             ensemble:[m@w,m#alias@w,...,x=R]|
+                             ensemble:@<file.json> (default sim; http
+                             needs the http-provider build feature +
+                             EVO_HTTP_* env; a multi-member ensemble
+                             routes each call by a seed-deterministic
+                             bandit, exploration ratio R)
       --transcripts PATH     record every provider call to a journal
                              (default off for single runs)
       --events PATH          append structured per-trial events to a
@@ -75,7 +82,8 @@ COMMANDS:
       --repair MODE          stage-0 guard policy for every cell:
                              off|diagnose|repair|repair:K (default off)
       --provider P           generation backend for every cell:
-                             sim|replay:<path>|http (default sim)
+                             sim|replay:<path>|http|ensemble:[...]
+                             (default sim)
       --transcripts PATH|off provider-call journal; a recorded campaign
                              replays bit-identically with zero live
                              generation via --provider replay:<path>
@@ -103,6 +111,10 @@ COMMANDS:
       --bind HOST:PORT       listen address (default 127.0.0.1:7717)
   campaign work URL          claim cells from a coordinator until the
                              sweep drains (engine knobs mirror /config)
+      --provider P           optional assertion only: the worker always
+                             runs the coordinator's resolved provider
+                             spec from /config; passing a different one
+                             here is a startup error
       --transcripts PATH|off worker-local provider journal, uploaded to
                              the coordinator (default off; never point
                              it at the coordinator's own file)
@@ -260,6 +272,11 @@ fn run() -> Result<()> {
                     p => Some(PathBuf::from(p)),
                 };
                 let opts = wire::WorkOpts {
+                    // The worker never builds from its own --provider:
+                    // the coordinator's resolved spec (served by
+                    // /config) is authoritative. A locally-passed spec
+                    // is kept only as a startup assertion.
+                    provider: args.flags.get("provider").cloned(),
                     transcripts: match args.get("transcripts", "off").as_str() {
                         "off" | "" => None,
                         p => Some(PathBuf::from(p)),
@@ -414,7 +431,7 @@ fn smoke(
         stats.executions, stats.compiles, stats.cache_hits
     );
     if repair != RepairPolicy::Off {
-        let llm_provider = provider::build(provider_spec, None, false)?;
+        let llm_provider = provider::build(&ProviderConfig::new(provider_spec.clone()))?;
         guard_demo(&evaluator, repair, llm_provider.as_ref())?;
     }
     println!("smoke OK");
@@ -457,6 +474,9 @@ fn guard_demo(
     println!("\nstage-0 guard ({}, provider {}):", repair.label(), llm_provider.label());
     let rng = evoengineer::util::Rng::new(0).derive("guard-demo");
     let model = profile::by_name("gpt").expect("gpt profile").name;
+    // A multi-member ensemble rejects unrouted calls; the demo routes
+    // through a fresh (stateless-across-cases) bandit like the engine.
+    let routing = llm_provider.routing().map(|spec| evoengineer::llm::Bandit::new(&spec));
     // All verdicts up front through the parallel batch API — same
     // reports in the same order as per-case `guard_check` calls.
     let items: Vec<(&str, &evoengineer::tasks::OpTask)> =
@@ -473,7 +493,11 @@ fn guard_demo(
             let mut attempt = 0;
             while !rep.pass() && attempt < max_attempts {
                 let seed = rng.derive_seed(&format!("{label}/{attempt}"));
-                let req = GenerationRequest::repair(model, &text, &rep, seed);
+                let mut req = GenerationRequest::repair(model, &text, &rep, seed);
+                if let Some(b) = &routing {
+                    let member = b.select("repair", &task.family, seed);
+                    req = req.with_routing("repair", &task.family, &member);
+                }
                 text = llm_provider.call(&req)?.text;
                 rep = evaluator.guard_check(&text, &task);
                 attempt += 1;
@@ -511,7 +535,10 @@ fn optimize(
         .clone();
     let method = methods::by_name(method)?;
     let model = profile::by_name(model).ok_or_else(|| eyre!("unknown model `{model}`"))?;
-    let llm_provider = provider::build(provider_spec, transcripts, false)?;
+    let llm_provider = provider::build(
+        &ProviderConfig::new(provider_spec.clone())
+            .transcripts(transcripts.map(|p| p.to_path_buf())),
+    )?;
     let archive = Archive::new();
     let ctx = RunCtx {
         evaluator: &evaluator,

@@ -20,7 +20,7 @@ use std::sync::{Arc, RwLock};
 
 use crate::dsl;
 use crate::evals::{EvalOutcome, Evaluator};
-use crate::llm::{ModelProfile, Provider};
+use crate::llm::{ArmWeight, Bandit, ModelProfile, Provider};
 use crate::population::{Candidate, Population};
 use crate::tasks::OpTask;
 use crate::traverse::InsightRecord;
@@ -204,6 +204,10 @@ pub struct KernelRunRecord {
     /// Best-so-far speedup after each trial (convergence curves).
     pub trajectory: Vec<f64>,
     pub best_src: Option<String>,
+    /// Learned bandit arm state at run end (multi-member ensemble runs
+    /// only; empty — and absent from the JSON — otherwise, so
+    /// single-backend records are byte-identical to historical ones).
+    pub arms: Vec<ArmWeight>,
 }
 
 impl KernelRunRecord {
@@ -214,7 +218,7 @@ impl KernelRunRecord {
     /// JSON serialization (offline environment: no serde; see
     /// util::json).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("method", Json::Str(self.method.clone())),
             ("model", Json::Str(self.model.clone())),
             ("op", Json::Str(self.op.clone())),
@@ -245,7 +249,30 @@ impl KernelRunRecord {
                     .map(|s| Json::Str(s.clone()))
                     .unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        // Conditional, like the pre-ensemble fields' absence in old
+        // files: a record without bandit activity serializes exactly
+        // as it always did.
+        if !self.arms.is_empty() {
+            pairs.push((
+                "arms",
+                Json::Arr(
+                    self.arms
+                        .iter()
+                        .map(|a| {
+                            Json::obj(vec![
+                                ("member", Json::Str(a.member.clone())),
+                                ("operator", Json::Str(a.operator.clone())),
+                                ("category", Json::Str(a.category.clone())),
+                                ("pulls", Json::Num(a.pulls as f64)),
+                                ("mean_reward", Json::Num(a.mean_reward)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> crate::Result<Self> {
@@ -311,6 +338,24 @@ impl KernelRunRecord {
                 .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
                 .unwrap_or_default(),
             best_src: v.get("best_src").and_then(|x| x.as_str()).map(String::from),
+            // Absent in single-backend record files: no bandit ran.
+            arms: v
+                .get("arms")
+                .and_then(|x| x.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| {
+                            Some(ArmWeight {
+                                member: x.get("member")?.as_str()?.to_string(),
+                                operator: x.get("operator")?.as_str()?.to_string(),
+                                category: x.get("category")?.as_str()?.to_string(),
+                                pulls: x.get("pulls")?.as_f64()? as u64,
+                                mean_reward: x.get("mean_reward")?.as_f64()?,
+                            })
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
         })
     }
 }
@@ -340,6 +385,11 @@ pub struct Session<'a> {
     pub(super) best: Option<Candidate>,
     pub(super) best_pt: f64,
     pub(super) trajectory: Vec<f64>,
+    /// Per-cell routing bandit — `Some` only when the provider is a
+    /// multi-member ensemble (DESIGN.md §16). Lives here, not in the
+    /// shared provider, so arm state is scoped to one run and updated
+    /// only on the sequential trial-completion path.
+    pub(super) bandit: Option<Bandit>,
 }
 
 /// The op's starting kernel source (the dataset's "initial C++/CUDA
@@ -387,6 +437,7 @@ impl<'a> Session<'a> {
             best: None,
             best_pt: 0.0,
             trajectory: Vec::new(),
+            bandit: ctx.provider.routing().map(|spec| Bandit::new(&spec)),
         }
     }
 
@@ -504,6 +555,7 @@ impl<'a> Session<'a> {
             prompt_tokens: self.prompt_tokens,
             completion_tokens: self.completion_tokens,
             trajectory: self.trajectory,
+            arms: self.bandit.as_ref().map(|b| b.arms()).unwrap_or_default(),
             best_src: self.best.map(|b| b.src),
         }
     }

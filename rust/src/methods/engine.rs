@@ -44,7 +44,7 @@ use std::time::Instant;
 
 use crate::costmodel::price;
 use crate::evals::EvalOutcome;
-use crate::llm::{GenerationRequest, GenerationResponse};
+use crate::llm::{bandit, Bandit, GenerationRequest, GenerationResponse};
 use crate::population::{Candidate, Population};
 use crate::store::events::{EventJournal, TrialEvent, TrialEventKind};
 use crate::store::sha256_hex;
@@ -612,10 +612,16 @@ pub(super) fn run_trial(
         session.ctx,
         &session.rng,
         &session.insights,
+        session.bandit.as_ref(),
         session.pop.as_mut(),
         trial_idx,
         step,
     );
+    let gen_routing = assembled
+        .req
+        .route
+        .clone()
+        .map(|member| (member, assembled.req.operator.clone().unwrap_or_default()));
 
     // --- provider call (possibly overlapped) ------------------------
     let resp = match pool.as_deref_mut() {
@@ -640,7 +646,7 @@ pub(super) fn run_trial(
         None => session.ctx.provider.call(&assembled.req)?,
     };
 
-    finish_trial(session, trial_idx, assembled.parent, resp).map(Some)
+    finish_trial(session, trial_idx, assembled.parent, resp, gen_routing).map(Some)
 }
 
 /// Submit speculative provider calls for the predicted next trials,
@@ -660,10 +666,14 @@ fn speculate(session: &Session, state: &dyn MethodState, pool: &mut PrefetchPool
         if idx >= session.ctx.budget {
             break;
         }
+        // Speculative routing runs against the *current* arm state; a
+        // pending trial's bandit update changes the pick and the
+        // speculation simply hash-misses (throughput, not correctness).
         let a = assemble(
             session.ctx,
             &session.rng,
             &session.insights,
+            session.bandit.as_ref(),
             pop.as_mut(),
             idx,
             step,
@@ -688,6 +698,7 @@ fn assemble(
     ctx: &RunCtx,
     session_rng: &Rng,
     insights: &[InsightRecord],
+    routing_bandit: Option<&Bandit>,
     pop: &mut dyn Population,
     trial_idx: usize,
     step: &GenerateStep,
@@ -727,10 +738,17 @@ fn assemble(
     // backend reproduces the historical stream byte-for-byte.
     let prompt = render(&step.cfg, &guidance);
     let llm_seed = session_rng.derive_seed(&format!("llm/{trial_idx}"));
-    Assembled {
-        req: GenerationRequest::generate(ctx.model.name, &prompt, llm_seed),
-        parent,
+    let mut req = GenerationRequest::generate(ctx.model.name, &prompt, llm_seed);
+    // Ensemble routing (DESIGN.md §16): pick the member arm with the
+    // request's own llm seed (no new RNG derivations — the derivation
+    // order above is a byte-identity contract) and stamp the decision
+    // into the request, making it part of the request hash.
+    if let Some(b) = routing_bandit {
+        let operator = bandit::operator_tag(&step.instruction);
+        let member = b.select(&operator, &ctx.task.family, llm_seed);
+        req = req.with_routing(&operator, &ctx.task.family, &member);
     }
+    Assembled { req, parent }
 }
 
 fn outcome_label(outcome: &EvalOutcome) -> &'static str {
@@ -752,6 +770,10 @@ fn finish_trial(
     trial_idx: usize,
     parent: Option<Candidate>,
     resp: GenerationResponse,
+    // `(member, operator)` the generate call was routed to, when
+    // ensemble routing is active — its arm is rewarded from this
+    // trial's outcome.
+    gen_routing: Option<(String, String)>,
 ) -> Result<TrialReport> {
     let ctx = session.ctx;
     let mut group_prompt = resp.usage.prompt_tokens;
@@ -783,7 +805,12 @@ fn finish_trial(
             while !report.pass() && attempt < max_attempts && session.budget_left() > 0 {
                 let repair_seed =
                     session.rng.derive_seed(&format!("repair/{trial_idx}/{attempt}"));
-                let req = GenerationRequest::repair(ctx.model.name, &text, &report, repair_seed);
+                let mut req =
+                    GenerationRequest::repair(ctx.model.name, &text, &report, repair_seed);
+                if let Some(b) = &session.bandit {
+                    let member = b.select("repair", &ctx.task.family, repair_seed);
+                    req = req.with_routing("repair", &ctx.task.family, &member);
+                }
                 let fix = ctx.provider.call(&req)?;
                 group_prompt += fix.usage.prompt_tokens;
                 group_completion += fix.usage.completion_tokens;
@@ -794,6 +821,19 @@ fn finish_trial(
                 text = fix.text;
                 report = ctx.evaluator.guard_check(&text, ctx.task);
                 repairs.push((attempt, report.pass()));
+                // Repair-arm feedback: did the routed member's fix pass
+                // stage 0? Updated here, on the sequential completion
+                // path, like every other arm update.
+                if let Some(member) = req.route.clone() {
+                    if let Some(b) = &mut session.bandit {
+                        b.update(
+                            &member,
+                            "repair",
+                            &ctx.task.family,
+                            bandit::repair_reward(report.pass()),
+                        );
+                    }
+                }
                 attempt += 1;
             }
             if initially_failed && report.pass() {
@@ -867,6 +907,20 @@ fn finish_trial(
         .push(session.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0));
 
     let speedup = if cand.valid() { cand.true_speedup } else { 0.0 };
+    // Generate-arm feedback: reward the routed member from the trial's
+    // final outcome (the bandit's only mutation points are this one and
+    // the repair loop above — both on the sequential completion path,
+    // which is what makes arm state `--prefetch`-independent).
+    if let Some((member, operator)) = gen_routing {
+        if let Some(b) = &mut session.bandit {
+            b.update(
+                &member,
+                &operator,
+                &ctx.task.family,
+                bandit::trial_reward(label, if speedup > 0.0 { Some(speedup) } else { None }),
+            );
+        }
+    }
     session.pop.insert(cand.clone());
     session.last = Some(cand);
     Ok(TrialReport {

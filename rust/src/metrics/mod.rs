@@ -282,6 +282,11 @@ pub struct TokenCostRow {
     ///
     /// [`ModelProfile::cost_usd`]: crate::llm::ModelProfile::cost_usd
     pub cost_usd: Option<f64>,
+    /// Median best speedup across the row's runs — the quality axis of
+    /// the cost/quality frontier `report tokens` renders.
+    pub median_speedup: f64,
+    /// Functionally-correct trials as % of all trials in the row.
+    pub correct_pct: f64,
 }
 
 impl TokenCostRow {
@@ -290,41 +295,88 @@ impl TokenCostRow {
     }
 }
 
+/// Is this provider label priced at the paper's Table 6 rates? True
+/// for the sim backend and for ensemble labels whose every member is
+/// the sim backend (their tokens all came from simulated models);
+/// false for anything with live-endpoint tokens in it.
+fn sim_priced(provider: &str) -> bool {
+    if provider == "sim" {
+        return true;
+    }
+    match crate::llm::ProviderSpec::parse(provider) {
+        Ok(crate::llm::ProviderSpec::Ensemble(spec)) => spec
+            .members
+            .iter()
+            .all(|m| matches!(m.backend, crate::llm::MemberBackend::Sim)),
+        _ => false,
+    }
+}
+
 /// Aggregate token/cost accounting per (provider, model), in stable
 /// (provider, model) order.
 pub fn token_cost_table(records: &[KernelRunRecord]) -> Vec<TokenCostRow> {
-    let mut map: BTreeMap<(String, String), TokenCostRow> = BTreeMap::new();
+    let mut map: BTreeMap<(String, String), Vec<&KernelRunRecord>> = BTreeMap::new();
     for r in records {
-        let row = map
-            .entry((r.provider.clone(), r.model.clone()))
-            .or_insert_with(|| TokenCostRow {
-                provider: r.provider.clone(),
-                model: r.model.clone(),
-                runs: 0,
-                prompt_tokens: 0,
-                completion_tokens: 0,
-                cost_usd: None,
-            });
-        row.runs += 1;
-        row.prompt_tokens += r.prompt_tokens;
-        row.completion_tokens += r.completion_tokens;
+        map.entry((r.provider.clone(), r.model.clone())).or_default().push(r);
     }
-    let mut rows: Vec<TokenCostRow> = map.into_values().collect();
-    for row in &mut rows {
-        // Table 6 pricing describes the three simulated models only.
-        // An "http" row's record.model is still the *profile* name the
-        // cell ran as (the endpoint's real model id and pricing are
-        // unknown), so pricing it at Table 6 rates would invent a
-        // bill; those rows render as unpriced. Replays of sim
-        // transcripts impersonate the "sim" label and price normally.
-        if row.provider != "sim" {
-            continue;
-        }
-        if let Some(p) = crate::llm::profile::by_name(&row.model) {
-            row.cost_usd = Some(p.cost_usd(row.prompt_tokens, row.completion_tokens));
+    map.into_iter()
+        .map(|((provider, model), recs)| {
+            let prompt_tokens: u64 = recs.iter().map(|r| r.prompt_tokens).sum();
+            let completion_tokens: u64 = recs.iter().map(|r| r.completion_tokens).sum();
+            let trials: usize = recs.iter().map(|r| r.trials).sum();
+            let correct: usize = recs.iter().map(|r| r.correct_trials).sum();
+            let speedups: Vec<f64> = recs.iter().map(|r| r.best_speedup).collect();
+            // Table 6 pricing describes the three simulated models
+            // only. An "http" row's record.model is still the
+            // *profile* name the cell ran as (the endpoint's real
+            // model id and pricing are unknown), so pricing it at
+            // Table 6 rates would invent a bill; those rows render as
+            // unpriced. Replays of sim transcripts impersonate the
+            // "sim" label and price normally, as do all-sim ensembles.
+            let cost_usd = if sim_priced(&provider) {
+                crate::llm::profile::by_name(&model)
+                    .map(|p| p.cost_usd(prompt_tokens, completion_tokens))
+            } else {
+                None
+            };
+            TokenCostRow {
+                provider,
+                model,
+                runs: recs.len(),
+                prompt_tokens,
+                completion_tokens,
+                cost_usd,
+                median_speedup: median(&speedups),
+                correct_pct: 100.0 * correct as f64 / trials.max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Learned bandit arm state merged across records (DESIGN.md §16):
+/// pulls sum, means combine pull-weighted, sorted by
+/// (member, operator, category). Empty unless some record ran a
+/// multi-member ensemble.
+pub fn arm_weight_table(records: &[KernelRunRecord]) -> Vec<crate::llm::ArmWeight> {
+    let mut map: BTreeMap<(String, String, String), (u64, f64)> = BTreeMap::new();
+    for r in records {
+        for a in &r.arms {
+            let e = map
+                .entry((a.member.clone(), a.operator.clone(), a.category.clone()))
+                .or_insert((0, 0.0));
+            e.0 += a.pulls;
+            e.1 += a.mean_reward * a.pulls as f64;
         }
     }
-    rows
+    map.into_iter()
+        .map(|((member, operator, category), (pulls, reward_sum))| crate::llm::ArmWeight {
+            member,
+            operator,
+            category,
+            pulls,
+            mean_reward: if pulls == 0 { 0.0 } else { reward_sum / pulls as f64 },
+        })
+        .collect()
 }
 
 /// Figure-1 point: overall median speedup vs functional-correctness
@@ -581,6 +633,7 @@ mod tests {
             completion_tokens: 50,
             trajectory: vec![],
             best_src: None,
+            arms: vec![],
         }
     }
 
@@ -605,6 +658,51 @@ mod tests {
         assert_eq!(sim.prompt_tokens, 2_000_000);
         // 2 Mtok prompt @ $2 + 2 Mtok completion @ $8 = $20.
         assert!((sim.cost_usd.unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_cost_table_prices_all_sim_ensembles_and_carries_quality() {
+        let mut a = rec("M", "a", 1, 0, 2.0, true);
+        a.provider = "ensemble:[sim@0.5,sim#alt@0.5,x=0.25]".into();
+        a.prompt_tokens = 1_000_000;
+        a.completion_tokens = 1_000_000;
+        let mut b = rec("M", "b", 1, 0, 4.0, true);
+        b.provider = "ensemble:[sim@0.5,http@0.5,x=0.25]".into();
+        let rows = token_cost_table(&[a, b]);
+        assert_eq!(rows.len(), 2);
+        let all_sim = rows.iter().find(|r| r.provider.contains("alt")).unwrap();
+        // 1 Mtok prompt @ $2 + 1 Mtok completion @ $8 = $10: an
+        // all-sim ensemble's tokens are all Table-6 tokens.
+        assert!((all_sim.cost_usd.unwrap() - 10.0).abs() < 1e-9);
+        assert!((all_sim.median_speedup - 2.0).abs() < 1e-9);
+        assert!((all_sim.correct_pct - 60.0).abs() < 1e-9); // 27/45
+        let mixed = rows.iter().find(|r| r.provider.contains("http")).unwrap();
+        assert!(mixed.cost_usd.is_none(), "http member tokens priced at sim rates");
+    }
+
+    #[test]
+    fn arm_weight_table_merges_pull_weighted() {
+        use crate::llm::ArmWeight;
+        let arm = |member: &str, pulls: u64, mean: f64| ArmWeight {
+            member: member.into(),
+            operator: "mutate".into(),
+            category: "matmul".into(),
+            pulls,
+            mean_reward: mean,
+        };
+        let mut a = rec("M", "a", 1, 0, 2.0, true);
+        a.arms = vec![arm("fast", 3, 1.0), arm("slow", 1, 0.0)];
+        let mut b = rec("M", "a", 1, 1, 2.0, true);
+        b.arms = vec![arm("fast", 1, 0.2)];
+        let plain = rec("M", "b", 1, 0, 2.0, true); // no arms: ignored
+        let merged = arm_weight_table(&[a, b, plain]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].member, "fast");
+        assert_eq!(merged[0].pulls, 4);
+        // (3*1.0 + 1*0.2) / 4 = 0.8
+        assert!((merged[0].mean_reward - 0.8).abs() < 1e-9);
+        assert_eq!(merged[1].member, "slow");
+        assert_eq!(merged[1].pulls, 1);
     }
 
     #[test]

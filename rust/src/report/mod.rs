@@ -126,19 +126,23 @@ pub fn validity(records: &[KernelRunRecord]) -> String {
     out
 }
 
-/// Per-provider/model token usage and modeled API cost (the provider
-/// seam's accounting view, DESIGN.md §12; pricing per paper Table 6).
+/// Per-provider/model token usage, modeled API cost, and the quality
+/// side of the frontier — median speedup and correctness per row, so
+/// cost and quality read off one table (the provider seam's accounting
+/// view, DESIGN.md §12/§16; pricing per paper Table 6). When any
+/// record ran a multi-member ensemble, the learned bandit arm weights
+/// are appended.
 pub fn tokens(records: &[KernelRunRecord]) -> String {
     let rows = metrics::token_cost_table(records);
     let mut out = String::new();
-    writeln!(out, "TOKENS — usage and modeled API cost per provider x model").unwrap();
+    writeln!(out, "TOKENS — cost/quality frontier per provider x model").unwrap();
     writeln!(
         out,
-        "{:<10} {:<16} {:>6} {:>14} {:>14} {:>12}",
-        "Provider", "Model", "Runs", "Prompt tok", "Compl. tok", "Cost USD"
+        "{:<10} {:<16} {:>6} {:>14} {:>14} {:>12} {:>9} {:>10}",
+        "Provider", "Model", "Runs", "Prompt tok", "Compl. tok", "Cost USD", "Median x", "Correct %"
     )
     .unwrap();
-    writeln!(out, "{}", hr(78)).unwrap();
+    writeln!(out, "{}", hr(98)).unwrap();
     let mut total_tokens = 0u64;
     let mut total_cost = 0.0f64;
     let mut any_unpriced = false;
@@ -156,8 +160,15 @@ pub fn tokens(records: &[KernelRunRecord]) -> String {
         total_tokens += row.total_tokens();
         writeln!(
             out,
-            "{:<10} {:<16} {:>6} {:>14} {:>14} {:>12}",
-            row.provider, row.model, row.runs, row.prompt_tokens, row.completion_tokens, cost
+            "{:<10} {:<16} {:>6} {:>14} {:>14} {:>12} {:>9.2} {:>10.1}",
+            row.provider,
+            row.model,
+            row.runs,
+            row.prompt_tokens,
+            row.completion_tokens,
+            cost,
+            row.median_speedup,
+            row.correct_pct
         )
         .unwrap();
     }
@@ -169,6 +180,26 @@ pub fn tokens(records: &[KernelRunRecord]) -> String {
         if any_unpriced { " (+ unpriced models)" } else { "" }
     )
     .unwrap();
+    let arms = metrics::arm_weight_table(records);
+    if !arms.is_empty() {
+        writeln!(out).unwrap();
+        writeln!(out, "ARM WEIGHTS — learned ensemble routing (DESIGN.md §16)").unwrap();
+        writeln!(
+            out,
+            "{:<12} {:<14} {:<16} {:>7} {:>12}",
+            "Member", "Operator", "Category", "Pulls", "Mean reward"
+        )
+        .unwrap();
+        writeln!(out, "{}", hr(65)).unwrap();
+        for a in &arms {
+            writeln!(
+                out,
+                "{:<12} {:<14} {:<16} {:>7} {:>12.3}",
+                a.member, a.operator, a.category, a.pulls, a.mean_reward
+            )
+            .unwrap();
+        }
+    }
     out
 }
 
@@ -548,6 +579,7 @@ mod tests {
                     prompt_tokens: 1000,
                     completion_tokens: 400,
                     trajectory: vec![],
+                    arms: vec![],
                     best_src: None,
                 });
             }
@@ -587,6 +619,28 @@ mod tests {
         // Table 6 rates: a nonzero dollar figure must appear.
         assert!(text.contains("total: 5600 tokens"), "{text}");
         assert!(!text.contains("n/a"), "{text}");
+        // No record carries bandit arms, so the routing section is absent.
+        assert!(!text.contains("ARM WEIGHTS"), "{text}");
+    }
+
+    #[test]
+    fn token_report_appends_arm_weights_for_ensemble_runs() {
+        let mut recs = records();
+        recs[0].provider = "ensemble:[sim@0.5,sim#alt@0.5,x=0.25]".into();
+        recs[0].arms = vec![crate::llm::ArmWeight {
+            member: "alt".into(),
+            operator: "rewrite".into(),
+            category: "matmul".into(),
+            pulls: 7,
+            mean_reward: 1.25,
+        }];
+        let text = tokens(&recs);
+        assert!(text.contains("ARM WEIGHTS"), "{text}");
+        assert!(text.contains("alt"), "{text}");
+        assert!(text.contains("rewrite"), "{text}");
+        assert!(text.contains("1.250"), "{text}");
+        assert!(text.contains("Median x"), "{text}");
+        assert!(text.contains("Correct %"), "{text}");
     }
 
     #[test]

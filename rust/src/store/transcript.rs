@@ -20,6 +20,14 @@
 //!   "prompt_tokens":N,"completion_tokens":N}` — one provider call.
 //!   `seed` is a decimal *string* (u64 seeds exceed the f64-exact
 //!   integer range our JSON numbers can carry).
+//! * `{"type":"route","key":"<sha256 of the request>","member":"alt"}`
+//!   — which ensemble member the engine's bandit routed the call to
+//!   (DESIGN.md §16). Written only by multi-member ensemble runs, next
+//!   to the call it routed, so single-backend journals are unchanged
+//!   byte-for-byte. Replay does not *need* these lines (the route is
+//!   part of the request hash, and the replay engine re-derives it),
+//!   but they make the journal a complete audit record of the bandit's
+//!   decisions.
 //!
 //! Durability matches the eval cache (DESIGN.md §14): call appends are
 //! staged in a [`GroupWriter`](super::GroupWriter) and committed at
@@ -43,6 +51,11 @@ use crate::{eyre, Result, WrapErr as _};
 /// Sidecar index key for the journal's `meta` line. Call keys are
 /// SHA-256 hex digests, so the `@` prefix cannot collide.
 const META_KEY: &str = "@meta";
+
+/// Sidecar index-key suffix for `route` lines: a route shares its
+/// request hash with the call it routed, so it is indexed under
+/// `<hash>#route` (`#` cannot appear in a hex digest).
+const ROUTE_SUFFIX: &str = "#route";
 
 /// One journaled provider call: everything the caller got back, plus
 /// the request identity needed to audit it.
@@ -73,6 +86,10 @@ enum Slot {
 pub struct TranscriptStore {
     path: PathBuf,
     map: RwLock<HashMap<String, Slot>>,
+    /// Journaled ensemble routing decisions, request hash → member
+    /// alias. Tiny (one short line per routed call), so hydrated
+    /// eagerly at open.
+    routes: RwLock<HashMap<String, String>>,
     /// Positioned-read handle for lazy [`Slot::OnDisk`] hydration.
     reader: std::fs::File,
     writer: Mutex<GroupWriter>,
@@ -114,6 +131,7 @@ impl TranscriptStore {
         let extract = |off: u64, line: &str| match parse_line(line) {
             Ok(Line::Meta { .. }) => Some(META_KEY.to_string()),
             Ok(Line::Call { key, .. }) => Some(key),
+            Ok(Line::Route { key, .. }) => Some(format!("{key}{ROUTE_SUFFIX}")),
             Err(e) => {
                 eprintln!("warning: transcript {display}: skipping bad line at byte {off}: {e}");
                 None
@@ -122,6 +140,7 @@ impl TranscriptStore {
         let loaded = index::load(&path, mode, &extract).context("indexing transcript")?;
         let reader = std::fs::File::open(&path).context("opening transcript for read")?;
         let mut map = HashMap::new();
+        let mut routes = HashMap::new();
         let mut source = None;
         for r in loaded.records {
             if r.key == META_KEY {
@@ -131,6 +150,15 @@ impl TranscriptStore {
                         source = Some(provider);
                     }
                 }
+            } else if let Some(hash) = r.key.strip_suffix(ROUTE_SUFFIX) {
+                if !routes.contains_key(hash) {
+                    if let Ok(Line::Route { key, member }) = read_record(&reader, r.offset, r.len)
+                    {
+                        if key == hash {
+                            routes.insert(key, member);
+                        }
+                    }
+                }
             } else {
                 map.entry(r.key).or_insert(Slot::OnDisk { offset: r.offset, len: r.len });
             }
@@ -138,6 +166,7 @@ impl TranscriptStore {
         Ok(Arc::new(Self {
             path,
             map: RwLock::new(map),
+            routes: RwLock::new(routes),
             reader,
             writer: Mutex::new(GroupWriter::new(writer)),
             source: RwLock::new(source),
@@ -215,6 +244,7 @@ impl TranscriptStore {
                 let why = match other {
                     Ok(Line::Call { key: k, .. }) => format!("record at byte {offset} keyed `{k}`"),
                     Ok(Line::Meta { .. }) => format!("record at byte {offset} is a meta line"),
+                    Ok(Line::Route { .. }) => format!("record at byte {offset} is a route line"),
                     Err(e) => format!("record at byte {offset} unreadable: {e}"),
                 };
                 eprintln!(
@@ -244,6 +274,35 @@ impl TranscriptStore {
         Ok(())
     }
 
+    /// Append one ensemble routing decision (DESIGN.md §16). Same
+    /// dedup-first-wins and group-commit staging as [`append`]: a
+    /// request's route is as immutable as its response.
+    ///
+    /// [`append`]: TranscriptStore::append
+    pub fn append_route(&self, key: &str, member: &str) -> Result<()> {
+        {
+            let mut g = self.routes.write().unwrap();
+            if g.contains_key(key) {
+                return Ok(());
+            }
+            g.insert(key.to_string(), member.to_string());
+        }
+        let line = route_line(key, member).to_string();
+        self.writer.lock().unwrap().append_line(line.as_bytes())?;
+        Ok(())
+    }
+
+    /// Journaled routing decision for a request hash, if any.
+    pub fn route(&self, key: &str) -> Option<String> {
+        self.routes.read().unwrap().get(key).cloned()
+    }
+
+    /// Journaled routing decisions (multi-member ensemble runs only;
+    /// 0 for every single-backend journal).
+    pub fn route_count(&self) -> usize {
+        self.routes.read().unwrap().len()
+    }
+
     /// Merge one journal line uploaded by another process (the
     /// campaign coordinator's transcript-merge path, DESIGN.md §15).
     /// A fresh `call` line is appended through the normal dedup path;
@@ -261,6 +320,13 @@ impl TranscriptStore {
                     return Ok(false);
                 }
                 self.append(&key, entry)?;
+                Ok(true)
+            }
+            Line::Route { key, member } => {
+                if self.route(&key).is_some() {
+                    return Ok(false);
+                }
+                self.append_route(&key, &member)?;
                 Ok(true)
             }
         }
@@ -291,6 +357,7 @@ impl TranscriptStore {
 enum Line {
     Meta { provider: String },
     Call { key: String, entry: TranscriptEntry },
+    Route { key: String, member: String },
 }
 
 /// `pread` + parse one journal line by its indexed byte extent.
@@ -314,6 +381,14 @@ fn call_line(key: &str, e: &TranscriptEntry) -> Json {
         ("insight", Json::Str(e.insight.clone())),
         ("prompt_tokens", Json::Num(e.prompt_tokens as f64)),
         ("completion_tokens", Json::Num(e.completion_tokens as f64)),
+    ])
+}
+
+fn route_line(key: &str, member: &str) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("route".into())),
+        ("key", Json::Str(key.to_string())),
+        ("member", Json::Str(member.to_string())),
     ])
 }
 
@@ -351,6 +426,10 @@ fn parse_line(line: &str) -> Result<Line> {
             };
             Ok(Line::Call { key, entry })
         }
+        Some("route") => Ok(Line::Route {
+            key: get_str(&v, "key")?,
+            member: get_str(&v, "member")?,
+        }),
         other => Err(eyre!("unknown transcript line type {other:?}")),
     }
 }
@@ -440,6 +519,45 @@ mod tests {
         assert_eq!(back.len(), 1);
         assert_eq!(back.lookup("k1").unwrap(), sample(9));
         std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    #[test]
+    fn route_lines_roundtrip_dedup_and_merge() {
+        let path = tmpfile("route");
+        std::fs::remove_file(&path).ok();
+        {
+            let t = TranscriptStore::open(&path).unwrap();
+            t.record_source("ensemble:[sim@1,sim#alt@1,x=0.25]").unwrap();
+            t.append("k1", sample(5)).unwrap();
+            t.append_route("k1", "alt").unwrap();
+            // First route wins, like call dedup.
+            t.append_route("k1", "sim").unwrap();
+            t.flush().unwrap();
+        }
+        let t = TranscriptStore::open(&path).unwrap();
+        assert_eq!(t.route("k1").as_deref(), Some("alt"));
+        assert_eq!(t.route_count(), 1);
+        assert!(t.route("k2").is_none());
+        // Calls and routes share the hash key without colliding.
+        assert_eq!(t.lookup("k1").unwrap(), sample(5));
+        assert_eq!(t.len(), 1);
+
+        // Wire merge: route lines ingest once, dedup after.
+        let dst = tmpfile("route_dst");
+        std::fs::remove_file(&dst).ok();
+        let d = TranscriptStore::open(&dst).unwrap();
+        d.record_source("ensemble:[sim@1,sim#alt@1,x=0.25]").unwrap();
+        let lines: Vec<String> = std::fs::read_to_string(&path)
+            .unwrap()
+            .lines()
+            .map(String::from)
+            .collect();
+        let merged: usize = lines.iter().filter(|l| d.ingest_line(l).unwrap()).count();
+        assert_eq!(merged, 2, "one call + one route");
+        assert!(lines.iter().all(|l| !d.ingest_line(l).unwrap()));
+        assert_eq!(d.route("k1").as_deref(), Some("alt"));
+        std::fs::remove_file(&path).ok();
         std::fs::remove_file(&dst).ok();
     }
 

@@ -353,6 +353,7 @@ mod legacy {
                 prompt_tokens: self.prompt_tokens,
                 completion_tokens: self.completion_tokens,
                 trajectory: self.trajectory,
+                arms: vec![],
                 best_src: self.best.map(|b| b.src),
             }
         }
