@@ -165,6 +165,7 @@ fn main() {
         provider: &provider,
         budget: usize::MAX / 2,
         repair: RepairPolicy::Off,
+        feedback: Default::default(),
     };
     let mut session = Session::start(&ctx, "bench", Box::new(SingleBest::new()));
     session.seed(baseline_src(&ctx));
@@ -279,6 +280,7 @@ fn pipelined_trials_per_sec(
         provider: &provider,
         budget,
         repair: RepairPolicy::Off,
+        feedback: Default::default(),
     };
     let method = methods::by_name("evoengineer-free").unwrap();
     let opts = EngineOpts { prefetch, ..EngineOpts::default() };

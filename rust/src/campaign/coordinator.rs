@@ -45,13 +45,14 @@
 
 use std::path::Path;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
-use crate::metrics::PlaneStats;
+use crate::metrics::{EventStats, PlaneStats};
 use crate::methods::KernelRunRecord;
 use crate::store::events::{self, EventJournal, TrialEvent};
 use crate::store::{EvalStore, TranscriptStore};
 use crate::tasks::TaskRegistry;
-use crate::util::httpwire::{Request, Server};
+use crate::util::httpwire::{Request, Response, Server};
 use crate::util::json::{self, Json};
 use crate::{eyre, Result};
 
@@ -98,6 +99,10 @@ struct State {
     repair: String,
     provider: String,
     prefetch: usize,
+    goal: String,
+    /// Serve start time, for the `/metrics` uptime/throughput gauges
+    /// (observability only — never feeds determinism-bearing state).
+    started: Instant,
 }
 
 /// A running `campaign serve` daemon. [`Coordinator::wait`] blocks
@@ -200,6 +205,8 @@ impl Coordinator {
             repair: cfg.repair.label(),
             provider: cfg.provider.label(),
             prefetch: cfg.prefetch,
+            goal: cfg.goal.label(),
+            started: Instant::now(),
         });
 
         let handler = {
@@ -283,7 +290,7 @@ pub fn serve(
         };
         eprintln!(
             "campaign coordinator: serving {grid} cells on {}{} \
-             (budget {}, repair {}, provider {})",
+             (budget {}, repair {}, provider {}, goal {})",
             coord.url(),
             if resumed > 0 {
                 format!(", {resumed} resumed from checkpoint")
@@ -293,6 +300,7 @@ pub fn serve(
             coord.state.budget,
             coord.state.repair,
             coord.state.provider,
+            coord.state.goal,
         );
     }
     coord.wait()
@@ -309,8 +317,8 @@ fn ok_json() -> Json {
     Json::obj(vec![("ok", Json::Bool(true))])
 }
 
-fn handle(state: &State, req: &Request) -> (u16, Json) {
-    match (req.method.as_str(), req.path.as_str()) {
+fn handle(state: &State, req: &Request) -> Response {
+    let (code, body) = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/config") => (
             200,
             Json::obj(vec![
@@ -318,6 +326,7 @@ fn handle(state: &State, req: &Request) -> (u16, Json) {
                 ("repair", Json::Str(state.repair.clone())),
                 ("provider", Json::Str(state.provider.clone())),
                 ("prefetch", Json::Num(state.prefetch as f64)),
+                ("goal", Json::Str(state.goal.clone())),
             ]),
         ),
         ("POST", "/claim") => claim(state),
@@ -328,8 +337,125 @@ fn handle(state: &State, req: &Request) -> (u16, Json) {
         ("POST", "/fail") => with_body(state, req, fail),
         ("GET", "/warm") => warm(state),
         ("GET", "/status") => status(state),
+        // The one non-JSON endpoint: Prometheus-style text scrape.
+        ("GET", "/metrics") => return metrics_text(state),
         _ => (404, err_json(format!("no such endpoint: {} {}", req.method, req.path))),
+    };
+    Response::json(code, body)
+}
+
+/// `GET /metrics`: the live sweep state in Prometheus text exposition
+/// format, folded from the same per-cell event buffers the finalized
+/// journal is rewritten from. Purely observational — scraping never
+/// touches determinism-bearing state (wall-clock appears only in the
+/// uptime/throughput gauges, which exist for dashboards, not records).
+fn metrics_text(state: &State) -> Response {
+    let g = lock_tolerant(&state.inner);
+    let s = &g.stats;
+    let mut ev = EventStats::default();
+    for cell in &g.cells {
+        for e in &cell.events {
+            ev.fold(e);
+        }
     }
+    // Per-goal completions: runs and valid runs keyed by the record's
+    // goal label (one key on single-goal sweeps; stable BTreeMap order).
+    let mut goals: std::collections::BTreeMap<&str, (u64, u64)> =
+        std::collections::BTreeMap::new();
+    for cell in &g.cells {
+        if let Some(r) = &cell.record {
+            let slot = goals.entry(r.goal.as_str()).or_insert((0, 0));
+            slot.0 += 1;
+            if r.any_valid {
+                slot.1 += 1;
+            }
+        }
+    }
+    let uptime = state.started.elapsed().as_secs_f64();
+    let trials = ev.groups as f64;
+    let mut out = String::with_capacity(2048);
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+        ));
+    };
+    gauge("campaign_uptime_seconds", "Seconds since the coordinator started.", uptime);
+    gauge(
+        "campaign_trials_per_second",
+        "Completed trial groups per second of uptime.",
+        if uptime > 0.0 { trials / uptime } else { 0.0 },
+    );
+    gauge("campaign_grid_cells", "Total cells in the sweep grid.", s.grid as f64);
+    gauge("campaign_cells_resumed", "Cells pre-filled from a checkpoint.", s.resumed as f64);
+    gauge("campaign_cells_done", "Cells with a completed record.", g.done as f64);
+    gauge("campaign_claims_total", "Cell claims issued.", s.claims as f64);
+    gauge("campaign_reclaims_total", "Cells re-offered after a release.", s.reclaims as f64);
+    gauge("campaign_completions_total", "Records accepted.", s.completions as f64);
+    gauge(
+        "campaign_duplicate_completions_total",
+        "Stale or duplicate completions rejected.",
+        s.duplicate_completions as f64,
+    );
+    gauge("campaign_event_batches_total", "Event batches accepted.", s.event_batches as f64);
+    gauge(
+        "campaign_stale_event_batches_total",
+        "Event batches rejected for a stale epoch.",
+        s.stale_event_batches as f64,
+    );
+    gauge("campaign_events_total", "Trial events buffered.", s.events as f64);
+    gauge(
+        "campaign_eval_cache_lines_merged_total",
+        "Eval-cache lines dedup-merged from worker uploads.",
+        s.eval_lines_merged as f64,
+    );
+    gauge(
+        "campaign_transcript_lines_merged_total",
+        "Transcript lines dedup-merged from worker uploads.",
+        s.transcript_lines_merged as f64,
+    );
+    gauge("evo_runs_started_total", "RunStarted events seen.", ev.runs_started as f64);
+    gauge("evo_runs_finished_total", "RunFinished events seen.", ev.runs_finished as f64);
+    gauge("evo_trial_groups_total", "Trial groups completed.", trials);
+    gauge(
+        "evo_guard_rejected_total",
+        "Candidates rejected by the stage-0 guard.",
+        ev.guard_failed as f64,
+    );
+    gauge("evo_repair_attempts_total", "Repair attempts made.", ev.repair_attempts as f64);
+    gauge("evo_repairs_mended_total", "Repairs that mended a candidate.", ev.repairs_mended as f64);
+    gauge("evo_new_bests_total", "New-best promotions.", ev.new_bests as f64);
+    gauge("evo_prompt_tokens_total", "Prompt tokens spent.", ev.prompt_tokens as f64);
+    gauge(
+        "evo_completion_tokens_total",
+        "Completion tokens spent.",
+        ev.completion_tokens as f64,
+    );
+    // Labeled families: trial outcomes by evaluation stage verdict,
+    // and per-goal completion/validity counters.
+    out.push_str(
+        "# HELP evo_trials_total Trials by evaluation outcome.\n\
+         # TYPE evo_trials_total gauge\n",
+    );
+    for (outcome, n) in &ev.outcomes {
+        out.push_str(&format!("evo_trials_total{{outcome=\"{outcome}\"}} {n}\n"));
+    }
+    out.push_str(
+        "# HELP campaign_goal_runs_total Completed records by --goal label.\n\
+         # TYPE campaign_goal_runs_total gauge\n",
+    );
+    for (goal, (runs, _)) in &goals {
+        out.push_str(&format!("campaign_goal_runs_total{{goal=\"{goal}\"}} {runs}\n"));
+    }
+    out.push_str(
+        "# HELP campaign_goal_valid_runs_total Records with a valid improvement, by --goal label.\n\
+         # TYPE campaign_goal_valid_runs_total gauge\n",
+    );
+    for (goal, (_, valid)) in &goals {
+        out.push_str(&format!(
+            "campaign_goal_valid_runs_total{{goal=\"{goal}\"}} {valid}\n"
+        ));
+    }
+    Response::text(200, out)
 }
 
 fn with_body(

@@ -42,6 +42,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::evals::Evaluator;
+use crate::feedback::FeedbackConfig;
 use crate::llm::{profile, provider, ModelProfile, ProviderConfig, ProviderSpec, ReusePolicy};
 use crate::methods::engine::{EventSink, TrialGate};
 use crate::methods::{
@@ -69,6 +70,10 @@ pub struct CampaignConfig {
     /// Stage-0 guard / repair policy applied to every cell (the
     /// campaign-level ablation axis; DESIGN.md §11).
     pub repair: RepairPolicy,
+    /// Profile-guided feedback configuration applied to every cell
+    /// (`--goal`, DESIGN.md §17): search objective + whether measured
+    /// performance profiles are attached to generation prompts.
+    pub goal: FeedbackConfig,
     /// Generation backend for every cell (DESIGN.md §12): the SimLLM,
     /// a recorded transcript journal, or a live HTTP endpoint.
     pub provider: ProviderSpec,
@@ -140,6 +145,7 @@ impl Default for CampaignConfig {
             max_ops: 0,
             budget: crate::TRIAL_BUDGET,
             repair: RepairPolicy::Off,
+            goal: FeedbackConfig::default(),
             provider: ProviderSpec::Sim,
             transcripts: None,
             concurrency: 0,
@@ -340,6 +346,9 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
                         family: task.family.clone(),
                         src: src.clone(),
                         speedup: r.best_speedup,
+                        // Journaled records carry no timing; rank by
+                        // raw speedup (== default-goal fitness).
+                        rank: r.best_speedup,
                     });
                 }
             }
@@ -432,6 +441,7 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         provider: llm_provider,
         budget: cfg.budget,
         repair: cfg.repair,
+        feedback: cfg.goal,
         prefetch: cfg.prefetch,
         trial_gate,
     };

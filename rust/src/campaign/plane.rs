@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::evals::Evaluator;
+use crate::feedback::FeedbackConfig;
 use crate::llm::{ModelProfile, Provider};
 use crate::methods::engine::{self, EngineOpts, EventSink, Interrupted, TrialGate};
 use crate::methods::{Archive, KernelRunRecord, Method, RepairPolicy, RunCtx};
@@ -114,6 +115,7 @@ pub struct WorkerEnv<'a> {
     pub provider: Arc<dyn Provider>,
     pub budget: usize,
     pub repair: RepairPolicy,
+    pub feedback: FeedbackConfig,
     pub prefetch: usize,
     pub trial_gate: Option<Arc<TrialGate>>,
 }
@@ -135,6 +137,7 @@ pub fn worker_loop(plane: &dyn WorkPlane, env: &WorkerEnv) -> Result<()> {
             archive: env.archive,
             budget: env.budget,
             repair: env.repair,
+            feedback: env.feedback,
             provider: env.provider.as_ref(),
         };
         let opts = EngineOpts {

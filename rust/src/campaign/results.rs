@@ -155,6 +155,7 @@ mod tests {
             repaired_trials: 1,
             repair_attempts: 2,
             repair_policy: "repair:2".into(),
+            goal: "speedup".into(),
             provider: "sim".into(),
             best_speedup: 2.5,
             best_pytorch_speedup: 1.2,

@@ -591,6 +591,11 @@ pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSumm
     let budget = get_num(&config, "budget")? as usize;
     let prefetch = get_num(&config, "prefetch")? as usize;
     let repair = RepairPolicy::parse(&get_str(&config, "repair")?)?;
+    // Absent on pre-goal coordinators: default (== plain speedup).
+    let feedback = match config.get("goal").and_then(|g| g.as_str()) {
+        Some(label) => crate::feedback::FeedbackConfig::parse(label)?,
+        None => crate::feedback::FeedbackConfig::default(),
+    };
     // The coordinator-resolved spec is authoritative (it already
     // resolved any `ensemble:@file.json` form, so workers need no local
     // config file). A locally-passed `--provider` is only an assertion.
@@ -671,6 +676,7 @@ pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSumm
         provider: llm_provider,
         budget,
         repair,
+        feedback,
         prefetch,
         trial_gate,
     };

@@ -1,0 +1,429 @@
+//! Profile-guided feedback subsystem (DESIGN.md §17): closes the
+//! generate → measure → re-prompt loop the paper's own prompt template
+//! centers (its `prof_string` feeds the incumbent's runtime and
+//! profiling counters back into every generation request).
+//!
+//! Two cooperating pieces:
+//!
+//! * [`ProfileReport`] — a per-candidate performance profile assembled
+//!   from the evaluator's [`EvalOutcome`] (noise-free timing, roofline
+//!   bound, occupancy, traffic) plus guard diagnostics for rejected
+//!   candidates, rendered deterministically into the structured
+//!   `## PERFORMANCE PROFILE` prompt section. Every number in the
+//!   rendering derives from journaled eval records, so a replayed
+//!   campaign re-renders byte-identical prompts with zero live calls.
+//! * [`Goal`] / [`Objective`] — the `--goal speedup|memory|balanced`
+//!   axis: a multi-objective fitness scalar used for best-candidate
+//!   selection, archive ranking and bandit rewards, plus a one-line
+//!   prompt emphasis. `Goal::Speedup` is the identity fitness, so the
+//!   default configuration is bit-for-bit the historical behaviour.
+//!
+//! Determinism contract: [`ProfileReport::render`] uses fixed-width
+//! formatting of noise-free quantities only (`true_speedup`, the
+//! stored [`Timing`]), never the measured (noise-bearing) values —
+//! same record, same section bytes, on every replay.
+
+use crate::costmodel::{Gpu, Timing};
+use crate::evals::EvalOutcome;
+use crate::tasks::OpTask;
+
+/// The search objective (`--goal`). The snippet-3 `goal` knob: same
+/// ops, same provider, materially different search behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Goal {
+    /// Maximize measured speedup (the paper's default objective).
+    #[default]
+    Speedup,
+    /// Prefer candidates that keep DRAM pressure low: speedup scaled
+    /// down by the memory-bound fraction of the modeled runtime.
+    Memory,
+    /// The validity/performance balance the paper centers: speedup
+    /// scaled by achieved hardware utilization.
+    Balanced,
+}
+
+/// A search objective: prompt emphasis plus the fitness scalar used
+/// for archive ranking, best-candidate selection and bandit rewards.
+pub trait Objective {
+    /// Stable objective name (the `--goal` token).
+    fn name(&self) -> &'static str;
+
+    /// One-line prompt emphasis rendered under `## OPTIMIZATION GOAL`.
+    fn emphasis(&self) -> &'static str;
+
+    /// Fitness scalar for a candidate with measured `speedup` and the
+    /// evaluator's noise-free `timing` (absent for candidates whose
+    /// timing was never journaled, e.g. archive entries re-seeded from
+    /// a checkpoint). MUST be the identity on `speedup` for the
+    /// default objective — archive and best-candidate comparisons are
+    /// bit-identical to pre-feedback behaviour under `--goal speedup`.
+    fn fitness(&self, speedup: f64, timing: Option<&Timing>) -> f64;
+}
+
+impl Objective for Goal {
+    fn name(&self) -> &'static str {
+        match self {
+            Goal::Speedup => "speedup",
+            Goal::Memory => "memory",
+            Goal::Balanced => "balanced",
+        }
+    }
+
+    fn emphasis(&self) -> &'static str {
+        match self {
+            Goal::Speedup => {
+                "Minimize kernel execution time above all else."
+            }
+            Goal::Memory => {
+                "Minimize DRAM traffic and memory pressure: prefer staged reuse, \
+                 fused epilogues and narrower working sets, even at a small cost \
+                 in raw execution time."
+            }
+            Goal::Balanced => {
+                "Balance execution time against hardware utilization: prefer \
+                 schedules that keep occupancy and achieved bandwidth/compute \
+                 efficiency high while still reducing time."
+            }
+        }
+    }
+
+    fn fitness(&self, speedup: f64, timing: Option<&Timing>) -> f64 {
+        match (self, timing) {
+            // Identity: `--goal speedup` comparisons are bitwise the
+            // historical `speedup > best.speedup`.
+            (Goal::Speedup, _) => speedup,
+            (Goal::Memory, Some(t)) => {
+                // Memory-bound fraction of the modeled runtime; a
+                // kernel that shifted work off DRAM ranks above an
+                // equally-fast one that saturates it.
+                let mem_fraction = if t.time > 0.0 {
+                    (t.t_mem / t.time).clamp(0.0, 1.0)
+                } else {
+                    1.0
+                };
+                speedup / (1.0 + mem_fraction)
+            }
+            (Goal::Balanced, Some(t)) => {
+                let utilization = t.eff_bw.max(t.eff_compute).clamp(0.0, 1.0);
+                speedup * (0.75 + 0.25 * utilization)
+            }
+            // No journaled timing (checkpoint-reseeded archive entry):
+            // fall back to the raw speedup.
+            (_, None) => speedup,
+        }
+    }
+}
+
+/// Parsed `--goal` configuration: the objective plus whether the
+/// rendered performance profile is attached to generation requests.
+/// `memory` and `balanced` imply the profile (the objective is defined
+/// in terms of it); `speedup+profile` turns the profile on while
+/// keeping the default fitness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FeedbackConfig {
+    pub goal: Goal,
+    /// Attach the rendered `## PERFORMANCE PROFILE` section to every
+    /// generation request that has a measured predecessor.
+    pub profile: bool,
+}
+
+impl FeedbackConfig {
+    /// Parse a `--goal` CLI value:
+    /// `speedup` | `speedup+profile` | `memory` | `balanced`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "" | "speedup" => Ok(FeedbackConfig { goal: Goal::Speedup, profile: false }),
+            "speedup+profile" => Ok(FeedbackConfig { goal: Goal::Speedup, profile: true }),
+            "memory" => Ok(FeedbackConfig { goal: Goal::Memory, profile: true }),
+            "balanced" => Ok(FeedbackConfig { goal: Goal::Balanced, profile: true }),
+            other => Err(crate::eyre!(
+                "unknown --goal `{other}` (speedup|speedup+profile|memory|balanced)"
+            )),
+        }
+    }
+
+    /// Stable label recorded with every run (round-trips through
+    /// [`Self::parse`]).
+    pub fn label(&self) -> String {
+        match (self.goal, self.profile) {
+            (Goal::Speedup, false) => "speedup".into(),
+            (Goal::Speedup, true) => "speedup+profile".into(),
+            (goal, _) => goal.name().into(),
+        }
+    }
+
+    /// The legacy configuration: default objective, no profile. Runs
+    /// under it are byte-identical to pre-feedback builds.
+    pub fn is_default(&self) -> bool {
+        *self == FeedbackConfig::default()
+    }
+}
+
+/// Per-candidate performance profile: what the evaluator measured,
+/// assembled for re-prompting. Built from the *previous* trial's
+/// outcome and attached to the next trial's [`GenerationRequest`]
+/// (`engine.rs` captures it at trial finish), so speculative prefetch
+/// requests — which cannot see the in-flight outcome — hash-miss
+/// rather than silently carrying a stale profile.
+///
+/// [`GenerationRequest`]: crate::llm::GenerationRequest
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub op: String,
+    /// Outcome bucket label ("ok", "guard_reject", "compile_fail",
+    /// "functional_fail", "runtime_fail").
+    pub outcome: String,
+    /// Noise-free speedup vs the op baseline (valid candidates only;
+    /// 1.0 otherwise — never the noise-bearing measured value).
+    pub true_speedup: f64,
+    /// Noise-free modeled kernel time and roofline counters (valid
+    /// candidates only).
+    pub timing: Option<Timing>,
+    /// Arithmetic intensity of the op (FLOP/byte) vs the card's ridge.
+    pub intensity: f64,
+    pub ridge: f64,
+    /// Failure findings: guard diagnostics, compile errors, numeric
+    /// mismatches — what the next generation should fix.
+    pub findings: Vec<String>,
+}
+
+impl ProfileReport {
+    /// Assemble the profile for one evaluated candidate.
+    pub fn from_outcome(task: &OpTask, outcome: &EvalOutcome, gpu: &Gpu) -> Self {
+        let intensity = if task.bytes_moved > 0.0 {
+            task.flops / task.bytes_moved
+        } else {
+            0.0
+        };
+        let mut report = ProfileReport {
+            op: task.name.clone(),
+            outcome: outcome_bucket(outcome).into(),
+            true_speedup: 1.0,
+            timing: None,
+            intensity,
+            ridge: gpu.ridge(),
+            findings: Vec::new(),
+        };
+        match outcome {
+            EvalOutcome::Ok(s) => {
+                report.true_speedup = s.true_speedup;
+                report.timing = Some(s.timing.clone());
+            }
+            EvalOutcome::GuardReject { diagnostics } => {
+                for d in diagnostics {
+                    report.findings.push(format!("{}: {}", d.code, d.message));
+                }
+            }
+            EvalOutcome::CompileFail { error } => {
+                report.findings.push(format!("compile: {}", one_line(error)));
+            }
+            EvalOutcome::FunctionalFail { max_abs_diff } => {
+                report
+                    .findings
+                    .push(format!("wrong numerics: max_abs_diff {max_abs_diff:.3e}"));
+            }
+            EvalOutcome::RuntimeFail { error } => {
+                report.findings.push(format!("runtime: {}", one_line(error)));
+            }
+        }
+        report
+    }
+
+    /// Render the `## PERFORMANCE PROFILE` section body (without the
+    /// header — the request composes it). Deterministic: fixed-width
+    /// formatting of noise-free quantities only.
+    pub fn render(&self, goal: Goal) -> String {
+        let mut out = String::with_capacity(256);
+        out.push_str(&format!("op: {}\n", self.op));
+        out.push_str(&format!("outcome: {}\n", self.outcome));
+        if let Some(t) = &self.timing {
+            out.push_str(&format!("speedup_vs_baseline: {:.3}\n", self.true_speedup));
+            out.push_str(&format!("time_us: {:.3}\n", t.time * 1e6));
+            out.push_str(&format!(
+                "bound: {:?}; occupancy: {:.2}; eff_bw: {:.2}; eff_compute: {:.2}; \
+                 traffic_bytes: {:.3e}; launches: {}\n",
+                t.bound, t.occupancy, t.eff_bw, t.eff_compute, t.traffic, t.launches
+            ));
+            out.push_str(&format!(
+                "memory_time_fraction: {:.2}\n",
+                if t.time > 0.0 { (t.t_mem / t.time).clamp(0.0, 1.0) } else { 1.0 }
+            ));
+        }
+        out.push_str(&format!(
+            "arithmetic_intensity: {:.2} flop/byte (roofline ridge {:.1})\n",
+            self.intensity, self.ridge
+        ));
+        for f in &self.findings {
+            out.push_str(&format!("finding: {f}\n"));
+        }
+        if goal != Goal::Speedup {
+            out.push_str(&format!("objective: {}\n", goal.name()));
+        }
+        out
+    }
+}
+
+/// Outcome bucket label for the profile (mirrors the event journal's
+/// outcome labels).
+fn outcome_bucket(outcome: &EvalOutcome) -> &'static str {
+    match outcome {
+        EvalOutcome::Ok(_) => "ok",
+        EvalOutcome::GuardReject { .. } => "guard_reject",
+        EvalOutcome::CompileFail { .. } => "compile_fail",
+        EvalOutcome::FunctionalFail { .. } => "functional_fail",
+        EvalOutcome::RuntimeFail { .. } => "runtime_fail",
+    }
+}
+
+/// First line of a multi-line error, bounded (profiles are prompt
+/// payload — a pathological error string must not blow the token
+/// budget).
+fn one_line(s: &str) -> String {
+    let line = s.lines().next().unwrap_or("");
+    let mut end = line.len().min(160);
+    while !line.is_char_boundary(end) {
+        end -= 1;
+    }
+    if end < line.len() {
+        format!("{}...", &line[..end])
+    } else {
+        line.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::BoundKind;
+
+    fn timing() -> Timing {
+        Timing {
+            time: 12.5e-6,
+            t_compute: 2.0e-6,
+            t_mem: 9.5e-6,
+            t_overhead: 1.0e-6,
+            traffic: 4.2e6,
+            occupancy: 0.67,
+            eff_compute: 0.21,
+            eff_bw: 0.84,
+            launches: 1,
+            bound: BoundKind::Memory,
+        }
+    }
+
+    #[test]
+    fn parse_label_roundtrip() {
+        for label in ["speedup", "speedup+profile", "memory", "balanced"] {
+            let cfg = FeedbackConfig::parse(label).unwrap();
+            assert_eq!(cfg.label(), label);
+        }
+        assert!(FeedbackConfig::parse("latency").is_err());
+        assert!(FeedbackConfig::parse("").unwrap().is_default());
+        // memory/balanced imply the profile.
+        assert!(FeedbackConfig::parse("memory").unwrap().profile);
+        assert!(FeedbackConfig::parse("balanced").unwrap().profile);
+        assert!(!FeedbackConfig::parse("speedup").unwrap().profile);
+    }
+
+    #[test]
+    fn speedup_fitness_is_the_identity() {
+        let t = timing();
+        for s in [0.5, 1.0, 1.7318, 42.0] {
+            assert_eq!(Goal::Speedup.fitness(s, Some(&t)), s);
+            assert_eq!(Goal::Speedup.fitness(s, None), s);
+        }
+    }
+
+    #[test]
+    fn memory_fitness_penalizes_dram_dominated_kernels() {
+        let mem_heavy = timing();
+        let mut compute_heavy = timing();
+        compute_heavy.t_mem = 1.0e-6;
+        compute_heavy.t_compute = 10.5e-6;
+        compute_heavy.bound = BoundKind::Compute;
+        let f_mem = Goal::Memory.fitness(2.0, Some(&mem_heavy));
+        let f_cmp = Goal::Memory.fitness(2.0, Some(&compute_heavy));
+        assert!(f_cmp > f_mem, "compute-shifted kernel must rank higher: {f_cmp} vs {f_mem}");
+        // Timing-less fallback is the raw speedup.
+        assert_eq!(Goal::Memory.fitness(2.0, None), 2.0);
+    }
+
+    #[test]
+    fn balanced_fitness_rewards_utilization() {
+        let high_util = timing(); // eff_bw 0.84
+        let mut low_util = timing();
+        low_util.eff_bw = 0.10;
+        low_util.eff_compute = 0.05;
+        let hi = Goal::Balanced.fitness(2.0, Some(&high_util));
+        let lo = Goal::Balanced.fitness(2.0, Some(&low_util));
+        assert!(hi > lo, "{hi} vs {lo}");
+    }
+
+    #[test]
+    fn render_is_deterministic_and_noise_free() {
+        let task = crate::tasks::OpTask {
+            name: "matmul_64".into(),
+            category: 1,
+            family: "matmul".into(),
+            args: vec![],
+            out_shape: vec![64, 64],
+            flops: 5.24e5,
+            bytes_moved: 4.9e4,
+            pt_launches: 1,
+            pt_passes: 1.0,
+            pt_efficiency: 0.85,
+            algo_penalty: 1.0,
+            atol: 1e-4,
+            rtol: 1e-3,
+            artifacts: Default::default(),
+        };
+        let outcome = EvalOutcome::Ok(crate::evals::EvalSuccess {
+            time: 99.0, // measured (noisy) — must NOT appear in the render
+            speedup: 99.0,
+            pytorch_speedup: 99.0,
+            true_speedup: 1.75,
+            true_pytorch_speedup: 0.9,
+            timing: timing(),
+        });
+        let gpu = Gpu::rtx4090();
+        let a = ProfileReport::from_outcome(&task, &outcome, &gpu).render(Goal::Memory);
+        let b = ProfileReport::from_outcome(&task, &outcome, &gpu).render(Goal::Memory);
+        assert_eq!(a, b);
+        assert!(a.contains("outcome: ok"));
+        assert!(a.contains("speedup_vs_baseline: 1.750"));
+        assert!(a.contains("bound: Memory"));
+        assert!(a.contains("objective: memory"));
+        assert!(!a.contains("99"), "measured (noisy) values leaked into the render:\n{a}");
+        // The default objective renders no objective line.
+        let plain = ProfileReport::from_outcome(&task, &outcome, &gpu).render(Goal::Speedup);
+        assert!(!plain.contains("objective:"));
+    }
+
+    #[test]
+    fn failure_profiles_carry_findings() {
+        let task = crate::tasks::OpTask {
+            name: "relu_64".into(),
+            category: 3,
+            family: "relu".into(),
+            args: vec![],
+            out_shape: vec![64],
+            flops: 64.0,
+            bytes_moved: 512.0,
+            pt_launches: 1,
+            pt_passes: 1.0,
+            pt_efficiency: 0.85,
+            algo_penalty: 1.0,
+            atol: 1e-4,
+            rtol: 1e-3,
+            artifacts: Default::default(),
+        };
+        let gpu = Gpu::rtx4090();
+        let outcome = EvalOutcome::CompileFail { error: "unknown field `warp`\nmore".into() };
+        let r = ProfileReport::from_outcome(&task, &outcome, &gpu);
+        assert_eq!(r.outcome, "compile_fail");
+        assert!(r.timing.is_none());
+        let text = r.render(Goal::Speedup);
+        assert!(text.contains("finding: compile: unknown field `warp`"));
+        assert!(!text.contains("more"), "only the first error line is rendered");
+    }
+}

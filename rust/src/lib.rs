@@ -17,6 +17,9 @@
 //!   structured diagnostics) that runs before any compile.
 //! * [`evals`] — the paper's two-stage evaluation pipeline, fronted by
 //!   the stage-0 guard when a repair policy is active.
+//! * [`feedback`] — profile-guided feedback: per-candidate performance
+//!   profiles rendered into prompts, plus the multi-objective `--goal`
+//!   axis (DESIGN.md §17).
 //! * [`costmodel`] — RTX-4090 analytical timing of candidate schedules.
 //! * [`llm`] — the pluggable provider seam (typed generation/repair
 //!   requests; sim, transcript-replay and HTTP backends) with the
@@ -39,6 +42,7 @@ pub mod campaign;
 pub mod costmodel;
 pub mod dsl;
 pub mod evals;
+pub mod feedback;
 pub mod guard;
 pub mod ir;
 pub mod llm;

@@ -192,7 +192,9 @@ impl HttpProvider {
             ])
         };
         let (system, user) = match req.role {
-            GenerationRole::Generate => (GENERATE_SYSTEM, req.prompt.clone()),
+            // `full_prompt` appends the performance-profile / goal
+            // sections when feedback is active (DESIGN.md §17).
+            GenerationRole::Generate => (GENERATE_SYSTEM, req.full_prompt().into_owned()),
             GenerationRole::Repair => {
                 let mut diags = String::new();
                 for d in &req.diagnostics {
@@ -372,7 +374,7 @@ fn parse_chat_response(text: &str, req: &GenerationRequest) -> Result<Generation
     let prompt_tokens = usage
         .and_then(|u| u.get("prompt_tokens"))
         .and_then(|x| x.as_u64())
-        .unwrap_or_else(|| count_tokens(&req.prompt));
+        .unwrap_or_else(|| count_tokens(&req.full_prompt()));
     let completion_tokens = usage
         .and_then(|u| u.get("completion_tokens"))
         .and_then(|x| x.as_u64())

@@ -217,6 +217,48 @@ pub fn generate(prompt: &str, profile: &ModelProfile, rng: &mut Rng) -> LlmRespo
         };
         notes.push(note);
     }
+    // 3.5) performance-profile feedback (DESIGN.md §17): a profiled
+    // prompt lets the model react to the measured bottleneck with a
+    // targeted move. Legacy prompts (no profile section) draw no RNG
+    // here, so their streams — and emissions — stay byte-identical to
+    // pre-feedback builds.
+    if let Some(bound) = ctx.profile_bound.as_deref() {
+        let follow = (0.45 + 0.45 * profile.skill).min(0.9);
+        if rng.chance(follow) {
+            let s = &mut spec.schedule;
+            let note = match bound {
+                "Memory" if s.vector_width < 8 => {
+                    s.vector_width *= 2;
+                    format!(
+                        "set vector_width to {} (profile: memory-bound)",
+                        s.vector_width
+                    )
+                }
+                "Memory" if !s.smem_staging => {
+                    s.smem_staging = true;
+                    s.stages = 2;
+                    "enabled smem_staging (profile: memory-bound, stage for reuse)".into()
+                }
+                "Launch" if !s.fuse_epilogue => {
+                    s.fuse_epilogue = true;
+                    "enabled fuse_epilogue (profile: launch-bound)".into()
+                }
+                _ => mutate::directed_move(s, ctx.category, rng),
+            };
+            notes.push(note);
+        }
+        // A memory objective additionally biases toward reuse over raw
+        // width (the `--goal memory` emphasis names DRAM traffic).
+        if ctx.goal.as_deref().map_or(false, |g| g.contains("DRAM traffic"))
+            && !spec.schedule.smem_staging
+            && rng.chance(0.5)
+        {
+            spec.schedule.smem_staging = true;
+            spec.schedule.stages = 2;
+            notes.push("enabled smem_staging (goal: reduce DRAM traffic)".into());
+        }
+    }
+
     // 4) exploration jump (what makes -Free find distant optima):
     // information-light prompts leave the model unanchored, so it
     // proposes structurally different schedules more often.
@@ -394,6 +436,36 @@ mod tests {
             }
         }
         assert!(mended > 30, "{mended}/60 syntax repairs parsed");
+    }
+
+    #[test]
+    fn profile_section_steers_generation_deterministically() {
+        let bare = prompt_for("matmul_64", 1);
+        let profiled = format!(
+            "{bare}\n## PERFORMANCE PROFILE\nop: matmul_64\noutcome: ok\n\
+             bound: Memory; occupancy: 0.50; eff_bw: 0.30; eff_compute: 0.10; \
+             traffic_bytes: 1.000e6; launches: 1\n"
+        );
+        // Deterministic given the RNG stream, profile included.
+        let a = generate(&profiled, &MODELS[0], &mut Rng::new(9));
+        let b = generate(&profiled, &MODELS[0], &mut Rng::new(9));
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.insight, b.insight);
+        // The profile reaction fires for a healthy fraction of seeds
+        // (its note survives as the final insight when no later move
+        // overwrites it).
+        let mut reacted = 0;
+        for seed in 0..100 {
+            let r = generate(&profiled, &MODELS[0], &mut Rng::new(seed));
+            if r.insight.contains("profile:") {
+                reacted += 1;
+            }
+        }
+        assert!(reacted > 10, "profile reaction fired only {reacted}/100 times");
+        // The profile section costs real prompt tokens.
+        let p = generate(&profiled, &MODELS[0], &mut Rng::new(1));
+        let q = generate(&bare, &MODELS[0], &mut Rng::new(1));
+        assert!(p.prompt_tokens > q.prompt_tokens);
     }
 
     #[test]

@@ -29,6 +29,12 @@ pub struct PromptCtx<'a> {
     pub history: Vec<&'a str>,
     pub insights: Vec<ParsedInsight>,
     pub instruction: String,
+    /// Roofline bound recovered from a `## PERFORMANCE PROFILE`
+    /// section (`Memory` / `Compute` / `Launch`), when present
+    /// (DESIGN.md §17). `None` for legacy prompts.
+    pub profile_bound: Option<String>,
+    /// Raw `## OPTIMIZATION GOAL` emphasis text, when present.
+    pub goal: Option<String>,
 }
 
 impl<'a> PromptCtx<'a> {
@@ -138,6 +144,25 @@ pub fn parse_prompt(prompt: &str) -> PromptCtx<'_> {
             "INSTRUCTION" => {
                 ctx.instruction = body.trim().to_string();
             }
+            "PERFORMANCE PROFILE" => {
+                for line in body.lines() {
+                    if let Some(v) = line.strip_prefix("bound: ") {
+                        let word: String = v
+                            .chars()
+                            .take_while(|c| c.is_ascii_alphabetic())
+                            .collect();
+                        if !word.is_empty() {
+                            ctx.profile_bound = Some(word);
+                        }
+                    }
+                }
+            }
+            "OPTIMIZATION GOAL" => {
+                let text = body.trim();
+                if !text.is_empty() {
+                    ctx.goal = Some(text.to_string());
+                }
+            }
             _ => {}
         }
     }
@@ -200,6 +225,22 @@ mod tests {
         assert!(ctx.parent.is_none());
         assert!(ctx.history.is_empty());
         assert!(ctx.insights.is_empty());
+        assert!(ctx.profile_bound.is_none());
+        assert!(ctx.goal.is_none());
         assert_eq!(ctx.category, 6);
+    }
+
+    #[test]
+    fn recovers_profile_bound_and_goal() {
+        let p = "## TASK\nop: x\ncategory: 1 (M)\n\n## INSTRUCTION\nGo.\n\n\
+                 ## PERFORMANCE PROFILE\nop: x\noutcome: ok\n\
+                 bound: Memory; occupancy: 0.67; eff_bw: 0.84; eff_compute: 0.21; \
+                 traffic_bytes: 4.200e6; launches: 1\n\n\
+                 ## OPTIMIZATION GOAL\nMinimize DRAM traffic.\n";
+        let ctx = parse_prompt(p);
+        assert_eq!(ctx.profile_bound.as_deref(), Some("Memory"));
+        assert_eq!(ctx.goal.as_deref(), Some("Minimize DRAM traffic."));
+        // The instruction body stops at the next section header.
+        assert_eq!(ctx.instruction, "Go.");
     }
 }

@@ -101,6 +101,17 @@ pub struct GenerationRequest {
     /// request's identity, which is what keeps record-then-replay of
     /// ensemble campaigns byte-identical.
     pub route: Option<String>,
+    /// Rendered `## PERFORMANCE PROFILE` section body (DESIGN.md §17):
+    /// the previous trial's measured profile, attached by the engine
+    /// when `--goal` enables profile feedback. Composed into the text
+    /// a backend sees via [`Self::full_prompt`]. `None` for legacy
+    /// runs — unset fields are *not* hashed, so every pre-feedback
+    /// request hash is unchanged.
+    pub profile: Option<String>,
+    /// Search objective name (`memory`, `balanced`) when a non-default
+    /// `--goal` is active; rendered as an `## OPTIMIZATION GOAL`
+    /// emphasis section. `None` under the default speedup objective.
+    pub goal: Option<String>,
 }
 
 impl GenerationRequest {
@@ -115,6 +126,8 @@ impl GenerationRequest {
             operator: None,
             op_category: None,
             route: None,
+            profile: None,
+            goal: None,
         }
     }
 
@@ -129,6 +142,8 @@ impl GenerationRequest {
             operator: None,
             op_category: None,
             route: None,
+            profile: None,
+            goal: None,
         }
     }
 
@@ -140,6 +155,50 @@ impl GenerationRequest {
         self.op_category = Some(category.to_string());
         self.route = Some(member.to_string());
         self
+    }
+
+    /// Attach profile-guided feedback (DESIGN.md §17): the rendered
+    /// performance-profile section and/or the non-default objective
+    /// name. Both become part of the request hash when set.
+    pub fn with_feedback(mut self, profile: Option<String>, goal: Option<String>) -> Self {
+        self.profile = profile;
+        self.goal = goal;
+        self
+    }
+
+    /// The complete prompt text a backend conditions on: the rendered
+    /// base prompt plus — when feedback is active — the
+    /// `## PERFORMANCE PROFILE` and `## OPTIMIZATION GOAL` sections.
+    /// Borrows the base prompt unchanged when neither field is set, so
+    /// legacy requests cost nothing and stay byte-identical.
+    pub fn full_prompt(&self) -> std::borrow::Cow<'_, str> {
+        if self.profile.is_none() && self.goal.is_none() {
+            return std::borrow::Cow::Borrowed(&self.prompt);
+        }
+        let mut out = String::with_capacity(self.prompt.len() + 512);
+        out.push_str(&self.prompt);
+        if let Some(profile) = &self.profile {
+            if !out.ends_with('\n') {
+                out.push('\n');
+            }
+            out.push_str("\n## PERFORMANCE PROFILE\n");
+            out.push_str(profile);
+        }
+        if let Some(goal) = &self.goal {
+            use crate::feedback::Objective;
+            if !out.ends_with('\n') {
+                out.push('\n');
+            }
+            out.push_str("\n## OPTIMIZATION GOAL\n");
+            match crate::feedback::FeedbackConfig::parse(goal) {
+                Ok(cfg) => out.push_str(cfg.goal.emphasis()),
+                // Unknown label (a future goal replayed by an older
+                // binary): surface it verbatim rather than dropping it.
+                Err(_) => out.push_str(goal),
+            }
+            out.push('\n');
+        }
+        std::borrow::Cow::Owned(out)
     }
 
     /// Content hash of the request — the transcript journal key. The
@@ -179,6 +238,8 @@ impl GenerationRequest {
             (&b"\0operator\0"[..], &self.operator),
             (&b"\0op_category\0"[..], &self.op_category),
             (&b"\0route\0"[..], &self.route),
+            (&b"\0profile\0"[..], &self.profile),
+            (&b"\0goal\0"[..], &self.goal),
         ] {
             if let Some(value) = field {
                 buf.extend_from_slice(tag);
@@ -277,7 +338,10 @@ impl Provider for SimProvider {
             .ok_or_else(|| eyre!("sim provider: unknown model `{}`", req.model))?;
         let mut rng = Rng::new(req.seed);
         let resp = match req.role {
-            GenerationRole::Generate => super::generate(&req.prompt, prof, &mut rng),
+            // `full_prompt` borrows the base prompt unchanged when no
+            // feedback sections are attached — the legacy path is
+            // byte-identical.
+            GenerationRole::Generate => super::generate(&req.full_prompt(), prof, &mut rng),
             GenerationRole::Repair => {
                 let report = GuardReport { diagnostics: req.diagnostics.clone() };
                 super::repair(&req.prompt, &report, prof, &mut rng)
@@ -791,6 +855,40 @@ mod tests {
         assert_ne!(routed.hash(), other_op.hash());
         // Deterministic across re-hashing.
         assert_eq!(routed.hash(), routed.hash());
+    }
+
+    #[test]
+    fn feedback_fields_extend_the_hash_without_perturbing_legacy_requests() {
+        let bare = GenerationRequest::generate("GPT-4.1", "## TASK\nop: x\n", 42);
+        assert_eq!(bare.profile, None);
+        assert_eq!(bare.goal, None);
+        // Unset feedback never changes the hash or the prompt text.
+        let noop = bare.clone().with_feedback(None, None);
+        assert_eq!(bare.hash(), noop.hash());
+        assert!(matches!(noop.full_prompt(), std::borrow::Cow::Borrowed(_)));
+        assert_eq!(noop.full_prompt(), bare.prompt);
+
+        let profiled = bare.clone().with_feedback(Some("outcome: ok\n".into()), None);
+        assert_ne!(bare.hash(), profiled.hash(), "profile must be part of the hash");
+        let goaled = bare.clone().with_feedback(None, Some("memory".into()));
+        assert_ne!(bare.hash(), goaled.hash(), "goal must be part of the hash");
+        assert_ne!(profiled.hash(), goaled.hash());
+        let both = bare
+            .clone()
+            .with_feedback(Some("outcome: ok\n".into()), Some("memory".into()));
+        assert_ne!(both.hash(), profiled.hash());
+        assert_ne!(both.hash(), goaled.hash());
+        assert_eq!(both.hash(), both.hash());
+
+        // Composed prompt carries both sections, base prompt first.
+        let text = both.full_prompt().into_owned();
+        assert!(text.starts_with("## TASK\n"));
+        assert!(text.contains("## PERFORMANCE PROFILE\noutcome: ok\n"));
+        assert!(text.contains("## OPTIMIZATION GOAL\n"));
+        assert!(text.contains("DRAM traffic"), "memory emphasis rendered: {text}");
+        // Feedback composes with routing (both tag families hashed).
+        let routed = both.clone().with_routing("mutate", "matmul", "alt");
+        assert_ne!(routed.hash(), both.hash());
     }
 
     #[test]

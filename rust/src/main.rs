@@ -20,6 +20,7 @@ use std::sync::Arc;
 
 use evoengineer::campaign::{coordinator, results, wire, CampaignConfig};
 use evoengineer::evals::Evaluator;
+use evoengineer::feedback::FeedbackConfig;
 use evoengineer::llm::{
     profile, provider, GenerationRequest, Provider, ProviderConfig, ProviderSpec,
 };
@@ -54,6 +55,13 @@ COMMANDS:
       --budget N             (default 45)
       --repair MODE          stage-0 guard policy: off|diagnose|repair|
                              repair:K (default off; repair = repair:2)
+      --goal G               search objective + profile feedback:
+                             speedup|speedup+profile|memory|balanced
+                             (default speedup = pre-profile behaviour,
+                             byte-identical records; the other modes
+                             inject a PERFORMANCE PROFILE section into
+                             every follow-up prompt and re-rank the
+                             archive/bandit by the objective's fitness)
       --provider P           generation backend: sim|replay:<path>|http|
                              ensemble:[m@w,m#alias@w,...,x=R]|
                              ensemble:@<file.json> (default sim; http
@@ -81,6 +89,9 @@ COMMANDS:
       --budget N             trials per run (default 45)
       --repair MODE          stage-0 guard policy for every cell:
                              off|diagnose|repair|repair:K (default off)
+      --goal G               search objective for every cell:
+                             speedup|speedup+profile|memory|balanced
+                             (default speedup)
       --provider P           generation backend for every cell:
                              sim|replay:<path>|http|ensemble:[...]
                              (default sim)
@@ -108,7 +119,9 @@ COMMANDS:
                              `campaign work` processes; takes the same
                              sweep flags as `campaign` (--cache is the
                              merged store worker uploads land in), plus:
-      --bind HOST:PORT       listen address (default 127.0.0.1:7717)
+      --bind HOST:PORT       listen address (default 127.0.0.1:7717);
+                             GET /metrics serves Prometheus-style text
+                             counters while the sweep runs
   campaign work URL          claim cells from a coordinator until the
                              sweep drains (engine knobs mirror /config)
       --provider P           optional assertion only: the worker always
@@ -126,7 +139,7 @@ COMMANDS:
       --quiet                suppress progress lines
   report <which>             regenerate a table/figure from records
       which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|
-             validity|tokens|convergence|methods|events|all
+             validity|tokens|goals|convergence|methods|events|all
       --records PATH         (default results/records.jsonl; a partial
                              checkpoint journal also works)
       --events PATH          event journal for `report events`
@@ -215,6 +228,7 @@ fn run() -> Result<()> {
 
     let runtime_shards = args.get_num("runtime-shards", 0usize)?;
     let repair = RepairPolicy::parse(&args.get("repair", "off"))?;
+    let goal = FeedbackConfig::parse(&args.get("goal", "speedup"))?;
     let provider_spec = ProviderSpec::parse(&args.get("provider", "sim"))?;
 
     match cmd {
@@ -247,6 +261,7 @@ fn run() -> Result<()> {
                 args.get_num("seed", 0u64)?,
                 args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
                 repair,
+                goal,
                 &provider_spec,
                 transcripts.as_deref(),
                 events.as_deref(),
@@ -321,6 +336,7 @@ fn run() -> Result<()> {
                 max_ops: args.get_num("max-ops", 0usize)?,
                 budget: args.get_num("budget", evoengineer::TRIAL_BUDGET)?,
                 repair,
+                goal,
                 provider: provider_spec,
                 transcripts,
                 concurrency: args.get_num("concurrency", 0usize)?,
@@ -520,6 +536,7 @@ fn optimize(
     seed: u64,
     budget: usize,
     repair: RepairPolicy,
+    goal: FeedbackConfig,
     provider_spec: &ProviderSpec,
     transcripts: Option<&std::path::Path>,
     events: Option<&std::path::Path>,
@@ -548,6 +565,7 @@ fn optimize(
         archive: &archive,
         budget,
         repair,
+        feedback: goal,
         provider: llm_provider.as_ref(),
     };
     // Single runs are "verbose": the progress sink narrates every
@@ -588,6 +606,12 @@ fn optimize(
         println!(
             "stage-0 guard ({}): {} rejected, {} repaired ({} repair calls in the budget)",
             rec.repair_policy, rec.guard_rejected_trials, rec.repaired_trials, rec.repair_attempts
+        );
+    }
+    if !goal.is_default() {
+        println!(
+            "objective: {} (performance profiles fed back into follow-up prompts)",
+            goal.label()
         );
     }
     print!("trajectory:");
@@ -641,8 +665,17 @@ fn campaign_notes(cfg: &CampaignConfig, out: &PathBuf, records: &[KernelRunRecor
 /// The headline tables every finished sweep renders.
 fn campaign_reports(records: &[KernelRunRecord]) {
     println!("\n{}", report::table4(records));
-    if records.iter().any(|r| r.repair_policy != "off") {
+    // The validity breakdown matters whenever stage-0 verdicts exist,
+    // not only when a repair policy ran: guard-only sweeps (`--repair
+    // off` with rejected candidates) used to silently skip it.
+    if records
+        .iter()
+        .any(|r| r.repair_policy != "off" || r.guard_rejected_trials > 0 || r.repair_attempts > 0)
+    {
         println!("\n{}", report::validity(records));
+    }
+    if records.iter().any(|r| r.goal != "speedup") {
+        println!("\n{}", report::goals(records));
     }
     println!("\n{}", report::tokens(records));
 }
@@ -745,6 +778,7 @@ fn run_report(
                 "table4" => report::table4(&records),
                 "validity" => report::validity(&records),
                 "tokens" => report::tokens(&records),
+                "goals" => report::goals(&records),
                 "table7" => report::table7(&records),
                 "table8" => report::table8(&records),
                 "fig1" => report::fig1(&records),
@@ -760,6 +794,7 @@ fn run_report(
                         report::methods_table(),
                         report::table4(&records),
                         report::validity(&records),
+                        report::goals(&records),
                         report::tokens(&records),
                         report::fig1(&records),
                         report::fig4(&records, model),

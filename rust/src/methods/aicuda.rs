@@ -226,6 +226,7 @@ mod tests {
             family: "matmul".into(),
             src: crate::dsl::print(&crate::dsl::KernelSpec::baseline("matmul_64")),
             speedup: 2.0,
+            rank: 2.0,
         });
         let ctx = RunCtx {
             evaluator: &evaluator,
@@ -236,6 +237,7 @@ mod tests {
             provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let rec = AiCudaEngineer::new().run(&ctx).unwrap();
         assert!(rec.trials <= 45);
@@ -250,6 +252,7 @@ mod tests {
             provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let free = crate::methods::EvoEngineer::new(crate::methods::EvoVariant::Free)
             .run(&free_ctx)

@@ -18,8 +18,10 @@
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
+use crate::costmodel::Timing;
 use crate::dsl;
 use crate::evals::{EvalOutcome, Evaluator};
+use crate::feedback::{FeedbackConfig, Objective, ProfileReport};
 use crate::llm::{ArmWeight, Bandit, ModelProfile, Provider};
 use crate::population::{Candidate, Population};
 use crate::tasks::OpTask;
@@ -41,6 +43,10 @@ pub struct ArchiveEntry {
     pub family: String,
     pub src: String,
     pub speedup: f64,
+    /// Goal-fitness rank (DESIGN.md §17) the archive selects on.
+    /// Equals `speedup` under the default `--goal speedup`, so default
+    /// archive behaviour is bit-identical to pre-feedback builds.
+    pub rank: f64,
 }
 
 impl Archive {
@@ -51,7 +57,9 @@ impl Archive {
     pub fn record(&self, entry: ArchiveEntry) {
         let mut g = self.inner.write().unwrap();
         let slot = g.entry(entry.op.clone()).or_insert_with(|| entry.clone());
-        if entry.speedup > slot.speedup {
+        // Goal-fitness rank, not raw speedup (identical under the
+        // default objective, where rank == speedup).
+        if entry.rank > slot.rank {
             *slot = entry;
         }
     }
@@ -156,6 +164,11 @@ pub struct RunCtx<'a> {
     pub budget: usize,
     /// Stage-0 guard / repair policy (method ablation axis).
     pub repair: RepairPolicy,
+    /// Profile-guided feedback configuration (`--goal`, DESIGN.md
+    /// §17): the search objective plus whether measured performance
+    /// profiles are attached to generation requests. The default is
+    /// byte-identical to pre-feedback behaviour.
+    pub feedback: FeedbackConfig,
     /// The generation backend every trial's `Generate`/`Repair` call
     /// goes through (DESIGN.md §12).
     pub provider: &'a dyn Provider,
@@ -188,6 +201,11 @@ pub struct KernelRunRecord {
     pub repair_attempts: usize,
     /// The [`RepairPolicy`] label the run executed under.
     pub repair_policy: String,
+    /// The [`FeedbackConfig`] label the run executed under
+    /// (`"speedup"` | `"speedup+profile"` | `"memory"` | `"balanced"`).
+    /// Serialized only when non-default, so legacy record files — and
+    /// default-goal records — are byte-identical to pre-feedback ones.
+    pub goal: String,
     /// Label of the generation backend ("sim", "http"; a replayed run
     /// carries the label of the backend that recorded its transcript,
     /// so record/replay runs are byte-identical).
@@ -272,6 +290,11 @@ impl KernelRunRecord {
                 ),
             ));
         }
+        // Same convention for the feedback goal: the default label is
+        // omitted so default-goal records match historical bytes.
+        if self.goal != "speedup" {
+            pairs.push(("goal", Json::Str(self.goal.clone())));
+        }
         Json::obj(pairs)
     }
 
@@ -319,6 +342,13 @@ impl KernelRunRecord {
                 .get("repair_policy")
                 .and_then(|x| x.as_str())
                 .unwrap_or("off")
+                .to_string(),
+            // Absent in pre-feedback record files and in default-goal
+            // runs: the objective was plain speedup.
+            goal: v
+                .get("goal")
+                .and_then(|x| x.as_str())
+                .unwrap_or("speedup")
                 .to_string(),
             // Absent in pre-provider record files: every historical
             // run was generated by the SimLLM.
@@ -384,6 +414,18 @@ pub struct Session<'a> {
     pub(super) repair_attempts: usize,
     pub(super) best: Option<Candidate>,
     pub(super) best_pt: f64,
+    /// Goal-fitness rank of `best` (DESIGN.md §17). Under the default
+    /// `--goal speedup` this is exactly `best.true_speedup`, so the
+    /// best-so-far comparison is bitwise-identical to historical runs.
+    pub(super) best_rank: f64,
+    /// Roofline timing of `best` (needed to re-rank it at `finish`).
+    pub(super) best_timing: Option<Timing>,
+    /// Performance profile of the most recent completed trial —
+    /// attached to the *next* trial's generation request when
+    /// `ctx.feedback.profile` is on. Updated only on the sequential
+    /// finish path, so speculative prefetch sees a stale value and
+    /// simply hash-misses (throughput cost, never a correctness one).
+    pub(super) last_profile: Option<ProfileReport>,
     pub(super) trajectory: Vec<f64>,
     /// Per-cell routing bandit — `Some` only when the provider is a
     /// multi-member ensemble (DESIGN.md §16). Lives here, not in the
@@ -436,6 +478,9 @@ impl<'a> Session<'a> {
             repair_attempts: 0,
             best: None,
             best_pt: 0.0,
+            best_rank: 0.0,
+            best_timing: None,
+            last_profile: None,
             trajectory: Vec::new(),
             bandit: ctx.provider.routing().map(|spec| Bandit::new(&spec)),
         }
@@ -476,8 +521,22 @@ impl<'a> Session<'a> {
         let mut rng = self.rng.derive("bootstrap");
         let outcome =
             self.ctx.evaluator.evaluate_keyed(&src, self.ctx.task, self.ctx.model.name, &mut rng);
+        self.capture_profile(&outcome);
         let cand = self.candidate_from(src, outcome, 0, None);
         self.pop.insert(cand);
+    }
+
+    /// Record the just-measured outcome as the profile the next
+    /// generation request will carry (no-op unless `--goal` enables
+    /// profiles, keeping default requests byte-identical).
+    pub(super) fn capture_profile(&mut self, outcome: &EvalOutcome) {
+        if self.ctx.feedback.profile {
+            self.last_profile = Some(ProfileReport::from_outcome(
+                self.ctx.task,
+                outcome,
+                &self.ctx.evaluator.gpu,
+            ));
+        }
     }
 
     pub(super) fn candidate_from(
@@ -532,6 +591,13 @@ impl<'a> Session<'a> {
                 family: self.ctx.task.family.clone(),
                 src: best.src.clone(),
                 speedup: best.true_speedup,
+                // Noise-free rank (replay-stable): fitness over the
+                // *true* speedup, == true_speedup under the default.
+                rank: self
+                    .ctx
+                    .feedback
+                    .goal
+                    .fitness(best.true_speedup, self.best_timing.as_ref()),
             });
         }
         KernelRunRecord {
@@ -548,6 +614,7 @@ impl<'a> Session<'a> {
             repaired_trials: self.repaired,
             repair_attempts: self.repair_attempts,
             repair_policy: self.ctx.repair.label(),
+            goal: self.ctx.feedback.label(),
             provider: self.ctx.provider.label().to_string(),
             best_speedup: self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0),
             best_pytorch_speedup: self.best_pt,
@@ -571,6 +638,7 @@ mod tests {
             family: family.into(),
             src: format!("kernel {op}"),
             speedup,
+            rank: speedup,
         }
     }
 

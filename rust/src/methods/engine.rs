@@ -44,6 +44,7 @@ use std::time::Instant;
 
 use crate::costmodel::price;
 use crate::evals::EvalOutcome;
+use crate::feedback::{Goal, Objective, ProfileReport};
 use crate::llm::{bandit, Bandit, GenerationRequest, GenerationResponse};
 use crate::population::{Candidate, Population};
 use crate::store::events::{EventJournal, TrialEvent, TrialEventKind};
@@ -613,6 +614,7 @@ pub(super) fn run_trial(
         &session.rng,
         &session.insights,
         session.bandit.as_ref(),
+        session.last_profile.as_ref(),
         session.pop.as_mut(),
         trial_idx,
         step,
@@ -669,11 +671,16 @@ fn speculate(session: &Session, state: &dyn MethodState, pool: &mut PrefetchPool
         // Speculative routing runs against the *current* arm state; a
         // pending trial's bandit update changes the pick and the
         // speculation simply hash-misses (throughput, not correctness).
+        // Likewise the performance profile: the pending trial's outcome
+        // will replace `last_profile` before the next real assembly, so
+        // with profiles enabled speculation always misses — the request
+        // hash covers the profile text, keeping replay byte-identical.
         let a = assemble(
             session.ctx,
             &session.rng,
             &session.insights,
             session.bandit.as_ref(),
+            session.last_profile.as_ref(),
             pop.as_mut(),
             idx,
             step,
@@ -699,6 +706,7 @@ fn assemble(
     session_rng: &Rng,
     insights: &[InsightRecord],
     routing_bandit: Option<&Bandit>,
+    profile: Option<&ProfileReport>,
     pop: &mut dyn Population,
     trial_idx: usize,
     step: &GenerateStep,
@@ -747,6 +755,24 @@ fn assemble(
         let operator = bandit::operator_tag(&step.instruction);
         let member = b.select(&operator, &ctx.task.family, llm_seed);
         req = req.with_routing(&operator, &ctx.task.family, &member);
+    }
+    // Profile-guided feedback (DESIGN.md §17): stamp the previous
+    // trial's measured profile and the non-default objective emphasis
+    // into the request. No new RNG derivations, and both fields are
+    // `None` under the default `--goal speedup`, so legacy requests —
+    // and their hashes — are byte-identical.
+    let rendered = if ctx.feedback.profile {
+        profile.map(|p| p.render(ctx.feedback.goal))
+    } else {
+        None
+    };
+    let goal = if ctx.feedback.goal != Goal::Speedup {
+        Some(ctx.feedback.goal.name().to_string())
+    } else {
+        None
+    };
+    if rendered.is_some() || goal.is_some() {
+        req = req.with_feedback(rendered, goal);
     }
     Assembled { req, parent }
 }
@@ -864,6 +890,14 @@ fn finish_trial(
 
     let label = outcome_label(&outcome);
     let src_hash = sha256_hex(text.as_bytes())[..16].to_string();
+    // Feedback capture happens here — on the sequential completion
+    // path, like the bandit updates — so the profile the *next*
+    // trial's request carries is `--prefetch`-independent.
+    let timing = match &outcome {
+        EvalOutcome::Ok(s) => Some(s.timing.clone()),
+        _ => None,
+    };
+    session.capture_profile(&outcome);
     let cand = session.candidate_from(text, outcome, trial_idx, Some(resp.insight.clone()));
 
     // --- insight recording (solution-insight pair with observed
@@ -887,17 +921,22 @@ fn finish_trial(
     }
 
     // --- bookkeeping -------------------------------------------------
-    // Selection is by *measured* speedup (the paper's noisy
+    // Selection is by *measured* goal fitness (the paper's noisy
     // selection); the final record cites the chosen kernel's
-    // noise-free numbers (the paper's final re-timing).
+    // noise-free numbers (the paper's final re-timing). Under the
+    // default `--goal speedup` the fitness is the identity, so this is
+    // bitwise the historical `cand.speedup > best.speedup` comparison.
+    let cand_rank = ctx.feedback.goal.fitness(cand.speedup, timing.as_ref());
     let new_best = cand.valid()
         && session
             .best
             .as_ref()
-            .map(|b| cand.speedup > b.speedup)
+            .map(|_| cand_rank > session.best_rank)
             .unwrap_or(true);
     if new_best {
         session.best = Some(cand.clone());
+        session.best_rank = cand_rank;
+        session.best_timing = timing.clone();
     }
     if cand.valid() {
         session.best_pt = session.best_pt.max(cand.true_pytorch_speedup);
@@ -913,11 +952,15 @@ fn finish_trial(
     // which is what makes arm state `--prefetch`-independent).
     if let Some((member, operator)) = gen_routing {
         if let Some(b) = &mut session.bandit {
+            // Arm reward is goal-fitness-shaped (identity under the
+            // default objective), so the router learns toward what
+            // `--goal` actually optimizes.
+            let reward_rank = ctx.feedback.goal.fitness(speedup, timing.as_ref());
             b.update(
                 &member,
                 &operator,
                 &ctx.task.family,
-                bandit::trial_reward(label, if speedup > 0.0 { Some(speedup) } else { None }),
+                bandit::trial_reward(label, if speedup > 0.0 { Some(reward_rank) } else { None }),
             );
         }
     }

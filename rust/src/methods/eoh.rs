@@ -135,6 +135,7 @@ mod tests {
             provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let rec = Eoh::new().run(&ctx).unwrap();
         assert_eq!(rec.trials, 45); // 5 + 10*4

@@ -164,6 +164,7 @@ mod tests {
             provider: &provider,
             budget: 45,
             repair: RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap();
         assert_eq!(rec.trials, 45);
@@ -190,6 +191,7 @@ mod tests {
                 provider: &provider,
                 budget: 20,
                 repair: RepairPolicy::Off,
+                feedback: Default::default(),
             };
             EvoEngineer::new(EvoVariant::Full).run(&ctx).unwrap()
         };
@@ -224,6 +226,7 @@ mod tests {
                 provider: &provider,
                 budget: 45,
                 repair,
+                feedback: Default::default(),
             };
             EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap()
         };
@@ -291,6 +294,7 @@ mod tests {
                 provider: &provider,
                 budget: 30,
                 repair: RepairPolicy::Off,
+                feedback: Default::default(),
             };
             EvoEngineer::new(variant).run(&ctx).unwrap()
         };

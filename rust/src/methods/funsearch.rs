@@ -92,6 +92,7 @@ mod tests {
             provider: &provider,
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let rec = FunSearch::new().run(&ctx).unwrap();
         assert_eq!(rec.trials, 45);

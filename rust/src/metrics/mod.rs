@@ -261,6 +261,51 @@ pub fn validity_table(records: &[KernelRunRecord]) -> BTreeMap<GroupKey, Vec<Val
     out
 }
 
+/// One row of the per-goal breakdown (DESIGN.md §17): every record
+/// that ran under one `--goal` label, with validity and speedup side
+/// by side so a multi-objective campaign's legs compare in one table.
+#[derive(Debug, Clone, Default)]
+pub struct GoalRow {
+    /// The [`FeedbackConfig`](crate::feedback::FeedbackConfig) label
+    /// ("speedup", "speedup+profile", "memory", "balanced").
+    pub goal: String,
+    pub runs: usize,
+    /// Runs that found at least one valid improvement.
+    pub valid_runs: usize,
+    pub median_speedup: f64,
+    /// Functionally-correct trials as % of all trials in the row.
+    pub correct_pct: f64,
+    pub guard_rejected: usize,
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+}
+
+/// Per-goal aggregation in stable label order. Single-goal campaigns
+/// produce one row — the caller decides whether that is worth printing.
+pub fn goal_table(records: &[KernelRunRecord]) -> Vec<GoalRow> {
+    let mut map: BTreeMap<String, Vec<&KernelRunRecord>> = BTreeMap::new();
+    for r in records {
+        map.entry(r.goal.clone()).or_default().push(r);
+    }
+    map.into_iter()
+        .map(|(goal, recs)| {
+            let speedups: Vec<f64> = recs.iter().map(|r| r.best_speedup).collect();
+            let trials: usize = recs.iter().map(|r| r.trials).sum();
+            let correct: usize = recs.iter().map(|r| r.correct_trials).sum();
+            GoalRow {
+                goal,
+                runs: recs.len(),
+                valid_runs: recs.iter().filter(|r| r.any_valid).count(),
+                median_speedup: median(&speedups),
+                correct_pct: 100.0 * correct as f64 / trials.max(1) as f64,
+                guard_rejected: recs.iter().map(|r| r.guard_rejected_trials).sum(),
+                prompt_tokens: recs.iter().map(|r| r.prompt_tokens).sum(),
+                completion_tokens: recs.iter().map(|r| r.completion_tokens).sum(),
+            }
+        })
+        .collect()
+}
+
 /// Per-(provider, model) token usage and modeled API cost — the
 /// provider-seam accounting surfaced by `repro report tokens`
 /// (DESIGN.md §12). Replayed records carry the label of the backend
@@ -625,6 +670,7 @@ mod tests {
             repaired_trials: 0,
             repair_attempts: 0,
             repair_policy: "off".into(),
+            goal: "speedup".into(),
             provider: "sim".into(),
             best_speedup: speed,
             best_pytorch_speedup: if valid { speed * 0.8 } else { 0.0 },
@@ -635,6 +681,29 @@ mod tests {
             best_src: None,
             arms: vec![],
         }
+    }
+
+    #[test]
+    fn goal_table_groups_by_objective_label() {
+        let mut a = rec("M", "a", 1, 0, 2.0, true);
+        let mut b = rec("M", "b", 1, 0, 4.0, true);
+        b.goal = "balanced".into();
+        b.guard_rejected_trials = 3;
+        let c = rec("M", "c", 1, 0, 1.0, false);
+        a.goal = "speedup".into();
+        let rows = goal_table(&[a, b, c]);
+        assert_eq!(rows.len(), 2);
+        // BTreeMap order: "balanced" sorts before "speedup".
+        assert_eq!(rows[0].goal, "balanced");
+        assert_eq!(rows[0].runs, 1);
+        assert_eq!(rows[0].valid_runs, 1);
+        assert_eq!(rows[0].guard_rejected, 3);
+        assert!((rows[0].median_speedup - 4.0).abs() < 1e-9);
+        assert_eq!(rows[1].goal, "speedup");
+        assert_eq!(rows[1].runs, 2);
+        assert_eq!(rows[1].valid_runs, 1);
+        assert_eq!(rows[1].prompt_tokens, 200);
+        assert!((rows[1].correct_pct - 60.0).abs() < 1e-9); // 54/90
     }
 
     #[test]

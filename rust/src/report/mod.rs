@@ -132,6 +132,44 @@ pub fn validity(records: &[KernelRunRecord]) -> String {
 /// view, DESIGN.md §12/§16; pricing per paper Table 6). When any
 /// record ran a multi-member ensemble, the learned bandit arm weights
 /// are appended.
+/// Per-goal breakdown (DESIGN.md §17): one row per `--goal` label a
+/// record ran under — validity and speedup side by side, so the legs
+/// of a multi-objective campaign compare in one table.
+pub fn goals(records: &[KernelRunRecord]) -> String {
+    let rows = metrics::goal_table(records);
+    let mut out = String::new();
+    writeln!(out, "GOALS — runs and validity per search objective").unwrap();
+    writeln!(
+        out,
+        "{:<18} {:>6} {:>7} {:>9} {:>10} {:>8} {:>14}",
+        "Goal", "Runs", "Valid", "Median x", "Correct %", "Guard -", "Tokens"
+    )
+    .unwrap();
+    writeln!(out, "{}", hr(78)).unwrap();
+    for row in &rows {
+        writeln!(
+            out,
+            "{:<18} {:>6} {:>7} {:>9.2} {:>10.1} {:>8} {:>14}",
+            row.goal,
+            row.runs,
+            row.valid_runs,
+            row.median_speedup,
+            row.correct_pct,
+            row.guard_rejected,
+            row.prompt_tokens + row.completion_tokens,
+        )
+        .unwrap();
+    }
+    if rows.len() < 2 {
+        writeln!(
+            out,
+            "(single-objective sweep — run legs with different --goal values to compare)"
+        )
+        .unwrap();
+    }
+    out
+}
+
 pub fn tokens(records: &[KernelRunRecord]) -> String {
     let rows = metrics::token_cost_table(records);
     let mut out = String::new();
@@ -572,6 +610,7 @@ mod tests {
                     repaired_trials: 2,
                     repair_attempts: 3,
                     repair_policy: "repair:2".into(),
+                    goal: "speedup".into(),
                     provider: "sim".into(),
                     best_speedup: speed,
                     best_pytorch_speedup: pt,
@@ -602,6 +641,7 @@ mod tests {
             methods_table(),
             validity(&recs),
             tokens(&recs),
+            goals(&recs),
         ] {
             assert!(!text.is_empty());
         }
@@ -653,6 +693,22 @@ mod tests {
         assert!(text.contains("Correct %"), "{text}");
         assert!(text.contains("repair policy: repair:2"), "{text}");
         assert!(text.contains("EvoEngineer-Free"), "{text}");
+    }
+
+    #[test]
+    fn goals_report_breaks_out_objectives() {
+        let mut recs = records();
+        recs[2].goal = "balanced".into();
+        recs[3].goal = "balanced".into();
+        let text = goals(&recs);
+        assert!(text.contains("GOALS"), "{text}");
+        assert!(text.contains("speedup"), "{text}");
+        assert!(text.contains("balanced"), "{text}");
+        // Two goals present: the single-objective hint is absent.
+        assert!(!text.contains("single-objective"), "{text}");
+        // One goal present: the hint shows.
+        let text = goals(&records());
+        assert!(text.contains("single-objective"), "{text}");
     }
 
     #[test]

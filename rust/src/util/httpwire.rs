@@ -185,8 +185,37 @@ pub struct Request {
     pub body: String,
 }
 
-/// Request handler: returns (status code, JSON body).
-pub type Handler = dyn Fn(&Request) -> (u16, Json) + Send + Sync;
+/// One outbound response: status code, content type, body. Most
+/// control-plane endpoints answer JSON ([`Response::json`]); the
+/// Prometheus-style `/metrics` scrape answers plain text
+/// ([`Response::text`]).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub code: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(code: u16, body: Json) -> Self {
+        Self {
+            code,
+            content_type: "application/json",
+            body: body.to_string(),
+        }
+    }
+
+    pub fn text(code: u16, body: impl Into<String>) -> Self {
+        Self {
+            code,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: body.into(),
+        }
+    }
+}
+
+/// Request handler: returns the full [`Response`].
+pub type Handler = dyn Fn(&Request) -> Response + Send + Sync;
 
 /// Minimal `std::net` HTTP/1.1 server: a single accept-loop thread
 /// serving `Content-Length`-framed JSON requests one connection at a
@@ -304,21 +333,22 @@ fn serve_conn(stream: TcpStream, handler: &Handler) -> Result<()> {
         path,
         body: String::from_utf8_lossy(&body).into_owned(),
     };
-    let (code, json) = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+    let resp = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         handler(&req)
     })) {
         Ok(resp) => resp,
-        Err(_) => (
+        Err(_) => Response::json(
             500,
             Json::obj(vec![("error", Json::Str("handler panicked".into()))]),
         ),
     };
-    let body = json.to_string();
+    let (code, body) = (resp.code, resp.body);
     let mut stream = stream;
     let head = format!(
-        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {code} {}\r\nContent-Type: {}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n",
         reason(code),
+        resp.content_type,
         body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -363,12 +393,14 @@ mod tests {
     fn server_roundtrip_and_routing() {
         let handler: Arc<Handler> = Arc::new(|req: &Request| {
             if req.path == "/v1/echo" && req.method == "POST" {
-                (
+                Response::json(
                     200,
                     Json::obj(vec![("got", Json::Str(req.body.clone()))]),
                 )
+            } else if req.path == "/v1/plain" {
+                Response::text(200, "metric_like 1\n")
             } else {
-                (404, Json::obj(vec![("error", Json::Str("no route".into()))]))
+                Response::json(404, Json::obj(vec![("error", Json::Str("no route".into()))]))
             }
         });
         let mut server = Server::bind("127.0.0.1:0", handler).unwrap();
@@ -378,6 +410,10 @@ mod tests {
             request_json(&base, "POST", "/v1/echo", "hello wire", timeout).unwrap();
         assert_eq!(code, 200);
         assert_eq!(text, "{\"got\":\"hello wire\"}");
+        // Plain-text responses ride the same wire (the /metrics shape).
+        let (code, text) = request_json(&base, "GET", "/v1/plain", "", timeout).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(text, "metric_like 1\n");
         let (code, _) = request_json(&base, "GET", "/nope", "", timeout).unwrap();
         assert_eq!(code, 404);
         // Serial but multi-request: a second exchange still works.
@@ -395,7 +431,7 @@ mod tests {
             if req.path == "/boom" {
                 panic!("kaboom");
             }
-            (200, Json::obj(vec![("ok", Json::Bool(true))]))
+            Response::json(200, Json::obj(vec![("ok", Json::Bool(true))]))
         });
         let mut server = Server::bind("127.0.0.1:0", handler).unwrap();
         let base = split_url(&server.url()).unwrap();

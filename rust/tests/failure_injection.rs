@@ -132,6 +132,7 @@ fn archive_prefers_same_family_then_speedup() {
             family: family.into(),
             src: format!("kernel {op} {{ semantics: opt; }}"),
             speedup,
+            rank: speedup,
         });
     }
     let similar = archive.similar("zzz", "matmul", 3);
@@ -148,6 +149,7 @@ fn archive_prefers_same_family_then_speedup() {
         family: "matmul".into(),
         src: "worse".into(),
         speedup: 1.0,
+        rank: 1.0,
     });
     assert_eq!(archive.similar("zzz", "matmul", 1)[0].speedup, 5.0);
 }
@@ -187,6 +189,7 @@ fn zero_budget_run_is_well_formed() {
         provider: &provider,
         budget: 0,
         repair: evoengineer::methods::RepairPolicy::Off,
+        feedback: Default::default(),
     };
     for method in evoengineer::methods::all_methods() {
         let rec = method.run(&ctx).unwrap();

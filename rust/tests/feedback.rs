@@ -1,0 +1,198 @@
+//! Profile-guided feedback conformance (DESIGN.md §17).
+//!
+//! The subsystem's two load-bearing contracts, tested end-to-end on
+//! real artifacts:
+//!
+//! 1. **Default-goal byte-identity.** `--goal speedup` (the default)
+//!    must behave bit-for-bit like a pre-feedback build: identity
+//!    fitness, no profile sections, no `goal` key in serialized
+//!    records.
+//! 2. **Replay-safe profiles.** A `--goal balanced` campaign recorded
+//!    once replays byte-identically with zero live generation — the
+//!    profile sections re-render from journaled noise-free numbers, so
+//!    every request hash lands on the transcript journal. Prefetch
+//!    must not perturb profiled records either (speculative requests
+//!    hash-miss instead of carrying stale profiles).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use evoengineer::campaign::{self, results, CampaignConfig};
+use evoengineer::costmodel::baseline_schedule;
+use evoengineer::dsl::{self, KernelSpec};
+use evoengineer::evals::Evaluator;
+use evoengineer::feedback::{FeedbackConfig, Goal, ProfileReport};
+use evoengineer::llm::ProviderSpec;
+use evoengineer::methods::KernelRunRecord;
+use evoengineer::report;
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+use evoengineer::util::Rng;
+
+fn evaluator() -> Evaluator {
+    let reg = Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    );
+    Evaluator::new(reg, Runtime::new().unwrap())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "evo_feedback_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .subsec_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn base_cfg() -> CampaignConfig {
+    CampaignConfig {
+        methods: vec!["evoengineer-free".into(), "funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        op_filter: "relu_64".into(),
+        budget: 8,
+        quiet: true,
+        ..CampaignConfig::default()
+    }
+}
+
+fn record_lines(records: &[KernelRunRecord]) -> Vec<String> {
+    records.iter().map(|r| r.to_json().to_string()).collect()
+}
+
+#[test]
+fn profile_renders_deterministically_from_a_live_evaluation() {
+    let ev = evaluator();
+    let task = ev.registry.get("matmul_64").unwrap().clone();
+    let spec = KernelSpec {
+        op: task.name.clone(),
+        semantics: "opt".into(),
+        schedule: baseline_schedule(&task),
+    };
+    let src = dsl::print(&spec);
+    // Two evaluations with different RNG streams: the measured (noisy)
+    // numbers differ, the rendered profile must not — it is built from
+    // noise-free quantities only.
+    let a = ev.evaluate(&src, &task, &mut Rng::new(1));
+    let b = ev.evaluate(&src, &task, &mut Rng::new(999));
+    let ra = ProfileReport::from_outcome(&task, &a, &ev.gpu);
+    let rb = ProfileReport::from_outcome(&task, &b, &ev.gpu);
+    for goal in [Goal::Speedup, Goal::Memory, Goal::Balanced] {
+        assert_eq!(ra.render(goal), rb.render(goal), "profile carries measurement noise");
+    }
+    let text = ra.render(Goal::Balanced);
+    assert!(text.contains("op: matmul_64"), "{text}");
+    assert!(text.contains("outcome: ok"), "{text}");
+    assert!(text.contains("speedup_vs_baseline:"), "{text}");
+    assert!(text.contains("bound:"), "{text}");
+    assert!(text.contains("arithmetic_intensity:"), "{text}");
+    assert!(text.contains("objective: balanced"), "{text}");
+}
+
+#[test]
+fn default_goal_records_match_an_explicit_speedup_goal_and_omit_the_key() {
+    // `--goal speedup` must be indistinguishable from not passing the
+    // flag at all — and the serialized records must not grow a `goal`
+    // key (pre-feedback readers and byte-identity baselines both
+    // depend on it).
+    let implicit = campaign::run(&base_cfg(), evaluator()).unwrap();
+    let explicit_cfg = CampaignConfig {
+        goal: FeedbackConfig::parse("speedup").unwrap(),
+        ..base_cfg()
+    };
+    let explicit = campaign::run(&explicit_cfg, evaluator()).unwrap();
+    assert_eq!(record_lines(&implicit), record_lines(&explicit));
+    for line in record_lines(&implicit) {
+        assert!(!line.contains("\"goal\""), "default-goal record grew a goal key: {line}");
+    }
+    // The key still round-trips as the default on re-load.
+    let dir = tmpdir("default");
+    let path = dir.join("r.jsonl");
+    results::save(&path, &implicit).unwrap();
+    for r in results::load(&path).unwrap() {
+        assert_eq!(r.goal, "speedup");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn balanced_campaign_records_then_replays_byte_identically() {
+    let dir = tmpdir("replay");
+    let transcripts = dir.join("transcripts.jsonl");
+    let goal = FeedbackConfig::parse("balanced").unwrap();
+
+    let rec_cfg = CampaignConfig {
+        goal,
+        transcripts: Some(transcripts.clone()),
+        ..base_cfg()
+    };
+    let recorded = campaign::run(&rec_cfg, evaluator()).unwrap();
+    assert_eq!(recorded.len(), 2);
+    assert!(recorded.iter().all(|r| r.goal == "balanced"));
+    let journal_bytes = std::fs::read(&transcripts).unwrap();
+    assert!(!journal_bytes.is_empty());
+
+    // Replay with zero live generation: the profile sections re-render
+    // from journaled numbers, so every request hash (profile and goal
+    // fields included) lands on the journal.
+    let replay_cfg = CampaignConfig {
+        goal,
+        provider: ProviderSpec::Replay(transcripts.clone()),
+        transcripts: None,
+        ..base_cfg()
+    };
+    let replayed = campaign::run(&replay_cfg, evaluator()).unwrap();
+    assert_eq!(record_lines(&recorded), record_lines(&replayed));
+    assert_eq!(report::table4(&recorded), report::table4(&replayed));
+    assert_eq!(
+        journal_bytes,
+        std::fs::read(&transcripts).unwrap(),
+        "replay must not append to the transcript journal"
+    );
+
+    // The per-goal breakdown renders from these records.
+    let text = report::goals(&recorded);
+    assert!(text.contains("balanced"), "{text}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn profiled_records_are_stable_across_prefetch() {
+    // Speculative prefetch cannot see the in-flight trial's outcome,
+    // so with profiles on its requests hash-miss and are regenerated
+    // sequentially — a throughput cost, never a record change.
+    let cfg_off = CampaignConfig {
+        goal: FeedbackConfig::parse("speedup+profile").unwrap(),
+        ..base_cfg()
+    };
+    let cfg_on = CampaignConfig { prefetch: 2, ..cfg_off.clone() };
+    let off = campaign::run(&cfg_off, evaluator()).unwrap();
+    let on = campaign::run(&cfg_on, evaluator()).unwrap();
+    assert_eq!(record_lines(&off), record_lines(&on));
+    assert!(off.iter().all(|r| r.goal == "speedup+profile"));
+}
+
+#[test]
+fn goals_change_search_behaviour_but_stay_deterministic() {
+    // Same grid, three objectives: each leg is internally deterministic
+    // (run twice, byte-identical), and the recorded labels differ.
+    let mut by_goal = Vec::new();
+    for label in ["speedup", "memory", "balanced"] {
+        let cfg = CampaignConfig {
+            goal: FeedbackConfig::parse(label).unwrap(),
+            ..base_cfg()
+        };
+        let a = campaign::run(&cfg, evaluator()).unwrap();
+        let b = campaign::run(&cfg, evaluator()).unwrap();
+        assert_eq!(record_lines(&a), record_lines(&b), "goal {label} is not deterministic");
+        by_goal.push(a);
+    }
+    let all: Vec<KernelRunRecord> = by_goal.into_iter().flatten().collect();
+    let table = evoengineer::metrics::goal_table(&all);
+    assert_eq!(table.len(), 3, "three goal labels in the combined records");
+}

@@ -263,6 +263,7 @@ fn repair_loop_cache_replay_is_bit_identical() {
             provider: &provider,
             budget: 25,
             repair: RepairPolicy::Repair { max_attempts: 2 },
+            feedback: Default::default(),
         };
         let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap();
         (rec, ev.runtime_stats().unwrap().executions)

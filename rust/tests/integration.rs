@@ -134,6 +134,7 @@ fn all_methods_run_on_all_categories() {
                 provider: &provider,
                 budget: 12,
                 repair: RepairPolicy::Off,
+                feedback: Default::default(),
             };
             let rec = method.run(&ctx).unwrap();
             assert!(rec.trials <= 12, "{}", method.name());
@@ -270,6 +271,7 @@ fn token_ordering_matches_figure4() {
             provider: &provider,
             budget: 30,
             repair: RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let rec = methods::by_name(name).unwrap().run(&ctx).unwrap();
         rec.total_tokens()

@@ -330,6 +330,7 @@ mod legacy {
                     family: self.ctx.task.family.clone(),
                     src: best.src.clone(),
                     speedup: best.true_speedup,
+                    rank: best.true_speedup,
                 });
             }
             KernelRunRecord {
@@ -346,6 +347,7 @@ mod legacy {
                 repaired_trials: self.repaired,
                 repair_attempts: self.repair_attempts,
                 repair_policy: self.ctx.repair.label(),
+                goal: self.ctx.feedback.label(),
                 provider: self.ctx.provider.label().to_string(),
                 best_speedup: self.best.as_ref().map(|b| b.true_speedup).unwrap_or(1.0).max(1.0),
                 best_pytorch_speedup: self.best_pt,
@@ -567,6 +569,7 @@ fn engine_is_byte_identical_to_the_legacy_monolith_for_all_six_methods() {
             provider: &p_new,
             budget: 12,
             repair: RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let rec_new = method.run(&ctx_new).unwrap();
         let a_old = Archive::new();
@@ -580,6 +583,7 @@ fn engine_is_byte_identical_to_the_legacy_monolith_for_all_six_methods() {
             provider: &p_old,
             budget: 12,
             repair: RepairPolicy::Off,
+            feedback: Default::default(),
         };
         let rec_old = legacy::run(&name, &ctx_old);
         assert_eq!(
@@ -609,6 +613,7 @@ fn engine_matches_legacy_under_a_repair_policy() {
         provider: &p_new,
         budget: 14,
         repair: RepairPolicy::Repair { max_attempts: 2 },
+        feedback: Default::default(),
     };
     let rec_new = methods::by_name("evoengineer-free").unwrap().run(&ctx_new).unwrap();
     let a_old = Archive::new();
@@ -622,6 +627,7 @@ fn engine_matches_legacy_under_a_repair_policy() {
         provider: &p_old,
         budget: 14,
         repair: RepairPolicy::Repair { max_attempts: 2 },
+        feedback: Default::default(),
     };
     let rec_old = legacy::run("EvoEngineer-Free", &ctx_old);
     assert!(rec_new.repair_attempts > 0, "repairs must fire for this test to bite");
@@ -653,6 +659,7 @@ fn prefetch_is_byte_identical_to_serial_execution() {
                 provider: &provider,
                 budget: 10,
                 repair,
+                feedback: Default::default(),
             };
             let opts = EngineOpts { prefetch, ..EngineOpts::default() };
             engine::drive(methods::by_name(method).unwrap().as_ref(), &ctx, &opts).unwrap()
@@ -810,6 +817,7 @@ fn event_journal_agrees_with_the_run_record_and_the_live_sink() {
         provider: &provider,
         budget: 10,
         repair: RepairPolicy::Repair { max_attempts: 2 },
+        feedback: Default::default(),
     };
     let metrics_sink = Arc::new(MetricsSink::new());
     let journal_sink: Arc<dyn methods::EventSink> =

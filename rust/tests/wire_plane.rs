@@ -136,6 +136,56 @@ fn coordinator_plus_n_workers_matches_the_inprocess_sweep() {
 }
 
 #[test]
+fn coordinator_serves_prometheus_metrics() {
+    use evoengineer::util::httpwire::{request_json, split_url};
+    use std::time::Duration;
+
+    let dir = tmpdir("metrics");
+    let cfg = CampaignConfig {
+        checkpoint: Some(dir.join("ckpt.jsonl")),
+        ..base_cfg()
+    };
+    let coord = Coordinator::start(&cfg, &registry(), "127.0.0.1:0", None).unwrap();
+    let url = coord.url();
+    let base = split_url(&url).unwrap();
+    let timeout = Duration::from_secs(5);
+
+    // Pre-sweep scrape: text exposition format, grid visible, nothing
+    // done yet.
+    let (code, text) = request_json(&base, "GET", "/metrics", "", timeout).unwrap();
+    assert_eq!(code, 200);
+    assert!(text.contains("# TYPE campaign_uptime_seconds gauge"), "{text}");
+    assert!(text.contains("campaign_grid_cells 2\n"), "{text}");
+    assert!(text.contains("campaign_cells_done 0\n"), "{text}");
+    assert!(text.contains("campaign_trials_per_second"), "{text}");
+
+    // /config carries the goal knob workers mirror (default sweep).
+    let (code, cfg_text) = request_json(&base, "GET", "/config", "", timeout).unwrap();
+    assert_eq!(code, 200);
+    assert!(cfg_text.contains("\"goal\":\"speedup\""), "{cfg_text}");
+
+    // Drain the grid with one worker, then scrape again.
+    let opts = WorkOpts { concurrency: 1, quiet: true, ..WorkOpts::default() };
+    wire::work(&url, evaluator(), &opts).unwrap();
+    let (code, text) = request_json(&base, "GET", "/metrics", "", timeout).unwrap();
+    assert_eq!(code, 200);
+    assert!(text.contains("campaign_cells_done 2\n"), "{text}");
+    assert!(text.contains("campaign_completions_total 2\n"), "{text}");
+    assert!(text.contains("evo_runs_finished_total 2\n"), "{text}");
+    // 2 cells x 4-trial budget folded from the event buffers.
+    assert!(text.contains("evo_trial_groups_total 8\n"), "{text}");
+    assert!(text.contains("evo_prompt_tokens_total"), "{text}");
+    // Labeled families: per-outcome trials and per-goal completions.
+    assert!(text.contains("evo_trials_total{outcome="), "{text}");
+    assert!(text.contains("campaign_goal_runs_total{goal=\"speedup\"} 2\n"), "{text}");
+    assert!(text.contains("campaign_goal_valid_runs_total{goal=\"speedup\"}"), "{text}");
+
+    let (records, _) = coord.wait().unwrap();
+    assert_eq!(records.len(), 2);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn worker_death_mid_cell_reclaims_to_byte_identical_results() {
     let dir = tmpdir("kill");
     let (full, ref_events) = reference(&dir);

@@ -17,6 +17,13 @@ committed artifact described in DESIGN.md §14:
 
 Duplicate (group, name) pairs keep the LAST occurrence — a re-run in
 the same process supersedes earlier samples.
+
+`--sentinel NOTE` writes a "bootstrap-unmeasured" sentinel instead (the
+bench suite's shape with null medians, NOTE recorded in the artifact's
+`note`), for authoring environments without a Rust toolchain. A
+sentinel NEVER overwrites an artifact whose provenance is "measured":
+real numbers are strictly more information than a placeholder, and the
+bench_compare.py regression gate keys off the measured baseline.
 """
 
 import argparse
@@ -25,6 +32,25 @@ import subprocess
 import sys
 
 SCHEMA = 1
+
+
+def load_existing(path):
+    """The artifact currently at `path`, or None (absent/unreadable)."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def null_shape(rows, fields):
+    """The rows with every measurement field nulled (sentinel shape)."""
+    out = []
+    for row in rows:
+        nulled = {"group": row["group"], "name": row["name"]}
+        nulled.update({k: None for k in fields})
+        out.append(nulled)
+    return out
 
 
 def git_short_sha():
@@ -40,10 +66,47 @@ def git_short_sha():
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--raw", required=True, help="EVO_BENCH_JSON stream (JSONL)")
+    ap.add_argument("--raw", help="EVO_BENCH_JSON stream (JSONL)")
     ap.add_argument("--date", required=True, help="artifact date (YYYY-MM-DD)")
     ap.add_argument("--out", required=True, help="merged artifact path")
+    ap.add_argument(
+        "--sentinel", metavar="NOTE",
+        help="write a bootstrap-unmeasured sentinel (suite shape, null medians) "
+             "with NOTE in the artifact's `note` instead of merging measurements; "
+             "refuses to overwrite an artifact whose provenance is 'measured'")
     args = ap.parse_args()
+
+    if args.sentinel is not None:
+        existing = load_existing(args.out)
+        if existing is not None and existing.get("provenance") == "measured":
+            sys.exit(
+                f"error: {args.out} holds a 'measured' artifact — refusing to "
+                "overwrite real medians with a sentinel (drop --sentinel, or "
+                "pick a new --out)")
+        if existing is None:
+            sys.exit(
+                f"error: no existing artifact at {args.out} to take the bench "
+                "suite's shape from — a sentinel only refreshes a prior one")
+        artifact = {
+            "schema": SCHEMA,
+            "date": args.date,
+            "git": git_short_sha(),
+            "provenance": "bootstrap-unmeasured",
+            "note": args.sentinel,
+            "benches": null_shape(
+                existing.get("benches", []),
+                ["median_ns", "p10_ns", "p90_ns", "iters"]),
+            "ratios": null_shape(existing.get("ratios", []), ["value", "target"]),
+        }
+        with open(args.out, "w", encoding="utf-8") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+        print(f"wrote sentinel {args.out}: "
+              f"{len(artifact['benches'])} benches (unmeasured)")
+        return
+
+    if not args.raw:
+        sys.exit("error: --raw is required unless --sentinel is given")
 
     benches, ratios = {}, {}
     with open(args.raw, encoding="utf-8") as f:
