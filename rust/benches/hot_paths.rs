@@ -166,6 +166,8 @@ fn main() {
         budget: usize::MAX / 2,
         repair: RepairPolicy::Off,
         feedback: Default::default(),
+        bank: None,
+        warm: None,
     };
     let mut session = Session::start(&ctx, "bench", Box::new(SingleBest::new()));
     session.seed(baseline_src(&ctx));
@@ -281,6 +283,8 @@ fn pipelined_trials_per_sec(
         budget,
         repair: RepairPolicy::Off,
         feedback: Default::default(),
+        bank: None,
+        warm: None,
     };
     let method = methods::by_name("evoengineer-free").unwrap();
     let opts = EngineOpts { prefetch, ..EngineOpts::default() };

@@ -1,0 +1,934 @@
+//! Persistent cross-campaign kernel knowledge bank (DESIGN.md §18).
+//!
+//! Every campaign in this reproduction used to start cold: the
+//! archive, insights, and performance profiles died with the run. The
+//! bank makes elite kernels *durable artifacts* that outlive any
+//! single campaign — an append-only JSONL journal (`bank.jsonl`) of
+//! content-addressed **bank entries**: the elite candidate's canonical
+//! printed form plus its SHA-256 key, op/family/category, the goal it
+//! was optimized under, its noise-free measured speedup and
+//! goal-adjusted fitness, a distilled profile line, provider/route
+//! provenance, and the insight the LLM attached to it.
+//!
+//! Journal mechanics reuse the eval-cache machinery (DESIGN.md §8/§14):
+//! appends are staged in a [`GroupWriter`] and group-committed at the
+//! engine's trial boundaries; opens are served by the [`index`] sidecar
+//! (honouring `EVO_JOURNAL_INDEX`) with record bodies `pread` + parsed
+//! lazily; a torn tail left by a killed process is truncated before
+//! the append handle opens; `bank gc` compacts duplicate keys
+//! first-occurrence-wins.
+//!
+//! Consumption is strictly read-only and deterministic:
+//!
+//! * **retrieval-seeded prompts** — [`KernelBank::retrieve`] ranks
+//!   entries by (same-op > same-family > same-category >
+//!   ArgSpec-shape similarity), tie-broken by goal-adjusted fitness
+//!   then key, and the engine injects the top-K as a `## PRIOR
+//!   ELITES` few-shot section ([`render_refs`]) into generation
+//!   requests via the NUL-framed `bank_refs` request field;
+//! * **warm-started campaigns** — `--warm-start <bank>` seeds each
+//!   cell's population and the shared archive from the bank's elites
+//!   for that op before trial 0 ([`KernelBank::entries_for_op`]).
+//!
+//! Determinism contract: a bank attached for *deposits* (`--bank`)
+//! only ever writes — records and events are byte-identical with or
+//! without it. A bank attached for *consumption* (`--warm-start`) is
+//! an immutable snapshot taken at campaign start, so retrieval text is
+//! constant per cell, workers fed the same snapshot over the wire
+//! (`GET /bank`) behave byte-identically to a local run, and an empty
+//! snapshot is indistinguishable from no snapshot at all.
+
+use std::collections::HashMap;
+use std::io::{BufRead as _, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::store::{index, EvalKey, GroupWriter, IndexMode};
+use crate::util::json::{self, Json};
+use crate::{eyre, Result, WrapErr as _};
+
+/// How many retrieved elites a generation prompt carries.
+pub const RETRIEVE_K: usize = 3;
+
+/// How many bank elites seed a warm-started cell's population.
+pub const WARM_SEED_K: usize = 3;
+
+/// One journaled elite. `src` is the canonical printed form; `key` is
+/// [`EvalKey::from_canonical`] over (op, src), so the bank is
+/// content-addressed and deposits dedup across campaigns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankEntry {
+    pub key: String,
+    pub op: String,
+    pub family: String,
+    pub category: u8,
+    /// Goal label the depositing run optimized under ("speedup",
+    /// "memory", "balanced").
+    pub goal: String,
+    /// Canonical printed form of the elite kernel.
+    pub src: String,
+    /// Noise-free true speedup vs the op baseline at deposit time.
+    pub speedup: f64,
+    /// Goal-adjusted fitness at deposit time (equals `speedup` under
+    /// the default goal).
+    pub rank: f64,
+    /// Flattened argument dims of the op — the retriever's shape axis.
+    pub shape: Vec<usize>,
+    /// Distilled one-line profile summary ("" when profiling had
+    /// nothing to say).
+    pub profile: String,
+    /// Provenance: provider label, LLM name, method, ensemble member
+    /// ("" when the provider was not an ensemble).
+    pub provider: String,
+    pub model: String,
+    pub method: String,
+    pub route: String,
+    /// The insight line the LLM attached to the elite ("" if none).
+    pub insight: String,
+}
+
+/// Content-addressed key for a canonical elite: identical to the
+/// eval-cache keying rule so the two stores agree on identity.
+pub fn entry_key(op: &str, canonical: &str) -> String {
+    EvalKey::from_canonical(op, canonical).0
+}
+
+// ---------------------------------------------------------------------
+// JSONL (de)serialization — util::json, no serde (offline environment).
+
+/// f64 → Json preserving non-finite values (mirrors the eval cache).
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn get_num(v: &Json, key: &str) -> Result<f64> {
+    match v.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(Json::Str(s)) => match s.as_str() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" => Ok(f64::NAN),
+            other => Err(eyre!("bad numeric field `{key}`: {other}")),
+        },
+        _ => Err(eyre!("missing numeric field `{key}`")),
+    }
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(String::from)
+        .ok_or_else(|| eyre!("missing string field `{key}`"))
+}
+
+impl BankEntry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::Str("elite".into())),
+            ("key", Json::Str(self.key.clone())),
+            ("op", Json::Str(self.op.clone())),
+            ("family", Json::Str(self.family.clone())),
+            ("category", Json::Num(self.category as f64)),
+            ("goal", Json::Str(self.goal.clone())),
+            ("speedup", num(self.speedup)),
+            ("rank", num(self.rank)),
+            (
+                "shape",
+                Json::Arr(self.shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+            ),
+            ("profile", Json::Str(self.profile.clone())),
+            ("provider", Json::Str(self.provider.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("route", Json::Str(self.route.clone())),
+            ("insight", Json::Str(self.insight.clone())),
+            ("src", Json::Str(self.src.clone())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        if v.get("type").and_then(|t| t.as_str()) != Some("elite") {
+            return Err(eyre!("not a bank elite line"));
+        }
+        let shape = match v.get("shape") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| eyre!("bad shape dim")))
+                .collect::<Result<Vec<_>>>()?,
+            _ => return Err(eyre!("missing shape field")),
+        };
+        Ok(Self {
+            key: get_str(v, "key")?,
+            op: get_str(v, "op")?,
+            family: get_str(v, "family")?,
+            category: get_num(v, "category")? as u8,
+            goal: get_str(v, "goal")?,
+            src: get_str(v, "src")?,
+            speedup: get_num(v, "speedup")?,
+            rank: get_num(v, "rank")?,
+            shape,
+            profile: get_str(v, "profile")?,
+            provider: get_str(v, "provider")?,
+            model: get_str(v, "model")?,
+            method: get_str(v, "method")?,
+            route: get_str(v, "route")?,
+            insight: get_str(v, "insight")?,
+        })
+    }
+}
+
+fn parse_entry(line: &str) -> Result<BankEntry> {
+    let v = json::parse(line).map_err(|e| eyre!("{e}"))?;
+    BankEntry::from_json(&v)
+}
+
+// ---------------------------------------------------------------------
+// The bank
+
+/// One in-memory slot: parsed, or an `(offset, len)` journal extent
+/// hydrated on first consumption (deposit-only banks never pay body
+/// parsing; see the eval cache's identical scheme).
+#[derive(Debug, Clone)]
+enum Slot {
+    Parsed(BankEntry),
+    OnDisk { offset: u64, len: u32 },
+}
+
+/// The kernel knowledge bank. Three flavours behind one type:
+/// read-write over a journal file ([`KernelBank::open`]), read-only
+/// over a journal file ([`KernelBank::load`]), and read-only over
+/// wire-shipped lines ([`KernelBank::from_lines`] — what `campaign
+/// work` builds from `GET /bank`). Cheap to share: wrap in `Arc`.
+pub struct KernelBank {
+    path: Option<PathBuf>,
+    map: RwLock<HashMap<String, Slot>>,
+    /// Positioned-read handle for lazy hydration (file-backed only).
+    reader: Option<std::fs::File>,
+    /// Append handle (read-write only); staged group-commit.
+    writer: Option<Mutex<GroupWriter>>,
+    indexed_open: bool,
+    retrieval_hits: AtomicU64,
+    retrieval_misses: AtomicU64,
+    deposits: AtomicU64,
+}
+
+impl KernelBank {
+    /// Open (or create) a read-write bank at `path`, honouring
+    /// `EVO_JOURNAL_INDEX`. Torn tails are truncated before the append
+    /// handle opens; corrupt interior lines are skipped with a warning
+    /// — the bank is advisory, never fatal.
+    pub fn open(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        Self::open_with(path, IndexMode::from_env())
+    }
+
+    /// [`KernelBank::open`] with an explicit index mode (the torture
+    /// suite exercises both paths and asserts they agree).
+    pub fn open_with(path: impl AsRef<Path>, mode: IndexMode) -> Result<Arc<Self>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).context("creating bank dir")?;
+            }
+        }
+        let torn = crate::util::truncate_torn_tail(&path).context("repairing bank tail")?;
+        if torn > 0 {
+            eprintln!(
+                "warning: bank {}: truncated {torn} bytes of torn final line",
+                path.display()
+            );
+        }
+        // Append handle first so the journal exists (even empty)
+        // before the reader and the index look at it.
+        let writer = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .context("opening bank for append")?;
+        let display = path.display().to_string();
+        let extract = |off: u64, line: &str| match parse_entry(line) {
+            Ok(e) => Some(e.key),
+            Err(e) => {
+                eprintln!("warning: bank {display}: skipping bad line at byte {off}: {e}");
+                None
+            }
+        };
+        let loaded = index::load(&path, mode, &extract).context("indexing bank")?;
+        let mut map = HashMap::new();
+        for r in loaded.records {
+            map.entry(r.key).or_insert(Slot::OnDisk { offset: r.offset, len: r.len });
+        }
+        let reader = std::fs::File::open(&path).context("opening bank for read")?;
+        Ok(Arc::new(Self {
+            path: Some(path),
+            map: RwLock::new(map),
+            reader: Some(reader),
+            writer: Some(Mutex::new(GroupWriter::new(writer))),
+            indexed_open: loaded.indexed,
+            retrieval_hits: AtomicU64::new(0),
+            retrieval_misses: AtomicU64::new(0),
+            deposits: AtomicU64::new(0),
+        }))
+    }
+
+    /// Load an existing bank read-only (the `--warm-start` snapshot):
+    /// a full scan that parses every entry up front, first occurrence
+    /// wins, corrupt lines skipped with a warning. No torn-tail
+    /// repair — a consumption snapshot must not mutate the file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening warm-start bank {}", path.display()))?;
+        let mut map = HashMap::new();
+        for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_entry(&line) {
+                Ok(e) => {
+                    map.entry(e.key.clone()).or_insert(Slot::Parsed(e));
+                }
+                Err(e) => eprintln!(
+                    "warning: bank {}: skipping bad line {}: {e}",
+                    path.display(),
+                    i + 1
+                ),
+            }
+        }
+        Ok(Arc::new(Self {
+            path: Some(path.to_path_buf()),
+            map: RwLock::new(map),
+            reader: None,
+            writer: None,
+            indexed_open: false,
+            retrieval_hits: AtomicU64::new(0),
+            retrieval_misses: AtomicU64::new(0),
+            deposits: AtomicU64::new(0),
+        }))
+    }
+
+    /// Build a read-only in-memory bank from journal lines shipped
+    /// over the wire (`GET /bank`). Bad lines are skipped with a
+    /// warning, matching [`KernelBank::load`] semantics exactly so a
+    /// worker's snapshot equals the coordinator's file snapshot.
+    pub fn from_lines<S: AsRef<str>>(lines: &[S]) -> Arc<Self> {
+        let mut map = HashMap::new();
+        for (i, line) in lines.iter().enumerate() {
+            let line = line.as_ref();
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_entry(line) {
+                Ok(e) => {
+                    map.entry(e.key.clone()).or_insert(Slot::Parsed(e));
+                }
+                Err(e) => {
+                    eprintln!("warning: bank (wire): skipping bad line {}: {e}", i + 1)
+                }
+            }
+        }
+        Arc::new(Self {
+            path: None,
+            map: RwLock::new(map),
+            reader: None,
+            writer: None,
+            indexed_open: false,
+            retrieval_hits: AtomicU64::new(0),
+            retrieval_misses: AtomicU64::new(0),
+            deposits: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Whether this open was served by a valid sidecar index.
+    pub fn opened_indexed(&self) -> bool {
+        self.indexed_open
+    }
+
+    /// Unique entries.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deposit one elite. Content-addressed: a key already present is
+    /// left as-is and not re-journaled (this is what keeps
+    /// record-then-replay from growing the journal — the replay
+    /// re-derives the same elites). Read-only banks ignore deposits.
+    /// Staged in the group-commit buffer; durability arrives at the
+    /// next [`KernelBank::flush`].
+    pub fn deposit(&self, entry: BankEntry) -> Result<bool> {
+        let Some(writer) = &self.writer else {
+            return Ok(false);
+        };
+        {
+            let mut g = self.map.write().unwrap();
+            if g.contains_key(&entry.key) {
+                return Ok(false);
+            }
+            g.insert(entry.key.clone(), Slot::Parsed(entry.clone()));
+        }
+        let line = entry.to_json().to_string();
+        writer.lock().unwrap().append_line(line.as_bytes())?;
+        self.deposits.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Merge one journal line from another bank (`bank import`).
+    /// Returns whether the line was ingested.
+    pub fn ingest_line(&self, line: &str) -> Result<bool> {
+        let entry = parse_entry(line).context("ingesting bank line")?;
+        self.deposit(entry)
+    }
+
+    /// Group-commit flush point: make every staged deposit durable.
+    pub fn flush(&self) -> Result<()> {
+        if let Some(writer) = &self.writer {
+            writer.lock().unwrap().flush()?;
+        }
+        Ok(())
+    }
+
+    /// Test hook: simulate a kill between deposit and flush.
+    #[doc(hidden)]
+    pub fn drop_unflushed(&self) {
+        if let Some(writer) = &self.writer {
+            writer.lock().unwrap().drop_unflushed();
+        }
+    }
+
+    /// Deposits journaled by this process.
+    pub fn deposits(&self) -> u64 {
+        self.deposits.load(Ordering::Relaxed)
+    }
+
+    /// (non-empty, empty) retrieval counts served by this process.
+    pub fn retrieval_counts(&self) -> (u64, u64) {
+        (
+            self.retrieval_hits.load(Ordering::Relaxed),
+            self.retrieval_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// The entry behind `key`, hydrating an on-disk slot on first
+    /// touch (stale slots are dropped with a warning, mirroring the
+    /// eval cache).
+    fn hydrate(&self, key: &str) -> Option<BankEntry> {
+        let extent = {
+            let g = self.map.read().unwrap();
+            match g.get(key)? {
+                Slot::Parsed(e) => return Some(e.clone()),
+                Slot::OnDisk { offset, len } => (*offset, *len),
+            }
+        };
+        let reader = self.reader.as_ref()?;
+        use std::os::unix::fs::FileExt as _;
+        let (offset, len) = extent;
+        let mut buf = vec![0u8; len as usize];
+        let parsed = reader
+            .read_exact_at(&mut buf, offset)
+            .map_err(|e| eyre!("{e}"))
+            .and_then(|_| {
+                let text = std::str::from_utf8(&buf).map_err(|e| eyre!("{e}"))?;
+                parse_entry(text.trim_end_matches('\n'))
+            });
+        match parsed {
+            Ok(e) if e.key == key => {
+                self.map
+                    .write()
+                    .unwrap()
+                    .insert(key.to_string(), Slot::Parsed(e.clone()));
+                Some(e)
+            }
+            other => {
+                let why = match other {
+                    Ok(e) => format!("record at byte {offset} keyed `{}`", e.key),
+                    Err(e) => format!("record at byte {offset} unreadable: {e}"),
+                };
+                eprintln!(
+                    "warning: bank: dropping stale index slot for `{key}`: {why}"
+                );
+                self.map.write().unwrap().remove(key);
+                None
+            }
+        }
+    }
+
+    /// Every entry, hydrated, in key order (the deterministic base for
+    /// both consumption paths).
+    pub fn all_entries(&self) -> Vec<BankEntry> {
+        let mut keys: Vec<String> = self.map.read().unwrap().keys().cloned().collect();
+        keys.sort();
+        keys.iter().filter_map(|k| self.hydrate(k)).collect()
+    }
+
+    /// Bank elites for exactly `op`, best first (rank desc, key asc) —
+    /// the warm-start seeding order.
+    pub fn entries_for_op(&self, op: &str) -> Vec<BankEntry> {
+        let mut hits: Vec<BankEntry> =
+            self.all_entries().into_iter().filter(|e| e.op == op).collect();
+        hits.sort_by(|a, b| {
+            b.rank.total_cmp(&a.rank).then_with(|| a.key.cmp(&b.key))
+        });
+        hits
+    }
+
+    /// Deterministic retriever: rank every entry by affinity to the
+    /// asking cell — same-op (3) > same-family (2) > same-category (1)
+    /// — then ArgSpec-shape similarity, tie-broken by goal-adjusted
+    /// fitness (rank) then key; return the top `k`. Counts a hit when
+    /// anything comes back (surfaced by `report bank` / end-of-run
+    /// summaries).
+    pub fn retrieve(
+        &self,
+        op: &str,
+        family: &str,
+        category: u8,
+        shape: &[usize],
+        k: usize,
+    ) -> Vec<BankEntry> {
+        let mut scored: Vec<(u64, u64, BankEntry)> = self
+            .all_entries()
+            .into_iter()
+            .map(|e| {
+                let affinity = if e.op == op {
+                    3
+                } else if e.family == family {
+                    2
+                } else if e.category == category {
+                    1
+                } else {
+                    0
+                };
+                let sim = shape_similarity(&e.shape, shape);
+                (affinity, sim, e)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.0.cmp(&a.0)
+                .then_with(|| b.1.cmp(&a.1))
+                .then_with(|| b.2.rank.total_cmp(&a.2.rank))
+                .then_with(|| a.2.key.cmp(&b.2.key))
+        });
+        let out: Vec<BankEntry> = scored.into_iter().take(k).map(|(_, _, e)| e).collect();
+        match out.is_empty() {
+            false => self.retrieval_hits.fetch_add(1, Ordering::Relaxed),
+            true => self.retrieval_misses.fetch_add(1, Ordering::Relaxed),
+        };
+        out
+    }
+
+    /// Journal lines for every unique entry, key order — what the
+    /// coordinator ships to workers (`GET /bank`) and what `bank
+    /// export` prints. Re-serialized from parsed entries, so the
+    /// output is compacted and canonical regardless of journal state.
+    pub fn export_lines(&self) -> Vec<String> {
+        self.all_entries()
+            .iter()
+            .map(|e| e.to_json().to_string())
+            .collect()
+    }
+}
+
+/// Positional shape affinity: 2 per matching dim (same position), +1
+/// for matching rank. Integer on purpose — float similarity invites
+/// platform-dependent ordering.
+fn shape_similarity(a: &[usize], b: &[usize]) -> u64 {
+    let matching = a.iter().zip(b.iter()).filter(|(x, y)| x == y).count() as u64;
+    let same_rank = (a.len() == b.len()) as u64;
+    2 * matching + same_rank
+}
+
+/// The `## PRIOR ELITES` few-shot section body: one block per
+/// retrieved elite, in retrieval order. Deterministic fixed-format
+/// text — it feeds the request hash.
+pub fn render_refs(entries: &[BankEntry]) -> String {
+    let mut s = String::new();
+    for (i, e) in entries.iter().enumerate() {
+        if i > 0 {
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "### elite {} | op {} | speedup {:.3}x | goal {}\n",
+            i + 1,
+            e.op,
+            e.speedup,
+            e.goal
+        ));
+        if !e.insight.is_empty() {
+            s.push_str(&format!("// insight: {}\n", e.insight));
+        }
+        if !e.profile.is_empty() {
+            s.push_str(&format!("// profile: {}\n", e.profile));
+        }
+        s.push_str(&e.src);
+        if !e.src.ends_with('\n') {
+            s.push('\n');
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Offline maintenance (`bank stats` / `bank gc` / `bank top`)
+
+/// Aggregate numbers for `bank stats` / `report bank`.
+#[derive(Debug, Clone, Default)]
+pub struct BankStats {
+    pub entries: usize,
+    pub journal_lines: usize,
+    /// Lines beyond the first occurrence of their key (what `gc`
+    /// would drop).
+    pub dup_lines: usize,
+    pub file_bytes: u64,
+    /// (op, entries, best rank, best speedup), op order.
+    pub per_op: Vec<(String, usize, f64, f64)>,
+    /// (goal label, entries), label order.
+    pub per_goal: Vec<(String, usize)>,
+    /// Sidecar index health (`None` when no sidecar exists).
+    pub index: Option<index::IndexHealth>,
+}
+
+/// Read-only aggregate view of a bank journal on disk.
+pub fn stats(path: impl AsRef<Path>) -> Result<BankStats> {
+    let path = path.as_ref();
+    let mut s = BankStats::default();
+    if !path.exists() {
+        return Ok(s);
+    }
+    s.file_bytes = std::fs::metadata(path)?.len();
+    let f = std::fs::File::open(path).context("opening bank")?;
+    let mut seen = std::collections::HashSet::new();
+    let mut per_op: HashMap<String, (usize, f64, f64)> = HashMap::new();
+    let mut per_goal: HashMap<String, usize> = HashMap::new();
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        s.journal_lines += 1;
+        let Ok(e) = parse_entry(&line) else { continue };
+        if !seen.insert(e.key.clone()) {
+            s.dup_lines += 1;
+            continue;
+        }
+        s.entries += 1;
+        let slot = per_op.entry(e.op.clone()).or_insert((0, f64::NEG_INFINITY, 0.0));
+        slot.0 += 1;
+        if e.rank > slot.1 {
+            slot.1 = e.rank;
+            slot.2 = e.speedup;
+        }
+        *per_goal.entry(e.goal.clone()).or_insert(0) += 1;
+    }
+    s.per_op = per_op
+        .into_iter()
+        .map(|(op, (n, rank, speedup))| (op, n, rank, speedup))
+        .collect();
+    s.per_op.sort_by(|a, b| a.0.cmp(&b.0));
+    s.per_goal = per_goal.into_iter().collect();
+    s.per_goal.sort_by(|a, b| a.0.cmp(&b.0));
+    s.index = index::health(path);
+    Ok(s)
+}
+
+/// Compact the journal in place: one line per unique key (first
+/// occurrence wins), corrupt lines dropped. Returns
+/// (bytes_before, bytes_after).
+pub fn gc(path: impl AsRef<Path>) -> Result<(u64, u64)> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Err(eyre!("no bank at {}", path.display()));
+    }
+    let before = std::fs::metadata(path)?.len();
+    let f = std::fs::File::open(path).context("opening bank")?;
+    let mut seen = std::collections::HashSet::new();
+    let mut kept: Vec<String> = Vec::new();
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Ok(e) = parse_entry(&line) {
+            if seen.insert(e.key) {
+                kept.push(line);
+            }
+        }
+    }
+    let tmp = path.with_extension("jsonl.gc.tmp");
+    {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).context("creating bank gc temp file")?,
+        );
+        for line in &kept {
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path).context("replacing bank journal")?;
+    // The sidecar indexed the pre-compaction journal; drop it so the
+    // next open rebuilds from the compacted bytes.
+    index::delete_sidecar(path);
+    let after = std::fs::metadata(path)?.len();
+    Ok((before, after))
+}
+
+/// Human-readable `bank stats` report.
+pub fn stats_report(s: &BankStats) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "bank: {} entries across {} ops ({} journal lines, {} duplicate, {} bytes)\n",
+        s.entries,
+        s.per_op.len(),
+        s.journal_lines,
+        s.dup_lines,
+        s.file_bytes
+    ));
+    if let Some(h) = &s.index {
+        out.push_str(&format!(
+            "index: {} indexed opens, {} scanned, {} rebuilds\n",
+            h.indexed_opens, h.scanned_opens, h.rebuilds
+        ));
+    }
+    if !s.per_goal.is_empty() {
+        let goals: Vec<String> = s
+            .per_goal
+            .iter()
+            .map(|(g, n)| format!("{g}={n}"))
+            .collect();
+        out.push_str(&format!("goals: {}\n", goals.join(" ")));
+    }
+    for (op, n, rank, speedup) in &s.per_op {
+        out.push_str(&format!(
+            "  {op}: {n} elites, best rank {rank:.4} (speedup {speedup:.3}x)\n"
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("evo_bank_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn entry(op: &str, src: &str, rank: f64) -> BankEntry {
+        BankEntry {
+            key: entry_key(op, src),
+            op: op.into(),
+            family: "matmul".into(),
+            category: 1,
+            goal: "speedup".into(),
+            src: src.into(),
+            speedup: rank,
+            rank,
+            shape: vec![64, 64],
+            profile: String::new(),
+            provider: "sim".into(),
+            model: "sim-balanced".into(),
+            method: "evo_funsearch".into(),
+            route: String::new(),
+            insight: "tile harder".into(),
+        }
+    }
+
+    #[test]
+    fn entry_roundtrips_including_nonfinite() {
+        let mut e = entry("matmul_64", "kernel a { }", 2.5);
+        e.rank = f64::INFINITY;
+        e.profile = "memory bound; traffic 2.1x".into();
+        e.route = "aggressive".into();
+        let line = e.to_json().to_string();
+        let back = parse_entry(&line).unwrap();
+        assert_eq!(back.op, e.op);
+        assert_eq!(back.src, e.src);
+        assert_eq!(back.shape, vec![64, 64]);
+        assert!(back.rank.is_infinite() && back.rank > 0.0);
+        assert_eq!(back.route, "aggressive");
+        assert_eq!(back.profile, "memory bound; traffic 2.1x");
+        // A second print → parse cycle is a fixed point.
+        assert_eq!(parse_entry(&back.to_json().to_string()).unwrap(), back);
+    }
+
+    #[test]
+    fn deposits_dedup_and_survive_reopen() {
+        let dir = tmpdir("dedup");
+        let path = dir.join("bank.jsonl");
+        {
+            let bank = KernelBank::open(&path).unwrap();
+            assert!(bank.deposit(entry("matmul_64", "kernel a { }", 2.0)).unwrap());
+            assert!(!bank.deposit(entry("matmul_64", "kernel a { }", 2.0)).unwrap());
+            assert!(bank.deposit(entry("matmul_64", "kernel b { }", 3.0)).unwrap());
+            bank.flush().unwrap();
+            assert_eq!(bank.len(), 2);
+            assert_eq!(bank.deposits(), 2);
+        }
+        let bank = KernelBank::open(&path).unwrap();
+        assert_eq!(bank.len(), 2);
+        // Re-deposit of a journaled key is still a no-op.
+        assert!(!bank.deposit(entry("matmul_64", "kernel b { }", 3.0)).unwrap());
+        let best = bank.entries_for_op("matmul_64");
+        assert_eq!(best.len(), 2);
+        assert_eq!(best[0].src, "kernel b { }");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retrieval_ranks_op_family_category_shape_then_rank_and_key() {
+        let mut e_other = entry("conv_9", "kernel o { }", 9.0);
+        e_other.family = "conv".into();
+        e_other.category = 4;
+        e_other.shape = vec![3, 3];
+        let mut e_family = entry("matmul_128", "kernel f { }", 1.1);
+        e_family.shape = vec![128, 128];
+        let mut e_cat = entry("gemv_64", "kernel c { }", 5.0);
+        e_cat.family = "gemv".into();
+        e_cat.shape = vec![64];
+        let e_op_lo = entry("matmul_64", "kernel a { }", 1.5);
+        let e_op_hi = entry("matmul_64", "kernel b { }", 2.5);
+        let lines: Vec<String> = [&e_other, &e_family, &e_cat, &e_op_lo, &e_op_hi]
+            .iter()
+            .map(|e| e.to_json().to_string())
+            .collect();
+        let bank = KernelBank::from_lines(&lines);
+        let got = bank.retrieve("matmul_64", "matmul", 1, &[64, 64], 4);
+        let ops: Vec<&str> = got.iter().map(|e| e.op.as_str()).collect();
+        // same-op first (rank desc), then same-family, then same-category;
+        // the unrelated high-rank conv entry loses to all of them.
+        assert_eq!(ops, vec!["matmul_64", "matmul_64", "matmul_128", "gemv_64"]);
+        assert_eq!(got[0].src, "kernel b { }");
+        assert_eq!(got[1].src, "kernel a { }");
+        let (hits, misses) = bank.retrieval_counts();
+        assert_eq!((hits, misses), (1, 0));
+        // Empty bank: a miss, and an empty section.
+        let empty = KernelBank::from_lines::<String>(&[]);
+        assert!(empty.retrieve("matmul_64", "matmul", 1, &[64, 64], 4).is_empty());
+        assert_eq!(empty.retrieval_counts(), (0, 1));
+    }
+
+    #[test]
+    fn retrieval_is_deterministic_across_insertion_order() {
+        let a = entry("matmul_64", "kernel a { }", 2.0);
+        let b = entry("matmul_64", "kernel b { }", 2.0); // equal rank: key breaks the tie
+        let fwd = KernelBank::from_lines(&[a.to_json().to_string(), b.to_json().to_string()]);
+        let rev = KernelBank::from_lines(&[b.to_json().to_string(), a.to_json().to_string()]);
+        let f: Vec<String> = fwd.retrieve("matmul_64", "matmul", 1, &[64, 64], 2)
+            .iter().map(|e| e.key.clone()).collect();
+        let r: Vec<String> = rev.retrieve("matmul_64", "matmul", 1, &[64, 64], 2)
+            .iter().map(|e| e.key.clone()).collect();
+        assert_eq!(f, r);
+        assert_eq!(render_refs(&fwd.retrieve("matmul_64", "matmul", 1, &[64, 64], 2)),
+                   render_refs(&rev.retrieve("matmul_64", "matmul", 1, &[64, 64], 2)));
+    }
+
+    #[test]
+    fn render_refs_is_fixed_format() {
+        let mut e = entry("matmul_64", "kernel a { }", 2.0);
+        e.profile = "memory bound".into();
+        let text = render_refs(&[e.clone()]);
+        assert!(text.starts_with("### elite 1 | op matmul_64 | speedup 2.000x | goal speedup\n"));
+        assert!(text.contains("// insight: tile harder\n"));
+        assert!(text.contains("// profile: memory bound\n"));
+        assert!(text.ends_with("kernel a { }\n"));
+        assert_eq!(render_refs(&[]), "");
+        // Two elites are newline-separated blocks in retrieval order.
+        let two = render_refs(&[e.clone(), entry("matmul_64", "kernel b { }", 1.0)]);
+        assert!(two.contains("\n### elite 2 |"));
+    }
+
+    #[test]
+    fn stats_gc_and_export_roundtrip() {
+        let dir = tmpdir("gc");
+        let path = dir.join("bank.jsonl");
+        let e1 = entry("matmul_64", "kernel a { }", 2.0);
+        let mut e2 = entry("softmax_64", "kernel s { }", 1.2);
+        e2.family = "softmax".into();
+        e2.goal = "balanced".into();
+        // Write e1 twice (duplicate line) plus one corrupt line.
+        let mut raw = String::new();
+        raw.push_str(&e1.to_json().to_string());
+        raw.push('\n');
+        raw.push_str(&e1.to_json().to_string());
+        raw.push('\n');
+        raw.push_str("{\"type\":\"elite\",\"key\":\"truncated");
+        raw.push('\n');
+        raw.push_str(&e2.to_json().to_string());
+        raw.push('\n');
+        std::fs::write(&path, &raw).unwrap();
+        let s = stats(&path).unwrap();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.dup_lines, 1);
+        assert_eq!(s.journal_lines, 4);
+        assert_eq!(s.per_op.len(), 2);
+        assert_eq!(s.per_goal, vec![("balanced".to_string(), 1), ("speedup".to_string(), 1)]);
+        let report = stats_report(&s);
+        assert!(report.contains("2 entries across 2 ops"));
+        assert!(report.contains("balanced=1"));
+        let (before, after) = gc(&path).unwrap();
+        assert!(after < before);
+        let s2 = stats(&path).unwrap();
+        assert_eq!(s2.entries, 2);
+        assert_eq!(s2.dup_lines, 0);
+        // Export from a reopened bank is canonical and importable.
+        let bank = KernelBank::open(&path).unwrap();
+        let lines = bank.export_lines();
+        assert_eq!(lines.len(), 2);
+        let other = KernelBank::open(dir.join("other.jsonl")).unwrap();
+        for line in &lines {
+            assert!(other.ingest_line(line).unwrap());
+        }
+        for line in &lines {
+            assert!(!other.ingest_line(line).unwrap());
+        }
+        other.flush().unwrap();
+        assert_eq!(other.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn readonly_snapshots_ignore_deposits() {
+        let dir = tmpdir("ro");
+        let path = dir.join("bank.jsonl");
+        let bank = KernelBank::open(&path).unwrap();
+        bank.deposit(entry("matmul_64", "kernel a { }", 2.0)).unwrap();
+        bank.flush().unwrap();
+        let before = std::fs::read(&path).unwrap();
+        let snap = KernelBank::load(&path).unwrap();
+        assert_eq!(snap.len(), 1);
+        assert!(!snap.deposit(entry("matmul_64", "kernel b { }", 3.0)).unwrap());
+        snap.flush().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), before);
+        assert_eq!(snap.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shape_similarity_prefers_positional_matches() {
+        assert_eq!(shape_similarity(&[64, 64], &[64, 64]), 5);
+        assert_eq!(shape_similarity(&[64, 32], &[64, 64]), 3);
+        assert_eq!(shape_similarity(&[64], &[64, 64]), 2);
+        assert_eq!(shape_similarity(&[], &[]), 1);
+        assert_eq!(shape_similarity(&[3], &[64, 64]), 0);
+    }
+}

@@ -21,6 +21,7 @@
 //! | `POST /release`  | `{idx, epoch}` → cell re-offered at epoch+1        |
 //! | `POST /fail`     | `{idx, epoch, error}` → sweep aborts               |
 //! | `GET /warm`      | → merged transcript-journal lines (resume warm-up) |
+//! | `GET /bank`      | → warm-start bank snapshot lines (DESIGN.md §18)   |
 //! | `GET /status`    | → live [`PlaneStats`] counters                     |
 //!
 //! **Determinism contract.** Cells are offered in grid order; every
@@ -100,6 +101,11 @@ struct State {
     provider: String,
     prefetch: usize,
     goal: String,
+    /// Warm-start bank journal lines (canonical serialization), read
+    /// once at startup and shipped verbatim to every worker over
+    /// `GET /bank` — all claimants warm-start from the identical
+    /// snapshot, exactly as an in-process sweep would (DESIGN.md §18).
+    warm_lines: Vec<String>,
     /// Serve start time, for the `/metrics` uptime/throughput gauges
     /// (observability only — never feeds determinism-bearing state).
     started: Instant,
@@ -187,6 +193,13 @@ impl Coordinator {
             Some(path) => Some(EvalStore::open(path)?),
             None => None,
         };
+        // Read-only snapshot; export_lines() re-serializes canonically
+        // (torn tails repaired, duplicates collapsed) so the wire ships
+        // exactly the entry set a local `--warm-start` run would load.
+        let warm_lines = match &cfg.warm_start {
+            Some(path) => crate::bank::KernelBank::load(path)?.export_lines(),
+            None => Vec::new(),
+        };
 
         let done = cells.iter().filter(|c| matches!(c.status, CellStatus::Done)).count();
         let stats = PlaneStats { grid: cells.len(), resumed, ..PlaneStats::default() };
@@ -206,6 +219,7 @@ impl Coordinator {
             provider: cfg.provider.label(),
             prefetch: cfg.prefetch,
             goal: cfg.goal.label(),
+            warm_lines,
             started: Instant::now(),
         });
 
@@ -327,6 +341,9 @@ fn handle(state: &State, req: &Request) -> Response {
                 ("provider", Json::Str(state.provider.clone())),
                 ("prefetch", Json::Num(state.prefetch as f64)),
                 ("goal", Json::Str(state.goal.clone())),
+                // Absent on pre-bank coordinators; workers treat a
+                // missing key as a cold start.
+                ("warm_start", Json::Bool(!state.warm_lines.is_empty())),
             ]),
         ),
         ("POST", "/claim") => claim(state),
@@ -336,6 +353,7 @@ fn handle(state: &State, req: &Request) -> Response {
         ("POST", "/release") => with_body(state, req, release),
         ("POST", "/fail") => with_body(state, req, fail),
         ("GET", "/warm") => warm(state),
+        ("GET", "/bank") => bank(state),
         ("GET", "/status") => status(state),
         // The one non-JSON endpoint: Prometheus-style text scrape.
         ("GET", "/metrics") => return metrics_text(state),
@@ -718,6 +736,16 @@ fn warm(state: &State) -> (u16, Json) {
         }
         None => Vec::new(),
     };
+    (200, Json::obj(vec![("lines", Json::Arr(lines))]))
+}
+
+/// Ship the warm-start bank snapshot (DESIGN.md §18): the canonical
+/// journal lines read at startup. Workers rebuild the identical
+/// read-only [`crate::bank::KernelBank`] from them, so warm-started
+/// `campaign work` runs match local `--warm-start` runs byte-for-byte.
+fn bank(state: &State) -> (u16, Json) {
+    let lines: Vec<Json> =
+        state.warm_lines.iter().map(|l| Json::Str(l.clone())).collect();
     (200, Json::obj(vec![("lines", Json::Arr(lines))]))
 }
 

@@ -35,6 +35,7 @@
 pub mod coordinator;
 pub mod plane;
 pub mod results;
+pub mod watch;
 pub mod wire;
 
 use std::collections::{HashMap, HashSet};
@@ -112,6 +113,18 @@ pub struct CampaignConfig {
     /// 0 = off): provider calls for predicted future trials overlap
     /// with compile+bench of the current one (DESIGN.md §13).
     pub prefetch: usize,
+    /// Persistent kernel bank to deposit into (`--bank`, DESIGN.md
+    /// §18): every candidate that beats its cell's incumbent is
+    /// appended (content-addressed, deduped). Deposits never feed back
+    /// into the same run — attaching a bank changes no record or event
+    /// bytes. `None` = deposits off.
+    pub bank: Option<PathBuf>,
+    /// Warm-start snapshot (`--warm-start`): a bank journal read once
+    /// at startup; its elites seed each cell's population and the
+    /// shared archive, and retrieval-seeded `## PRIOR ELITES` prompt
+    /// sections. Immutable for the whole campaign, so warm-started
+    /// runs stay deterministic. `None` = cold start.
+    pub warm_start: Option<PathBuf>,
 }
 
 impl CampaignConfig {
@@ -156,6 +169,8 @@ impl Default for CampaignConfig {
             stop_after_trials: 0,
             events: None,
             prefetch: 0,
+            bank: None,
+            warm_start: None,
         }
     }
 }
@@ -195,6 +210,23 @@ pub(crate) struct Job {
 /// A record's grid-cell identity (checkpoint key).
 pub(crate) fn cell_of(r: &KernelRunRecord) -> events::CellKey {
     (r.method.clone(), r.model.clone(), r.op.clone(), r.seed)
+}
+
+/// Publish a warm-start bank's elites into the shared cross-op
+/// [`Archive`] (DESIGN.md §18): archive-reading methods (the AI CUDA
+/// Engineer's Compose RAG) see prior campaigns' best kernels from
+/// trial 0. `Archive::record` keeps the max-rank entry per op, so
+/// recording every bank entry is order-independent.
+pub fn seed_archive_from_bank(archive: &Archive, bank: &crate::bank::KernelBank) {
+    for e in bank.all_entries() {
+        archive.record(ArchiveEntry {
+            op: e.op,
+            family: e.family,
+            src: e.src,
+            speedup: e.speedup,
+            rank: e.rank,
+        });
+    }
 }
 
 /// A job's grid-cell identity (same key space as [`cell_of`]).
@@ -321,6 +353,19 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     // replay with zero live generation).
     let llm_provider = provider::build(&cfg.provider_config())?;
 
+    // Kernel bank (DESIGN.md §18). The deposit side is append-only and
+    // never read during the run; the warm-start side is an immutable
+    // snapshot read once here, so every cell (and every worker on the
+    // wire plane) consumes the identical elite set.
+    let bank = match &cfg.bank {
+        Some(path) => Some(crate::bank::KernelBank::open(path)?),
+        None => None,
+    };
+    let warm = match &cfg.warm_start {
+        Some(path) => Some(crate::bank::KernelBank::load(path)?),
+        None => None,
+    };
+
     let GridPlan {
         mut jobs,
         prior,
@@ -335,6 +380,9 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     // CUDA Engineer's Compose RAG) see what an uninterrupted run would
     // have published by this point.
     let archive = Archive::new();
+    if let Some(warm) = &warm {
+        seed_archive_from_bank(&archive, warm);
+    }
     if !prior.is_empty() {
         let seen: HashSet<events::CellKey> = prior.iter().map(cell_of).collect();
         jobs.retain(|j| !seen.contains(&job_key(j)));
@@ -444,6 +492,8 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
         feedback: cfg.goal,
         prefetch: cfg.prefetch,
         trial_gate,
+        bank: bank.clone(),
+        warm: warm.clone(),
     };
     std::thread::scope(|scope| {
         for _ in 0..concurrency {
@@ -465,6 +515,30 @@ pub fn run(cfg: &CampaignConfig, evaluator: Evaluator) -> Result<Vec<KernelRunRe
     if let Some(store) = evaluator.store() {
         if let Err(e) = store.flush_session_stats() {
             eprintln!("warning: eval-cache stats flush failed: {e:#}");
+        }
+    }
+
+    // Group-committed bank deposits must reach disk before the process
+    // exits; the count summary mirrors the cache-stats line.
+    if let Some(bank) = &bank {
+        if let Err(e) = bank.flush() {
+            eprintln!("warning: kernel-bank flush failed: {e:#}");
+        }
+        if !cfg.quiet && bank.deposits() > 0 {
+            eprintln!(
+                "campaign: deposited {} new elite(s) into {}",
+                bank.deposits(),
+                cfg.bank.as_deref().unwrap_or_else(|| std::path::Path::new("?")).display()
+            );
+        }
+    }
+    if let Some(warm) = &warm {
+        let (hits, misses) = warm.retrieval_counts();
+        if !cfg.quiet && hits + misses > 0 {
+            eprintln!(
+                "campaign: warm-start retrieval served {hits} cell(s), {misses} had no \
+                 matching elites"
+            );
         }
     }
 

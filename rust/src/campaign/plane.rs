@@ -118,6 +118,12 @@ pub struct WorkerEnv<'a> {
     pub feedback: FeedbackConfig,
     pub prefetch: usize,
     pub trial_gate: Option<Arc<TrialGate>>,
+    /// Deposit-side kernel bank: elites that beat the incumbent are
+    /// journaled here. `None` = deposits off.
+    pub bank: Option<Arc<crate::bank::KernelBank>>,
+    /// Consumption-side warm-start snapshot: read-only bank driving
+    /// population seeding and retrieval-seeded prompts. `None` = cold.
+    pub warm: Option<Arc<crate::bank::KernelBank>>,
 }
 
 /// The worker loop both transports share: claim a cell, drive it
@@ -139,6 +145,8 @@ pub fn worker_loop(plane: &dyn WorkPlane, env: &WorkerEnv) -> Result<()> {
             repair: env.repair,
             feedback: env.feedback,
             provider: env.provider.as_ref(),
+            bank: env.bank.clone(),
+            warm: env.warm.clone(),
         };
         let opts = EngineOpts {
             sinks: cell.sinks.clone(),

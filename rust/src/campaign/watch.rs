@@ -1,0 +1,499 @@
+//! `campaign watch`: a live dashboard over a running sweep.
+//!
+//! Two targets, one renderer:
+//!
+//! * **Journal mode** — `campaign watch events.jsonl` tails the
+//!   structured trial-event journal (`--events`) by byte offset,
+//!   folding new complete lines into the same
+//!   [`metrics::EventStats`] aggregate `report events` uses plus a
+//!   per-cell progress map (trials done vs budget, best speedup,
+//!   stage-aware validity split, ETA from the observed trial
+//!   throughput). Works on any sweep with `--events`, local or
+//!   distributed, including one on another machine via a shared
+//!   filesystem.
+//! * **Coordinator mode** — `campaign watch http://host:port` polls a
+//!   `campaign serve` daemon's `GET /status` counters and renders the
+//!   plane view (cells done / claimed / re-offered, merged journal
+//!   lines, ETA from the completion rate).
+//!
+//! Watching is strictly observational: the journal is opened
+//! read-only, the coordinator endpoint is a pure read, and nothing
+//! here feeds determinism-bearing state — wall-clock time appears only
+//! in the throughput/ETA lines. `--once` renders a single snapshot and
+//! exits (the scriptable/CI form); otherwise the dashboard refreshes
+//! every `--interval` seconds until interrupted (journal mode keeps
+//! tailing like `tail -f`; coordinator mode exits on its own when the
+//! sweep drains or the coordinator goes away).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::metrics::EventStats;
+use crate::store::events::{self, CellKey, TrialEventKind};
+use crate::util::httpwire::{request_json, split_url};
+use crate::util::json::{self, Json};
+use crate::{eyre, Result};
+
+/// How `campaign watch` is parameterized.
+#[derive(Debug, Clone)]
+pub struct WatchOpts {
+    /// Refresh period between snapshots.
+    pub interval: Duration,
+    /// Render one snapshot and exit (CI / scripting).
+    pub once: bool,
+}
+
+impl Default for WatchOpts {
+    fn default() -> Self {
+        Self { interval: Duration::from_secs(2), once: false }
+    }
+}
+
+/// Per-cell progress folded from the event stream.
+#[derive(Debug, Clone, Default)]
+pub struct CellProgress {
+    /// Trial budget announced by the cell's `RunStarted` (0 until seen).
+    pub budget: usize,
+    /// Evaluated trial groups so far.
+    pub trials: usize,
+    /// Best speedup promoted so far (1.0 = baseline).
+    pub best: f64,
+    pub finished: bool,
+}
+
+/// Everything one journal-mode snapshot renders: the fold-order-
+/// independent [`EventStats`] aggregate plus per-cell progress. Pure
+/// data — [`WatchState::fold`] consumes events, [`render_events`]
+/// turns it into the dashboard text — so tests drive it without a
+/// filesystem or a clock.
+#[derive(Debug, Clone, Default)]
+pub struct WatchState {
+    pub stats: EventStats,
+    pub cells: BTreeMap<CellKey, CellProgress>,
+}
+
+impl WatchState {
+    pub fn fold(&mut self, ev: &crate::store::TrialEvent) {
+        self.stats.fold(ev);
+        let cell = self.cells.entry(ev.cell()).or_default();
+        match &ev.kind {
+            TrialEventKind::RunStarted { budget, .. } => cell.budget = *budget,
+            TrialEventKind::EvalOutcome { trial, .. } => {
+                // Trials are 0-based and replayed resume trials are
+                // suppressed upstream, so the count is trial+1.
+                cell.trials = cell.trials.max(trial + 1);
+            }
+            TrialEventKind::NewBest { speedup, .. } => {
+                cell.best = cell.best.max(*speedup);
+            }
+            TrialEventKind::RunFinished { trials, best_speedup, .. } => {
+                cell.finished = true;
+                cell.trials = cell.trials.max(*trials);
+                cell.best = cell.best.max(*best_speedup);
+            }
+            _ => {}
+        }
+    }
+
+    /// Trial groups still owed by cells that have started but not
+    /// finished (the ETA numerator).
+    pub fn remaining_trials(&self) -> usize {
+        self.cells
+            .values()
+            .filter(|c| !c.finished)
+            .map(|c| c.budget.saturating_sub(c.trials))
+            .sum()
+    }
+}
+
+const BAR_WIDTH: usize = 20;
+/// Unfinished cells listed before the "(+N more)" elision.
+const MAX_CELL_ROWS: usize = 24;
+
+fn progress_bar(done: usize, total: usize) -> String {
+    let filled = if total == 0 { 0 } else { (done * BAR_WIDTH / total).min(BAR_WIDTH) };
+    format!("[{}{}]", "#".repeat(filled), ".".repeat(BAR_WIDTH - filled))
+}
+
+fn eta_line(remaining: usize, rate: Option<f64>) -> String {
+    match rate {
+        Some(r) if r > 0.0 && remaining > 0 => {
+            let secs = remaining as f64 / r;
+            format!(
+                "eta: ~{} at {r:.1} trials/s ({remaining} trial groups remaining)\n",
+                fmt_secs(secs)
+            )
+        }
+        _ if remaining == 0 => "eta: all started cells finished\n".to_string(),
+        _ => format!("eta: n/a ({remaining} trial groups remaining, rate unknown)\n"),
+    }
+}
+
+fn fmt_secs(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.1}h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{secs:.0}s")
+    }
+}
+
+/// Render the journal-mode dashboard. `rate` is the observed trial
+/// throughput (trial groups per second) since the watch began, `None`
+/// before a meaningful sample exists.
+pub fn render_events(target: &str, state: &WatchState, rate: Option<f64>) -> String {
+    let s = &state.stats;
+    let mut out = String::with_capacity(2048);
+    out.push_str(&format!("CAMPAIGN WATCH — {target}\n"));
+    out.push_str(&format!(
+        "runs: {} started, {} finished ({} with a valid kernel), best {:.2}x\n",
+        s.runs_started, s.runs_finished, s.runs_with_valid, s.best_speedup
+    ));
+    out.push_str(&format!(
+        "trials: {} groups evaluated, {} new bests, {} prompt + {} completion tokens\n",
+        s.groups, s.new_bests, s.prompt_tokens, s.completion_tokens
+    ));
+    // Stage-aware validity: every evaluated group ends in exactly one
+    // outcome label, so the percentages split the bar completely.
+    out.push_str("validity by stage:");
+    if s.outcomes.is_empty() {
+        out.push_str(" (no trials yet)\n");
+    } else {
+        for (label, count) in &s.outcomes {
+            let pct = 100.0 * *count as f64 / s.groups.max(1) as f64;
+            out.push_str(&format!("  {label} {count} ({pct:.1}%)"));
+        }
+        out.push('\n');
+        if s.guard_failed + s.repair_attempts > 0 {
+            out.push_str(&format!(
+                "stage-0: {} guard failures, {} repair attempts ({} mended)\n",
+                s.guard_failed, s.repair_attempts, s.repairs_mended
+            ));
+        }
+    }
+    out.push_str(&eta_line(state.remaining_trials(), rate));
+
+    let live: Vec<(&CellKey, &CellProgress)> =
+        state.cells.iter().filter(|(_, c)| !c.finished).collect();
+    out.push_str(&format!(
+        "cells: {} started, {} finished, {} in flight\n",
+        state.cells.len(),
+        state.cells.len() - live.len(),
+        live.len()
+    ));
+    for ((method, model, op, seed), cell) in live.iter().take(MAX_CELL_ROWS) {
+        out.push_str(&format!(
+            "  {} {:>3}/{:<3} {} {method} / {model} / {op} / seed {seed}\n",
+            progress_bar(cell.trials, cell.budget),
+            cell.trials,
+            cell.budget,
+            if cell.best > 0.0 { format!("{:>5.2}x", cell.best) } else { "    -".into() },
+        ));
+    }
+    if live.len() > MAX_CELL_ROWS {
+        out.push_str(&format!("  (+{} more)\n", live.len() - MAX_CELL_ROWS));
+    }
+    out
+}
+
+/// Render the coordinator-mode dashboard from a `GET /status` reply.
+/// `rate` is completed cells per second since the watch began.
+pub fn render_status(target: &str, v: &Json, rate: Option<f64>) -> String {
+    let n = |key: &str| v.get(key).and_then(|x| x.as_u64()).unwrap_or(0);
+    let grid = n("grid");
+    let done = n("done");
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!("CAMPAIGN WATCH — {target} (coordinator)\n"));
+    out.push_str(&format!(
+        "grid: {done}/{grid} cells done ({} resumed from checkpoint){}\n",
+        n("resumed"),
+        if v.get("failed").and_then(|f| f.as_bool()) == Some(true) {
+            " — SWEEP FAILED"
+        } else {
+            ""
+        }
+    ));
+    out.push_str(&format!(
+        "claims: {} issued, {} re-offered; completions: {} accepted, {} duplicate/stale\n",
+        n("claims"),
+        n("reclaims"),
+        n("completions"),
+        n("duplicate_completions")
+    ));
+    out.push_str(&format!(
+        "events: {} buffered in {} batches ({} stale rejected)\n",
+        n("events"),
+        n("event_batches"),
+        n("stale_event_batches")
+    ));
+    out.push_str(&format!(
+        "merged: {} eval-cache lines, {} transcript lines\n",
+        n("eval_lines_merged"),
+        n("transcript_lines_merged")
+    ));
+    let remaining = grid.saturating_sub(done) as usize;
+    match rate {
+        Some(r) if r > 0.0 && remaining > 0 => out.push_str(&format!(
+            "eta: ~{} at {r:.2} cells/s ({remaining} cells remaining)\n",
+            fmt_secs(remaining as f64 / r)
+        )),
+        _ if remaining == 0 => out.push_str("eta: sweep drained\n"),
+        _ => out.push_str(&format!("eta: n/a ({remaining} cells remaining)\n")),
+    }
+    out
+}
+
+/// ANSI home+clear prefix for the refreshing (non-`--once`) display.
+const CLEAR: &str = "\x1b[2J\x1b[H";
+
+/// Watch a sweep at `target`: an `events.jsonl` path, or a
+/// `campaign serve` coordinator URL (anything starting `http://` /
+/// `https://`).
+pub fn watch(target: &str, opts: &WatchOpts) -> Result<()> {
+    if target.starts_with("http://") || target.starts_with("https://") {
+        watch_coordinator(target, opts)
+    } else {
+        watch_journal(Path::new(target), opts)
+    }
+}
+
+fn watch_journal(path: &Path, opts: &WatchOpts) -> Result<()> {
+    if !path.exists() {
+        return Err(eyre!(
+            "event journal {} does not exist (start the campaign with --events, or pass \
+             the coordinator URL)",
+            path.display()
+        ));
+    }
+    let target = path.display().to_string();
+    let mut state = WatchState::default();
+    let mut offset = 0u64;
+    let started = Instant::now();
+    let mut groups_at_start = None;
+    loop {
+        let (lines, new_off) = super::wire::read_delta(path, offset)?;
+        offset = new_off;
+        for line in &lines {
+            match json::parse(line).map_err(|e| eyre!("{e}")).and_then(|v| {
+                events::event_from_json(&v)
+            }) {
+                Ok(ev) => state.fold(&ev),
+                // Torn/corrupt interior lines are advisory everywhere
+                // else in the store layer; a watcher must not die on
+                // them either.
+                Err(e) => eprintln!("warning: skipping bad event line: {e}"),
+            }
+        }
+        // Throughput is measured from the first snapshot's baseline so
+        // a watch attached mid-sweep doesn't count pre-existing trials
+        // as instant work.
+        let base = *groups_at_start.get_or_insert(state.stats.groups);
+        let elapsed = started.elapsed().as_secs_f64();
+        let rate = (elapsed > 0.5 && state.stats.groups > base)
+            .then(|| (state.stats.groups - base) as f64 / elapsed);
+        let frame = render_events(&target, &state, rate);
+        if opts.once {
+            print!("{frame}");
+            return Ok(());
+        }
+        print!("{CLEAR}{frame}");
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        std::thread::sleep(opts.interval);
+    }
+}
+
+fn watch_coordinator(url: &str, opts: &WatchOpts) -> Result<()> {
+    let base = split_url(url)?;
+    let timeout = Duration::from_secs(10);
+    let started = Instant::now();
+    let mut done_at_start = None;
+    let mut was_reachable = false;
+    loop {
+        let reply = request_json(&base, "GET", "/status", "", timeout);
+        let v = match reply {
+            Ok((200, text)) => json::parse(&text)
+                .map_err(|e| eyre!("coordinator sent unparseable status: {e}"))?,
+            Ok((code, text)) => return Err(eyre!("status fetch failed: HTTP {code} {text}")),
+            Err(_) if was_reachable => {
+                // The sweep drained and the coordinator exited — the
+                // normal end of a watch, not an error.
+                println!("coordinator at {url} went away (sweep likely drained)");
+                return Ok(());
+            }
+            Err(e) => return Err(e.context(format!("coordinator at {url} is not answering"))),
+        };
+        was_reachable = true;
+        let done = v.get("done").and_then(|d| d.as_u64()).unwrap_or(0);
+        let grid = v.get("grid").and_then(|g| g.as_u64()).unwrap_or(0);
+        let base_done = *done_at_start.get_or_insert(done);
+        let elapsed = started.elapsed().as_secs_f64();
+        let rate =
+            (elapsed > 0.5 && done > base_done).then(|| (done - base_done) as f64 / elapsed);
+        let frame = render_status(url, &v, rate);
+        if opts.once {
+            print!("{frame}");
+            return Ok(());
+        }
+        print!("{CLEAR}{frame}");
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        if grid > 0 && done >= grid {
+            println!("sweep drained ({done}/{grid} cells)");
+            return Ok(());
+        }
+        std::thread::sleep(opts.interval);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{TrialEvent, TrialEventKind};
+
+    fn ev(op: &str, seed: u64, kind: TrialEventKind) -> TrialEvent {
+        TrialEvent {
+            method: "EvoEngineer-Free".into(),
+            model: "GPT-4.1".into(),
+            op: op.into(),
+            seed,
+            kind,
+        }
+    }
+
+    fn sample_state() -> WatchState {
+        let mut state = WatchState::default();
+        let stream = vec![
+            ev("relu_64", 0, TrialEventKind::RunStarted { budget: 10, provider: "sim".into() }),
+            ev("relu_64", 0, TrialEventKind::TrialStarted { trial: 0 }),
+            ev(
+                "relu_64",
+                0,
+                TrialEventKind::EvalOutcome {
+                    trial: 0,
+                    outcome: "ok".into(),
+                    speedup: 1.4,
+                    prompt_tokens: 100,
+                    completion_tokens: 40,
+                    src_hash: "aa".into(),
+                },
+            ),
+            ev("relu_64", 0, TrialEventKind::NewBest { trial: 0, speedup: 1.4 }),
+            ev(
+                "relu_64",
+                0,
+                TrialEventKind::EvalOutcome {
+                    trial: 1,
+                    outcome: "compile_fail".into(),
+                    speedup: 0.0,
+                    prompt_tokens: 100,
+                    completion_tokens: 40,
+                    src_hash: "bb".into(),
+                },
+            ),
+            ev("gemm_256", 1, TrialEventKind::RunStarted { budget: 10, provider: "sim".into() }),
+            ev(
+                "gemm_256",
+                1,
+                TrialEventKind::EvalOutcome {
+                    trial: 0,
+                    outcome: "ok".into(),
+                    speedup: 1.1,
+                    prompt_tokens: 90,
+                    completion_tokens: 30,
+                    src_hash: "cc".into(),
+                },
+            ),
+            ev(
+                "gemm_256",
+                1,
+                TrialEventKind::RunFinished { trials: 10, best_speedup: 2.5, any_valid: true },
+            ),
+        ];
+        for e in &stream {
+            state.fold(e);
+        }
+        state
+    }
+
+    #[test]
+    fn fold_tracks_per_cell_progress_and_remaining() {
+        let state = sample_state();
+        assert_eq!(state.cells.len(), 2);
+        let relu = &state.cells[&(
+            "EvoEngineer-Free".into(),
+            "GPT-4.1".into(),
+            "relu_64".into(),
+            0u64,
+        )];
+        assert_eq!(relu.budget, 10);
+        assert_eq!(relu.trials, 2);
+        assert!((relu.best - 1.4).abs() < 1e-12);
+        assert!(!relu.finished);
+        let gemm = &state.cells[&(
+            "EvoEngineer-Free".into(),
+            "GPT-4.1".into(),
+            "gemm_256".into(),
+            1u64,
+        )];
+        assert!(gemm.finished);
+        assert_eq!(gemm.trials, 10);
+        // Only the unfinished cell owes trials: 10 - 2 = 8.
+        assert_eq!(state.remaining_trials(), 8);
+    }
+
+    #[test]
+    fn render_events_shows_progress_validity_and_eta() {
+        let state = sample_state();
+        let out = render_events("events.jsonl", &state, Some(2.0));
+        assert!(out.contains("CAMPAIGN WATCH — events.jsonl"), "{out}");
+        assert!(out.contains("runs: 2 started, 1 finished (1 with a valid kernel)"), "{out}");
+        assert!(out.contains("ok 2 (66.7%)"), "{out}");
+        assert!(out.contains("compile_fail 1 (33.3%)"), "{out}");
+        // 8 remaining at 2/s = ~4s.
+        assert!(out.contains("eta: ~4s at 2.0 trials/s (8 trial groups remaining)"), "{out}");
+        assert!(out.contains("cells: 2 started, 1 finished, 1 in flight"), "{out}");
+        assert!(out.contains("relu_64 / seed 0"), "{out}");
+        // Finished cells are not listed as in-flight rows.
+        assert!(!out.contains("gemm_256 / seed 1"), "{out}");
+        // No rate sample yet: the ETA degrades gracefully.
+        let out = render_events("events.jsonl", &state, None);
+        assert!(out.contains("eta: n/a (8 trial groups remaining"), "{out}");
+    }
+
+    #[test]
+    fn render_status_reads_coordinator_counters() {
+        let v = json::parse(
+            r#"{"grid":108,"resumed":12,"done":54,"claims":60,"reclaims":2,
+                "completions":54,"duplicate_completions":1,"event_batches":88,
+                "stale_event_batches":3,"events":1234,"eval_lines_merged":456,
+                "transcript_lines_merged":78,"failed":false}"#,
+        )
+        .unwrap();
+        let out = render_status("http://h:1", &v, Some(0.5));
+        assert!(out.contains("grid: 54/108 cells done (12 resumed"), "{out}");
+        assert!(out.contains("claims: 60 issued, 2 re-offered"), "{out}");
+        assert!(out.contains("54 accepted, 1 duplicate/stale"), "{out}");
+        assert!(out.contains("1234 buffered in 88 batches (3 stale rejected)"), "{out}");
+        assert!(out.contains("456 eval-cache lines, 78 transcript lines"), "{out}");
+        // 54 remaining at 0.5/s = 108s = 1.8m.
+        assert!(out.contains("eta: ~1.8m at 0.50 cells/s (54 cells remaining)"), "{out}");
+        let failed = json::parse(
+            &v.to_string().replace("\"failed\":false", "\"failed\":true"),
+        )
+        .unwrap();
+        let out = render_status("http://h:1", &failed, None);
+        assert!(out.contains("SWEEP FAILED"), "{out}");
+    }
+
+    #[test]
+    fn progress_bar_is_bounded() {
+        assert_eq!(progress_bar(0, 10), format!("[{}]", ".".repeat(BAR_WIDTH)));
+        assert_eq!(progress_bar(10, 10), format!("[{}]", "#".repeat(BAR_WIDTH)));
+        assert_eq!(progress_bar(5, 0), format!("[{}]", ".".repeat(BAR_WIDTH)));
+        // Overshoot (resumed cell reporting beyond budget) stays capped.
+        assert_eq!(progress_bar(15, 10), format!("[{}]", "#".repeat(BAR_WIDTH)));
+    }
+}

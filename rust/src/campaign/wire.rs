@@ -56,6 +56,11 @@ pub struct WorkOpts {
     /// The local eval-cache journal backing the caller's evaluator
     /// (delta-uploaded for merging); `None` = no cache, no uploads.
     pub cache: Option<PathBuf>,
+    /// Local deposit-side kernel bank (`--bank`, DESIGN.md §18): this
+    /// worker's elites are journaled here. Deposits are per-process
+    /// (merge banks later with `bank import`); the *consumption* side
+    /// — the warm-start snapshot — always comes from the coordinator.
+    pub bank: Option<PathBuf>,
     /// Worker threads (0 = number of CPUs).
     pub concurrency: usize,
     pub quiet: bool,
@@ -155,8 +160,9 @@ impl<S> UploadChannel<S> {
 }
 
 /// Read the complete lines between `offset` and the last newline.
-/// Returns the lines and the offset they advance to.
-fn read_delta(path: &Path, offset: u64) -> Result<(Vec<String>, u64)> {
+/// Returns the lines and the offset they advance to. Also the tailing
+/// primitive behind `campaign watch` ([`super::watch`]).
+pub(crate) fn read_delta(path: &Path, offset: u64) -> Result<(Vec<String>, u64)> {
     use std::os::unix::fs::FileExt as _;
     let Ok(meta) = std::fs::metadata(path) else {
         return Ok((Vec::new(), offset));
@@ -653,6 +659,36 @@ pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSumm
         );
     }
 
+    // Warm-start snapshot (DESIGN.md §18): the coordinator ships its
+    // bank's canonical lines, so every worker consumes the identical
+    // elite set a local `--warm-start` run would. Absent key =
+    // pre-bank coordinator = cold start.
+    let warm = match config.get("warm_start").and_then(|w| w.as_bool()) {
+        Some(true) => {
+            let (status, v) = client.rpc_retry("GET", "/bank", None)?;
+            if status != 200 {
+                return Err(eyre!("bank snapshot fetch failed: HTTP {status}"));
+            }
+            let Some(lines) = v.get("lines").and_then(|l| l.as_arr()) else {
+                return Err(eyre!("bank snapshot reply missing `lines`"));
+            };
+            let lines: Vec<String> = lines
+                .iter()
+                .filter_map(|l| l.as_str().map(String::from))
+                .collect();
+            let warm = crate::bank::KernelBank::from_lines(&lines);
+            if !opts.quiet {
+                eprintln!("work: warm-starting from {} bank elite(s)", warm.len());
+            }
+            Some(warm)
+        }
+        _ => None,
+    };
+    let bank = match &opts.bank {
+        Some(path) => Some(crate::bank::KernelBank::open(path)?),
+        None => None,
+    };
+
     let plane = WirePlane {
         client,
         uploader,
@@ -668,6 +704,10 @@ pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSumm
         active: Mutex::new(HashMap::new()),
     };
     let archive = Archive::new();
+    if let Some(warm) = &warm {
+        // Same trial-0 archive view as a local warm-started run.
+        super::seed_archive_from_bank(&archive, warm);
+    }
     let trial_gate =
         (opts.stop_after_trials > 0).then(|| Arc::new(TrialGate::new(opts.stop_after_trials)));
     let env = WorkerEnv {
@@ -679,6 +719,8 @@ pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSumm
         feedback,
         prefetch,
         trial_gate,
+        bank: bank.clone(),
+        warm,
     };
     std::thread::scope(|scope| {
         for _ in 0..concurrency {
@@ -700,6 +742,14 @@ pub fn work(url: &str, evaluator: Evaluator, opts: &WorkOpts) -> Result<WorkSumm
     if let Some(store) = evaluator.store() {
         if let Err(e) = store.flush_session_stats() {
             eprintln!("warning: eval-cache stats flush failed: {e:#}");
+        }
+    }
+    if let Some(bank) = &bank {
+        if let Err(e) = bank.flush() {
+            eprintln!("warning: kernel-bank flush failed: {e:#}");
+        }
+        if !opts.quiet && bank.deposits() > 0 {
+            eprintln!("work: deposited {} new elite(s) into the local bank", bank.deposits());
         }
     }
 

@@ -36,8 +36,12 @@
 //!   checkpoint/resume journaling (DESIGN.md §8).
 //! * [`store`] — persistent content-addressed evaluation cache and
 //!   the provider-call transcript journal.
+//! * [`bank`] — persistent cross-campaign kernel knowledge bank:
+//!   elite deposits, retrieval-seeded prompts, warm-started campaigns
+//!   (DESIGN.md §18).
 //! * [`metrics`] / [`report`] — every table & figure of the paper.
 
+pub mod bank;
 pub mod campaign;
 pub mod costmodel;
 pub mod dsl;

@@ -112,6 +112,13 @@ pub struct GenerationRequest {
     /// `--goal` is active; rendered as an `## OPTIMIZATION GOAL`
     /// emphasis section. `None` under the default speedup objective.
     pub goal: Option<String>,
+    /// Rendered `## PRIOR ELITES` few-shot section body (DESIGN.md
+    /// §18): top-K kernel-bank retrievals for this cell, attached by
+    /// the engine when a warm-start bank is active. Composed into the
+    /// text a backend sees via [`Self::full_prompt`]. `None` for
+    /// bank-less runs — unset fields are *not* hashed, so every
+    /// pre-bank request hash is unchanged.
+    pub bank_refs: Option<String>,
 }
 
 impl GenerationRequest {
@@ -128,6 +135,7 @@ impl GenerationRequest {
             route: None,
             profile: None,
             goal: None,
+            bank_refs: None,
         }
     }
 
@@ -144,6 +152,7 @@ impl GenerationRequest {
             route: None,
             profile: None,
             goal: None,
+            bank_refs: None,
         }
     }
 
@@ -166,17 +175,34 @@ impl GenerationRequest {
         self
     }
 
+    /// Attach retrieved kernel-bank elites (DESIGN.md §18): the
+    /// rendered `## PRIOR ELITES` section body. Part of the request
+    /// hash when set — the retrieval snapshot is part of the request's
+    /// identity, which is what keeps record-then-replay of warm-started
+    /// campaigns byte-identical.
+    pub fn with_bank_refs(mut self, bank_refs: Option<String>) -> Self {
+        self.bank_refs = bank_refs;
+        self
+    }
+
     /// The complete prompt text a backend conditions on: the rendered
-    /// base prompt plus — when feedback is active — the
+    /// base prompt plus — when active — the `## PRIOR ELITES`,
     /// `## PERFORMANCE PROFILE` and `## OPTIMIZATION GOAL` sections.
-    /// Borrows the base prompt unchanged when neither field is set, so
-    /// legacy requests cost nothing and stay byte-identical.
+    /// Borrows the base prompt unchanged when no extra field is set,
+    /// so legacy requests cost nothing and stay byte-identical.
     pub fn full_prompt(&self) -> std::borrow::Cow<'_, str> {
-        if self.profile.is_none() && self.goal.is_none() {
+        if self.profile.is_none() && self.goal.is_none() && self.bank_refs.is_none() {
             return std::borrow::Cow::Borrowed(&self.prompt);
         }
         let mut out = String::with_capacity(self.prompt.len() + 512);
         out.push_str(&self.prompt);
+        if let Some(bank_refs) = &self.bank_refs {
+            if !out.ends_with('\n') {
+                out.push('\n');
+            }
+            out.push_str("\n## PRIOR ELITES\n");
+            out.push_str(bank_refs);
+        }
         if let Some(profile) = &self.profile {
             if !out.ends_with('\n') {
                 out.push('\n');
@@ -240,6 +266,7 @@ impl GenerationRequest {
             (&b"\0route\0"[..], &self.route),
             (&b"\0profile\0"[..], &self.profile),
             (&b"\0goal\0"[..], &self.goal),
+            (&b"\0bank_refs\0"[..], &self.bank_refs),
         ] {
             if let Some(value) = field {
                 buf.extend_from_slice(tag);
@@ -889,6 +916,47 @@ mod tests {
         // Feedback composes with routing (both tag families hashed).
         let routed = both.clone().with_routing("mutate", "matmul", "alt");
         assert_ne!(routed.hash(), both.hash());
+    }
+
+    #[test]
+    fn bank_refs_extend_the_hash_without_perturbing_legacy_requests() {
+        let bare = GenerationRequest::generate("GPT-4.1", "## TASK\nop: x\n", 42);
+        assert_eq!(bare.bank_refs, None);
+        // Unset bank refs never change the hash or the prompt text —
+        // every pre-bank journal hash survives.
+        let noop = bare.clone().with_bank_refs(None);
+        assert_eq!(bare.hash(), noop.hash());
+        assert!(matches!(noop.full_prompt(), std::borrow::Cow::Borrowed(_)));
+
+        let refs = "### elite 1 | op x | speedup 2.000x | goal speedup\nkernel a { }\n";
+        let seeded = bare.clone().with_bank_refs(Some(refs.into()));
+        assert_ne!(bare.hash(), seeded.hash(), "bank refs must be part of the hash");
+        let other = bare.clone().with_bank_refs(Some("different refs\n".into()));
+        assert_ne!(seeded.hash(), other.hash());
+        assert_eq!(seeded.hash(), seeded.hash());
+
+        // Composed prompt: base first, then the PRIOR ELITES section.
+        let text = seeded.full_prompt().into_owned();
+        assert!(text.starts_with("## TASK\n"));
+        assert!(text.contains("## PRIOR ELITES\n### elite 1 |"));
+
+        // Bank refs compose with feedback: elites section precedes the
+        // profile/goal sections, and all tag families hash.
+        let stacked = seeded
+            .clone()
+            .with_feedback(Some("outcome: ok\n".into()), Some("memory".into()));
+        assert_ne!(stacked.hash(), seeded.hash());
+        let text = stacked.full_prompt().into_owned();
+        let elites = text.find("## PRIOR ELITES").unwrap();
+        let profile = text.find("## PERFORMANCE PROFILE").unwrap();
+        let goal = text.find("## OPTIMIZATION GOAL").unwrap();
+        assert!(elites < profile && profile < goal);
+        // The NUL-framed tag encoding cannot be confused across
+        // fields: a goal value equal to a bank_refs value still yields
+        // distinct hashes.
+        let as_goal = bare.clone().with_feedback(None, Some(refs.into()));
+        let as_refs = bare.clone().with_bank_refs(Some(refs.into()));
+        assert_ne!(as_goal.hash(), as_refs.hash());
     }
 
     #[test]

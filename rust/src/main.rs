@@ -79,6 +79,12 @@ COMMANDS:
                              overlap with compile+bench (default 0 =
                              off; byte-identical records either way)
       --cache PATH           persistent eval cache (default off)
+      --bank PATH            deposit every new per-run best into a
+                             persistent kernel bank (default off;
+                             attaching one never changes the record)
+      --warm-start PATH      seed the population and a PRIOR ELITES
+                             prompt section from a bank journal
+                             (default off)
       --runtime-shards N     PJRT executor shards (default 0 = CPUs)
   campaign                   run the method x model x op x seed sweep
       --methods A,B          (default: all six)
@@ -115,15 +121,30 @@ COMMANDS:
       --quiet                suppress progress lines
       --cache PATH|off       persistent eval cache
                              (default <artifacts>/eval_cache.jsonl)
+      --bank PATH|off        persistent cross-campaign kernel bank:
+                             every candidate that beats its run's
+                             incumbent is journaled with provenance
+                             (default <artifacts>/bank.jsonl; deposits
+                             never change records or events)
+      --warm-start PATH      read-only bank snapshot consumed at start:
+                             seeds each cell's archive/population and
+                             injects a PRIOR ELITES few-shot section
+                             into generation prompts (default off; an
+                             empty bank is byte-identical to cold)
   campaign serve             coordinate the sweep over HTTP for
                              `campaign work` processes; takes the same
                              sweep flags as `campaign` (--cache is the
                              merged store worker uploads land in), plus:
       --bind HOST:PORT       listen address (default 127.0.0.1:7717);
                              GET /metrics serves Prometheus-style text
-                             counters while the sweep runs
+                             counters while the sweep runs; with
+                             --warm-start, GET /bank ships the snapshot
+                             to every worker so the distributed sweep
+                             warm-starts identically to a local one
   campaign work URL          claim cells from a coordinator until the
-                             sweep drains (engine knobs mirror /config)
+                             sweep drains (engine knobs mirror /config;
+                             warm-start state always comes from the
+                             coordinator, never a local flag)
       --provider P           optional assertion only: the worker always
                              runs the coordinator's resolved provider
                              spec from /config; passing a different one
@@ -133,24 +154,46 @@ COMMANDS:
                              it at the coordinator's own file)
       --cache PATH|off       worker-local eval cache, uploaded
                              (default off; same sharing caveat)
+      --bank PATH|off        worker-local kernel bank for elite
+                             deposits (default off; merge shards later
+                             with `bank import`)
       --concurrency N        worker threads (default 1)
       --stop-after-trials N  simulated mid-cell worker death (testing):
                              release claimed cells and exit
       --quiet                suppress progress lines
+  campaign watch TARGET      live sweep dashboard; TARGET is an event
+                             journal path (tailed like `tail -f`) or a
+                             coordinator URL (GET /status polled)
+      --interval SECS        refresh period (default 2)
+      --once                 render one snapshot and exit (CI)
   report <which>             regenerate a table/figure from records
       which: table4|table5|table7|table8|fig1|fig4|fig5|fig8|fig9|
-             validity|tokens|goals|convergence|methods|events|all
+             validity|tokens|goals|convergence|methods|events|bank|all
       --records PATH         (default results/records.jsonl; a partial
                              checkpoint journal also works)
       --events PATH          event journal for `report events`
                              (default results/events.jsonl)
+      --bank PATH            bank journal for `report bank`
+                             (default <artifacts>/bank.jsonl)
       --model NAME           model filter for fig4 (fig6/7 = other models)
   cache <stats|gc>           inspect / compact the persistent eval cache
       --cache PATH           (default <artifacts>/eval_cache.jsonl)
+  bank <action>              inspect / maintain the persistent kernel
+                             bank (DESIGN.md §18)
+      action: stats          entries per op/goal, journal health
+              export         print the canonical journal (torn tails
+                             repaired, duplicates collapsed) to stdout
+              import FILE    merge another bank journal's entries in
+                             (content-key dedup)
+              gc             compact the journal in place
+              top OP         show the retrieval-ranked elites for an op
+                             exactly as a prompt would cite them
+      --bank PATH            (default <artifacts>/bank.jsonl)
+      --k N                  elites shown by `top` (default 3)
 ";
 
 /// Flags that take no value (presence = true).
-const BOOL_FLAGS: &[&str] = &["resume", "quiet"];
+const BOOL_FLAGS: &[&str] = &["resume", "quiet", "once"];
 
 /// Tiny flag parser: positional args + `--key value` pairs, plus the
 /// bare boolean flags in [`BOOL_FLAGS`].
@@ -253,6 +296,17 @@ fn run() -> Result<()> {
                 "off" | "" => None,
                 p => Some(PathBuf::from(p)),
             };
+            // Bank deposits and warm-starts are opt-in for single runs,
+            // like the cache: a one-shot `optimize` stays side-effect
+            // free unless pointed at a journal.
+            let bank = match args.get("bank", "off").as_str() {
+                "off" | "" => None,
+                p => Some(PathBuf::from(p)),
+            };
+            let warm = match args.get("warm-start", "off").as_str() {
+                "off" | "" => None,
+                p => Some(PathBuf::from(p)),
+            };
             optimize(
                 &artifacts,
                 op,
@@ -267,10 +321,26 @@ fn run() -> Result<()> {
                 events.as_deref(),
                 args.get_num("prefetch", 0usize)?,
                 cache.as_deref(),
+                bank.as_deref(),
+                warm.as_deref(),
                 runtime_shards,
             )
         }
         "campaign" => {
+            // `campaign watch` is a pure observer: it never claims
+            // cells or writes journals, so it skips the config build.
+            if args.positional.get(1).map(String::as_str) == Some("watch") {
+                let target = args.positional.get(2).ok_or_else(|| {
+                    eyre!("campaign watch needs an event-journal path or coordinator URL")
+                })?;
+                let opts = evoengineer::campaign::watch::WatchOpts {
+                    interval: std::time::Duration::from_secs_f64(
+                        args.get_num("interval", 2.0f64)?.max(0.1),
+                    ),
+                    once: args.has("once"),
+                };
+                return evoengineer::campaign::watch::watch(target, &opts);
+            }
             // `campaign work` is a pure worker: everything
             // sweep-defining is mirrored from the coordinator, so it
             // skips the config build entirely.
@@ -297,6 +367,10 @@ fn run() -> Result<()> {
                         p => Some(PathBuf::from(p)),
                     },
                     cache: cache.clone(),
+                    bank: match args.get("bank", "off").as_str() {
+                        "off" | "" => None,
+                        p => Some(PathBuf::from(p)),
+                    },
                     concurrency: args.get_num("concurrency", 1usize)?,
                     quiet: args.has("quiet"),
                     stop_after_trials: args.get_num("stop-after-trials", 0usize)?,
@@ -306,7 +380,9 @@ fn run() -> Result<()> {
             let sub = match args.positional.get(1).map(String::as_str) {
                 None | Some("serve") => args.positional.get(1).cloned(),
                 Some(other) => {
-                    return Err(eyre!("unknown campaign subcommand `{other}` (serve|work)"))
+                    return Err(eyre!(
+                        "unknown campaign subcommand `{other}` (serve|work|watch)"
+                    ))
                 }
             };
             let out = PathBuf::from(args.get("out", "results/records.jsonl"));
@@ -347,6 +423,14 @@ fn run() -> Result<()> {
                 stop_after_trials: 0,
                 events,
                 prefetch: args.get_num("prefetch", 0usize)?,
+                // The bank defaults on for campaigns (like the eval
+                // cache): deposits are write-only and never change
+                // records. Warm-starting stays opt-in.
+                bank: bank_path(&args.get("bank", ""), &artifacts),
+                warm_start: match args.get("warm-start", "off").as_str() {
+                    "off" | "" => None,
+                    p => Some(PathBuf::from(p)),
+                },
             };
             let cache = cache_path(&args.get("cache", ""), &artifacts);
             if sub.as_deref() == Some("serve") {
@@ -383,20 +467,116 @@ fn run() -> Result<()> {
                 other => Err(eyre!("unknown cache action `{other}` (stats|gc)")),
             }
         }
+        "bank" => {
+            let action = args
+                .positional
+                .get(1)
+                .ok_or_else(|| eyre!("bank needs an action: stats|export|import|gc|top"))?;
+            let path = bank_path(&args.get("bank", ""), &artifacts)
+                .ok_or_else(|| eyre!("--bank off makes no sense here"))?;
+            bank_cmd(&path, action, &args)
+        }
         "report" => {
             let which = args
                 .positional
                 .get(1)
                 .ok_or_else(|| eyre!("report needs a table/figure name"))?;
+            let bank = bank_path(&args.get("bank", ""), &artifacts)
+                .unwrap_or_else(|| artifacts.join("bank.jsonl"));
             run_report(
                 &artifacts,
                 which,
                 &PathBuf::from(args.get("records", "results/records.jsonl")),
                 &PathBuf::from(args.get("events", "results/events.jsonl")),
+                &bank,
                 &args.get("model", ""),
             )
         }
         other => Err(eyre!("unknown command `{other}`\n{USAGE}")),
+    }
+}
+
+/// Resolve a `--bank` value: "" = default under the artifacts dir,
+/// "off" = disabled, anything else = explicit path.
+fn bank_path(flag: &str, artifacts: &std::path::Path) -> Option<PathBuf> {
+    match flag {
+        "off" => None,
+        "" => Some(artifacts.join("bank.jsonl")),
+        p => Some(PathBuf::from(p)),
+    }
+}
+
+/// The `bank <stats|export|import|gc|top>` maintenance actions
+/// (DESIGN.md §18). All offline: none of them need the runtime.
+fn bank_cmd(path: &std::path::Path, action: &str, args: &Args) -> Result<()> {
+    use evoengineer::bank;
+    match action {
+        "stats" => {
+            let stats = bank::stats(path)?;
+            print!("{}", bank::stats_report(&stats));
+            Ok(())
+        }
+        "export" => {
+            // Canonical re-serialization: torn tails repaired,
+            // duplicate keys collapsed, one JSON line per entry —
+            // exactly the bytes a coordinator ships over GET /bank.
+            let bank = bank::KernelBank::load(path)?;
+            for line in bank.export_lines() {
+                println!("{line}");
+            }
+            Ok(())
+        }
+        "import" => {
+            let file = args
+                .positional
+                .get(2)
+                .ok_or_else(|| eyre!("bank import needs a source journal path"))?;
+            let src = std::fs::read_to_string(file)
+                .map_err(|e| eyre!("reading {file}: {e}"))?;
+            let bank = bank::KernelBank::open(path)?;
+            let (mut added, mut skipped) = (0u64, 0u64);
+            for line in src.lines().filter(|l| !l.trim().is_empty()) {
+                match bank.ingest_line(line) {
+                    Ok(true) => added += 1,
+                    Ok(false) => skipped += 1,
+                    Err(e) => eprintln!("warning: skipping corrupt line: {e:#}"),
+                }
+            }
+            bank.flush()?;
+            println!(
+                "imported {added} new elite(s) into {} ({skipped} already present)",
+                path.display()
+            );
+            Ok(())
+        }
+        "gc" => {
+            let (before, after) = bank::gc(path)?;
+            println!(
+                "compacted {}: {} -> {} bytes ({} reclaimed)",
+                path.display(),
+                before,
+                after,
+                before.saturating_sub(after)
+            );
+            Ok(())
+        }
+        "top" => {
+            let op = args
+                .positional
+                .get(2)
+                .ok_or_else(|| eyre!("bank top needs an op name"))?;
+            let k = args.get_num("k", bank::RETRIEVE_K)?;
+            let bank = bank::KernelBank::load(path)?;
+            let mut entries = bank.entries_for_op(op);
+            entries.truncate(k);
+            if entries.is_empty() {
+                println!("no elites for op `{op}` in {}", path.display());
+            } else {
+                print!("{}", bank::render_refs(&entries));
+            }
+            Ok(())
+        }
+        other => Err(eyre!("unknown bank action `{other}` (stats|export|import|gc|top)")),
     }
 }
 
@@ -542,6 +722,8 @@ fn optimize(
     events: Option<&std::path::Path>,
     prefetch: usize,
     cache: Option<&std::path::Path>,
+    bank: Option<&std::path::Path>,
+    warm: Option<&std::path::Path>,
     runtime_shards: usize,
 ) -> Result<()> {
     let evaluator = make_evaluator(artifacts, cache, runtime_shards)?;
@@ -556,7 +738,18 @@ fn optimize(
         &ProviderConfig::new(provider_spec.clone())
             .transcripts(transcripts.map(|p| p.to_path_buf())),
     )?;
+    let bank = match bank {
+        Some(path) => Some(evoengineer::bank::KernelBank::open(path)?),
+        None => None,
+    };
+    let warm = match warm {
+        Some(path) => Some(evoengineer::bank::KernelBank::load(path)?),
+        None => None,
+    };
     let archive = Archive::new();
+    if let Some(warm) = &warm {
+        evoengineer::campaign::seed_archive_from_bank(&archive, warm);
+    }
     let ctx = RunCtx {
         evaluator: &evaluator,
         task: &task,
@@ -567,6 +760,8 @@ fn optimize(
         repair,
         feedback: goal,
         provider: llm_provider.as_ref(),
+        bank: bank.clone(),
+        warm: warm.clone(),
     };
     // Single runs are "verbose": the progress sink narrates every
     // trial live on stderr; --events additionally journals them.
@@ -632,6 +827,23 @@ fn optimize(
             store.misses(),
             store.len(),
             store.path().display()
+        );
+    }
+    if let Some(bank) = &bank {
+        bank.flush()?;
+        println!(
+            "bank: {} new elite(s) deposited ({} entries in {})",
+            bank.deposits(),
+            bank.len(),
+            bank.path().map(|p| p.display().to_string()).unwrap_or_default()
+        );
+    }
+    if let Some(warm) = &warm {
+        let (hits, misses) = warm.retrieval_counts();
+        println!(
+            "warm-start: {} elites loaded, retrieval served {hits} request(s) ({misses} without \
+             matching elites)",
+            warm.len()
         );
     }
     Ok(())
@@ -748,6 +960,7 @@ fn run_report(
     which: &str,
     records_path: &PathBuf,
     events_path: &PathBuf,
+    bank_path: &std::path::Path,
     model: &str,
 ) -> Result<()> {
     let text = match which {
@@ -756,6 +969,18 @@ fn run_report(
             report::table5(&reg)
         }
         "methods" => report::methods_table(),
+        "bank" => {
+            // Records are optional here: without them the report is
+            // the journal aggregates alone; with them it adds the
+            // trials-to-best table the nightly cold-vs-warm job diffs.
+            let stats = evoengineer::bank::stats(bank_path)?;
+            let records = if records_path.exists() {
+                results::load_lenient(records_path)?
+            } else {
+                Vec::new()
+            };
+            report::bank(&stats, &records)
+        }
         "events" => {
             if !events_path.exists() {
                 return Err(eyre!(

@@ -238,6 +238,8 @@ mod tests {
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec = AiCudaEngineer::new().run(&ctx).unwrap();
         assert!(rec.trials <= 45);
@@ -253,6 +255,8 @@ mod tests {
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let free = crate::methods::EvoEngineer::new(crate::methods::EvoVariant::Free)
             .run(&free_ctx)

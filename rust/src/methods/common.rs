@@ -172,6 +172,15 @@ pub struct RunCtx<'a> {
     /// The generation backend every trial's `Generate`/`Repair` call
     /// goes through (DESIGN.md §12).
     pub provider: &'a dyn Provider,
+    /// Deposit-side kernel bank (`--bank`, DESIGN.md §18): every new
+    /// per-cell best is journaled here. Write-only from the engine's
+    /// perspective — attaching it never changes records or events.
+    pub bank: Option<Arc<crate::bank::KernelBank>>,
+    /// Consumption-side bank snapshot (`--warm-start`, DESIGN.md §18):
+    /// the immutable elite set that seeds populations and the
+    /// `## PRIOR ELITES` prompt section. An empty snapshot behaves
+    /// byte-identically to `None`.
+    pub warm: Option<Arc<crate::bank::KernelBank>>,
 }
 
 /// Final record of one (method, model, op, seed) run — the unit the
@@ -432,6 +441,12 @@ pub struct Session<'a> {
     /// shared provider, so arm state is scoped to one run and updated
     /// only on the sequential trial-completion path.
     pub(super) bandit: Option<Bandit>,
+    /// Rendered `## PRIOR ELITES` section body (DESIGN.md §18) —
+    /// retrieved once from the immutable warm-start snapshot at
+    /// session start, so every generation request in this cell carries
+    /// the same refs and speculative prefetch hashes stay exact. `None`
+    /// when no snapshot is attached or retrieval came back empty.
+    pub(super) bank_refs: Option<String>,
 }
 
 /// The op's starting kernel source (the dataset's "initial C++/CUDA
@@ -443,6 +458,46 @@ pub fn baseline_src(ctx: &RunCtx) -> String {
         semantics: "opt".into(),
         schedule: crate::costmodel::baseline_schedule(ctx.task),
     })
+}
+
+/// Flattened argument dims of an op — the bank retriever's shape axis
+/// (DESIGN.md §18).
+pub fn task_shape(task: &OpTask) -> Vec<usize> {
+    task.args.iter().flat_map(|a| a.shape.iter().copied()).collect()
+}
+
+/// Distill a one-line profile summary for a bank deposit: the
+/// captured [`ProfileReport`] findings when profile feedback is on,
+/// otherwise a fixed-format roofline line from the elite's timing.
+/// Deterministic and bounded — it rides in retrieval-seeded prompts.
+fn distill_profile(profile: Option<&ProfileReport>, timing: Option<&Timing>) -> String {
+    if let Some(p) = profile {
+        if !p.findings.is_empty() {
+            let mut line = p.findings[..p.findings.len().min(2)].join("; ");
+            if line.len() > 200 {
+                let mut cut = 200;
+                while !line.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                line.truncate(cut);
+            }
+            return line;
+        }
+    }
+    match timing {
+        Some(t) => {
+            let bound = match t.bound {
+                crate::costmodel::BoundKind::Compute => "compute",
+                crate::costmodel::BoundKind::Memory => "memory",
+                crate::costmodel::BoundKind::Launch => "launch",
+            };
+            format!(
+                "{bound}-bound; occupancy {:.2}; eff_bw {:.2}; launches {}",
+                t.occupancy, t.eff_bw, t.launches
+            )
+        }
+        None => String::new(),
+    }
 }
 
 /// Top-k insights by recorded benefit (for the I3 prompt section).
@@ -461,6 +516,20 @@ impl<'a> Session<'a> {
             "{method_name}/{}/{}/{}",
             ctx.model.name, ctx.task.name, ctx.seed
         ));
+        let bank_refs = ctx.warm.as_ref().and_then(|bank| {
+            let hits = bank.retrieve(
+                &ctx.task.name,
+                &ctx.task.family,
+                ctx.task.category,
+                &task_shape(ctx.task),
+                crate::bank::RETRIEVE_K,
+            );
+            if hits.is_empty() {
+                None
+            } else {
+                Some(crate::bank::render_refs(&hits))
+            }
+        });
         Session {
             ctx,
             method_name: method_name.to_string(),
@@ -483,6 +552,73 @@ impl<'a> Session<'a> {
             last_profile: None,
             trajectory: Vec::new(),
             bandit: ctx.provider.routing().map(|spec| Bandit::new(&spec)),
+            bank_refs,
+        }
+    }
+
+    /// Seed the population from warm-start bank elites for this op
+    /// (before trial 0; the engine calls this once when `ctx.warm` is
+    /// set). Elites enter with their noise-free deposited speedups at
+    /// trial 0 and consume no budget and no RNG. An empty snapshot
+    /// seeds nothing, so bank-off and empty-bank runs stay
+    /// byte-identical.
+    pub(super) fn warm_seed(&mut self) {
+        let Some(warm) = &self.ctx.warm else { return };
+        for e in warm
+            .entries_for_op(&self.ctx.task.name)
+            .into_iter()
+            .take(crate::bank::WARM_SEED_K)
+        {
+            let spec = dsl::parse(&e.src).ok();
+            self.pop.insert(Candidate {
+                src: e.src,
+                spec,
+                compiled: true,
+                correct: true,
+                speedup: e.speedup,
+                pytorch_speedup: 0.0,
+                true_speedup: e.speedup,
+                true_pytorch_speedup: 0.0,
+                insight: if e.insight.is_empty() { None } else { Some(e.insight) },
+                trial: 0,
+            });
+        }
+    }
+
+    /// Journal a new per-cell best into the deposit bank (DESIGN.md
+    /// §18). A pure side-write on the sequential finish path: dedup'd
+    /// by content key, advisory on error, and never read back during
+    /// this run — records and events are byte-identical with or
+    /// without a bank attached.
+    pub(super) fn deposit_elite(
+        &self,
+        cand: &Candidate,
+        timing: Option<&Timing>,
+        route: Option<&str>,
+    ) {
+        let Some(bank) = &self.ctx.bank else { return };
+        let Ok(spec) = dsl::parse(&cand.src) else { return };
+        let canonical = dsl::print(&spec);
+        let task = self.ctx.task;
+        let entry = crate::bank::BankEntry {
+            key: crate::bank::entry_key(&task.name, &canonical),
+            op: task.name.clone(),
+            family: task.family.clone(),
+            category: task.category,
+            goal: self.ctx.feedback.goal.name().to_string(),
+            src: canonical,
+            speedup: cand.true_speedup,
+            rank: self.ctx.feedback.goal.fitness(cand.true_speedup, timing),
+            shape: task_shape(task),
+            profile: distill_profile(self.last_profile.as_ref(), timing),
+            provider: self.ctx.provider.label().to_string(),
+            model: self.ctx.model.name.to_string(),
+            method: self.method_name.clone(),
+            route: route.unwrap_or("").to_string(),
+            insight: cand.insight.clone().unwrap_or_default(),
+        };
+        if let Err(e) = bank.deposit(entry) {
+            eprintln!("warning: bank deposit failed: {e:#}");
         }
     }
 

@@ -381,6 +381,11 @@ pub fn drive_parts(
     opts: &EngineOpts,
 ) -> Result<KernelRunRecord> {
     let mut session = Session::start(ctx, name, pop);
+    // Warm-start seeding (DESIGN.md §18): bank elites for this op
+    // enter the population before trial 0. No RNG and no budget is
+    // consumed, and a resumed cell re-seeds identically from the same
+    // snapshot, so resume byte-identity holds.
+    session.warm_seed();
     let emit = |kind: TrialEventKind| {
         if opts.sinks.is_empty() {
             return;
@@ -495,6 +500,11 @@ fn flush_boundary(ctx: &RunCtx, opts: &EngineOpts) {
         }
     }
     ctx.provider.flush();
+    if let Some(bank) = &ctx.bank {
+        if let Err(e) = bank.flush() {
+            eprintln!("warning: bank flush failed: {e:#}");
+        }
+    }
 }
 
 fn run_loop(
@@ -615,6 +625,7 @@ pub(super) fn run_trial(
         &session.insights,
         session.bandit.as_ref(),
         session.last_profile.as_ref(),
+        session.bank_refs.as_deref(),
         session.pop.as_mut(),
         trial_idx,
         step,
@@ -675,12 +686,15 @@ fn speculate(session: &Session, state: &dyn MethodState, pool: &mut PrefetchPool
         // will replace `last_profile` before the next real assembly, so
         // with profiles enabled speculation always misses — the request
         // hash covers the profile text, keeping replay byte-identical.
+        // Bank refs are constant per cell (the warm-start snapshot is
+        // immutable), so speculation stays hash-exact under them.
         let a = assemble(
             session.ctx,
             &session.rng,
             &session.insights,
             session.bandit.as_ref(),
             session.last_profile.as_ref(),
+            session.bank_refs.as_deref(),
             pop.as_mut(),
             idx,
             step,
@@ -707,6 +721,7 @@ fn assemble(
     insights: &[InsightRecord],
     routing_bandit: Option<&Bandit>,
     profile: Option<&ProfileReport>,
+    bank_refs: Option<&str>,
     pop: &mut dyn Population,
     trial_idx: usize,
     step: &GenerateStep,
@@ -773,6 +788,13 @@ fn assemble(
     };
     if rendered.is_some() || goal.is_some() {
         req = req.with_feedback(rendered, goal);
+    }
+    // Retrieval-seeded prompts (DESIGN.md §18): the warm-start
+    // snapshot's top-K elites ride every generation request as a
+    // `## PRIOR ELITES` section. No RNG derivations, and the field is
+    // `None` without a snapshot, so legacy request hashes survive.
+    if let Some(refs) = bank_refs {
+        req = req.with_bank_refs(Some(refs.to_string()));
     }
     Assembled { req, parent }
 }
@@ -937,6 +959,14 @@ fn finish_trial(
         session.best = Some(cand.clone());
         session.best_rank = cand_rank;
         session.best_timing = timing.clone();
+        // Elite deposit (DESIGN.md §18): sequential finish path only,
+        // so the bank journal is `--prefetch`-independent. A pure
+        // side-write — nothing below reads it back.
+        session.deposit_elite(
+            &cand,
+            timing.as_ref(),
+            gen_routing.as_ref().map(|(m, _)| m.as_str()),
+        );
     }
     if cand.valid() {
         session.best_pt = session.best_pt.max(cand.true_pytorch_speedup);

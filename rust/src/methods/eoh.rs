@@ -136,6 +136,8 @@ mod tests {
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec = Eoh::new().run(&ctx).unwrap();
         assert_eq!(rec.trials, 45); // 5 + 10*4

@@ -165,6 +165,8 @@ mod tests {
             budget: 45,
             repair: RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap();
         assert_eq!(rec.trials, 45);
@@ -192,6 +194,8 @@ mod tests {
                 budget: 20,
                 repair: RepairPolicy::Off,
                 feedback: Default::default(),
+                bank: None,
+                warm: None,
             };
             EvoEngineer::new(EvoVariant::Full).run(&ctx).unwrap()
         };
@@ -227,6 +231,8 @@ mod tests {
                 budget: 45,
                 repair,
                 feedback: Default::default(),
+                bank: None,
+                warm: None,
             };
             EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap()
         };
@@ -295,6 +301,8 @@ mod tests {
                 budget: 30,
                 repair: RepairPolicy::Off,
                 feedback: Default::default(),
+                bank: None,
+                warm: None,
             };
             EvoEngineer::new(variant).run(&ctx).unwrap()
         };

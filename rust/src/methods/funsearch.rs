@@ -93,6 +93,8 @@ mod tests {
             budget: 45,
             repair: crate::methods::RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec = FunSearch::new().run(&ctx).unwrap();
         assert_eq!(rec.trials, 45);

@@ -585,6 +585,52 @@ pub fn plane(stats: &metrics::PlaneStats) -> String {
     out
 }
 
+/// `report bank` — cross-campaign knowledge-bank health (DESIGN.md
+/// §18): the journal's per-op / per-goal aggregates, plus — when
+/// campaign records are supplied — a trials-to-best table, so a cold
+/// and a warm-started run of the same slice compare with one diff.
+pub fn bank(stats: &crate::bank::BankStats, records: &[KernelRunRecord]) -> String {
+    let mut out = String::new();
+    writeln!(out, "KERNEL BANK — cross-campaign elite journal").unwrap();
+    writeln!(out, "{}", hr(60)).unwrap();
+    out.push_str(&crate::bank::stats_report(stats));
+    if records.is_empty() {
+        return out;
+    }
+    // Trials-to-best: the first trial whose best-so-far trajectory
+    // reaches the run's final best. Warm-started runs that inherit a
+    // strong elite converge in strictly fewer trials on ops the bank
+    // covers — exactly the number the nightly cold-vs-warm job diffs.
+    let mut by_op: std::collections::BTreeMap<&str, (Vec<usize>, f64)> =
+        std::collections::BTreeMap::new();
+    for r in records {
+        let to_best = r
+            .trajectory
+            .iter()
+            .position(|&s| s >= r.best_speedup - 1e-9)
+            .map(|i| i + 1)
+            .unwrap_or(r.trials);
+        let slot = by_op.entry(r.op.as_str()).or_default();
+        slot.0.push(to_best);
+        slot.1 = slot.1.max(r.best_speedup);
+    }
+    writeln!(out, "\nTRIALS-TO-BEST — trials until each run's final best first appears").unwrap();
+    writeln!(out, "{:<24} {:>6} {:>16} {:>12}", "Op", "Runs", "Median trials", "Best speedup")
+        .unwrap();
+    writeln!(out, "{}", hr(62)).unwrap();
+    let mut all: Vec<usize> = Vec::new();
+    for (op, (mut trials, best)) in by_op {
+        trials.sort_unstable();
+        all.extend_from_slice(&trials);
+        let median = trials[trials.len() / 2];
+        writeln!(out, "{:<24} {:>6} {:>16} {:>11.2}x", op, trials.len(), median, best).unwrap();
+    }
+    all.sort_unstable();
+    writeln!(out, "{}", hr(62)).unwrap();
+    writeln!(out, "{:<24} {:>6} {:>16}", "overall", all.len(), all[all.len() / 2]).unwrap();
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -647,6 +693,33 @@ mod tests {
         }
         assert!(fig5(&recs).contains("matmul_64"));
         assert!(table7(&recs).contains("AI CUDA Engineer"));
+    }
+
+    #[test]
+    fn bank_report_renders_stats_and_trials_to_best() {
+        let stats = crate::bank::BankStats {
+            entries: 2,
+            journal_lines: 3,
+            dup_lines: 1,
+            file_bytes: 512,
+            per_op: vec![("matmul_64".into(), 2, 2.5, 2.5)],
+            per_goal: vec![("speedup".into(), 2)],
+            index: None,
+        };
+        // Stats-only view (no records): just the journal aggregates.
+        let text = bank(&stats, &[]);
+        assert!(text.contains("KERNEL BANK"), "{text}");
+        assert!(text.contains("2 entries"), "{text}");
+        assert!(!text.contains("TRIALS-TO-BEST"), "{text}");
+        // With records: the convergence half appears. Record 0 reaches
+        // its final best (2.5x) at trial 2 of its trajectory; records
+        // with empty trajectories fall back to their trial count.
+        let mut recs = records();
+        recs[0].trajectory = vec![1.0, 2.5, 2.5];
+        let text = bank(&stats, &recs);
+        assert!(text.contains("TRIALS-TO-BEST"), "{text}");
+        assert!(text.contains("matmul_64"), "{text}");
+        assert!(text.contains("overall"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Kernel-bank determinism contract (DESIGN.md §18).
+//!
+//! The four byte-identity guarantees the bank must not break:
+//!
+//! 1. attaching a deposit bank never changes records or events;
+//! 2. warm-starting from an *empty* bank is byte-identical to running
+//!    cold (so the flag can default on without a determinism tax);
+//! 3. a warm-started campaign is deterministic across runs;
+//! 4. record-then-replay with `bank_refs` set replays bit-identically
+//!    with zero live calls and leaves the bank journal's bytes
+//!    untouched (the replay re-derives the same elites, which dedup
+//!    away on their content keys).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use evoengineer::campaign::{self, CampaignConfig};
+use evoengineer::evals::Evaluator;
+use evoengineer::llm::ProviderSpec;
+use evoengineer::methods::KernelRunRecord;
+use evoengineer::runtime::Runtime;
+use evoengineer::tasks::TaskRegistry;
+
+fn evaluator() -> Evaluator {
+    let reg = Arc::new(
+        TaskRegistry::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap(),
+    );
+    Evaluator::new(reg, Runtime::new().unwrap())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "evo_bank_it_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .subsec_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A small slice with enough room for new-best deposits: two
+/// archive-hungry methods, one op, a double-digit budget.
+fn base_cfg() -> CampaignConfig {
+    CampaignConfig {
+        methods: vec!["evoengineer-full".into(), "funsearch".into()],
+        models: vec!["gpt".into()],
+        seeds: vec![0],
+        op_filter: "relu_64".into(),
+        budget: 10,
+        quiet: true,
+        concurrency: 1,
+        ..CampaignConfig::default()
+    }
+}
+
+fn assert_identical(a: &[KernelRunRecord], b: &[KernelRunRecord], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: record count diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(
+            x.to_json().to_string(),
+            y.to_json().to_string(),
+            "{what}: record diverged for {}/{}",
+            x.method,
+            x.op
+        );
+    }
+}
+
+/// Run the slice cold, depositing into `bank`, with events at `events`.
+fn run_with(
+    bank: Option<&Path>,
+    warm: Option<&Path>,
+    events: &Path,
+) -> Vec<KernelRunRecord> {
+    let cfg = CampaignConfig {
+        bank: bank.map(Path::to_path_buf),
+        warm_start: warm.map(Path::to_path_buf),
+        events: Some(events.to_path_buf()),
+        ..base_cfg()
+    };
+    campaign::run(&cfg, evaluator()).unwrap()
+}
+
+#[test]
+fn deposit_bank_never_changes_records_or_events() {
+    let dir = tmpdir("deposit");
+    let bank = dir.join("bank.jsonl");
+
+    let off = run_with(None, None, &dir.join("ev_off.jsonl"));
+    let on = run_with(Some(&bank), None, &dir.join("ev_on.jsonl"));
+
+    assert_identical(&off, &on, "bank-on vs bank-off");
+    assert_eq!(
+        std::fs::read(dir.join("ev_off.jsonl")).unwrap(),
+        std::fs::read(dir.join("ev_on.jsonl")).unwrap(),
+        "event journal changed when a deposit bank was attached"
+    );
+
+    // The side-write really happened: elites for the op are journaled
+    // with their provenance, retrievable and canonical.
+    let stats = evoengineer::bank::stats(&bank).unwrap();
+    assert!(stats.entries > 0, "no elites deposited across 2 cells x 10 trials");
+    assert!(stats.per_op.iter().any(|(op, ..)| op == "relu_64"), "{stats:?}");
+    let loaded = evoengineer::bank::KernelBank::load(&bank).unwrap();
+    for e in loaded.all_entries() {
+        assert_eq!(e.op, "relu_64");
+        assert!(e.speedup > 0.0, "deposited elite has no measured speedup");
+        assert!(!e.method.is_empty() && !e.model.is_empty() && !e.provider.is_empty());
+        assert_eq!(e.key, evoengineer::bank::entry_key(&e.op, &e.src));
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn empty_warm_bank_is_byte_identical_to_cold() {
+    let dir = tmpdir("empty_warm");
+    let empty = dir.join("empty_bank.jsonl");
+    std::fs::write(&empty, b"").unwrap();
+
+    let cold = run_with(None, None, &dir.join("ev_cold.jsonl"));
+    let warm = run_with(None, Some(&empty), &dir.join("ev_warm.jsonl"));
+
+    assert_identical(&cold, &warm, "cold vs empty-warm");
+    assert_eq!(
+        std::fs::read(dir.join("ev_cold.jsonl")).unwrap(),
+        std::fs::read(dir.join("ev_warm.jsonl")).unwrap(),
+        "an empty warm-start snapshot perturbed the event stream"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn warm_started_campaign_is_deterministic() {
+    let dir = tmpdir("warm_det");
+    let bank = dir.join("bank.jsonl");
+
+    // Seed the bank from a cold pass, then run the warm slice twice.
+    run_with(Some(&bank), None, &dir.join("ev_seed.jsonl"));
+    let a = run_with(None, Some(&bank), &dir.join("ev_a.jsonl"));
+    let b = run_with(None, Some(&bank), &dir.join("ev_b.jsonl"));
+
+    assert_identical(&a, &b, "warm run A vs warm run B");
+    assert_eq!(
+        std::fs::read(dir.join("ev_a.jsonl")).unwrap(),
+        std::fs::read(dir.join("ev_b.jsonl")).unwrap(),
+        "warm-started event journals diverged across identical runs"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn replay_with_bank_refs_leaves_the_bank_untouched() {
+    let dir = tmpdir("replay");
+    let seed_bank = dir.join("seed_bank.jsonl");
+    let deposit_bank = dir.join("deposit_bank.jsonl");
+    let transcripts = dir.join("transcripts.jsonl");
+
+    // Pass 1 (cold): fill the snapshot bank.
+    run_with(Some(&seed_bank), None, &dir.join("ev_seed.jsonl"));
+    assert!(evoengineer::bank::stats(&seed_bank).unwrap().entries > 0);
+
+    // Pass 2 (record): warm-started — so every generation request
+    // carries a `## PRIOR ELITES` section and its hash covers the
+    // `bank_refs` field — live generation recorded to the transcript
+    // journal, new elites deposited.
+    let record_cfg = CampaignConfig {
+        bank: Some(deposit_bank.clone()),
+        warm_start: Some(seed_bank.clone()),
+        transcripts: Some(transcripts.clone()),
+        events: Some(dir.join("ev_record.jsonl")),
+        ..base_cfg()
+    };
+    let recorded = campaign::run(&record_cfg, evaluator()).unwrap();
+    let bank_bytes = std::fs::read(&deposit_bank).unwrap();
+    assert!(!bank_bytes.is_empty(), "warm-started pass deposited nothing");
+
+    // Pass 3 (replay): zero live calls — every request hash (including
+    // the bank_refs extension) must hit the journal — and the replay
+    // re-derives the same elites, which dedup to zero new journal
+    // lines.
+    let replay_cfg = CampaignConfig {
+        bank: Some(deposit_bank.clone()),
+        warm_start: Some(seed_bank.clone()),
+        provider: ProviderSpec::Replay(transcripts),
+        events: Some(dir.join("ev_replay.jsonl")),
+        ..base_cfg()
+    };
+    let replayed = campaign::run(&replay_cfg, evaluator()).unwrap();
+
+    assert_identical(&recorded, &replayed, "record vs replay");
+    assert_eq!(
+        std::fs::read(dir.join("ev_record.jsonl")).unwrap(),
+        std::fs::read(dir.join("ev_replay.jsonl")).unwrap(),
+        "replay event journal diverged from the recording"
+    );
+    assert_eq!(
+        std::fs::read(&deposit_bank).unwrap(),
+        bank_bytes,
+        "replay grew or rewrote the bank journal"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -190,6 +190,8 @@ fn zero_budget_run_is_well_formed() {
         budget: 0,
         repair: evoengineer::methods::RepairPolicy::Off,
         feedback: Default::default(),
+        bank: None,
+        warm: None,
     };
     for method in evoengineer::methods::all_methods() {
         let rec = method.run(&ctx).unwrap();

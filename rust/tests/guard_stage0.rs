@@ -264,6 +264,8 @@ fn repair_loop_cache_replay_is_bit_identical() {
             budget: 25,
             repair: RepairPolicy::Repair { max_attempts: 2 },
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec = EvoEngineer::new(EvoVariant::Free).run(&ctx).unwrap();
         (rec, ev.runtime_stats().unwrap().executions)

@@ -135,6 +135,8 @@ fn all_methods_run_on_all_categories() {
                 budget: 12,
                 repair: RepairPolicy::Off,
                 feedback: Default::default(),
+                bank: None,
+                warm: None,
             };
             let rec = method.run(&ctx).unwrap();
             assert!(rec.trials <= 12, "{}", method.name());
@@ -272,6 +274,8 @@ fn token_ordering_matches_figure4() {
             budget: 30,
             repair: RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec = methods::by_name(name).unwrap().run(&ctx).unwrap();
         rec.total_tokens()

@@ -527,3 +527,136 @@ fn event_journal_interior_corruption_agrees_across_modes() {
     assert_eq!(want[&relu], vec![(0usize, "relu_64-hash-0".to_string())]);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------- bank
+
+use evoengineer::bank::{self, BankEntry, KernelBank};
+
+/// Deterministic bank fixture: distinct canonical sources per entry,
+/// spread over four ops, with every provenance field populated.
+fn bank_fixture(n: usize) -> Vec<BankEntry> {
+    let ops = ["matmul_64", "relu_64", "softmax_256", "layernorm_64"];
+    (0..n)
+        .map(|i| {
+            let op = ops[i % ops.len()];
+            let src = format!("kernel {op} {{ semantics: opt; /* elite {i} */ }}");
+            BankEntry {
+                key: bank::entry_key(op, &src),
+                op: op.into(),
+                family: "ew".into(),
+                category: 1 + (i % 6) as u8,
+                goal: if i % 2 == 0 { "speedup" } else { "balanced" }.into(),
+                src,
+                speedup: 1.0 + i as f64 * 0.0625,
+                rank: 1.0 + i as f64 * 0.0625,
+                shape: vec![64, 64],
+                profile: format!("memory-bound; occupancy 0.75 (case {i})"),
+                provider: "sim".into(),
+                model: "GPT-4.1".into(),
+                method: "EvoEngineer-Full (ours)".into(),
+                route: String::new(),
+                insight: format!("widened loads (elite {i})"),
+            }
+        })
+        .collect()
+}
+
+fn write_bank_journal(path: &Path, fixture: &[BankEntry]) -> Vec<u8> {
+    std::fs::remove_file(path).ok();
+    index::delete_sidecar(path);
+    {
+        let b = KernelBank::open_with(path, IndexMode::Off).unwrap();
+        for e in fixture {
+            assert!(b.deposit(e.clone()).unwrap());
+        }
+        b.flush().unwrap();
+    }
+    std::fs::read(path).unwrap()
+}
+
+#[test]
+fn bank_truncation_recovery_and_dedup_backfill() {
+    let dir = tmpdir("bank_trunc");
+    let master = dir.join("master.jsonl");
+    let fixture = bank_fixture(40);
+    let bytes = write_bank_journal(&master, &fixture);
+    assert_eq!(whole_lines(&bytes, bytes.len()), fixture.len());
+
+    let mut rng = Rng::new(0xBA2C);
+    for t in 0..8u32 {
+        let cut = 1 + rng.below(bytes.len() - 1);
+        let survivors = whole_lines(&bytes, cut);
+        let torn = &bytes[..cut];
+
+        for (mode, tag) in [(IndexMode::Off, "off"), (IndexMode::Auto, "auto")] {
+            let path = dir.join(format!("{tag}_{t}.jsonl"));
+            fresh_copy(&path, torn);
+            if mode == IndexMode::Auto {
+                // Prime a sidecar on the untorn bytes, then tear: the
+                // stale cover must be rejected and rebuilt.
+                std::fs::write(&path, &bytes).unwrap();
+                drop(KernelBank::open_with(&path, IndexMode::Auto).unwrap());
+                std::fs::write(&path, torn).unwrap();
+            }
+            let b = KernelBank::open_with(&path, mode).unwrap();
+            assert_eq!(b.len(), survivors, "{tag} cut at {cut}");
+
+            // Content-key dedup backfill: re-depositing the whole
+            // fixture restores exactly the records the tear destroyed
+            // and leaves the survivors' journal lines untouched.
+            for e in &fixture {
+                let fresh = b.deposit(e.clone()).unwrap();
+                assert_eq!(
+                    fresh,
+                    fixture.iter().position(|f| f.key == e.key).unwrap() >= survivors,
+                    "{tag}: dedup verdict wrong for {}",
+                    e.key
+                );
+            }
+            b.flush().unwrap();
+            drop(b);
+            let reopened = KernelBank::open_with(&path, mode).unwrap();
+            assert_eq!(reopened.len(), fixture.len(), "{tag}: backfill incomplete");
+            let mut entries = reopened.all_entries();
+            entries.sort_by(|a, b| a.key.cmp(&b.key));
+            let mut want = fixture.clone();
+            want.sort_by(|a, b| a.key.cmp(&b.key));
+            assert_eq!(entries, want, "{tag}: entry content diverged after repair");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bank_gc_collapses_duplicates_and_corruption() {
+    let dir = tmpdir("bank_gc");
+    let path = dir.join("bank.jsonl");
+    let fixture = bank_fixture(12);
+    let bytes = write_bank_journal(&path, &fixture);
+
+    // Simulate two merged worker shards: append a full duplicate copy
+    // of the journal plus one corrupt line.
+    let mut doubled = bytes.clone();
+    doubled.extend_from_slice(b"#corrupt line\n");
+    doubled.extend_from_slice(&bytes);
+    fresh_copy(&path, &doubled);
+
+    let stats = bank::stats(&path).unwrap();
+    assert_eq!(stats.entries, fixture.len());
+    assert_eq!(stats.dup_lines, fixture.len());
+
+    // First occurrence wins, corrupt line dropped; the compacted
+    // journal is exactly the original bytes.
+    let (before, after) = bank::gc(&path).unwrap();
+    assert!(before > after);
+    assert_eq!(std::fs::read(&path).unwrap(), bytes);
+    let stats = bank::stats(&path).unwrap();
+    assert_eq!((stats.entries, stats.dup_lines), (fixture.len(), 0));
+
+    // export_lines collapses the same way without touching the file.
+    fresh_copy(&path, &doubled);
+    let exported = KernelBank::load(&path).unwrap().export_lines();
+    assert_eq!(exported.len(), fixture.len());
+    assert_eq!(std::fs::read(&path).unwrap(), doubled, "export must not mutate the journal");
+    std::fs::remove_dir_all(&dir).ok();
+}

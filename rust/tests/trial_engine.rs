@@ -570,6 +570,8 @@ fn engine_is_byte_identical_to_the_legacy_monolith_for_all_six_methods() {
             budget: 12,
             repair: RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec_new = method.run(&ctx_new).unwrap();
         let a_old = Archive::new();
@@ -584,6 +586,8 @@ fn engine_is_byte_identical_to_the_legacy_monolith_for_all_six_methods() {
             budget: 12,
             repair: RepairPolicy::Off,
             feedback: Default::default(),
+            bank: None,
+            warm: None,
         };
         let rec_old = legacy::run(&name, &ctx_old);
         assert_eq!(
@@ -614,6 +618,8 @@ fn engine_matches_legacy_under_a_repair_policy() {
         budget: 14,
         repair: RepairPolicy::Repair { max_attempts: 2 },
         feedback: Default::default(),
+        bank: None,
+        warm: None,
     };
     let rec_new = methods::by_name("evoengineer-free").unwrap().run(&ctx_new).unwrap();
     let a_old = Archive::new();
@@ -628,6 +634,8 @@ fn engine_matches_legacy_under_a_repair_policy() {
         budget: 14,
         repair: RepairPolicy::Repair { max_attempts: 2 },
         feedback: Default::default(),
+        bank: None,
+        warm: None,
     };
     let rec_old = legacy::run("EvoEngineer-Free", &ctx_old);
     assert!(rec_new.repair_attempts > 0, "repairs must fire for this test to bite");
@@ -660,6 +668,8 @@ fn prefetch_is_byte_identical_to_serial_execution() {
                 budget: 10,
                 repair,
                 feedback: Default::default(),
+                bank: None,
+                warm: None,
             };
             let opts = EngineOpts { prefetch, ..EngineOpts::default() };
             engine::drive(methods::by_name(method).unwrap().as_ref(), &ctx, &opts).unwrap()
@@ -818,6 +828,8 @@ fn event_journal_agrees_with_the_run_record_and_the_live_sink() {
         budget: 10,
         repair: RepairPolicy::Repair { max_attempts: 2 },
         feedback: Default::default(),
+        bank: None,
+        warm: None,
     };
     let metrics_sink = Arc::new(MetricsSink::new());
     let journal_sink: Arc<dyn methods::EventSink> =

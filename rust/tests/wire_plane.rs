@@ -136,6 +136,76 @@ fn coordinator_plus_n_workers_matches_the_inprocess_sweep() {
 }
 
 #[test]
+fn warm_started_wire_sweep_matches_the_inprocess_sweep() {
+    use evoengineer::util::httpwire::{request_json, split_url};
+    use std::time::Duration;
+
+    let dir = tmpdir("warm");
+
+    // Fill a bank from a cold in-process pass of the same slice.
+    let bank = dir.join("bank.jsonl");
+    let seed_cfg = CampaignConfig { bank: Some(bank.clone()), ..base_cfg() };
+    campaign::run(&seed_cfg, evaluator()).unwrap();
+    assert!(evoengineer::bank::stats(&bank).unwrap().entries > 0, "cold pass deposited nothing");
+
+    // Golden reference: the warm-started single-process sweep.
+    let ref_events = dir.join("ref_events.jsonl");
+    let ref_cfg = CampaignConfig {
+        warm_start: Some(bank.clone()),
+        events: Some(ref_events.clone()),
+        ..base_cfg()
+    };
+    let full = campaign::run(&ref_cfg, evaluator()).unwrap();
+
+    // Distributed: the coordinator loads the snapshot once and ships
+    // it to both workers over GET /bank; neither worker touches the
+    // bank file.
+    let events = dir.join("events.jsonl");
+    let cfg = CampaignConfig {
+        warm_start: Some(bank.clone()),
+        events: Some(events.clone()),
+        checkpoint: Some(dir.join("ckpt.jsonl")),
+        ..base_cfg()
+    };
+    let coord = Coordinator::start(&cfg, &registry(), "127.0.0.1:0", None).unwrap();
+    let url = coord.url();
+
+    // /config advertises the snapshot; /bank serves its canonical
+    // lines (what `from_lines` rebuilds worker-side).
+    let base = split_url(&url).unwrap();
+    let (code, cfg_text) = request_json(&base, "GET", "/config", "", Duration::from_secs(5)).unwrap();
+    assert_eq!(code, 200);
+    assert!(cfg_text.contains("\"warm_start\":true"), "{cfg_text}");
+    let (code, bank_text) = request_json(&base, "GET", "/bank", "", Duration::from_secs(5)).unwrap();
+    assert_eq!(code, 200);
+    assert!(bank_text.contains("\"lines\""), "{bank_text}");
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let url = url.clone();
+                scope.spawn(move || {
+                    let opts = WorkOpts { concurrency: 1, quiet: true, ..WorkOpts::default() };
+                    wire::work(&url, evaluator(), &opts).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let (records, _) = coord.wait().unwrap();
+
+    assert_records_identical(&full, &records);
+    assert_eq!(
+        std::fs::read(&events).unwrap(),
+        std::fs::read(&ref_events).unwrap(),
+        "warm-started 2-worker event journal is not byte-identical to the reference"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn coordinator_serves_prometheus_metrics() {
     use evoengineer::util::httpwire::{request_json, split_url};
     use std::time::Duration;
